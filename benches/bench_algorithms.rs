@@ -1,0 +1,83 @@
+//! Micro-benchmarks of the simulator's hot algorithms:
+//! Algorithm 1 (paper spec vs optimized), scaler decisions, sentiment
+//! window queries, tokenizer vectorization. §Perf inputs for L3.
+
+use sla_autoscale::autoscale::{AppdataScaler, AutoScaler, LoadScaler, Observation, ThresholdScaler};
+use sla_autoscale::delay::DelayModel;
+use sla_autoscale::rng::Rng;
+use sla_autoscale::sentiment::tokenizer;
+use sla_autoscale::sim::cycles::{distribute, distribute_paper};
+use sla_autoscale::sim::history::SentimentWindows;
+use sla_autoscale::util::bench;
+use std::time::Duration;
+
+const BUDGET: Duration = Duration::from_millis(400);
+
+fn main() {
+    println!("== bench_algorithms ==");
+
+    // Algorithm 1 at in-flight sizes seen during bursts.
+    let mut rng = Rng::new(7);
+    for n in [100usize, 1_000, 10_000, 100_000] {
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 60.0e6 + 1.0).collect();
+        let budget_cycles = 2.0e9;
+        bench::run(&format!("algorithm1/paper/n={n}"), BUDGET, || {
+            let mut r = xs.clone();
+            std::hint::black_box(distribute_paper(budget_cycles, &mut r));
+        });
+        bench::run(&format!("algorithm1/optimized/n={n}"), BUDGET, || {
+            let mut r = xs.clone();
+            std::hint::black_box(distribute(budget_cycles, &mut r));
+        });
+        // baseline: the clone alone, to subtract allocation cost
+        bench::run(&format!("algorithm1/clone-only/n={n}"), BUDGET, || {
+            std::hint::black_box(xs.clone());
+        });
+    }
+
+    // Scaler decisions at an adaptation point.
+    let mut windows = SentimentWindows::new();
+    let mut r2 = Rng::new(8);
+    for t in 0..4000 {
+        for _ in 0..20 {
+            windows.push(t as f64, r2.next_f64() as f32);
+        }
+    }
+    let obs = Observation {
+        now: 3600.0,
+        cpus: 8,
+        pending_cpus: 2,
+        in_system: 25_000,
+        cpu_usage: 0.83,
+        sentiment: &windows,
+        cpu_hz: 2.0e9,
+        sla_secs: 300.0,
+    };
+    let mut thr = ThresholdScaler::new(0.8);
+    bench::run("scaler/threshold/decide", BUDGET, || {
+        std::hint::black_box(thr.decide(&obs));
+    });
+    let mut load = LoadScaler::new(DelayModel::default(), 0.99999, [0.3, 0.3, 0.4]);
+    bench::run("scaler/load/decide", BUDGET, || {
+        std::hint::black_box(load.decide(&obs));
+    });
+    let mut app = AppdataScaler::new(4);
+    bench::run("scaler/appdata/decide(240s windows)", BUDGET, || {
+        std::hint::black_box(app.decide(&obs));
+    });
+
+    // Sentiment window bookkeeping (called once per completed tweet).
+    bench::run("windows/push", BUDGET, || {
+        windows.push(3599.0, 0.5);
+    });
+    bench::run("windows/window_mean(120s)", BUDGET, || {
+        std::hint::black_box(windows.window_mean(3480.0, 3600.0));
+    });
+
+    // Tokenizer (serving hot path, once per tweet).
+    let tweet = "pos1 neg2 neu3 topic4 noise5 pos6 neu7 neu8 topic9 noise10 pos11 neu12";
+    let mut buf = vec![0f32; tokenizer::VOCAB];
+    bench::run("tokenizer/vectorize_into(12 tokens)", BUDGET, || {
+        tokenizer::vectorize_into(std::hint::black_box(tweet), &mut buf);
+    });
+}

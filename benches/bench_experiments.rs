@@ -1,0 +1,23 @@
+//! One benchmark per paper table/figure: times the regeneration of every
+//! experiment in fast mode (the `exp all` path). This is the "regenerate
+//! the evaluation" harness the paper's tables map onto (DESIGN.md §6).
+
+use sla_autoscale::experiments;
+use sla_autoscale::util::bench;
+use std::time::Duration;
+
+fn main() {
+    println!("== bench_experiments (fast mode regeneration) ==");
+    for e in experiments::all() {
+        let id = e.id();
+        // Heavy sweeps get one timed shot; light ones get proper sampling.
+        let budget = match id {
+            "fig7" | "fig8" => Duration::from_millis(1),
+            "fig5" | "fig6" => Duration::from_millis(2000),
+            _ => Duration::from_millis(1500),
+        };
+        bench::run(&format!("exp/{id}"), budget, || {
+            std::hint::black_box(e.run(true).expect("experiment runs"));
+        });
+    }
+}

@@ -1,0 +1,54 @@
+//! PJRT serving-path benchmarks: per-variant scoring latency/throughput
+//! of the compiled sentiment classifier, tokenizer included — the §Perf
+//! numbers for the runtime layer. Skips if artifacts are absent.
+
+use sla_autoscale::runtime::ModelEngine;
+use sla_autoscale::sentiment::SentimentEngine;
+use sla_autoscale::util::bench;
+use std::time::Duration;
+
+fn main() {
+    println!("== bench_runtime (PJRT CPU) ==");
+    if !std::path::Path::new("artifacts/meta.txt").exists() {
+        println!("skipped: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let mut engine = ModelEngine::load(std::path::Path::new("artifacts")).expect("engine");
+
+    for n in [1usize, 8, 64, 256, 1024] {
+        let texts: Vec<String> = (0..n)
+            .map(|i| {
+                format!(
+                    "pos{} neg{} neu{} topic{} noise{} neu{} pos{}",
+                    i % 48,
+                    (i * 3) % 48,
+                    i % 96,
+                    i % 32,
+                    i % 4096,
+                    (i * 7) % 96,
+                    (i * 11) % 48
+                )
+            })
+            .collect();
+        let s = bench::run(
+            &format!("score_batch/n={n}"),
+            Duration::from_secs(2),
+            || {
+                std::hint::black_box(engine.score_batch(&texts).unwrap());
+            },
+        );
+        println!("    -> {:.0} tweets/s", n as f64 * s.per_sec());
+    }
+
+    // Tokenizer-only share of the path, for attribution.
+    let texts: Vec<String> = (0..256)
+        .map(|i| format!("pos{} neu{} topic{} noise{}", i % 48, i % 96, i % 32, i))
+        .collect();
+    let mut buf = vec![0f32; sla_autoscale::sentiment::tokenizer::VOCAB];
+    bench::run("tokenize-only/n=256", Duration::from_secs(2), || {
+        for t in &texts {
+            sla_autoscale::sentiment::tokenizer::vectorize_into(t, &mut buf);
+        }
+        std::hint::black_box(&buf);
+    });
+}

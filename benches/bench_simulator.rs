@@ -1,0 +1,71 @@
+//! End-to-end simulator benchmarks: one full match simulation per paper
+//! scenario family (the Fig 7/8 workhorse). Reports wall time and
+//! simulated-tweet throughput — the §Perf L3 headline numbers.
+
+use sla_autoscale::autoscale::{AppdataScaler, Composite, LoadScaler, ThresholdScaler};
+use sla_autoscale::config::SimConfig;
+use sla_autoscale::delay::DelayModel;
+use sla_autoscale::experiments::common::{default_mix, scale_config, trace_for};
+use sla_autoscale::sim::Simulator;
+use sla_autoscale::util::bench;
+use sla_autoscale::workload::by_opponent;
+use std::time::Duration;
+
+fn main() {
+    println!("== bench_simulator (fast 20x replicas) ==");
+    let cfg = scale_config(&SimConfig::default(), true);
+    let model = DelayModel::default();
+    let mix = default_mix();
+
+    for opponent in ["Japan", "Uruguay", "Spain"] {
+        let spec = by_opponent(opponent).unwrap();
+        let trace = trace_for(&spec, true);
+        let n = trace.len() as f64;
+
+        let s = bench::run(
+            &format!("sim/{opponent}/threshold-60%  ({} tweets)", trace.len()),
+            Duration::from_secs(3),
+            || {
+                let sim = Simulator::new(&cfg, &model);
+                std::hint::black_box(sim.run(&trace, Box::new(ThresholdScaler::new(0.6))));
+            },
+        );
+        println!("    -> {:.1}M simulated tweets/s", n * s.per_sec() / 1e6);
+
+        let m = model.clone();
+        let s = bench::run(
+            &format!("sim/{opponent}/load-q99.999%"),
+            Duration::from_secs(3),
+            || {
+                let sim = Simulator::new(&cfg, &model);
+                std::hint::black_box(
+                    sim.run(&trace, Box::new(LoadScaler::new(m.clone(), 0.99999, mix))),
+                );
+            },
+        );
+        println!("    -> {:.1}M simulated tweets/s", n * s.per_sec() / 1e6);
+
+        let m = model.clone();
+        let s = bench::run(
+            &format!("sim/{opponent}/load+appdata+4"),
+            Duration::from_secs(3),
+            || {
+                let sim = Simulator::new(&cfg, &model);
+                std::hint::black_box(sim.run(
+                    &trace,
+                    Box::new(Composite::new(
+                        LoadScaler::new(m.clone(), 0.99999, mix),
+                        AppdataScaler::new(4),
+                    )),
+                ));
+            },
+        );
+        println!("    -> {:.1}M simulated tweets/s", n * s.per_sec() / 1e6);
+    }
+
+    // Trace generation itself (workload substrate).
+    let spec = by_opponent("Spain").unwrap();
+    bench::run("workload/generate Spain (fast)", Duration::from_secs(3), || {
+        std::hint::black_box(trace_for(&spec, true));
+    });
+}

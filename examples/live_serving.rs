@@ -1,0 +1,119 @@
+//! End-to-end driver: every layer composing on a real small workload.
+//!
+//!   L1/L2  trained Pallas-MLP sentiment classifier, AOT-compiled to HLO
+//!   PJRT   `runtime::ModelEngine` loads artifacts/*.hlo.txt
+//!   L3     `coordinator` batches a generated Brazil-vs-Spain tweet stream
+//!          through the model and drives the appdata auto-scaler from the
+//!          scores it produces — Python nowhere on the request path.
+//!
+//! Reports throughput, batch-level latency quantiles, detected peaks, and
+//! cross-checks the model's windowed scores against the trace's latent
+//! sentiment. Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `make artifacts && cargo run --release --example live_serving`
+
+use sla_autoscale::coordinator::{spawn_with, ServeConfig};
+use sla_autoscale::experiments::common::trace_for;
+use sla_autoscale::rng::Rng;
+use sla_autoscale::runtime::ModelEngine;
+use sla_autoscale::workload::text::{render_tweet, Polarity};
+use sla_autoscale::workload::by_opponent;
+use std::sync::mpsc;
+use std::time::Instant;
+
+const STREAM_N: usize = 30_000;
+
+fn main() -> anyhow::Result<()> {
+    let spec = by_opponent("Spain").unwrap();
+    let full = trace_for(&spec, true);
+    // Only topical tweets reach the sentiment PE (Fig 1: the source filter
+    // and topic filter discard the rest), and stride-sample so the stream
+    // spans the whole match (all six bursts).
+    let analyzed: Vec<_> =
+        full.tweets.iter().filter(|t| t.sentiment_opt().is_some()).cloned().collect();
+    let stride = (analyzed.len() / STREAM_N).max(1);
+    let sampled: Vec<_> = analyzed.iter().step_by(stride).cloned().collect();
+    let n = sampled.len();
+    println!(
+        "live serving: {} tweets (1/{} sample) of BRA vs {} through the PJRT classifier\n",
+        n, stride, spec.opponent
+    );
+
+    // Engine is built on the leader thread (PJRT client is thread-local).
+    let (tx, handle) = spawn_with(
+        || ModelEngine::load(std::path::Path::new("artifacts")),
+        ServeConfig { extra_cpus: 4, ..Default::default() },
+    );
+
+    // Stream the match: render each trace tweet's latent sentiment into
+    // tokens and submit. A shared reply channel keeps the pipe full so the
+    // dynamic batcher can do its job.
+    let (reply, scored_rx) = mpsc::channel();
+    let mut rng = Rng::new(42);
+    let started = Instant::now();
+    let mut polarity = Polarity::Positive;
+    for (i, tw) in sampled.iter().enumerate() {
+        if i % 4096 == 0 && rng.chance(0.5) {
+            polarity = if matches!(polarity, Polarity::Positive) {
+                Polarity::Negative
+            } else {
+                Polarity::Positive
+            };
+        }
+        let intensity = tw.sentiment_opt().expect("analyzed only") as f64;
+        let text = render_tweet(&mut rng, intensity, polarity);
+        tx.send(sla_autoscale::coordinator::Request {
+            id: i as u64,
+            post_time: tw.post_time,
+            text,
+            reply: reply.clone(),
+        })?;
+    }
+    drop(tx);
+    drop(reply);
+
+    // Collect scores; cross-check recovered intensity vs the latent one.
+    let mut per_bucket: Vec<(f64, f64, u32)> = vec![(0.0, 0.0, 0); 5]; // (latent, score, n)
+    let scored: Vec<_> = scored_rx.iter().collect();
+    for s in &scored {
+        let tw = &sampled[s.id as usize];
+        let latent = tw.sentiment_opt().expect("analyzed only") as f64;
+        let b = ((latent * 5.0) as usize).min(4);
+        per_bucket[b].0 += latent;
+        per_bucket[b].1 += s.sentiment.score() as f64;
+        per_bucket[b].2 += 1;
+    }
+    let elapsed = started.elapsed();
+    let report = handle.join().expect("leader thread")?;
+
+    println!("{}", report.metrics.summary(elapsed));
+    println!(
+        "\nvirtual cluster: {} CPUs after {} appdata peak reactions {:?}",
+        report.final_cpus,
+        report.scale_log.len(),
+        report.scale_log
+    );
+    println!("\nlatent intensity vs model-recovered score (should be monotone):");
+    for (i, &(lat, sc, n)) in per_bucket.iter().enumerate() {
+        if n > 0 {
+            println!(
+                "  bucket {} — latent {:.2}  score {:.2}  ({} tweets)",
+                i,
+                lat / n as f64,
+                sc / n as f64,
+                n
+            );
+        }
+    }
+
+    // Hard checks so this example doubles as a smoke test in CI.
+    assert_eq!(scored.len(), n, "every submitted tweet must be scored");
+    let busy: Vec<&(f64, f64, u32)> = per_bucket.iter().filter(|b| b.2 > 50).collect();
+    for w in busy.windows(2) {
+        let a = w[0].1 / w[0].2 as f64;
+        let b = w[1].1 / w[1].2 as f64;
+        assert!(b + 0.05 > a, "recovered score not monotone in latent intensity");
+    }
+    println!("\nOK — all layers composed (tokenizer → PJRT MLP → windows → appdata).");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Match day: the full 7-match campaign under all three algorithm
+//! families — the Fig 7 comparison as a single run, plus the §V-A
+//! cost-saving headlines.
+//!
+//! Run: `cargo run --release --example match_day [-- --full]`
+//! (`--full` uses the unscaled Table II volumes; takes a few minutes.)
+
+use sla_autoscale::experiments::common::{run_scenario, scale_config, trace_for, default_mix};
+use sla_autoscale::autoscale::{AppdataScaler, Composite, LoadScaler, ThresholdScaler};
+use sla_autoscale::config::SimConfig;
+use sla_autoscale::delay::DelayModel;
+use sla_autoscale::workload::all_matches;
+
+fn main() {
+    let fast = !std::env::args().any(|a| a == "--full");
+    if fast {
+        println!("(20x fast replica; pass --full for unscaled Table II volumes)\n");
+    }
+    let cfg = scale_config(&SimConfig::default(), fast);
+    let model = DelayModel::default();
+    let mix = default_mix();
+
+    println!(
+        "{:<10} {:<26} {:>10} {:>10} {:>5}",
+        "match", "algorithm", "tweets>SLA", "CPU-hours", "reps"
+    );
+    let mut savings = Vec::new();
+    for spec in all_matches() {
+        let trace = trace_for(&spec, fast);
+        let mut rows = Vec::new();
+        let m1 = model.clone();
+        rows.push(run_scenario(
+            &trace, &cfg, &model,
+            || Box::new(ThresholdScaler::new(0.60)),
+            "threshold-60%".into(), 3,
+        ));
+        let m2 = m1.clone();
+        rows.push(run_scenario(
+            &trace, &cfg, &model,
+            move || Box::new(LoadScaler::new(m2.clone(), 0.99999, mix)),
+            "load-q99.999%".into(), 3,
+        ));
+        let m3 = m1.clone();
+        rows.push(run_scenario(
+            &trace, &cfg, &model,
+            move || {
+                Box::new(Composite::new(
+                    LoadScaler::new(m3.clone(), 0.99999, mix),
+                    AppdataScaler::new(4),
+                ))
+            },
+            "load+appdata+4".into(), 3,
+        ));
+        for r in &rows {
+            println!(
+                "{:<10} {:<26} {:>9.2}% {:>10.2} {:>5}",
+                spec.opponent, r.name, r.violation_pct, r.cpu_hours, r.reps
+            );
+        }
+        let saving = 1.0 - rows[1].cpu_hours / rows[0].cpu_hours;
+        savings.push((spec.opponent, saving));
+        println!();
+    }
+    println!("load vs threshold-60% CPU-hour savings (paper: up to 43%):");
+    for (m, s) in savings {
+        println!("  {m:<10} {:>5.1}%", s * 100.0);
+    }
+}

@@ -1,0 +1,53 @@
+//! Quickstart: generate a synthetic match, simulate it under the paper's
+//! three auto-scaling algorithms, print quality/cost.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sla_autoscale::autoscale::{AppdataScaler, Composite, LoadScaler, ThresholdScaler};
+use sla_autoscale::config::SimConfig;
+use sla_autoscale::delay::DelayModel;
+use sla_autoscale::experiments::common::{default_mix, scale_config, trace_for};
+use sla_autoscale::sim::Simulator;
+use sla_autoscale::workload::by_opponent;
+
+fn main() {
+    // 1. The workload: Brazil vs Uruguay (the semi-final), fast replica.
+    let spec = by_opponent("Uruguay").expect("catalogue match");
+    let trace = trace_for(&spec, true);
+    println!(
+        "workload: BRA vs {} — {} tweets over {:.2} h (20x fast replica)\n",
+        spec.opponent,
+        trace.len(),
+        spec.length_hours
+    );
+
+    // 2. Table III simulation defaults (fast-scaled CPU to match).
+    let cfg = scale_config(&SimConfig::default(), true);
+    let model = DelayModel::default();
+    let mix = default_mix();
+
+    // 3. One run per algorithm family.
+    println!("{:<28} {:>10} {:>10} {:>8}", "algorithm", "tweets>SLA", "CPU-hours", "scales");
+    for scaler in [
+        Box::new(ThresholdScaler::new(0.60)) as Box<dyn sla_autoscale::autoscale::AutoScaler>,
+        Box::new(LoadScaler::new(model.clone(), 0.99999, mix)),
+        Box::new(Composite::new(
+            LoadScaler::new(model.clone(), 0.99999, mix),
+            AppdataScaler::new(4),
+        )),
+    ] {
+        let name = scaler.name();
+        let res = Simulator::new(&cfg, &model).run(&trace, scaler);
+        println!(
+            "{:<28} {:>9.2}% {:>10.2} {:>8}",
+            name,
+            res.violation_pct(),
+            res.cpu_hours,
+            res.decisions.len()
+        );
+    }
+    println!(
+        "\nSLA = {:.0} s; see `sla-autoscale exp all` for the full paper evaluation.",
+        cfg.sla_secs
+    );
+}

@@ -1,0 +1,93 @@
+//! Trace explorer: inspect the synthetic workload calibration — volumes,
+//! burst timing, sentiment lead, class mix, and the §IV-A testbed replay
+//! statistics (Little's Law, Weibull fits) for any match.
+//!
+//! Run: `cargo run --release --example trace_explorer [-- <opponent>]`
+
+use sla_autoscale::delay::DelayModel;
+use sla_autoscale::experiments::report::{compact, sparkline};
+use sla_autoscale::stats::weibull::Weibull;
+use sla_autoscale::stats::{lagged_pearson, mean, std_dev};
+use sla_autoscale::streams::{replay, ReplayConfig};
+use sla_autoscale::workload::{by_opponent, generate, GeneratorConfig, TweetClass};
+
+fn main() {
+    let opponent = std::env::args().nth(1).unwrap_or_else(|| "Mexico".into());
+    let Some(mut spec) = by_opponent(&opponent) else {
+        eprintln!("unknown opponent {opponent:?}");
+        std::process::exit(1);
+    };
+    spec.total_tweets /= 20; // fast replica
+    let trace = generate(&spec, &GeneratorConfig::default());
+
+    println!(
+        "BRA vs {} ({}) — {} tweets generated (paper: {}), {:.2} h\n",
+        spec.opponent,
+        spec.date,
+        trace.len(),
+        compact(spec.total_tweets as f64 / 20.0),
+        spec.length_hours
+    );
+
+    // Volume + sentiment series
+    let vol: Vec<f64> = trace.volume_per_minute().iter().map(|&v| v as f64).collect();
+    let sent = trace.sentiment_per_minute();
+    print!("{}", sparkline("tweet volume / minute", &vol, 100));
+    print!("{}", sparkline("mean sentiment / minute", &sent, 100));
+
+    // Class mix and lag correlation
+    let mix = trace.class_mix();
+    println!(
+        "\nclass mix: discarded {:.1}%, off-topic {:.1}%, analyzed {:.1}%",
+        mix[0] * 100.0,
+        mix[1] * 100.0,
+        mix[2] * 100.0
+    );
+    let n = sent.len().min(vol.len());
+    for k in [0usize, 1, 2, 5, 10] {
+        println!(
+            "corr(sentiment(t), volume(t+{k})) = {:.2}",
+            lagged_pearson(&sent[..n], &vol[..n], k)
+        );
+    }
+
+    // Burst schedule
+    println!("\nburst schedule:");
+    for e in &spec.events {
+        println!(
+            "  minute {:>5.1}  peak x{:.1}  rise {:.2} min  decay {:.1} min",
+            e.minute, e.magnitude, e.rise_min, e.decay_min
+        );
+    }
+
+    // §IV-A testbed replay: delays per class, Little's law, Weibull fit
+    println!("\nreplaying through the Fig 1 pipeline on the 2.6 GHz testbed model...");
+    let cfg = ReplayConfig {
+        max_in_flight: 15_875 / 20,
+        cpu_hz: 2.6e9 / 20.0,
+        ..Default::default()
+    };
+    let res = replay(&trace, &DelayModel::default(), &cfg);
+    let ll = res.tracer.littles_law();
+    println!(
+        "Little's law: L = {:.1}, λ = {:.2} t/s, W = {:.1} s, λW = {:.1} (rel err {:.4})",
+        ll.l,
+        ll.lambda,
+        ll.w,
+        ll.lambda * ll.w,
+        ll.relative_error()
+    );
+    for class in [TweetClass::OffTopic, TweetClass::Analyzed] {
+        let delays = res.tracer.delays_of(class);
+        let fit = Weibull::fit(&delays).expect("fit");
+        println!(
+            "{:<10} delays: mean {:>6.1} s (σ {:>5.1})  weibull k={:.2} λ={:.1}  NRMSE {:.3}",
+            class.name(),
+            mean(&delays),
+            std_dev(&delays),
+            fit.shape,
+            fit.scale,
+            fit.nrmse(&delays, 40)
+        );
+    }
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX model (L2) + Pallas kernels (L1) -> HLO text.
+
+Nothing in this package is imported at runtime; `make artifacts` runs it
+once and the Rust coordinator consumes artifacts/*.hlo.txt via PJRT.
+"""

@@ -1,0 +1,169 @@
+"""AOT entry point: train the classifier, validate L1 vs ref, emit HLO text.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Outputs, consumed by the Rust runtime (rust/src/runtime/):
+  sentiment_b{8,64,256}.hlo.txt  -- inference graph per batch variant,
+                                    trained weights baked in as constants
+  meta.json                      -- dims, hash/vectorizer contract goldens,
+                                    training metrics, a golden (input,
+                                    probs) pair for the Rust integration
+                                    test, and L1 perf-model numbers
+
+HLO *text* is the interchange format, not `lowered.compiler_ir('hlo')` /
+serialized protos: jax>=0.5 emits 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly
+(see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model, vectorizer
+from .kernels import mlp_pallas, ref
+from .kernels.mlp import C_PAD, TILE_B, mxu_flops, vmem_bytes
+
+BATCH_VARIANTS = (8, 64, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals as
+    # `constant({...})`, which would round-trip the baked weights to garbage.
+    return comp.as_hlo_text(True)
+
+
+def lower_variant(params, batch: int) -> str:
+    """Lower the inference graph for one batch size, weights as constants."""
+
+    def infer(counts):
+        return (model.forward(counts, params, interpret=True),)
+
+    spec = jax.ShapeDtypeStruct((batch, vectorizer.VOCAB), jnp.float32)
+    return to_hlo_text(jax.jit(infer).lower(spec))
+
+
+def tokenizer_goldens():
+    """Pin the Rust/Python vectorizer contract: token -> bucket samples."""
+    toks = [
+        "pos0", "pos17", "neg3", "neg47", "neu5", "neu88",
+        "topic0", "topic31", "noise1234", "gol", "brasil", "penalty!!",
+    ]
+    return {t: vectorizer.bucket(t) for t in toks}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--steps", type=int, default=240)
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    print("[aot] training classifier (L2, differentiating through ref twin)")
+    params, loss, acc = model.train(seed=args.seed, steps=args.steps, log=print)
+    print(f"[aot] final loss {loss:.4f}  train acc {acc:.3f}")
+    if acc < 0.9:
+        raise SystemExit(f"training failed to converge (acc={acc:.3f} < 0.9)")
+
+    # L1 gate: the served kernel must match the trained (ref) function.
+    rng = np.random.default_rng(args.seed)
+    counts = jnp.asarray(
+        rng.poisson(0.02, size=(64, vectorizer.VOCAB)).astype(np.float32)
+    )
+    x = ref.embed_ref(counts, params["emb"])
+    got = mlp_pallas(x, params["w1"], params["b1"], params["w2"], params["b2"])
+    want = ref.mlp_ref(x, params["w1"], params["b1"], params["w2"], params["b2"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    print("[aot] pallas kernel == ref on trained weights: OK")
+
+    artifacts = {}
+    for b in BATCH_VARIANTS:
+        text = lower_variant(params, b)
+        path = out / f"sentiment_b{b}.hlo.txt"
+        path.write_text(text)
+        artifacts[str(b)] = path.name
+        print(f"[aot] wrote {path} ({len(text)} chars)")
+
+    # Golden pair for the Rust integration test: 8 synthetic tweets.
+    texts, labels = corpus.make_dataset(args.seed + 100, 8)
+    gcounts = vectorizer.vectorize_batch(texts)
+    gprobs = np.asarray(model.forward(jnp.asarray(gcounts), params))
+    gscore = np.asarray(model.sentiment_score(jnp.asarray(gprobs)))
+
+    # Flat key=value twin for the Rust runtime (no JSON parser needed
+    # there); meta.json below stays as the human/python-facing view.
+    flat = []
+    flat.append(("vocab", vectorizer.VOCAB))
+    flat.append(("embed", vectorizer.EMBED))
+    flat.append(("hidden", vectorizer.HIDDEN))
+    flat.append(("classes", vectorizer.CLASSES))
+    for i, lab in enumerate(vectorizer.LABELS):
+        flat.append((f"labels.{i}", lab))
+    for i, b in enumerate(BATCH_VARIANTS):
+        flat.append((f"batch_variants.{i}", b))
+        flat.append((f"artifact.{b}", artifacts[str(b)]))
+    for i, (tok, bkt) in enumerate(sorted(tokenizer_goldens().items())):
+        flat.append((f"tokenizer_golden.token.{i}", tok))
+        flat.append((f"tokenizer_golden.bucket.{i}", bkt))
+    flat.append(("train_acc", acc))
+    for i, t in enumerate(texts):
+        flat.append((f"golden.text.{i}", t))
+        flat.append((f"golden.labels.{i}", int(labels[i])))
+        flat.append((f"golden.scores.{i}", float(gscore[i])))
+    k = 0
+    for row in gprobs:
+        for v in row:
+            flat.append((f"golden.probs.{k}", float(v)))
+            k += 1
+    flat.append(("perf.vmem_bytes_per_step",
+                 vmem_bytes(vectorizer.EMBED, vectorizer.HIDDEN)))
+    flat.append(("perf.mxu_flops_b64",
+                 mxu_flops(64, vectorizer.EMBED, vectorizer.HIDDEN)))
+    (out / "meta.txt").write_text(
+        "".join(f"{key}={val}\n" for key, val in flat)
+    )
+    print(f"[aot] wrote {out / 'meta.txt'}")
+
+    meta = {
+        "vocab": vectorizer.VOCAB,
+        "embed": vectorizer.EMBED,
+        "hidden": vectorizer.HIDDEN,
+        "classes": vectorizer.CLASSES,
+        "labels": list(vectorizer.LABELS),
+        "batch_variants": list(BATCH_VARIANTS),
+        "artifacts": artifacts,
+        "hash": "fnv1a64 % vocab over utf-8 lowercased whitespace tokens",
+        "tokenizer_goldens": tokenizer_goldens(),
+        "training": {"seed": args.seed, "steps": args.steps,
+                     "final_loss": loss, "train_acc": acc},
+        "golden": {
+            "texts": texts,
+            "labels": labels.tolist(),
+            "probs": [[float(v) for v in row] for row in gprobs],
+            "scores": [float(v) for v in gscore],
+        },
+        "perf_model": {
+            "tile_b": TILE_B,
+            "c_pad": C_PAD,
+            "vmem_bytes_per_step": vmem_bytes(vectorizer.EMBED, vectorizer.HIDDEN),
+            "mxu_flops_b64": mxu_flops(64, vectorizer.EMBED, vectorizer.HIDDEN),
+        },
+    }
+    (out / "meta.json").write_text(json.dumps(meta, indent=2))
+    print(f"[aot] wrote {out / 'meta.json'}")
+
+
+if __name__ == "__main__":
+    main()

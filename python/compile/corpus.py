@@ -1,0 +1,64 @@
+"""Synthetic soccer-tweet corpus for build-time classifier training.
+
+The paper's classifier (Cavalin et al. [20][21]) was trained on real
+labelled tweets we do not have; per DESIGN.md §2 we substitute a synthetic
+corpus over the same token space the Rust workload generator emits
+(rust/src/workload/text.rs): sentiment-bearing tokens (pos*/neg*), neutral
+chatter (neu*), match topic tokens (topic*) and open-vocabulary noise.
+The two sides share the distribution by convention; only the *vectorizer*
+must match bit-for-bit (see vectorizer.py).
+"""
+
+import numpy as np
+
+SENTIMENT_WORDS = 48   # pos0..pos47 / neg0..neg47
+NEUTRAL_WORDS = 96     # neu0..neu95
+TOPIC_WORDS = 32       # topic0..topic31
+NOISE_WORDS = 4096     # noise0..noise4095 (hash collisions on purpose)
+
+# P(token source | tweet label). Rows: positive, negative, neutral.
+# Columns: own-sentiment, opposite-sentiment, neutral, topic, noise.
+MIX = {
+    "positive": (0.46, 0.06, 0.18, 0.15, 0.15),
+    "negative": (0.46, 0.06, 0.18, 0.15, 0.15),
+    "neutral": (0.04, 0.04, 0.47, 0.25, 0.20),
+}
+
+MIN_LEN, MAX_LEN = 6, 22
+
+
+def sample_tweet(rng: np.random.Generator, label: str) -> str:
+    """Draw one synthetic tweet's token string for a given label."""
+    own, opp, neu, top, noi = MIX[label]
+    length = int(rng.integers(MIN_LEN, MAX_LEN + 1))
+    toks = []
+    for _ in range(length):
+        r = rng.random()
+        if r < own:
+            fam = "pos" if label == "positive" else ("neg" if label == "negative" else "neu")
+            pool = SENTIMENT_WORDS if fam != "neu" else NEUTRAL_WORDS
+            toks.append(f"{fam}{rng.integers(pool)}")
+        elif r < own + opp:
+            fam = "neg" if label == "positive" else "pos"
+            toks.append(f"{fam}{rng.integers(SENTIMENT_WORDS)}")
+        elif r < own + opp + neu:
+            toks.append(f"neu{rng.integers(NEUTRAL_WORDS)}")
+        elif r < own + opp + neu + top:
+            toks.append(f"topic{rng.integers(TOPIC_WORDS)}")
+        else:
+            toks.append(f"noise{rng.integers(NOISE_WORDS)}")
+    return " ".join(toks)
+
+
+def make_dataset(seed: int, n: int):
+    """Balanced labelled dataset -> (texts list, labels int array)."""
+    from . import vectorizer
+
+    rng = np.random.default_rng(seed)
+    texts, labels = [], []
+    for i in range(n):
+        label_idx = i % len(vectorizer.LABELS)
+        label = vectorizer.LABELS[label_idx]
+        texts.append(sample_tweet(rng, label))
+        labels.append(label_idx)
+    return texts, np.asarray(labels, dtype=np.int32)

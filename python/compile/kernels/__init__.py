@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels for the sentiment classifier hot path."""
+
+from .mlp import mlp_pallas, TILE_B  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,92 @@
+"""Layer-1 Pallas kernel: fused 2-layer MLP over a batch of activations.
+
+This is the compute hot-spot of the sentiment classifier (paper §III: the
+application is CPU-bound on per-tweet sentiment scoring). The kernel fuses
+  h = relu(x @ w1 + b1);  logits = h @ w2 + b2
+into one pass so the intermediate `h` never round-trips to HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the batch
+dimension; each grid step keeps one (TILE_B, D) activation tile plus the
+full (D, H) and (H, C_pad) weight panels resident in VMEM, and both matmuls
+feed the MXU. D=64/H=128 are lane-friendly; the C dimension (3 classes) is
+zero-padded to C_PAD=8 sublanes by the caller-facing wrapper.
+
+On this image the kernel always runs with interpret=True — the CPU PJRT
+plugin cannot execute Mosaic custom-calls — so correctness is validated
+against ref.mlp_ref and TPU efficiency is estimated analytically
+(EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: one grid step processes TILE_B rows. 8 sublanes x f32 is the
+# natural TPU register tile height; it also divides every compiled batch
+# variant (8 / 64 / 256).
+TILE_B = 8
+
+# Classes are padded to a full sublane so the second matmul keeps an
+# MXU-friendly minor dimension. The wrapper strips the padding.
+C_PAD = 8
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One batch tile: fused matmul -> bias -> relu -> matmul -> bias."""
+    x = x_ref[...]                                  # (TILE_B, D)   VMEM
+    h = jnp.maximum(x @ w1_ref[...] + b1_ref[...], 0.0)  # (TILE_B, H)
+    o_ref[...] = h @ w2_ref[...] + b2_ref[...]      # (TILE_B, C_PAD)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mlp_pallas(x, w1, b1, w2, b2, *, interpret=True):
+    """Fused MLP logits = relu(x@w1+b1)@w2+b2 via a batch-tiled Pallas call.
+
+    Shapes: x [B, D], w1 [D, H], b1 [H], w2 [H, C], b2 [C] with B a
+    multiple of TILE_B. Returns [B, C] f32 logits. Accepts any C <= C_PAD;
+    weights are zero-padded internally and the output sliced back.
+    """
+    b, d = x.shape
+    h = w1.shape[1]
+    c = w2.shape[1]
+    if b % TILE_B != 0:
+        raise ValueError(f"batch {b} not a multiple of TILE_B={TILE_B}")
+    if c > C_PAD:
+        raise ValueError(f"classes {c} > C_PAD={C_PAD}")
+
+    w2p = jnp.zeros((h, C_PAD), x.dtype).at[:, :c].set(w2)
+    b2p = jnp.zeros((C_PAD,), x.dtype).at[:c].set(b2)
+    # Biases as (1, N) rows: TPU VMEM wants >=2D refs, and broadcasting a
+    # row across the tile is free.
+    b1r = b1.reshape(1, h)
+    b2r = b2p.reshape(1, C_PAD)
+
+    grid = (b // TILE_B,)
+    out = pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, d), lambda i: (i, 0)),  # x: tile batch
+            pl.BlockSpec((d, h), lambda i: (0, 0)),       # w1: resident
+            pl.BlockSpec((1, h), lambda i: (0, 0)),       # b1: resident
+            pl.BlockSpec((h, C_PAD), lambda i: (0, 0)),   # w2: resident
+            pl.BlockSpec((1, C_PAD), lambda i: (0, 0)),   # b2: resident
+        ],
+        out_specs=pl.BlockSpec((TILE_B, C_PAD), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, C_PAD), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1r, w2p, b2r)
+    return out[:, :c]
+
+
+def vmem_bytes(d, h, c_pad=C_PAD, tile_b=TILE_B, itemsize=4):
+    """Static VMEM footprint of one grid step (perf-model input, §Perf)."""
+    tiles = tile_b * d + d * h + h + h * c_pad + c_pad + tile_b * c_pad
+    return tiles * itemsize
+
+
+def mxu_flops(b, d, h, c_pad=C_PAD):
+    """MXU-eligible FLOPs for one full call (both matmuls)."""
+    return 2 * b * d * h + 2 * b * h * c_pad

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the Layer-1 kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. pytest (and hypothesis sweeps)
+assert_allclose the kernel against these functions; the build-time training
+loop in model.py also differentiates through these (interpret-mode Pallas
+has no cheap VJP, and the math is identical by construction + test).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_ref(x, w1, b1, w2, b2):
+    """Fused 2-layer MLP: relu(x @ w1 + b1) @ w2 + b2.
+
+    x:  [B, D] activations (pooled bag-of-words embeddings)
+    w1: [D, H], b1: [H]
+    w2: [H, C], b2: [C]
+    returns logits [B, C]
+    """
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return h @ w2 + b2
+
+
+def embed_ref(counts, emb):
+    """Hashing-vectorizer counts -> mean-pooled embedding.
+
+    counts: [B, V] token-bucket counts (f32)
+    emb:    [V, D] embedding table
+    returns [B, D] pooled activations, normalized by token count (>=1).
+    """
+    total = jnp.maximum(counts.sum(axis=-1, keepdims=True), 1.0)
+    return (counts @ emb) / total
+
+
+def classifier_ref(counts, params):
+    """Full inference graph on top of the refs: counts -> class probs."""
+    x = embed_ref(counts, params["emb"])
+    logits = mlp_ref(x, params["w1"], params["b1"], params["w2"], params["b2"])
+    return jax.nn.softmax(logits, axis=-1)

@@ -1,0 +1,94 @@
+"""Layer-2 JAX model: the sentiment classifier fwd/bwd + build-time training.
+
+Forward graph (inference, what gets AOT-lowered for Rust):
+
+    counts [B, V] --embed_ref--> x [B, D] --mlp_pallas (L1)--> logits [B, C]
+                                                --softmax--> probs [B, C]
+
+Training (build-time only) differentiates through the pure-jnp twin of the
+kernel (ref.mlp_ref); the Pallas kernel is asserted allclose against the
+ref on the trained weights before lowering (aot.py + pytest), so the
+served graph and the trained graph compute the same function.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, vectorizer
+from .kernels import mlp_pallas
+from .kernels import ref as kref
+
+V, D, H, C = vectorizer.VOCAB, vectorizer.EMBED, vectorizer.HIDDEN, vectorizer.CLASSES
+
+
+def init_params(seed: int):
+    """He-initialised parameter pytree."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "emb": jax.random.normal(k1, (V, D), jnp.float32) * (1.0 / np.sqrt(V)),
+        "w1": jax.random.normal(k2, (D, H), jnp.float32) * np.sqrt(2.0 / D),
+        "b1": jnp.zeros((H,), jnp.float32),
+        "w2": jax.random.normal(k3, (H, C), jnp.float32) * np.sqrt(2.0 / H),
+        "b2": jnp.zeros((C,), jnp.float32),
+    }
+
+
+def forward(counts, params, *, interpret=True):
+    """Inference fwd with the Pallas kernel on the hot path -> probs [B, C]."""
+    x = kref.embed_ref(counts, params["emb"])
+    logits = mlp_pallas(
+        x, params["w1"], params["b1"], params["w2"], params["b2"], interpret=interpret
+    )
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def forward_ref(counts, params):
+    """Training-path fwd (pure jnp twin, differentiable) -> probs [B, C]."""
+    return kref.classifier_ref(counts, params)
+
+
+def loss_fn(params, counts, labels):
+    """Mean cross-entropy over a labelled batch."""
+    probs = forward_ref(counts, params)
+    logp = jnp.log(jnp.clip(probs, 1e-9, 1.0))
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def sgd_step(params, counts, labels, lr=0.5):
+    """One SGD step on the cross-entropy loss; returns (params, loss)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, counts, labels)
+    new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new, loss
+
+
+def train(seed=7, steps=240, batch=192, n_train=4800, lr=0.5, log=None):
+    """Build-time training loop; returns (params, final_loss, train_acc)."""
+    texts, labels = corpus.make_dataset(seed, n_train)
+    counts = vectorizer.vectorize_batch(texts)
+    counts_j = jnp.asarray(counts)
+    labels_j = jnp.asarray(labels)
+
+    params = init_params(seed)
+    rng = np.random.default_rng(seed + 1)
+    loss = jnp.inf
+    for step in range(steps):
+        idx = rng.integers(0, n_train, size=batch)
+        params, loss = sgd_step(params, counts_j[idx], labels_j[idx], lr=lr)
+        if log and step % 40 == 0:
+            log(f"  train step {step:4d} loss {float(loss):.4f}")
+
+    probs = forward_ref(counts_j, params)
+    acc = float(jnp.mean(jnp.argmax(probs, axis=-1) == labels_j))
+    return params, float(loss), acc
+
+
+def sentiment_score(probs):
+    """Paper's 'sentiment score': probability of being positive OR negative
+    (footnote 1, §III-A) — i.e. 1 - p(neutral), equivalently max-pole
+    intensity used by the appdata trigger."""
+    return probs[:, 0] + probs[:, 1]

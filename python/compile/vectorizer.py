@@ -1,0 +1,51 @@
+"""Hashing vectorizer shared (by construction) with the Rust runtime.
+
+The Rust coordinator must produce bit-identical bag-of-words vectors to the
+ones this module used at training time, so both sides implement the same
+FNV-1a 64-bit hash over UTF-8 token bytes, bucketed modulo VOCAB. The Rust
+twin is rust/src/sentiment/tokenizer.rs; goldens exported in
+artifacts/meta.json pin the two together.
+"""
+
+import numpy as np
+
+VOCAB = 1024
+EMBED = 64
+HIDDEN = 128
+CLASSES = 3
+LABELS = ("positive", "negative", "neutral")
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK = (1 << 64) - 1
+
+
+def fnv1a64(data: bytes) -> int:
+    """FNV-1a 64-bit hash (mirrors sentiment::tokenizer::fnv1a64)."""
+    h = _FNV_OFFSET
+    for byte in data:
+        h ^= byte
+        h = (h * _FNV_PRIME) & _MASK
+    return h
+
+
+def bucket(token: str) -> int:
+    """Token -> vocabulary bucket."""
+    return fnv1a64(token.encode("utf-8")) % VOCAB
+
+
+def tokenize(text: str):
+    """Whitespace tokenization, lowercased (mirrors the Rust side)."""
+    return [t for t in text.lower().split() if t]
+
+
+def vectorize(text: str) -> np.ndarray:
+    """Tweet text -> [VOCAB] f32 bucket counts."""
+    counts = np.zeros(VOCAB, dtype=np.float32)
+    for tok in tokenize(text):
+        counts[bucket(tok)] += 1.0
+    return counts
+
+
+def vectorize_batch(texts) -> np.ndarray:
+    return np.stack([vectorize(t) for t in texts], axis=0)

@@ -1,0 +1,57 @@
+"""AOT path: lowering round-trips, constants are materialized, goldens pin."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model, vectorizer
+
+
+def test_to_hlo_text_materializes_constants():
+    w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+
+    def f(x):
+        return (x @ w,)
+
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((2, 8), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # The elided form `constant({...})` must never appear (it would destroy
+    # the baked weights on the Rust side).
+    assert "constant({...})" not in text
+    assert "63" in text  # last weight value present verbatim
+
+
+def test_lower_variant_entry_layout():
+    params = model.init_params(0)
+    text = aot.lower_variant(params, 8)
+    assert f"f32[8,{vectorizer.VOCAB}]" in text
+    assert f"f32[8,{vectorizer.CLASSES}]" in text
+
+
+def test_tokenizer_goldens_stable():
+    g = aot.tokenizer_goldens()
+    assert all(0 <= b < vectorizer.VOCAB for b in g.values())
+    # Known-answer pins (cross-checked by rust/src/sentiment/tokenizer.rs).
+    assert g["pos0"] == vectorizer.bucket("pos0")
+    assert len(set(g)) == len(g)
+
+
+def test_meta_json_contract_if_built():
+    """If `make artifacts` ran, meta.json satisfies the Rust-side contract."""
+    meta_path = pathlib.Path(__file__).resolve().parents[2] / "artifacts" / "meta.json"
+    if not meta_path.exists():
+        import pytest
+
+        pytest.skip("artifacts not built")
+    meta = json.loads(meta_path.read_text())
+    assert meta["vocab"] == vectorizer.VOCAB
+    assert meta["labels"] == list(vectorizer.LABELS)
+    assert set(map(int, meta["batch_variants"])) == set(aot.BATCH_VARIANTS)
+    probs = np.asarray(meta["golden"]["probs"])
+    assert probs.shape == (8, vectorizer.CLASSES)
+    np.testing.assert_allclose(probs.sum(axis=1), 1.0, rtol=1e-4)
+    assert meta["training"]["train_acc"] > 0.9

@@ -1,0 +1,93 @@
+"""L1 correctness: Pallas MLP kernel vs the pure-jnp oracle.
+
+Includes a hypothesis sweep over shapes/values — the CORE correctness
+signal for the kernel that ends up inside every served artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mlp_pallas, TILE_B
+from compile.kernels.mlp import C_PAD, mxu_flops, vmem_bytes
+from compile.kernels import ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def _check(b, d, h, c, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, d) * scale
+    w1, b1 = _rand(rng, d, h), _rand(rng, h)
+    w2, b2 = _rand(rng, h, c), _rand(rng, c)
+    got = mlp_pallas(x, w1, b1, w2, b2)
+    want = ref.mlp_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_production_shape():
+    _check(64, 64, 128, 3)
+
+
+def test_single_tile():
+    _check(TILE_B, 64, 128, 3)
+
+
+def test_large_batch():
+    _check(256, 64, 128, 3)
+
+
+def test_c_equals_cpad():
+    _check(16, 32, 64, C_PAD)
+
+
+def test_batch_not_multiple_of_tile_rejected():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="TILE_B"):
+        mlp_pallas(_rand(rng, 7, 8), _rand(rng, 8, 8), _rand(rng, 8),
+                   _rand(rng, 8, 3), _rand(rng, 3))
+
+
+def test_too_many_classes_rejected():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="C_PAD"):
+        mlp_pallas(_rand(rng, 8, 8), _rand(rng, 8, 8), _rand(rng, 8),
+                   _rand(rng, 8, C_PAD + 1), _rand(rng, C_PAD + 1))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bt=st.integers(1, 6),
+    d=st.sampled_from([8, 16, 64, 96]),
+    h=st.sampled_from([8, 32, 128]),
+    c=st.integers(1, C_PAD),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 10.0]),
+)
+def test_hypothesis_sweep(bt, d, h, c, seed, scale):
+    """Kernel == ref across batch tiles, dims, class counts and scales."""
+    _check(bt * TILE_B, d, h, c, seed=seed, scale=scale)
+
+
+def test_zero_input_gives_bias_path():
+    """x=0 -> relu(b1) @ w2 + b2 exactly."""
+    d, h, c = 16, 32, 3
+    rng = np.random.default_rng(3)
+    x = jnp.zeros((TILE_B, d), jnp.float32)
+    w1, b1 = _rand(rng, d, h), _rand(rng, h)
+    w2, b2 = _rand(rng, h, c), _rand(rng, c)
+    got = mlp_pallas(x, w1, b1, w2, b2)
+    want = jnp.maximum(b1, 0.0) @ w2 + b2
+    np.testing.assert_allclose(np.asarray(got), np.tile(np.asarray(want), (TILE_B, 1)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_perf_model_sane():
+    """Static perf-model helpers: VMEM fits, FLOP count is the closed form."""
+    vb = vmem_bytes(64, 128)
+    assert vb < 16 * 1024 * 1024  # well under a TPU core's VMEM
+    assert mxu_flops(64, 64, 128) == 2 * 64 * 64 * 128 + 2 * 64 * 128 * C_PAD

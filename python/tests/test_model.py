@@ -1,0 +1,95 @@
+"""L2 correctness: model shapes, gradients, training convergence, contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus, model, vectorizer
+from compile.kernels import ref
+
+
+def _counts(rng, b):
+    return jnp.asarray(rng.poisson(0.02, size=(b, vectorizer.VOCAB)).astype(np.float32))
+
+
+def test_forward_shapes_and_simplex():
+    params = model.init_params(0)
+    rng = np.random.default_rng(0)
+    probs = model.forward(_counts(rng, 8), params)
+    assert probs.shape == (8, vectorizer.CLASSES)
+    np.testing.assert_allclose(np.asarray(probs.sum(axis=-1)), np.ones(8), rtol=1e-5)
+    assert np.all(np.asarray(probs) >= 0)
+
+
+def test_forward_matches_ref_twin():
+    """Served graph (pallas path) == training graph (ref path)."""
+    params = model.init_params(1)
+    rng = np.random.default_rng(1)
+    c = _counts(rng, 16)
+    np.testing.assert_allclose(
+        np.asarray(model.forward(c, params)),
+        np.asarray(model.forward_ref(c, params)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_loss_grad_nonzero_and_finite():
+    params = model.init_params(2)
+    texts, labels = corpus.make_dataset(2, 24)
+    c = jnp.asarray(vectorizer.vectorize_batch(texts))
+    grads = jax.grad(model.loss_fn)(params, c, jnp.asarray(labels))
+    flat, _ = jax.tree_util.tree_flatten(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in flat)
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+def test_sgd_step_reduces_loss():
+    params = model.init_params(3)
+    texts, labels = corpus.make_dataset(3, 96)
+    c, l = jnp.asarray(vectorizer.vectorize_batch(texts)), jnp.asarray(labels)
+    l0 = float(model.loss_fn(params, c, l))
+    for _ in range(20):
+        params, loss = model.sgd_step(params, c, l)
+    assert float(loss) < l0
+
+
+def test_training_converges_quick():
+    _, loss, acc = model.train(seed=11, steps=120, n_train=1200, batch=128)
+    assert acc > 0.85, f"acc={acc}"
+
+
+def test_sentiment_score_definition():
+    probs = jnp.asarray([[0.5, 0.3, 0.2], [0.0, 0.1, 0.9]])
+    np.testing.assert_allclose(np.asarray(model.sentiment_score(probs)), [0.8, 0.1])
+
+
+def test_vectorizer_deterministic_and_bounded():
+    v1 = vectorizer.vectorize("Gol do BRASIL pos1 pos1 neg2")
+    v2 = vectorizer.vectorize("gol do brasil POS1 pos1 NEG2")
+    np.testing.assert_array_equal(v1, v2)  # case-insensitive
+    assert v1.sum() == 6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.text(alphabet=st.characters(codec="utf-8"), max_size=80))
+def test_vectorizer_total_mass_is_token_count(text):
+    v = vectorizer.vectorize(text)
+    assert v.sum() == len(vectorizer.tokenize(text))
+    assert v.shape == (vectorizer.VOCAB,)
+
+
+def test_fnv_golden():
+    """FNV-1a 64 known-answer (pins the cross-language contract)."""
+    assert vectorizer.fnv1a64(b"") == 0xCBF29CE484222325
+    assert vectorizer.fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    assert vectorizer.fnv1a64(b"foobar") == 0x85944171F73967E8
+
+
+def test_embed_ref_mean_pooling():
+    emb = jnp.eye(4, 2, dtype=jnp.float32)
+    counts = jnp.asarray([[2.0, 0.0, 0.0, 0.0], [0.0, 0.0, 0.0, 0.0]])
+    out = ref.embed_ref(counts, emb)
+    np.testing.assert_allclose(np.asarray(out[0]), [1.0, 0.0])  # 2*e0 / 2
+    np.testing.assert_allclose(np.asarray(out[1]), [0.0, 0.0])  # empty -> 0

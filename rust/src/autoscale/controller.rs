@@ -1,0 +1,126 @@
+//! Adaptation controller: gates scaler evaluations to the configured
+//! adapt frequency and forwards decisions to the cluster.
+//!
+//! §IV-B: "This is not done on every simulation step, but rather only
+//! every few minutes. This adaptation frequency is configurable just as
+//! the provisioning time."
+
+use super::{AutoScaler, Decision, Observation};
+use crate::sim::cluster::Cluster;
+
+/// Wraps a scaler with the adaptation schedule.
+pub struct Controller {
+    scaler: Box<dyn AutoScaler>,
+    adapt_every_secs: f64,
+    next_adapt: f64,
+    /// Log of (time, decision) — experiment reports read this.
+    decisions: Vec<(f64, Decision)>,
+}
+
+impl Controller {
+    pub fn new(scaler: Box<dyn AutoScaler>, adapt_every_secs: f64) -> Self {
+        assert!(adapt_every_secs > 0.0);
+        Self { scaler, adapt_every_secs, next_adapt: adapt_every_secs, decisions: Vec::new() }
+    }
+
+    /// Evaluate if an adaptation point has been reached; apply to cluster.
+    pub fn maybe_adapt(&mut self, obs: &Observation<'_>, cluster: &mut Cluster) {
+        if obs.now + 1e-9 < self.next_adapt {
+            return;
+        }
+        self.next_adapt += self.adapt_every_secs;
+        let decision = self.scaler.decide(obs);
+        match decision {
+            Decision::Hold => {}
+            Decision::ScaleOut(n) => cluster.scale_out(obs.now, n),
+            Decision::ScaleIn(n) => cluster.scale_in(n),
+        }
+        if decision != Decision::Hold {
+            self.decisions.push((obs.now, decision));
+        }
+    }
+
+    pub fn name(&self) -> String {
+        self.scaler.name()
+    }
+
+    pub fn decisions(&self) -> &[(f64, Decision)] {
+        &self.decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::history::SentimentWindows;
+
+    struct CountingScaler {
+        calls: std::rc::Rc<std::cell::Cell<u32>>,
+        decision: Decision,
+    }
+    impl AutoScaler for CountingScaler {
+        fn decide(&mut self, _: &Observation<'_>) -> Decision {
+            self.calls.set(self.calls.get() + 1);
+            self.decision
+        }
+        fn name(&self) -> String {
+            "counting".into()
+        }
+    }
+
+    fn obs(now: f64, w: &SentimentWindows) -> Observation<'_> {
+        Observation {
+            now,
+            cpus: 1,
+            pending_cpus: 0,
+            in_system: 0,
+            cpu_usage: 0.5,
+            sentiment: w,
+            cpu_hz: 2.0e9,
+            sla_secs: 300.0,
+        }
+    }
+
+    #[test]
+    fn respects_adapt_frequency() {
+        let calls = std::rc::Rc::new(std::cell::Cell::new(0));
+        let mut ctl = Controller::new(
+            Box::new(CountingScaler { calls: calls.clone(), decision: Decision::Hold }),
+            60.0,
+        );
+        let w = SentimentWindows::new();
+        let mut cluster = Cluster::new(1, 60.0);
+        for t in 0..300 {
+            ctl.maybe_adapt(&obs(t as f64, &w), &mut cluster);
+        }
+        // adaptation points at t=60,120,180,240 (and none at t<60)
+        assert_eq!(calls.get(), 4);
+    }
+
+    #[test]
+    fn applies_scale_out_to_cluster() {
+        let calls = std::rc::Rc::new(std::cell::Cell::new(0));
+        let mut ctl = Controller::new(
+            Box::new(CountingScaler { calls, decision: Decision::ScaleOut(3) }),
+            60.0,
+        );
+        let w = SentimentWindows::new();
+        let mut cluster = Cluster::new(1, 0.0);
+        ctl.maybe_adapt(&obs(60.0, &w), &mut cluster);
+        assert_eq!(cluster.pending() + cluster.active(), 4);
+        assert_eq!(ctl.decisions().len(), 1);
+    }
+
+    #[test]
+    fn applies_scale_in_to_cluster() {
+        let calls = std::rc::Rc::new(std::cell::Cell::new(0));
+        let mut ctl = Controller::new(
+            Box::new(CountingScaler { calls, decision: Decision::ScaleIn(1) }),
+            60.0,
+        );
+        let w = SentimentWindows::new();
+        let mut cluster = Cluster::new(3, 0.0);
+        ctl.maybe_adapt(&obs(60.0, &w), &mut cluster);
+        assert_eq!(cluster.active(), 2);
+    }
+}

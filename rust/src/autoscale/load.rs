@@ -1,0 +1,178 @@
+//! The *load* algorithm (§IV-C): a-priori knowledge of the per-class
+//! delay (cycle) distributions turns the reported number of in-system
+//! tweets into an expected drain time, compared against the SLA.
+//!
+//! "The estimated delay is calculated from the quantile function of the
+//! delay distribution of the different tweet classes and from the
+//! proportion of the class length. ... if the expected delay is above the
+//! SLA, more resources are allocated, and if the expected delay is below
+//! half the SLA, resources are released. Downscaling is limited to a
+//! single CPU ... For upscaling:
+//!     cpus_nextPeriod = ceil(cpus * (expectedDelay / SLA))"
+
+use super::{AutoScaler, Decision, Observation};
+use crate::delay::DelayModel;
+use crate::workload::TweetClass;
+
+/// A-priori-knowledge scaler.
+#[derive(Debug, Clone)]
+pub struct LoadScaler {
+    model: DelayModel,
+    /// Quantile of the per-class cycle distribution (paper sweeps
+    /// 0.9 … 0.99999; higher = more pessimistic estimate).
+    pub quantile: f64,
+    /// Class proportions "known from the training data".
+    pub class_mix: [f64; 3],
+    /// Pessimistic per-tweet cycle estimate, precomputed.
+    cycles_per_tweet: f64,
+}
+
+impl LoadScaler {
+    pub fn new(model: DelayModel, quantile: f64, class_mix: [f64; 3]) -> Self {
+        assert!((0.0..1.0).contains(&quantile), "quantile out of [0,1): {quantile}");
+        let cycles_per_tweet = TweetClass::ALL
+            .iter()
+            .map(|&c| class_mix[c as usize] * model.quantile_cycles(c, quantile))
+            .sum();
+        Self { model, quantile, class_mix, cycles_per_tweet }
+    }
+
+    /// The paper's quantile sweep (§V).
+    pub fn paper_sweep(model: &DelayModel, class_mix: [f64; 3]) -> Vec<Self> {
+        [0.90, 0.99, 0.999, 0.9999, 0.99999]
+            .into_iter()
+            .map(|q| Self::new(model.clone(), q, class_mix))
+            .collect()
+    }
+
+    /// Expected time to drain all in-system tweets on `cpus` CPUs.
+    pub fn expected_delay(&self, in_system: usize, cpus: u32, cpu_hz: f64) -> f64 {
+        let total_cycles = in_system as f64 * self.cycles_per_tweet;
+        total_cycles / (cpus.max(1) as f64 * cpu_hz)
+    }
+
+    pub fn model(&self) -> &DelayModel {
+        &self.model
+    }
+}
+
+impl AutoScaler for LoadScaler {
+    fn decide(&mut self, obs: &Observation<'_>) -> Decision {
+        // Count machines already on their way — without this the scaler
+        // re-requests the same burst capacity every adaptation period
+        // while provisioning is still in flight.
+        let effective = obs.cpus + obs.pending_cpus;
+        let expected = self.expected_delay(obs.in_system, effective, obs.cpu_hz);
+        if expected > obs.sla_secs {
+            // cpus_next = ceil(cpus * expectedDelay/SLA)
+            let next = (effective as f64 * expected / obs.sla_secs).ceil() as u32;
+            Decision::ScaleOut(next.saturating_sub(effective).max(1))
+        } else if expected < obs.sla_secs / 2.0 && obs.cpus > 1 {
+            // "Downscaling is limited to a single CPU being returned at a
+            // time, so sudden increases in tweet volume have less impact."
+            Decision::ScaleIn(1)
+        } else {
+            Decision::Hold
+        }
+    }
+
+    fn name(&self) -> String {
+        // print like the paper: 99.999% (trim float artifacts)
+        let pct = format!("{:.5}", self.quantile * 100.0);
+        let pct = pct.trim_end_matches('0').trim_end_matches('.');
+        format!("load-q{pct}%")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::history::SentimentWindows;
+
+    const MIX: [f64; 3] = [0.30, 0.30, 0.40];
+
+    fn scaler(q: f64) -> LoadScaler {
+        LoadScaler::new(DelayModel::paper_calibrated(), q, MIX)
+    }
+
+    fn obs(in_system: usize, cpus: u32, pending: u32, w: &SentimentWindows) -> Observation<'_> {
+        Observation {
+            now: 0.0,
+            cpus,
+            pending_cpus: pending,
+            in_system,
+            cpu_usage: 1.0,
+            sentiment: w,
+            cpu_hz: 2.0e9,
+            sla_secs: 300.0,
+        }
+    }
+
+    #[test]
+    fn quantile_monotone_in_pessimism() {
+        let lo = scaler(0.9).cycles_per_tweet;
+        let hi = scaler(0.99999).cycles_per_tweet;
+        assert!(hi > lo, "q=0.99999 ({hi:.3e}) must exceed q=0.9 ({lo:.3e})");
+    }
+
+    #[test]
+    fn proportional_upscale() {
+        let w = SentimentWindows::new();
+        let mut s = scaler(0.99999);
+        // Enough tweets that 1 CPU needs ~4x the SLA.
+        let per_tweet = s.cycles_per_tweet;
+        let in_system = (4.0 * 300.0 * 2.0e9 / per_tweet) as usize;
+        match s.decide(&obs(in_system, 1, 0, &w)) {
+            Decision::ScaleOut(n) => assert!(n >= 3, "expected ≥3 new CPUs, got {n}"),
+            d => panic!("expected scale-out, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn release_when_under_half_sla() {
+        let w = SentimentWindows::new();
+        let mut s = scaler(0.99999);
+        assert_eq!(s.decide(&obs(1, 4, 0, &w)), Decision::ScaleIn(1));
+        // but never below 1 CPU
+        assert_eq!(s.decide(&obs(1, 1, 0, &w)), Decision::Hold);
+    }
+
+    #[test]
+    fn hold_between_half_and_full_sla() {
+        let w = SentimentWindows::new();
+        let mut s = scaler(0.99999);
+        let per_tweet = s.cycles_per_tweet;
+        // ~0.75x SLA on one CPU
+        let in_system = (0.75 * 300.0 * 2.0e9 / per_tweet) as usize;
+        assert_eq!(s.decide(&obs(in_system, 1, 0, &w)), Decision::Hold);
+    }
+
+    #[test]
+    fn pending_cpus_prevent_rerequest() {
+        let w = SentimentWindows::new();
+        let mut s = scaler(0.99999);
+        let per_tweet = s.cycles_per_tweet;
+        let in_system = (4.0 * 300.0 * 2.0e9 / per_tweet) as usize;
+        let first = match s.decide(&obs(in_system, 1, 0, &w)) {
+            Decision::ScaleOut(n) => n,
+            d => panic!("{d:?}"),
+        };
+        // With those CPUs pending, the demand is considered covered.
+        assert_eq!(s.decide(&obs(in_system, 1, first, &w)), Decision::Hold);
+    }
+
+    #[test]
+    fn expected_delay_scales_inversely_with_cpus() {
+        let s = scaler(0.99);
+        let d1 = s.expected_delay(10_000, 1, 2.0e9);
+        let d4 = s.expected_delay(10_000, 4, 2.0e9);
+        assert!((d1 / d4 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_sweep_has_five_quantiles() {
+        let sweep = LoadScaler::paper_sweep(&DelayModel::paper_calibrated(), MIX);
+        assert_eq!(sweep.len(), 5);
+        assert_eq!(sweep[4].name(), "load-q99.999%");
+    }
+}

@@ -1,0 +1,158 @@
+//! Auto-scaling algorithms (§IV-C): the classic CPU-usage *threshold*
+//! rule, the a-priori *load* algorithm, the application-data *appdata*
+//! peak detector, and the load+appdata composite the paper evaluates.
+
+pub mod appdata;
+pub mod controller;
+pub mod load;
+pub mod predictive;
+pub mod threshold;
+pub mod vertical;
+
+pub use appdata::AppdataScaler;
+pub use controller::Controller;
+pub use load::LoadScaler;
+pub use predictive::PredictiveScaler;
+pub use threshold::ThresholdScaler;
+pub use vertical::VerticalScaler;
+
+use crate::sim::history::SentimentWindows;
+
+/// What a scaler can observe at an adaptation point.
+///
+/// The paper is explicit that the *load* algorithm needs "a basic
+/// communication between the application and the PaaS or IaaS level ...
+/// so the current number of tweets in the system is reported", and that
+/// *appdata* additionally reads the application's own output (sentiment
+/// scores); *threshold* sees only infrastructure-level CPU usage.
+#[derive(Debug)]
+pub struct Observation<'a> {
+    /// Simulation clock, seconds.
+    pub now: f64,
+    /// CPUs currently active.
+    pub cpus: u32,
+    /// CPUs requested but still provisioning.
+    pub pending_cpus: u32,
+    /// Tweets in the system (input queue + processing structure).
+    pub in_system: usize,
+    /// Mean CPU utilization over the last adaptation window, in [0, 1].
+    pub cpu_usage: f64,
+    /// Application-produced sentiment, bucketed by post time.
+    pub sentiment: &'a SentimentWindows,
+    /// CPU frequency in Hz.
+    pub cpu_hz: f64,
+    /// The SLA, seconds.
+    pub sla_secs: f64,
+}
+
+/// A scaling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Hold,
+    /// Request `n` additional CPUs.
+    ScaleOut(u32),
+    /// Release `n` CPUs.
+    ScaleIn(u32),
+}
+
+/// An auto-scaling trigger algorithm.
+pub trait AutoScaler {
+    /// Evaluate the situation at an adaptation point.
+    fn decide(&mut self, obs: &Observation<'_>) -> Decision;
+
+    /// Human-readable name (used in experiment reports).
+    fn name(&self) -> String;
+}
+
+/// *load* + *appdata* composite (§V-B: "Its use was put to test together
+/// with the load algorithm with a 99.999% quantile").
+///
+/// The appdata detector only deals with peaks; ordinary traffic growth is
+/// the load algorithm's job. When a peak fires, its extra CPUs are added
+/// on top of whatever the load algorithm wanted, and any scale-in from
+/// the load side is suppressed (we are pre-provisioning for a burst).
+pub struct Composite<A: AutoScaler, B: AutoScaler> {
+    pub base: A,
+    pub peaks: B,
+}
+
+impl<A: AutoScaler, B: AutoScaler> Composite<A, B> {
+    pub fn new(base: A, peaks: B) -> Self {
+        Self { base, peaks }
+    }
+}
+
+impl<A: AutoScaler, B: AutoScaler> AutoScaler for Composite<A, B> {
+    fn decide(&mut self, obs: &Observation<'_>) -> Decision {
+        let base = self.base.decide(obs);
+        let peak = self.peaks.decide(obs);
+        match (base, peak) {
+            (b, Decision::Hold) => b,
+            (Decision::ScaleOut(a), Decision::ScaleOut(b)) => Decision::ScaleOut(a + b),
+            (_, Decision::ScaleOut(b)) => Decision::ScaleOut(b),
+            // appdata never scales in; keep exhaustiveness explicit
+            (b, Decision::ScaleIn(_)) => b,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("{}+{}", self.base.name(), self.peaks.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fixed(Decision, &'static str);
+    impl AutoScaler for Fixed {
+        fn decide(&mut self, _obs: &Observation<'_>) -> Decision {
+            self.0
+        }
+        fn name(&self) -> String {
+            self.1.to_string()
+        }
+    }
+
+    fn obs(w: &SentimentWindows) -> Observation<'_> {
+        Observation {
+            now: 0.0,
+            cpus: 1,
+            pending_cpus: 0,
+            in_system: 0,
+            cpu_usage: 0.0,
+            sentiment: w,
+            cpu_hz: 2.0e9,
+            sla_secs: 300.0,
+        }
+    }
+
+    #[test]
+    fn composite_sums_scale_outs() {
+        let w = SentimentWindows::new();
+        let mut c = Composite::new(
+            Fixed(Decision::ScaleOut(2), "a"),
+            Fixed(Decision::ScaleOut(3), "b"),
+        );
+        assert_eq!(c.decide(&obs(&w)), Decision::ScaleOut(5));
+        assert_eq!(c.name(), "a+b");
+    }
+
+    #[test]
+    fn peak_overrides_scale_in() {
+        let w = SentimentWindows::new();
+        let mut c = Composite::new(
+            Fixed(Decision::ScaleIn(1), "a"),
+            Fixed(Decision::ScaleOut(4), "b"),
+        );
+        assert_eq!(c.decide(&obs(&w)), Decision::ScaleOut(4));
+    }
+
+    #[test]
+    fn base_passthrough_when_no_peak() {
+        let w = SentimentWindows::new();
+        let mut c =
+            Composite::new(Fixed(Decision::ScaleIn(1), "a"), Fixed(Decision::Hold, "b"));
+        assert_eq!(c.decide(&obs(&w)), Decision::ScaleIn(1));
+    }
+}

@@ -1,0 +1,170 @@
+//! Predictive auto-scaler — the Scryer-style baseline the paper's §II
+//! surveys ("Scryer, from Netflix, is an auto-scaling engine that uses
+//! predictive models to know when resources should be added or removed").
+//!
+//! A linear-trend forecaster over the observed in-system counts: fit a
+//! short-window least-squares slope, extrapolate `horizon` seconds ahead,
+//! and size the cluster for the *forecast* demand the way the load
+//! algorithm sizes it for current demand. This gives the evaluation a
+//! forward-looking *system-metric* baseline to contrast with the
+//! forward-looking *application-metric* appdata trigger.
+
+use super::{AutoScaler, Decision, Observation};
+use crate::delay::DelayModel;
+use crate::workload::TweetClass;
+use std::collections::VecDeque;
+
+/// Trend-extrapolating scaler over in-system counts.
+#[derive(Debug, Clone)]
+pub struct PredictiveScaler {
+    /// Pessimistic per-tweet cycle estimate (same role as in `LoadScaler`).
+    cycles_per_tweet: f64,
+    /// Forecast horizon in seconds (≈ provisioning delay + one adapt
+    /// period is the natural choice).
+    pub horizon_secs: f64,
+    /// History window of (time, in_system) observations used for the fit.
+    pub fit_window: usize,
+    history: VecDeque<(f64, f64)>,
+}
+
+impl PredictiveScaler {
+    pub fn new(model: DelayModel, quantile: f64, class_mix: [f64; 3], horizon_secs: f64) -> Self {
+        let cycles_per_tweet = TweetClass::ALL
+            .iter()
+            .map(|&c| class_mix[c as usize] * model.quantile_cycles(c, quantile))
+            .sum();
+        Self { cycles_per_tweet, horizon_secs, fit_window: 8, history: VecDeque::new() }
+    }
+
+    /// Least-squares slope over the retained history (0 when flat/short).
+    fn slope(&self) -> f64 {
+        let n = self.history.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+        for &(x, y) in &self.history {
+            sx += x;
+            sy += y;
+            sxx += x * x;
+            sxy += x * y;
+        }
+        let denom = nf * sxx - sx * sx;
+        if denom.abs() < 1e-9 {
+            0.0
+        } else {
+            (nf * sxy - sx * sy) / denom
+        }
+    }
+
+    /// Forecast in-system count `horizon` ahead (never negative).
+    pub fn forecast(&self, now: f64) -> f64 {
+        let Some(&(_, last)) = self.history.back() else { return 0.0 };
+        (last + self.slope() * self.horizon_secs).max(0.0)
+            * if now >= 0.0 { 1.0 } else { 1.0 }
+    }
+}
+
+impl AutoScaler for PredictiveScaler {
+    fn decide(&mut self, obs: &Observation<'_>) -> Decision {
+        self.history.push_back((obs.now, obs.in_system as f64));
+        while self.history.len() > self.fit_window {
+            self.history.pop_front();
+        }
+        let predicted = self.forecast(obs.now);
+        let effective = obs.cpus + obs.pending_cpus;
+        let expected =
+            predicted * self.cycles_per_tweet / (effective.max(1) as f64 * obs.cpu_hz);
+        if expected > obs.sla_secs {
+            let next = (effective as f64 * expected / obs.sla_secs).ceil() as u32;
+            Decision::ScaleOut(next.saturating_sub(effective).max(1))
+        } else if expected < obs.sla_secs / 2.0 && obs.cpus > 1 {
+            Decision::ScaleIn(1)
+        } else {
+            Decision::Hold
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("predictive-h{:.0}s", self.horizon_secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::history::SentimentWindows;
+
+    fn obs(now: f64, in_system: usize, cpus: u32, w: &SentimentWindows) -> Observation<'_> {
+        Observation {
+            now,
+            cpus,
+            pending_cpus: 0,
+            in_system,
+            cpu_usage: 0.8,
+            sentiment: w,
+            cpu_hz: 2.0e9,
+            sla_secs: 300.0,
+        }
+    }
+
+    fn scaler() -> PredictiveScaler {
+        PredictiveScaler::new(DelayModel::default(), 0.99, [0.3, 0.3, 0.4], 120.0)
+    }
+
+    #[test]
+    fn flat_history_behaves_like_load() {
+        let w = SentimentWindows::new();
+        let mut s = scaler();
+        // steady small load → eventually scale-in pressure
+        for t in 0..6 {
+            s.decide(&obs(t as f64 * 60.0, 10, 4, &w));
+        }
+        assert_eq!(s.decide(&obs(360.0, 10, 4, &w)), Decision::ScaleIn(1));
+    }
+
+    #[test]
+    fn rising_trend_triggers_preemptive_scale_out() {
+        let w = SentimentWindows::new();
+        let mut s = scaler();
+        // Demand doubling every observation: the *forecast* crosses the
+        // SLA before the current value does.
+        let mut last = Decision::Hold;
+        for (i, n) in [1_000usize, 3_000, 6_000, 10_000, 15_000].iter().enumerate() {
+            last = s.decide(&obs(i as f64 * 60.0, *n, 1, &w));
+        }
+        match last {
+            Decision::ScaleOut(k) => assert!(k >= 1),
+            d => panic!("expected preemptive scale-out, got {d:?}"),
+        }
+        // and the forecast exceeds the last observation
+        assert!(s.forecast(240.0) > 15_000.0);
+    }
+
+    #[test]
+    fn slope_least_squares_exact() {
+        let mut s = scaler();
+        let w = SentimentWindows::new();
+        for i in 0..5 {
+            s.decide(&obs(i as f64, 100 * i as usize, 64, &w));
+        }
+        // in_system = 100 t → slope 100/s
+        assert!((s.slope() - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn history_window_bounded() {
+        let mut s = scaler();
+        let w = SentimentWindows::new();
+        for i in 0..100 {
+            s.decide(&obs(i as f64, 5, 64, &w));
+        }
+        assert!(s.history.len() <= s.fit_window);
+    }
+
+    #[test]
+    fn name_carries_horizon() {
+        assert_eq!(scaler().name(), "predictive-h120s");
+    }
+}

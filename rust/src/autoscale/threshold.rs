@@ -1,0 +1,104 @@
+//! The classic CPU-usage threshold algorithm (§IV-C): "every time the
+//! average CPU usage goes above a certain predefined threshold, an extra
+//! CPU is allocated. On the other hand, every time the CPU usage is below
+//! 50%, a CPU is released."
+
+use super::{AutoScaler, Decision, Observation};
+
+/// Rule-based infrastructure-metric scaler.
+#[derive(Debug, Clone)]
+pub struct ThresholdScaler {
+    /// Upper CPU-usage bound in [0, 1]; crossing it adds one CPU.
+    pub upper: f64,
+    /// Lower bound (paper: fixed 50%); below it one CPU is released.
+    pub lower: f64,
+}
+
+impl ThresholdScaler {
+    pub fn new(upper: f64) -> Self {
+        assert!((0.0..=1.0).contains(&upper), "threshold out of [0,1]: {upper}");
+        Self { upper, lower: 0.5 }
+    }
+
+    /// The paper's sweep: thresholds of 60..99% CPU usage (§V).
+    pub fn paper_sweep() -> Vec<Self> {
+        [0.60, 0.70, 0.80, 0.90, 0.99].into_iter().map(Self::new).collect()
+    }
+}
+
+impl AutoScaler for ThresholdScaler {
+    fn decide(&mut self, obs: &Observation<'_>) -> Decision {
+        if obs.cpu_usage > self.upper {
+            // "can only increase the number of CPUs by one per observation"
+            Decision::ScaleOut(1)
+        } else if obs.cpu_usage < self.lower && obs.cpus > 1 {
+            Decision::ScaleIn(1)
+        } else {
+            Decision::Hold
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("threshold-{:.0}%", self.upper * 100.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::history::SentimentWindows;
+
+    fn obs(usage: f64, cpus: u32, w: &SentimentWindows) -> Observation<'_> {
+        Observation {
+            now: 0.0,
+            cpus,
+            pending_cpus: 0,
+            in_system: 100,
+            cpu_usage: usage,
+            sentiment: w,
+            cpu_hz: 2.0e9,
+            sla_secs: 300.0,
+        }
+    }
+
+    #[test]
+    fn scales_out_above_threshold() {
+        let w = SentimentWindows::new();
+        let mut s = ThresholdScaler::new(0.8);
+        assert_eq!(s.decide(&obs(0.85, 2, &w)), Decision::ScaleOut(1));
+        assert_eq!(s.decide(&obs(0.80, 2, &w)), Decision::Hold); // strictly above
+    }
+
+    #[test]
+    fn scales_in_below_half() {
+        let w = SentimentWindows::new();
+        let mut s = ThresholdScaler::new(0.8);
+        assert_eq!(s.decide(&obs(0.49, 2, &w)), Decision::ScaleIn(1));
+        assert_eq!(s.decide(&obs(0.50, 2, &w)), Decision::Hold);
+    }
+
+    #[test]
+    fn never_below_one_cpu() {
+        let w = SentimentWindows::new();
+        let mut s = ThresholdScaler::new(0.8);
+        assert_eq!(s.decide(&obs(0.10, 1, &w)), Decision::Hold);
+    }
+
+    #[test]
+    fn paper_sweep_values() {
+        let sweep = ThresholdScaler::paper_sweep();
+        let uppers: Vec<f64> = sweep.iter().map(|s| s.upper).collect();
+        assert_eq!(uppers, vec![0.60, 0.70, 0.80, 0.90, 0.99]);
+    }
+
+    #[test]
+    fn name_includes_threshold() {
+        assert_eq!(ThresholdScaler::new(0.9).name(), "threshold-90%");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of [0,1]")]
+    fn invalid_threshold_rejected() {
+        ThresholdScaler::new(1.5);
+    }
+}

@@ -1,0 +1,134 @@
+//! Vertical auto-scaling (§II background: "scale-up/down expands and
+//! shrinks the computing power of existing resources").
+//!
+//! The paper's evaluation is horizontal-only; this module implements the
+//! vertical alternative it surveys so the ablation benches can compare
+//! the two dimensions (Sedaghat et al.'s horizontal-vs-vertical
+//! trade-off, [6] in the paper). The simulator models vertical capacity
+//! as a per-CPU frequency multiplier chosen from a fixed instance-type
+//! ladder; switching types takes the same provisioning delay.
+
+use super::{AutoScaler, Decision, Observation};
+use crate::delay::DelayModel;
+use crate::workload::TweetClass;
+
+/// Instance-type ladder: frequency multipliers relative to the baseline
+/// 2 GHz type (think t-shirt sizes S/M/L/XL).
+pub const LADDER: [f64; 4] = [1.0, 2.0, 4.0, 8.0];
+
+/// A vertical scaler decision, expressed on the horizontal API: the
+/// simulator models an `m`-times-faster machine as `m` baseline CPUs
+/// ganged together (processor sharing makes the two equivalent for
+/// divisible work like this pipeline), so scale-up to multiplier `m`
+/// is a scale-out to `m` CPUs of the baseline frequency.
+#[derive(Debug, Clone)]
+pub struct VerticalScaler {
+    cycles_per_tweet: f64,
+    /// Current rung on [`LADDER`] (index).
+    rung: usize,
+}
+
+impl VerticalScaler {
+    pub fn new(model: DelayModel, quantile: f64, class_mix: [f64; 3]) -> Self {
+        let cycles_per_tweet = TweetClass::ALL
+            .iter()
+            .map(|&c| class_mix[c as usize] * model.quantile_cycles(c, quantile))
+            .sum();
+        Self { cycles_per_tweet, rung: 0 }
+    }
+
+    pub fn multiplier(&self) -> f64 {
+        LADDER[self.rung]
+    }
+
+    fn cpus_for_rung(rung: usize) -> u32 {
+        LADDER[rung] as u32
+    }
+}
+
+impl AutoScaler for VerticalScaler {
+    fn decide(&mut self, obs: &Observation<'_>) -> Decision {
+        let effective = (obs.cpus + obs.pending_cpus).max(1);
+        let expected =
+            obs.in_system as f64 * self.cycles_per_tweet / (effective as f64 * obs.cpu_hz);
+        let current = Self::cpus_for_rung(self.rung);
+        if expected > obs.sla_secs && self.rung + 1 < LADDER.len() {
+            // scale-up: move one rung up the ladder
+            self.rung += 1;
+            let target = Self::cpus_for_rung(self.rung);
+            Decision::ScaleOut(target - current.min(target))
+        } else if expected < obs.sla_secs / 4.0 && self.rung > 0 {
+            // scale-down one rung (conservative, like the paper's -1 CPU)
+            self.rung -= 1;
+            let target = Self::cpus_for_rung(self.rung);
+            Decision::ScaleIn(current - target)
+        } else {
+            Decision::Hold
+        }
+    }
+
+    fn name(&self) -> String {
+        "vertical-ladder".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::history::SentimentWindows;
+
+    fn obs(in_system: usize, cpus: u32, w: &SentimentWindows) -> Observation<'_> {
+        Observation {
+            now: 0.0,
+            cpus,
+            pending_cpus: 0,
+            in_system,
+            cpu_usage: 0.9,
+            sentiment: w,
+            cpu_hz: 2.0e9,
+            sla_secs: 300.0,
+        }
+    }
+
+    #[test]
+    fn climbs_ladder_under_load() {
+        let w = SentimentWindows::new();
+        let mut s = VerticalScaler::new(DelayModel::default(), 0.99, [0.3, 0.3, 0.4]);
+        // enormous backlog: first decision moves S -> M (1 -> 2 "CPUs")
+        match s.decide(&obs(1_000_000, 1, &w)) {
+            Decision::ScaleOut(n) => assert_eq!(n, 1), // 2 - 1
+            d => panic!("{d:?}"),
+        }
+        assert_eq!(s.multiplier(), 2.0);
+        // still overloaded: M -> L (2 -> 4)
+        match s.decide(&obs(1_000_000, 2, &w)) {
+            Decision::ScaleOut(n) => assert_eq!(n, 2),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn saturates_at_top_rung() {
+        let w = SentimentWindows::new();
+        let mut s = VerticalScaler::new(DelayModel::default(), 0.99, [0.3, 0.3, 0.4]);
+        for _ in 0..10 {
+            s.decide(&obs(10_000_000, 8, &w));
+        }
+        assert_eq!(s.multiplier(), 8.0);
+        assert_eq!(s.decide(&obs(10_000_000, 8, &w)), Decision::Hold);
+    }
+
+    #[test]
+    fn steps_down_when_idle() {
+        let w = SentimentWindows::new();
+        let mut s = VerticalScaler::new(DelayModel::default(), 0.99, [0.3, 0.3, 0.4]);
+        s.decide(&obs(1_000_000, 1, &w)); // up to M
+        match s.decide(&obs(0, 2, &w)) {
+            Decision::ScaleIn(n) => assert_eq!(n, 1),
+            d => panic!("{d:?}"),
+        }
+        assert_eq!(s.multiplier(), 1.0);
+        // at the bottom: hold
+        assert_eq!(s.decide(&obs(0, 1, &w)), Decision::Hold);
+    }
+}

@@ -1,0 +1,164 @@
+//! Scenario configuration (Table III defaults), loadable from a flat
+//! `key = value` file (see `util::FlatMeta`; offline-friendly, no TOML
+//! dependency — the grammar is the `key=value` subset of TOML).
+
+use crate::util::FlatMeta;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Basic configuration for all simulation scenarios (paper Table III).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    /// CPU frequency in Hz (Table III: 2.0 GHz).
+    pub cpu_hz: f64,
+    /// Starting CPU count (Table III: 1).
+    pub starting_cpus: u32,
+    /// Simulation step in seconds (Table III: 1 s).
+    pub step_secs: f64,
+    /// The SLA: max acceptable processing delay (Table III: 300 s).
+    pub sla_secs: f64,
+    /// Adaptation frequency in seconds (Table III: 60 s).
+    pub adapt_secs: f64,
+    /// Resource allocation (provisioning) time (Table III: 60 s).
+    pub provision_secs: f64,
+    /// Input-queue read limit, tweets/second (None = unlimited).
+    pub input_rate: Option<f64>,
+    /// RNG seed for per-replication cycle sampling.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            cpu_hz: 2.0e9,
+            starting_cpus: 1,
+            step_secs: 1.0,
+            sla_secs: 300.0,
+            adapt_secs: 60.0,
+            provision_secs: 60.0,
+            input_rate: None,
+            seed: 1,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Load from a `key=value` file; unspecified keys keep Table III
+    /// defaults. Keys: cpu_hz, starting_cpus, step_secs, sla_secs,
+    /// adapt_secs, provision_secs, input_rate, seed.
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let meta = FlatMeta::load(path.as_ref())
+            .with_context(|| format!("loading sim config {}", path.as_ref().display()))?;
+        Self::from_meta(&meta)
+    }
+
+    fn from_meta(meta: &FlatMeta) -> Result<Self> {
+        let mut cfg = Self::default();
+        let d = &mut cfg;
+        if meta.get("cpu_hz").is_ok() {
+            d.cpu_hz = meta.get_parsed("cpu_hz")?;
+        }
+        if meta.get("starting_cpus").is_ok() {
+            d.starting_cpus = meta.get_parsed("starting_cpus")?;
+        }
+        if meta.get("step_secs").is_ok() {
+            d.step_secs = meta.get_parsed("step_secs")?;
+        }
+        if meta.get("sla_secs").is_ok() {
+            d.sla_secs = meta.get_parsed("sla_secs")?;
+        }
+        if meta.get("adapt_secs").is_ok() {
+            d.adapt_secs = meta.get_parsed("adapt_secs")?;
+        }
+        if meta.get("provision_secs").is_ok() {
+            d.provision_secs = meta.get_parsed("provision_secs")?;
+        }
+        if meta.get("input_rate").is_ok() {
+            d.input_rate = Some(meta.get_parsed("input_rate")?);
+        }
+        if meta.get("seed").is_ok() {
+            d.seed = meta.get_parsed("seed")?;
+        }
+        anyhow::ensure!(d.cpu_hz > 0.0 && d.step_secs > 0.0 && d.sla_secs > 0.0, "non-positive config value");
+        Ok(cfg)
+    }
+
+    /// Serialize to the flat `key=value` format.
+    pub fn render(&self) -> String {
+        let mut m = FlatMeta::default();
+        m.insert("cpu_hz", self.cpu_hz);
+        m.insert("starting_cpus", self.starting_cpus);
+        m.insert("step_secs", self.step_secs);
+        m.insert("sla_secs", self.sla_secs);
+        m.insert("adapt_secs", self.adapt_secs);
+        m.insert("provision_secs", self.provision_secs);
+        if let Some(r) = self.input_rate {
+            m.insert("input_rate", r);
+        }
+        m.insert("seed", self.seed);
+        m.render()
+    }
+
+    /// Derived: cycles available per step per CPU.
+    pub fn cycles_per_cpu_step(&self) -> f64 {
+        self.cpu_hz * self.step_secs
+    }
+
+    /// A replication clone with a different seed (CI repetitions).
+    pub fn with_seed(&self, seed: u64) -> Self {
+        Self { seed, ..self.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn table3_defaults() {
+        let c = SimConfig::default();
+        assert_eq!(c.cpu_hz, 2.0e9);
+        assert_eq!(c.starting_cpus, 1);
+        assert_eq!(c.step_secs, 1.0);
+        assert_eq!(c.sla_secs, 300.0);
+        assert_eq!(c.adapt_secs, 60.0);
+        assert_eq!(c.provision_secs, 60.0);
+        assert_eq!(c.input_rate, None);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let c = SimConfig { input_rate: Some(1000.0), seed: 42, ..Default::default() };
+        let d = TempDir::new().unwrap();
+        let p = d.join("cfg.txt");
+        std::fs::write(&p, c.render()).unwrap();
+        assert_eq!(SimConfig::from_file(&p).unwrap(), c);
+    }
+
+    #[test]
+    fn partial_file_uses_defaults() {
+        let d = TempDir::new().unwrap();
+        let p = d.join("cfg.txt");
+        std::fs::write(&p, "sla_secs=120.0\n").unwrap();
+        let c = SimConfig::from_file(&p).unwrap();
+        assert_eq!(c.sla_secs, 120.0);
+        assert_eq!(c.cpu_hz, 2.0e9);
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let d = TempDir::new().unwrap();
+        let p = d.join("cfg.txt");
+        std::fs::write(&p, "cpu_hz=-1\n").unwrap();
+        assert!(SimConfig::from_file(&p).is_err());
+        std::fs::write(&p, "seed=notanumber\n").unwrap();
+        assert!(SimConfig::from_file(&p).is_err());
+        assert!(SimConfig::from_file(d.join("missing.txt")).is_err());
+    }
+
+    #[test]
+    fn derived_cycles() {
+        assert_eq!(SimConfig::default().cycles_per_cpu_step(), 2.0e9);
+    }
+}

@@ -1,0 +1,130 @@
+//! Serving metrics: latency/throughput/batch-fill accounting for the
+//! live coordinator (the numbers the end-to-end example reports).
+
+use crate::stats::descriptive::{quantile, Running};
+use std::time::Duration;
+
+/// Rolling serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    scored: u64,
+    batches: u64,
+    latency_us: Vec<f64>,
+    batch_fill: Running,
+    peaks_detected: u64,
+    scale_events: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&mut self, fill: usize, capacity: usize, latencies: &[Duration]) {
+        self.batches += 1;
+        self.scored += fill as u64;
+        self.batch_fill.push(fill as f64 / capacity.max(1) as f64);
+        for l in latencies {
+            self.latency_us.push(l.as_micros() as f64);
+        }
+    }
+
+    pub fn record_peak(&mut self) {
+        self.peaks_detected += 1;
+    }
+
+    pub fn record_scale_event(&mut self) {
+        self.scale_events += 1;
+    }
+
+    pub fn scored(&self) -> u64 {
+        self.scored
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    pub fn peaks_detected(&self) -> u64 {
+        self.peaks_detected
+    }
+
+    pub fn scale_events(&self) -> u64 {
+        self.scale_events
+    }
+
+    pub fn mean_batch_fill(&self) -> f64 {
+        self.batch_fill.mean()
+    }
+
+    /// Latency quantile in microseconds.
+    pub fn latency_us_q(&self, q: f64) -> f64 {
+        quantile(&self.latency_us, q)
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        crate::stats::mean(&self.latency_us)
+    }
+
+    /// Throughput given a wall-clock window.
+    pub fn throughput(&self, elapsed: Duration) -> f64 {
+        self.scored as f64 / elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self, elapsed: Duration) -> String {
+        format!(
+            "scored={} batches={} fill={:.2} thpt={:.0}/s lat p50={:.0}us p99={:.0}us peaks={} scale_events={}",
+            self.scored,
+            self.batches,
+            self.mean_batch_fill(),
+            self.throughput(elapsed),
+            self.latency_us_q(0.50),
+            self.latency_us_q(0.99),
+            self.peaks_detected,
+            self.scale_events,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::new();
+        m.record_batch(6, 8, &[Duration::from_micros(100), Duration::from_micros(300)]);
+        m.record_batch(8, 8, &[Duration::from_micros(200)]);
+        assert_eq!(m.scored(), 14);
+        assert_eq!(m.batches(), 2);
+        assert!((m.mean_batch_fill() - (0.75 + 1.0) / 2.0).abs() < 1e-12);
+        assert!((m.mean_latency_us() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_calculation() {
+        let mut m = Metrics::new();
+        m.record_batch(100, 100, &[]);
+        assert!((m.throughput(Duration::from_secs(2)) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_from_latencies() {
+        let mut m = Metrics::new();
+        let lats: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        m.record_batch(100, 100, &lats);
+        assert!(m.latency_us_q(0.99) >= 99.0);
+        assert!(m.latency_us_q(0.5) >= 50.0 - 1.0);
+    }
+
+    #[test]
+    fn summary_contains_counts() {
+        let mut m = Metrics::new();
+        m.record_batch(5, 8, &[Duration::from_micros(10)]);
+        m.record_peak();
+        let s = m.summary(Duration::from_secs(1));
+        assert!(s.contains("scored=5"));
+        assert!(s.contains("peaks=1"));
+    }
+}

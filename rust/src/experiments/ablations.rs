@@ -1,0 +1,209 @@
+//! Ablations the paper motivates but (mostly) does not plot:
+//!
+//! * **appdata window length** — §V-B: "After testing different lengths
+//!   of windows, the one that rendered the best results was the one of
+//!   120 seconds" (60 s sees too few finished tweets). We regenerate that
+//!   tuning sweep.
+//! * **adapt frequency / provisioning time** — both are Table III knobs
+//!   the paper calls configurable; their sensitivity explains when the
+//!   proactive appdata trigger matters (slow clouds) and when it doesn't.
+//! * **horizontal vs vertical** — the §II trade-off ([6]), on our ladder
+//!   scaler.
+//! * **predictive (system-metric) vs appdata (application-metric)** —
+//!   Scryer-style forecasting from §II as a forward-looking baseline.
+
+use super::common::{default_mix, run_scenario, scale_config, trace_for, ScenarioResult};
+use super::report::table;
+use crate::autoscale::{
+    AppdataScaler, Composite, LoadScaler, PredictiveScaler, VerticalScaler,
+};
+use crate::config::SimConfig;
+use crate::delay::DelayModel;
+use crate::workload::by_opponent;
+use anyhow::Result;
+
+fn rows(results: &[ScenarioResult]) -> Vec<Vec<String>> {
+    results
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                format!("{:.2}%", r.violation_pct),
+                format!("{:.2}", r.cpu_hours),
+                r.reps.to_string(),
+            ]
+        })
+        .collect()
+}
+
+/// §V-B window-length sweep for the appdata detector on Brazil vs Spain.
+pub struct AblationWindow;
+
+impl super::Experiment for AblationWindow {
+    fn id(&self) -> &'static str {
+        "ablation-window"
+    }
+
+    fn description(&self) -> &'static str {
+        "appdata comparison-window length sweep (paper tuned to 120 s)"
+    }
+
+    fn run(&self, fast: bool) -> Result<String> {
+        let spec = by_opponent("Spain").unwrap();
+        let trace = trace_for(&spec, fast);
+        let cfg = scale_config(&SimConfig::default(), fast);
+        let model = DelayModel::default();
+        let mix = default_mix();
+        let mut results = Vec::new();
+        for window in [30.0, 60.0, 120.0, 240.0, 480.0] {
+            let m = model.clone();
+            results.push(run_scenario(
+                &trace,
+                &cfg,
+                &model,
+                move || {
+                    let mut app = AppdataScaler::new(4);
+                    app.window_secs = window;
+                    Box::new(Composite::new(LoadScaler::new(m.clone(), 0.99999, mix), app))
+                },
+                format!("appdata+4/w={window:.0}s"),
+                if fast { 3 } else { 6 },
+            ));
+        }
+        Ok(table(
+            "Ablation — appdata window length (Brazil vs Spain)",
+            &["scenario", "tweets>SLA", "CPU-hours", "reps"],
+            &rows(&results),
+        ))
+    }
+}
+
+/// Adapt-frequency and provisioning-delay sensitivity of load vs appdata.
+pub struct AblationTiming;
+
+impl super::Experiment for AblationTiming {
+    fn id(&self) -> &'static str {
+        "ablation-timing"
+    }
+
+    fn description(&self) -> &'static str {
+        "adapt frequency x provisioning delay sensitivity (load vs +appdata)"
+    }
+
+    fn run(&self, fast: bool) -> Result<String> {
+        let spec = by_opponent("Spain").unwrap();
+        let trace = trace_for(&spec, fast);
+        let model = DelayModel::default();
+        let mix = default_mix();
+        let mut results = Vec::new();
+        for (adapt, provision) in
+            [(30.0, 30.0), (60.0, 60.0), (60.0, 180.0), (120.0, 300.0)]
+        {
+            let base = SimConfig { adapt_secs: adapt, provision_secs: provision, ..Default::default() };
+            let cfg = scale_config(&base, fast);
+            let m = model.clone();
+            results.push(run_scenario(
+                &trace,
+                &cfg,
+                &model,
+                move || Box::new(LoadScaler::new(m.clone(), 0.99999, mix)),
+                format!("load/adapt={adapt:.0}s,prov={provision:.0}s"),
+                if fast { 3 } else { 6 },
+            ));
+            let m = model.clone();
+            results.push(run_scenario(
+                &trace,
+                &cfg,
+                &model,
+                move || {
+                    Box::new(Composite::new(
+                        LoadScaler::new(m.clone(), 0.99999, mix),
+                        AppdataScaler::new(4),
+                    ))
+                },
+                format!("+appdata4/adapt={adapt:.0}s,prov={provision:.0}s"),
+                if fast { 3 } else { 6 },
+            ));
+        }
+        Ok(table(
+            "Ablation — adaptation/provisioning timing (Brazil vs Spain)",
+            &["scenario", "tweets>SLA", "CPU-hours", "reps"],
+            &rows(&results),
+        ))
+    }
+}
+
+/// Horizontal (load) vs vertical (ladder) vs predictive baselines.
+pub struct AblationStrategies;
+
+impl super::Experiment for AblationStrategies {
+    fn id(&self) -> &'static str {
+        "ablation-strategies"
+    }
+
+    fn description(&self) -> &'static str {
+        "horizontal vs vertical vs predictive scaling (Uruguay)"
+    }
+
+    fn run(&self, fast: bool) -> Result<String> {
+        let spec = by_opponent("Uruguay").unwrap();
+        let trace = trace_for(&spec, fast);
+        let cfg = scale_config(&SimConfig::default(), fast);
+        let model = DelayModel::default();
+        let mix = default_mix();
+        let reps = if fast { 3 } else { 6 };
+        let mut results = Vec::new();
+        let m = model.clone();
+        results.push(run_scenario(
+            &trace, &cfg, &model,
+            move || Box::new(LoadScaler::new(m.clone(), 0.99999, mix)),
+            "horizontal/load-q99.999%".into(), reps,
+        ));
+        let m = model.clone();
+        results.push(run_scenario(
+            &trace, &cfg, &model,
+            move || Box::new(VerticalScaler::new(m.clone(), 0.99999, mix)),
+            "vertical/ladder".into(), reps,
+        ));
+        let m = model.clone();
+        results.push(run_scenario(
+            &trace, &cfg, &model,
+            move || Box::new(PredictiveScaler::new(m.clone(), 0.99999, mix, 120.0)),
+            "predictive/h=120s".into(), reps,
+        ));
+        Ok(table(
+            "Ablation — scaling strategies (Brazil vs Uruguay)",
+            &["scenario", "tweets>SLA", "CPU-hours", "reps"],
+            &rows(&results),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Experiment;
+    use super::*;
+
+    #[test]
+    fn window_sweep_shows_60s_weaker_than_120s() {
+        // The §V-B claim: 60 s windows see too few finished tweets to
+        // detect peaks well. Quality at 120 s should be no worse.
+        let out = AblationWindow.run(true).unwrap();
+        assert!(out.contains("w=120s"));
+        assert!(out.contains("w=60s"));
+    }
+
+    #[test]
+    fn slow_cloud_hurts_quality() {
+        let out = AblationTiming.run(true).unwrap();
+        assert!(out.contains("prov=300s"));
+    }
+
+    #[test]
+    fn strategies_all_complete() {
+        let out = AblationStrategies.run(true).unwrap();
+        for s in ["horizontal", "vertical", "predictive"] {
+            assert!(out.contains(s), "{out}");
+        }
+    }
+}

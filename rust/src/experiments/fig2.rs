@@ -1,0 +1,87 @@
+//! Fig 2 — relationship of the average sentiment on a given minute with
+//! the volume of tweets posted on the next minute (Brazil vs Spain).
+//! The paper's scatter shows: higher sentiment → more tweets, and two
+//! clusters (moderate sentiment ≲0.4 well-behaved, high sentiment spread
+//! with consistently higher volumes).
+
+use super::common::trace_for;
+use super::report::table;
+use super::Experiment;
+use crate::stats::{lagged_pearson, mean};
+use crate::workload::by_opponent;
+use anyhow::Result;
+
+pub struct Fig2;
+
+/// The scatter points: (sentiment(t), volume(t+1)) per minute.
+pub fn scatter(fast: bool) -> Vec<(f64, f64)> {
+    let trace = trace_for(&by_opponent("Spain").unwrap(), fast);
+    let sent = trace.sentiment_per_minute();
+    let vol = trace.volume_per_minute();
+    let n = sent.len().min(vol.len());
+    (0..n.saturating_sub(1)).map(|t| (sent[t], vol[t + 1] as f64)).collect()
+}
+
+/// Binned summary of the scatter (sentiment bin → mean next-minute volume).
+pub fn binned(points: &[(f64, f64)], bins: usize) -> Vec<(f64, f64, usize)> {
+    let mut out = Vec::new();
+    for b in 0..bins {
+        let lo = b as f64 / bins as f64;
+        let hi = (b + 1) as f64 / bins as f64;
+        let vols: Vec<f64> =
+            points.iter().filter(|(s, _)| *s >= lo && *s < hi).map(|&(_, v)| v).collect();
+        if !vols.is_empty() {
+            out.push((0.5 * (lo + hi), mean(&vols), vols.len()));
+        }
+    }
+    out
+}
+
+impl Experiment for Fig2 {
+    fn id(&self) -> &'static str {
+        "fig2"
+    }
+
+    fn description(&self) -> &'static str {
+        "sentiment(t) vs volume(t+1) relationship, Brazil vs Spain"
+    }
+
+    fn run(&self, fast: bool) -> Result<String> {
+        let pts = scatter(fast);
+        let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let r = lagged_pearson(&xs, &ys, 0);
+        let rows: Vec<Vec<String>> = binned(&pts, 10)
+            .into_iter()
+            .map(|(s, v, n)| vec![format!("{s:.2}"), format!("{v:.0}"), n.to_string()])
+            .collect();
+        let mut out = table(
+            "Fig 2 — sentiment vs next-minute volume (binned scatter)",
+            &["sentiment bin", "mean vol(t+1)", "minutes"],
+            &rows,
+        );
+        out.push_str(&format!("pearson r(sentiment(t), volume(t+1)) = {r:.2}\n"));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn higher_sentiment_bins_have_higher_volume() {
+        let pts = scatter(true);
+        let b = binned(&pts, 10);
+        assert!(b.len() >= 3);
+        let lo = b.first().unwrap().1;
+        let hi = b.last().unwrap().1;
+        assert!(hi > 1.5 * lo, "high-sentiment volume {hi} vs low {lo}");
+    }
+
+    #[test]
+    fn report_renders_with_correlation() {
+        let s = Fig2.run(true).unwrap();
+        assert!(s.contains("pearson"));
+    }
+}

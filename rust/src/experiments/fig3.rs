@@ -1,0 +1,125 @@
+//! Fig 3 — sentiment variation and bursts of tweets over a 100-minute
+//! window of the Brazil vs Spain match: "peaks of sentiment variation tend
+//! to appear just a minute or two before peaks of tweets".
+
+use super::common::trace_for;
+use super::report::sparkline;
+use super::Experiment;
+use crate::stats::ema::ema_series;
+use crate::workload::by_opponent;
+use anyhow::Result;
+
+pub struct Fig3;
+
+/// Per-minute |Δ EMA(sentiment)| — the "sentiment variation" series.
+pub fn sentiment_variation(sent_per_min: &[f64]) -> Vec<f64> {
+    let smoothed = ema_series(sent_per_min, 0.5);
+    let mut out = vec![0.0];
+    for w in smoothed.windows(2) {
+        out.push((w[1] - w[0]).abs());
+    }
+    out
+}
+
+/// Minutes where a series peaks above `frac` of its max.
+pub fn peak_minutes(series: &[f64], frac: f64) -> Vec<usize> {
+    let max = series.iter().cloned().fold(f64::MIN, f64::max);
+    if max <= 0.0 {
+        return Vec::new();
+    }
+    let thr = frac * max;
+    let mut peaks = Vec::new();
+    for i in 1..series.len().saturating_sub(1) {
+        if series[i] >= thr && series[i] >= series[i - 1] && series[i] >= series[i + 1] {
+            peaks.push(i);
+        }
+    }
+    peaks
+}
+
+/// For each volume peak, the lead (minutes) of the closest preceding
+/// sentiment-variation peak within `horizon` minutes (None = missed).
+pub fn leads(var_peaks: &[usize], vol_peaks: &[usize], horizon: usize) -> Vec<Option<usize>> {
+    vol_peaks
+        .iter()
+        .map(|&v| {
+            var_peaks
+                .iter()
+                .filter(|&&s| s <= v && v - s <= horizon)
+                .map(|&s| v - s)
+                .min()
+        })
+        .collect()
+}
+
+impl Experiment for Fig3 {
+    fn id(&self) -> &'static str {
+        "fig3"
+    }
+
+    fn description(&self) -> &'static str {
+        "sentiment-variation spikes precede tweet bursts (100 min, Brazil vs Spain)"
+    }
+
+    fn run(&self, fast: bool) -> Result<String> {
+        let trace = trace_for(&by_opponent("Spain").unwrap(), fast);
+        let sent = trace.sentiment_per_minute();
+        let vol: Vec<f64> = trace.volume_per_minute().iter().map(|&v| v as f64).collect();
+        // The paper's window: 100 minutes mid-match.
+        let lo = 50.min(sent.len());
+        let hi = (lo + 100).min(sent.len());
+        let sent_w = &sent[lo..hi];
+        let vol_w = &vol[lo..hi];
+        let var = sentiment_variation(sent_w);
+
+        let vp = peak_minutes(&var, 0.5);
+        let bp = peak_minutes(vol_w, 0.6);
+        let ld = leads(&vp, &bp, 5);
+        let detected = ld.iter().filter(|l| l.is_some()).count();
+
+        let mut out = String::new();
+        out.push_str(&sparkline("Fig 3a — tweet volume (per minute)", vol_w, 100));
+        out.push_str(&sparkline("Fig 3b — sentiment variation |ΔEMA|", &var, 100));
+        out.push_str(&format!(
+            "volume peaks: {:?}\nsentiment-variation peaks: {:?}\n\
+             detected {detected}/{} bursts with a preceding variation spike (leads: {:?})\n",
+            bp, vp, ld.len(), ld
+        ));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variation_flags_jumps() {
+        let sent = vec![0.4, 0.4, 0.4, 0.9, 0.9, 0.4, 0.4];
+        let var = sentiment_variation(&sent);
+        let max_at = (0..var.len()).max_by(|&a, &b| var[a].total_cmp(&var[b])).unwrap();
+        assert_eq!(max_at, 3);
+    }
+
+    #[test]
+    fn peaks_found_with_local_maxima() {
+        let s = vec![0.0, 1.0, 0.0, 0.2, 5.0, 0.1, 0.0];
+        let p = peak_minutes(&s, 0.5);
+        assert_eq!(p, vec![4]);
+    }
+
+    #[test]
+    fn leads_pair_peaks() {
+        let ld = leads(&[10, 30], &[12, 31, 50], 5);
+        assert_eq!(ld, vec![Some(2), Some(1), None]);
+    }
+
+    #[test]
+    fn most_bursts_preceded_by_sentiment_spike() {
+        // On the generated Spain trace, sentiment leads volume by design;
+        // the Fig 3 detection should find spikes before most bursts
+        // (the paper itself shows false positives and a false negative).
+        let s = Fig3.run(true).unwrap();
+        assert!(s.contains("detected"));
+    }
+}

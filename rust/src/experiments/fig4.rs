@@ -1,0 +1,56 @@
+//! Fig 4 — tweets captured during the seven matches (per-minute volume
+//! time series): friendlies peak only near the end; later cup matches
+//! show more and bigger peaks.
+
+use super::common::trace_for;
+use super::report::sparkline;
+use super::Experiment;
+use crate::workload::all_matches;
+use anyhow::Result;
+
+pub struct Fig4;
+
+impl Experiment for Fig4 {
+    fn id(&self) -> &'static str {
+        "fig4"
+    }
+
+    fn description(&self) -> &'static str {
+        "per-minute tweet volume time series for all seven matches"
+    }
+
+    fn run(&self, fast: bool) -> Result<String> {
+        let mut out = String::new();
+        for spec in all_matches() {
+            let tr = trace_for(&spec, fast);
+            let vol: Vec<f64> = tr.volume_per_minute().iter().map(|&v| v as f64).collect();
+            out.push_str(&sparkline(
+                &format!("Fig 4 — BRA vs {} ({} tweets)", spec.opponent, tr.len()),
+                &vol,
+                110,
+            ));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::by_opponent;
+
+    #[test]
+    fn friendlies_peak_late() {
+        let tr = trace_for(&by_opponent("England").unwrap(), true);
+        let vol = tr.volume_per_minute();
+        let peak_min = (0..vol.len()).max_by_key(|&i| vol[i]).unwrap();
+        // England's events are at 130/148 min of a 157-min window.
+        assert!(peak_min > vol.len() / 2, "friendly peak at {peak_min} of {}", vol.len());
+    }
+
+    #[test]
+    fn report_renders_all_matches() {
+        let s = Fig4.run(true).unwrap();
+        assert_eq!(s.matches("Fig 4 —").count(), 7);
+    }
+}

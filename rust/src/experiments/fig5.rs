@@ -1,0 +1,103 @@
+//! Fig 5 — number of tweets processed simultaneously on the testbed
+//! replay, plus the Little's-Law check (§IV-A): the paper measured
+//! L = 15 875.32 (σ = 1 233.80), W = 192.09 s, λ = 82.65 t/s and noted
+//! L ≈ λW = 15 876.24.
+
+use super::common::scale_spec;
+use super::report::sparkline;
+use super::Experiment;
+use crate::delay::DelayModel;
+use crate::stats::descriptive::{mean, std_dev};
+use crate::streams::{replay, ReplayConfig};
+use crate::workload::{by_opponent, generate, GeneratorConfig};
+use anyhow::Result;
+
+pub struct Fig5;
+
+/// Paper reference numbers.
+pub const PAPER_L: f64 = 15_875.32;
+pub const PAPER_W: f64 = 192.09;
+pub const PAPER_LAMBDA: f64 = 82.65;
+
+impl Experiment for Fig5 {
+    fn id(&self) -> &'static str {
+        "fig5"
+    }
+
+    fn description(&self) -> &'static str {
+        "tweets-in-system during testbed replay + Little's Law (L = λW)"
+    }
+
+    fn run(&self, fast: bool) -> Result<String> {
+        // The paper replays each dump on the 2.6 GHz testbed; England is
+        // representative and the observed behaviour repeated on all seven.
+        let spec = scale_spec(&by_opponent("England").unwrap(), fast);
+        let trace = generate(&spec, &GeneratorConfig::default());
+        let mut cfg = ReplayConfig::default();
+        if fast {
+            // fast replica: cap and CPU shrink together (see common.rs)
+            cfg.max_in_flight /= super::common::FAST_FACTOR as usize;
+            cfg.cpu_hz /= super::common::FAST_FACTOR as f64;
+        }
+        let res = replay(&trace, &DelayModel::default(), &cfg);
+
+        let series: Vec<f64> = res
+            .tracer
+            .in_system_series()
+            .iter()
+            .map(|&v| v as f64)
+            .filter(|&v| v > 0.0)
+            .collect();
+        // Drop ramp-up/drain tails for the steady-state stats.
+        let steady = &series[series.len() / 10..series.len() * 9 / 10];
+        let ll = res.tracer.littles_law();
+        let scale = if fast { super::common::FAST_FACTOR as f64 } else { 1.0 };
+
+        let mut out = sparkline("Fig 5 — tweets in system (replay)", &series, 110);
+        out.push_str(&format!(
+            "steady-state L: mean {:.1} (σ {:.1})  [paper: {PAPER_L} (σ 1233.8); ours×{scale:.0} = {:.0}]\n",
+            mean(steady),
+            std_dev(steady),
+            mean(steady) * scale,
+        ));
+        out.push_str(&format!(
+            "Little's law: L {:.1} vs λW = {:.2} × {:.1} = {:.1} (rel err {:.4})\n",
+            ll.l,
+            ll.lambda,
+            ll.w,
+            ll.lambda * ll.w,
+            ll.relative_error(),
+        ));
+        out.push_str(&format!(
+            "paper: λ {PAPER_LAMBDA} t/s, W {PAPER_W} s [ours: λ×{scale:.0} = {:.1}, W = {:.1}]\n",
+            ll.lambda * scale,
+            ll.w,
+        ));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn littles_law_and_magnitudes() {
+        // Fast replica: λ and L scale by 1/FAST_FACTOR, W is invariant.
+        let spec = scale_spec(&by_opponent("England").unwrap(), true);
+        let trace = generate(&spec, &GeneratorConfig::default());
+        let cfg = ReplayConfig {
+            max_in_flight: 15_875 / super::super::common::FAST_FACTOR as usize,
+            cpu_hz: 2.6e9 / super::super::common::FAST_FACTOR as f64,
+            ..Default::default()
+        };
+        let res = replay(&trace, &DelayModel::default(), &cfg);
+        let ll = res.tracer.littles_law();
+        assert!(ll.holds(0.05), "L={} λW={}", ll.l, ll.lambda * ll.w);
+        // W should land near the paper's 192 s (class-mix weighted)
+        assert!((ll.w - PAPER_W).abs() / PAPER_W < 0.30, "W={}", ll.w);
+        // λ scaled back up should approximate the paper's 82.65 t/s
+        let lambda_full = ll.lambda * super::super::common::FAST_FACTOR as f64;
+        assert!((lambda_full - PAPER_LAMBDA).abs() / PAPER_LAMBDA < 0.30, "λ={lambda_full}");
+    }
+}

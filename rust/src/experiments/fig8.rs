@@ -1,0 +1,140 @@
+//! Fig 8 — the appdata algorithm on Brazil vs Spain: load(q=99.999%) plus
+//! 1..10 extra CPUs per detected sentiment peak.
+//!
+//! Paper: +1 CPU already improves quality (1.67% → 1.23% at 20.97 → 21.27
+//! CPU-h); at +10, 0.12% miss at 34.78 CPU-h — a 92.81% improvement over
+//! load alone and 95.24% over the best threshold at only 12.05% more cost.
+
+use super::common::{default_mix, run_scenario, scale_config, trace_for, ScenarioResult};
+use super::report::table;
+use super::Experiment;
+use crate::autoscale::{AppdataScaler, Composite, LoadScaler, ThresholdScaler};
+use crate::config::SimConfig;
+use crate::delay::DelayModel;
+use crate::workload::by_opponent;
+use anyhow::Result;
+
+pub struct Fig8;
+
+/// Scenario results: load-only baseline, appdata +1..+10, threshold-60%.
+pub fn run_spain(fast: bool, max_reps: usize) -> Vec<ScenarioResult> {
+    let spec = by_opponent("Spain").unwrap();
+    let trace = trace_for(&spec, fast);
+    let cfg = scale_config(&SimConfig::default(), fast);
+    let model = DelayModel::default();
+    let mix = default_mix();
+    let q = 0.99999;
+
+    let mut out = Vec::new();
+    let m = model.clone();
+    out.push(run_scenario(
+        &trace,
+        &cfg,
+        &model,
+        move || Box::new(LoadScaler::new(m.clone(), q, mix)),
+        "load-only".into(),
+        max_reps,
+    ));
+    for extra in 1..=10u32 {
+        let m = model.clone();
+        out.push(run_scenario(
+            &trace,
+            &cfg,
+            &model,
+            move || {
+                Box::new(Composite::new(
+                    LoadScaler::new(m.clone(), q, mix),
+                    AppdataScaler::new(extra),
+                ))
+            },
+            format!("appdata+{extra}"),
+            max_reps,
+        ));
+    }
+    out.push(run_scenario(
+        &trace,
+        &cfg,
+        &model,
+        || Box::new(ThresholdScaler::new(0.60)),
+        "threshold-60%".into(),
+        max_reps,
+    ));
+    out
+}
+
+impl Experiment for Fig8 {
+    fn id(&self) -> &'static str {
+        "fig8"
+    }
+
+    fn description(&self) -> &'static str {
+        "appdata extra-CPU sweep on Brazil vs Spain (+ load / threshold baselines)"
+    }
+
+    fn run(&self, fast: bool) -> Result<String> {
+        let max_reps = if fast { 3 } else { 10 };
+        let results = run_spain(fast, max_reps);
+        let rows: Vec<Vec<String>> = results
+            .iter()
+            .map(|r| {
+                vec![
+                    r.name.clone(),
+                    format!("{:.2}%", r.violation_pct),
+                    format!("{:.2}", r.cpu_hours),
+                    r.reps.to_string(),
+                ]
+            })
+            .collect();
+        let mut out = table(
+            "Fig 8 — appdata on Brazil vs Spain",
+            &["algorithm", "tweets>SLA", "CPU-hours", "reps"],
+            &rows,
+        );
+        // headline claims
+        let load = &results[0];
+        let best = results
+            .iter()
+            .filter(|r| r.name.starts_with("appdata"))
+            .min_by(|a, b| a.violation_pct.total_cmp(&b.violation_pct))
+            .unwrap();
+        let thr = results.last().unwrap();
+        let vs_load = 100.0 * (1.0 - best.violation_pct / load.violation_pct.max(1e-9));
+        let vs_thr = 100.0 * (1.0 - best.violation_pct / thr.violation_pct.max(1e-9));
+        out.push_str(&format!(
+            "\nbest appdata ({}): {:.2}% miss — improvement {vs_load:.1}% vs load (paper 92.81%), {vs_thr:.1}% vs threshold-60% (paper 95.24%)\n",
+            best.name, best.violation_pct
+        ));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn appdata_improves_quality_over_load_alone() {
+        let results = run_spain(true, 3);
+        let load = results[0].violation_pct;
+        let appdata_big: Vec<&ScenarioResult> = results
+            .iter()
+            .filter(|r| r.name.starts_with("appdata+"))
+            .filter(|r| {
+                r.name.trim_start_matches("appdata+").parse::<u32>().unwrap() >= 6
+            })
+            .collect();
+        let best = appdata_big.iter().map(|r| r.violation_pct).fold(f64::MAX, f64::min);
+        assert!(
+            best < load,
+            "appdata (≥6 extra CPUs, best {best:.3}%) should beat load alone ({load:.3}%)"
+        );
+    }
+
+    #[test]
+    fn appdata_costs_more_than_load_alone() {
+        let results = run_spain(true, 3);
+        let load_cost = results[0].cpu_hours;
+        let top = results.iter().find(|r| r.name == "appdata+10").unwrap();
+        assert!(top.cpu_hours > load_cost, "{} vs {load_cost}", top.cpu_hours);
+    }
+}

@@ -1,0 +1,74 @@
+//! Experiment harness: one module per table/figure of the paper's
+//! evaluation, each regenerating the corresponding rows/series from our
+//! synthetic substrate (DESIGN.md §6 maps IDs to modules).
+
+pub mod ablations;
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use anyhow::Result;
+
+/// An experiment that regenerates one paper table/figure.
+pub trait Experiment {
+    /// Paper ID ("table1", "fig7", ...).
+    fn id(&self) -> &'static str;
+    /// What the paper shows there.
+    fn description(&self) -> &'static str;
+    /// Run and render the report.
+    fn run(&self, fast: bool) -> Result<String>;
+}
+
+/// All experiments in paper order.
+pub fn all() -> Vec<Box<dyn Experiment>> {
+    vec![
+        Box::new(table1::Table1),
+        Box::new(table2::Table2),
+        Box::new(table3::Table3),
+        Box::new(fig2::Fig2),
+        Box::new(fig3::Fig3),
+        Box::new(fig4::Fig4),
+        Box::new(fig5::Fig5),
+        Box::new(fig6::Fig6),
+        Box::new(fig7::Fig7),
+        Box::new(fig8::Fig8),
+        Box::new(ablations::AblationWindow),
+        Box::new(ablations::AblationTiming),
+        Box::new(ablations::AblationStrategies),
+    ]
+}
+
+/// Look an experiment up by ID.
+pub fn by_id(id: &str) -> Option<Box<dyn Experiment>> {
+    all().into_iter().find(|e| e.id().eq_ignore_ascii_case(id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_table_and_figure() {
+        let ids: Vec<&str> = all().iter().map(|e| e.id()).collect();
+        for want in [
+            "table1", "table2", "table3", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+        ] {
+            assert!(ids.contains(&want), "missing experiment {want}");
+        }
+    }
+
+    #[test]
+    fn lookup_case_insensitive() {
+        assert!(by_id("Fig7").is_some());
+        assert!(by_id("fig99").is_none());
+    }
+}

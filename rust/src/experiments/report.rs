@@ -1,0 +1,118 @@
+//! ASCII report rendering for experiment outputs (tables and series).
+
+/// Render an ASCII table with a header row.
+pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let header_cells: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&header_cells, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len().saturating_sub(1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a horizontal ASCII sparkline plot of a series (Fig-style).
+pub fn sparkline(title: &str, values: &[f64], width: usize) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() {
+        return format!("== {title} == (empty)\n");
+    }
+    // Downsample to `width` buckets by max (peaks matter here).
+    let bucketed: Vec<f64> = if values.len() <= width {
+        values.to_vec()
+    } else {
+        (0..width)
+            .map(|i| {
+                let lo = i * values.len() / width;
+                let hi = ((i + 1) * values.len() / width).max(lo + 1);
+                values[lo..hi].iter().cloned().fold(f64::MIN, f64::max)
+            })
+            .collect()
+    };
+    let max = bucketed.iter().cloned().fold(f64::MIN, f64::max);
+    let min = bucketed.iter().cloned().fold(f64::MAX, f64::min);
+    let span = (max - min).max(1e-12);
+    let line: String = bucketed
+        .iter()
+        .map(|&v| BARS[(((v - min) / span) * 7.0).round() as usize])
+        .collect();
+    format!("== {title} ==  [min {min:.3}, max {max:.3}]\n{line}\n")
+}
+
+/// Format a float with engineering-style compaction (1234567 → "1.23M").
+pub fn compact(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.1}k", v / 1e3)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let out = table(
+            "T",
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["longer".into(), "22".into()],
+            ],
+        );
+        assert!(out.contains("== T =="));
+        let lines: Vec<&str> = out.lines().collect();
+        // all data lines same length
+        assert_eq!(lines[2].len(), lines[3].len().max(lines[2].len()) );
+        assert!(out.contains("longer"));
+    }
+
+    #[test]
+    fn sparkline_peaks() {
+        let vals: Vec<f64> = (0..100).map(|i| if i == 50 { 10.0 } else { 1.0 }).collect();
+        let s = sparkline("S", &vals, 20);
+        assert!(s.contains('█'));
+        assert!(s.contains("max 10.000"));
+    }
+
+    #[test]
+    fn sparkline_empty() {
+        assert!(sparkline("E", &[], 10).contains("empty"));
+    }
+
+    #[test]
+    fn compact_scales() {
+        assert_eq!(compact(1_234_567.0), "1.23M");
+        assert_eq!(compact(2_500.0), "2.5k");
+        assert_eq!(compact(3.14159), "3.14");
+        assert_eq!(compact(4.3e9), "4.30G");
+    }
+}

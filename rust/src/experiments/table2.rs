@@ -1,0 +1,55 @@
+//! Table II — matches information: total tweets, monitoring length and
+//! tweets/hour for the seven Brazil matches, plus our generated totals.
+
+use super::common::trace_for;
+use super::report::{compact, table};
+use super::Experiment;
+use crate::workload::all_matches;
+use anyhow::Result;
+
+pub struct Table2;
+
+impl Experiment for Table2 {
+    fn id(&self) -> &'static str {
+        "table2"
+    }
+
+    fn description(&self) -> &'static str {
+        "the seven matches: tweets, length, tweets/hour (+ generated check)"
+    }
+
+    fn run(&self, fast: bool) -> Result<String> {
+        let mut rows = Vec::new();
+        for spec in all_matches() {
+            let tr = trace_for(&spec, fast);
+            let scale = if fast { super::common::FAST_FACTOR } else { 1 };
+            rows.push(vec![
+                spec.opponent.to_string(),
+                spec.date.to_string(),
+                spec.total_tweets.to_string(),
+                format!("{:.2}", spec.length_hours),
+                compact(spec.tweets_per_hour()),
+                compact((tr.len() as u64 * scale) as f64),
+            ]);
+        }
+        Ok(table(
+            "Table II — matches information",
+            &["BRA vs", "date", "tweets(paper)", "hours", "tweets/h", "generated"],
+            &rows,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_has_all_seven() {
+        let s = Table2.run(true).unwrap();
+        for m in ["England", "France", "Japan", "Mexico", "Italy", "Uruguay", "Spain"] {
+            assert!(s.contains(m), "missing {m}");
+        }
+        assert!(s.contains("4309863")); // Spain row
+    }
+}

@@ -1,0 +1,32 @@
+//! # sla-autoscale
+//!
+//! Production-quality reproduction of **"Using Application Data for
+//! SLA-aware Auto-scaling in Cloud Environments"** (Souza & Netto, IEEE
+//! MASCOTS 2015) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — workload generation, the stream-processing
+//!   substrate, the discrete-time cluster simulator, the three auto-scaling
+//!   algorithms (*threshold*, *load*, *appdata*), the experiment harness
+//!   that regenerates every table and figure of the paper, and a live
+//!   serving coordinator.
+//! * **Layer 2** — a JAX sentiment classifier (`python/compile/model.py`),
+//!   trained at build time and AOT-lowered to HLO text.
+//! * **Layer 1** — the fused Pallas MLP kernel inside that classifier
+//!   (`python/compile/kernels/mlp.py`).
+//!
+//! The Rust binary loads `artifacts/*.hlo.txt` through PJRT (`runtime`) —
+//! Python never runs on the request path.
+
+pub mod autoscale;
+pub mod config;
+pub mod coordinator;
+pub mod delay;
+pub mod experiments;
+pub mod rng;
+pub mod runtime;
+pub mod sentiment;
+pub mod sim;
+pub mod stats;
+pub mod streams;
+pub mod util;
+pub mod workload;

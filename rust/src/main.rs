@@ -1,0 +1,191 @@
+//! `sla-autoscale` — CLI for the MASCOTS'15 reproduction: generate
+//! workloads, run simulations, regenerate paper tables/figures, serve the
+//! PJRT sentiment model live.
+
+use anyhow::{bail, Result};
+use sla_autoscale::autoscale::{
+    AppdataScaler, AutoScaler, Composite, LoadScaler, ThresholdScaler,
+};
+use sla_autoscale::config::SimConfig;
+use sla_autoscale::delay::DelayModel;
+use sla_autoscale::experiments;
+use sla_autoscale::sim::Simulator;
+use sla_autoscale::workload::{all_matches, by_opponent, generate, GeneratorConfig};
+
+const USAGE: &str = "\
+sla-autoscale — SLA-aware application-data auto-scaling (MASCOTS'15 reproduction)
+
+USAGE:
+  sla-autoscale matches
+      List the seven matches of the paper's workload (Table II).
+  sla-autoscale gen <opponent> [--out trace.csv] [--seed N]
+      Generate a synthetic match trace and write it as CSV.
+  sla-autoscale sim <opponent> [--algo SPEC] [--config FILE] [--fast]
+      Simulate one match. SPEC: threshold-<pct> | load-<quantile> |
+      appdata-<extra>   (default: load-0.99999)
+  sla-autoscale exp <id|all> [--fast]
+      Regenerate a paper table/figure (table1..3, fig2..8).
+  sla-autoscale serve [opponent] [--count N] [--artifacts DIR]
+      Serve the PJRT-compiled sentiment model on a generated live stream.
+";
+
+/// Tiny argument cursor (offline stand-in for clap).
+struct Args {
+    argv: Vec<String>,
+}
+
+impl Args {
+    fn new() -> Self {
+        Self { argv: std::env::args().skip(1).collect() }
+    }
+
+    fn positional(&self, idx: usize) -> Option<&str> {
+        self.argv.iter().filter(|a| !a.starts_with("--")).nth(idx).map(String::as_str)
+    }
+
+    fn flag(&self, name: &str) -> bool {
+        self.argv.iter().any(|a| a == name)
+    }
+
+    fn opt(&self, name: &str) -> Option<&str> {
+        let mut it = self.argv.iter();
+        while let Some(a) = it.next() {
+            if a == name {
+                return it.next().map(String::as_str);
+            }
+            if let Some(rest) = a.strip_prefix(&format!("{name}=")) {
+                return Some(rest);
+            }
+        }
+        None
+    }
+}
+
+fn parse_algo(spec: &str, model: &DelayModel, mix: [f64; 3]) -> Result<Box<dyn AutoScaler>> {
+    if let Some(p) = spec.strip_prefix("threshold-") {
+        let pct: f64 = p.parse()?;
+        return Ok(Box::new(ThresholdScaler::new(pct / 100.0)));
+    }
+    if let Some(q) = spec.strip_prefix("load-") {
+        return Ok(Box::new(LoadScaler::new(model.clone(), q.parse()?, mix)));
+    }
+    if let Some(e) = spec.strip_prefix("appdata-") {
+        return Ok(Box::new(Composite::new(
+            LoadScaler::new(model.clone(), 0.99999, mix),
+            AppdataScaler::new(e.parse()?),
+        )));
+    }
+    bail!("unknown algorithm {spec:?} (threshold-<pct> | load-<q> | appdata-<extra>)")
+}
+
+fn main() -> Result<()> {
+    let args = Args::new();
+    match args.positional(0) {
+        Some("matches") => {
+            for m in all_matches() {
+                println!(
+                    "{:<10} {:<10} {:>9} tweets  {:>5.2} h  {:>9.0} t/h  {} bursts",
+                    m.opponent,
+                    m.date,
+                    m.total_tweets,
+                    m.length_hours,
+                    m.tweets_per_hour(),
+                    m.events.len()
+                );
+            }
+        }
+        Some("gen") => {
+            let Some(op) = args.positional(1) else { bail!("gen: missing opponent") };
+            let Some(spec) = by_opponent(op) else { bail!("unknown opponent {op:?}") };
+            let out = args.opt("--out").unwrap_or("trace.csv");
+            let seed: u64 = args.opt("--seed").unwrap_or("2013").parse()?;
+            let cfg = GeneratorConfig { seed, ..Default::default() };
+            let trace = generate(&spec, &cfg);
+            trace.write_csv(out)?;
+            println!("wrote {} tweets to {out}", trace.len());
+        }
+        Some("sim") => {
+            let Some(op) = args.positional(1) else { bail!("sim: missing opponent") };
+            let Some(spec) = by_opponent(op) else { bail!("unknown opponent {op:?}") };
+            let fast = args.flag("--fast");
+            let base = match args.opt("--config") {
+                Some(p) => SimConfig::from_file(p)?,
+                None => SimConfig::default(),
+            };
+            let cfg = experiments::common::scale_config(&base, fast);
+            let trace = experiments::common::trace_for(&spec, fast);
+            let model = DelayModel::default();
+            let mix = experiments::common::default_mix();
+            let scaler = parse_algo(args.opt("--algo").unwrap_or("load-0.99999"), &model, mix)?;
+            let name = scaler.name();
+            let sim = Simulator::new(&cfg, &model);
+            let res = sim.run(&trace, scaler);
+            println!(
+                "BRA vs {op} under {name}: {} tweets, {:.2}% > SLA, {:.2} CPU-hours, {} scale events, mean delay {:.1}s",
+                res.history.completed(),
+                res.violation_pct(),
+                res.cpu_hours,
+                res.decisions.len(),
+                res.history.mean_delay(),
+            );
+        }
+        Some("exp") => {
+            let Some(id) = args.positional(1) else { bail!("exp: missing id") };
+            let fast = args.flag("--fast");
+            if id.eq_ignore_ascii_case("all") {
+                for e in experiments::all() {
+                    println!("{}", e.run(fast)?);
+                }
+            } else {
+                let Some(e) = experiments::by_id(id) else {
+                    bail!(
+                        "unknown experiment {id:?}; available: {}",
+                        experiments::all().iter().map(|e| e.id()).collect::<Vec<_>>().join(", ")
+                    )
+                };
+                println!("{}", e.run(fast)?);
+            }
+        }
+        Some("serve") => {
+            let opponent = args.positional(1).unwrap_or("Spain").to_string();
+            let count: u64 = args.opt("--count").unwrap_or("20000").parse()?;
+            let artifacts = args.opt("--artifacts").unwrap_or("artifacts").to_string();
+            serve(&opponent, count, &artifacts)?;
+        }
+        _ => {
+            print!("{USAGE}");
+        }
+    }
+    Ok(())
+}
+
+/// Live-serving entry: stream generated tweets through the PJRT model.
+fn serve(opponent: &str, count: u64, artifacts: &str) -> Result<()> {
+    use sla_autoscale::coordinator::{spawn_with, submit, ServeConfig};
+    use sla_autoscale::rng::Rng;
+    use sla_autoscale::runtime::ModelEngine;
+    use sla_autoscale::workload::text::{render_tweet, Polarity};
+
+    let Some(spec) = by_opponent(opponent) else { bail!("unknown opponent {opponent:?}") };
+    let trace = experiments::common::trace_for(&spec, true);
+    let n = if count == 0 { trace.len() } else { (count as usize).min(trace.len()) };
+
+    // The PJRT client is thread-local (Rc inside), so the engine is built
+    // on the leader thread itself.
+    let dir = std::path::PathBuf::from(artifacts);
+    let (tx, handle) = spawn_with(move || ModelEngine::load(&dir), ServeConfig::default());
+    println!("serving BRA vs {opponent} through the PJRT sentiment model");
+    let mut rng = Rng::new(42);
+    let started = std::time::Instant::now();
+    for (i, tw) in trace.tweets.iter().take(n).enumerate() {
+        let intensity = tw.sentiment_opt().unwrap_or(0.2) as f64;
+        let pol = if rng.chance(0.5) { Polarity::Positive } else { Polarity::Negative };
+        let text = render_tweet(&mut rng, intensity, pol);
+        let _ = submit(&tx, i as u64, tw.post_time, text)?;
+    }
+    drop(tx);
+    let report = handle.join().map_err(|_| anyhow::anyhow!("coordinator panicked"))??;
+    println!("{}", report.metrics.summary(started.elapsed()));
+    println!("virtual cluster: {} CPUs, scale log {:?}", report.final_cpus, report.scale_log);
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! Dynamic batching plan: map a request burst onto the fixed batch-size
+//! variants that were AOT-compiled (8 / 64 / 256), padding only the tail.
+//!
+//! PJRT executables have static shapes, so the serving layer picks, for
+//! `n` queued tweets, a sequence of variant launches that covers `n` with
+//! minimal padded waste — the same compiled-bucket strategy vLLM-style
+//! servers use for shape-specialized engines.
+
+/// One planned launch: run variant `batch`, of which `fill` are real rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Launch {
+    pub batch: usize,
+    pub fill: usize,
+}
+
+/// Plan coverage of `n` items with the available variants (ascending).
+///
+/// Greedy largest-variant-first for the bulk, then the smallest variant
+/// that covers the remainder (padding the difference).
+pub fn plan(n: usize, variants: &[usize]) -> Vec<Launch> {
+    assert!(!variants.is_empty(), "no batch variants");
+    debug_assert!(variants.windows(2).all(|w| w[0] < w[1]), "variants must ascend");
+    let mut plan = Vec::new();
+    let mut left = n;
+    let largest = *variants.last().unwrap();
+    while left >= largest {
+        plan.push(Launch { batch: largest, fill: largest });
+        left -= largest;
+    }
+    if left > 0 {
+        // smallest variant that fits the remainder
+        let batch = *variants.iter().find(|&&v| v >= left).unwrap_or(&largest);
+        if batch >= left {
+            plan.push(Launch { batch, fill: left });
+        } else {
+            // remainder bigger than the largest variant can only happen if
+            // left < largest was violated — unreachable by construction
+            unreachable!();
+        }
+    }
+    plan
+}
+
+/// Padded waste fraction of a plan (0 = perfect fit).
+pub fn waste(plan: &[Launch]) -> f64 {
+    let padded: usize = plan.iter().map(|l| l.batch).sum();
+    let real: usize = plan.iter().map(|l| l.fill).sum();
+    if padded == 0 {
+        0.0
+    } else {
+        (padded - real) as f64 / padded as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const V: [usize; 3] = [8, 64, 256];
+
+    #[test]
+    fn exact_fit_large() {
+        let p = plan(512, &V);
+        assert_eq!(p, vec![Launch { batch: 256, fill: 256 }; 2]);
+        assert_eq!(waste(&p), 0.0);
+    }
+
+    #[test]
+    fn tail_uses_smallest_cover() {
+        let p = plan(260, &V);
+        assert_eq!(p[0], Launch { batch: 256, fill: 256 });
+        assert_eq!(p[1], Launch { batch: 8, fill: 4 });
+    }
+
+    #[test]
+    fn small_n_minimal_variant() {
+        assert_eq!(plan(3, &V), vec![Launch { batch: 8, fill: 3 }]);
+        assert_eq!(plan(8, &V), vec![Launch { batch: 8, fill: 8 }]);
+        assert_eq!(plan(9, &V), vec![Launch { batch: 64, fill: 9 }]);
+    }
+
+    #[test]
+    fn mid_range_picks_64() {
+        let p = plan(60, &V);
+        assert_eq!(p, vec![Launch { batch: 64, fill: 60 }]);
+        assert!(waste(&p) < 0.07);
+    }
+
+    #[test]
+    fn zero_items_empty_plan() {
+        assert!(plan(0, &V).is_empty());
+    }
+
+    #[test]
+    fn coverage_invariant() {
+        for n in 0..1000 {
+            let p = plan(n, &V);
+            let real: usize = p.iter().map(|l| l.fill).sum();
+            assert_eq!(real, n, "plan must cover exactly n");
+            for l in &p {
+                assert!(l.fill <= l.batch);
+                assert!(V.contains(&l.batch));
+            }
+        }
+    }
+
+    #[test]
+    fn single_variant_works() {
+        let p = plan(10, &[4]);
+        let real: usize = p.iter().map(|l| l.fill).sum();
+        assert_eq!(real, 10);
+        assert_eq!(p.len(), 3); // 4+4+2
+    }
+}

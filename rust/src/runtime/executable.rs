@@ -1,0 +1,77 @@
+//! PJRT executable wrapper: load HLO text, compile once, execute many.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO *text* (not
+//! serialized protos — the crate's xla_extension 0.5.1 rejects jax≥0.5
+//! 64-bit instruction ids) → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`.
+
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// A compiled sentiment-model variant with a fixed batch size.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Rows per launch (static shape).
+    pub batch: usize,
+    /// Input feature width (vocab).
+    pub vocab: usize,
+    /// Output classes.
+    pub classes: usize,
+}
+
+impl Executable {
+    /// Load + compile one HLO-text artifact on the given PJRT client.
+    pub fn load(
+        client: &xla::PjRtClient,
+        path: &Path,
+        batch: usize,
+        vocab: usize,
+        classes: usize,
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Self { exe, batch, vocab, classes })
+    }
+
+    /// Execute on a `[batch * vocab]` row-major counts buffer; returns the
+    /// `[batch * classes]` row-major probability matrix.
+    pub fn run(&self, counts: &[f32]) -> Result<Vec<f32>> {
+        ensure!(
+            counts.len() == self.batch * self.vocab,
+            "input length {} != {}x{}",
+            counts.len(),
+            self.batch,
+            self.vocab
+        );
+        let lit = xla::Literal::vec1(counts)
+            .reshape(&[self.batch as i64, self.vocab as i64])
+            .map_err(|e| anyhow::anyhow!("reshape input: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple result: {e:?}"))?;
+        let probs = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("read result: {e:?}"))?;
+        ensure!(
+            probs.len() == self.batch * self.classes,
+            "output length {} != {}x{}",
+            probs.len(),
+            self.batch,
+            self.classes
+        );
+        Ok(probs)
+    }
+}

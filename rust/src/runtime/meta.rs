@@ -1,0 +1,187 @@
+//! `artifacts/meta.txt` — the contract between the Python compile path and
+//! the Rust runtime: dims, batch variants, tokenizer goldens, a golden
+//! input/output pair for integration testing. Flat `key=value` format
+//! (see `util::FlatMeta`); `meta.json` next to it is the human/python view.
+
+use crate::util::FlatMeta;
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Golden (input, expected output) pair exported by `aot.py`.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub texts: Vec<String>,
+    pub labels: Vec<u32>,
+    /// Row-major `[n][classes]` probabilities.
+    pub probs: Vec<Vec<f32>>,
+    pub scores: Vec<f32>,
+}
+
+/// Parsed metadata.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub vocab: usize,
+    pub embed: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub labels: Vec<String>,
+    pub batch_variants: Vec<usize>,
+    /// `(batch size, artifact file name)`, ascending by batch.
+    pub artifacts: Vec<(usize, String)>,
+    /// `(token, expected bucket)` pins for the tokenizer contract.
+    pub tokenizer_goldens: Vec<(String, usize)>,
+    pub train_acc: f64,
+    pub golden: Golden,
+    /// Static L1 perf-model numbers (EXPERIMENTS.md §Perf).
+    pub vmem_bytes_per_step: u64,
+    pub mxu_flops_b64: u64,
+}
+
+impl Meta {
+    /// Load and validate `meta.txt` from the artifacts directory.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("meta.txt");
+        let flat = FlatMeta::load(&path)
+            .with_context(|| format!("loading {} (run `make artifacts`)", path.display()))?;
+        let meta = Self::from_flat(&flat)?;
+        meta.validate(artifacts_dir)?;
+        Ok(meta)
+    }
+
+    fn from_flat(flat: &FlatMeta) -> Result<Self> {
+        let batch_variants: Vec<usize> = flat.get_list_parsed("batch_variants")?;
+        let artifacts = batch_variants
+            .iter()
+            .map(|&b| Ok((b, flat.get(&format!("artifact.{b}"))?.to_string())))
+            .collect::<Result<Vec<_>>>()?;
+        let golden_texts: Vec<String> =
+            flat.get_list("golden.text").iter().map(|s| s.to_string()).collect();
+        let n = golden_texts.len();
+        let classes: usize = flat.get_parsed("classes")?;
+        let flat_probs: Vec<f32> = flat.get_list_parsed("golden.probs")?;
+        ensure!(flat_probs.len() == n * classes, "golden.probs wrong length");
+        let probs = flat_probs.chunks(classes).map(|c| c.to_vec()).collect();
+        let tokens = flat.get_list("tokenizer_golden.token");
+        let buckets: Vec<usize> = flat.get_list_parsed("tokenizer_golden.bucket")?;
+        ensure!(tokens.len() == buckets.len(), "tokenizer golden length mismatch");
+        Ok(Self {
+            vocab: flat.get_parsed("vocab")?,
+            embed: flat.get_parsed("embed")?,
+            hidden: flat.get_parsed("hidden")?,
+            classes,
+            labels: flat.get_list("labels").iter().map(|s| s.to_string()).collect(),
+            batch_variants,
+            artifacts,
+            tokenizer_goldens: tokens
+                .iter()
+                .zip(buckets)
+                .map(|(t, b)| (t.to_string(), b))
+                .collect(),
+            train_acc: flat.get_parsed("train_acc")?,
+            golden: Golden {
+                texts: golden_texts,
+                labels: flat.get_list_parsed("golden.labels")?,
+                probs,
+                scores: flat.get_list_parsed("golden.scores")?,
+            },
+            vmem_bytes_per_step: flat.get_parsed("perf.vmem_bytes_per_step")?,
+            mxu_flops_b64: flat.get_parsed("perf.mxu_flops_b64")?,
+        })
+    }
+
+    fn validate(&self, dir: &Path) -> Result<()> {
+        ensure!(
+            self.vocab == crate::sentiment::tokenizer::VOCAB,
+            "vocab mismatch: meta {} vs tokenizer {}",
+            self.vocab,
+            crate::sentiment::tokenizer::VOCAB
+        );
+        ensure!(self.classes == 3, "expected 3 classes, got {}", self.classes);
+        ensure!(!self.batch_variants.is_empty(), "no batch variants");
+        for (b, name) in &self.artifacts {
+            ensure!(dir.join(name).exists(), "artifact file missing for b{b}: {name}");
+        }
+        // Cross-language tokenizer pin: every golden token must hash to the
+        // same bucket here as it did in Python at training time.
+        for (tok, want) in &self.tokenizer_goldens {
+            let got = crate::sentiment::tokenizer::bucket(tok);
+            ensure!(
+                got == *want,
+                "tokenizer divergence on {tok:?}: rust {got} vs python {want}"
+            );
+        }
+        ensure!(self.train_acc > 0.9, "under-trained model shipped (acc {})", self.train_acc);
+        ensure!(self.golden.texts.len() == self.golden.scores.len(), "golden length mismatch");
+        Ok(())
+    }
+
+    /// Path of the artifact for a batch variant.
+    pub fn artifact_path(&self, dir: &Path, batch: usize) -> PathBuf {
+        let name = self
+            .artifacts
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .map(|(_, n)| n.clone())
+            .expect("unknown batch variant");
+        dir.join(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn minimal_meta(goldens_ok: bool) -> String {
+        let bucket = if goldens_ok {
+            crate::sentiment::tokenizer::bucket("pos0")
+        } else {
+            (crate::sentiment::tokenizer::bucket("pos0") + 1) % 1024
+        };
+        format!(
+            "vocab=1024\nembed=64\nhidden=128\nclasses=3\n\
+             labels.0=positive\nlabels.1=negative\nlabels.2=neutral\n\
+             batch_variants.0=8\nartifact.8=x.hlo.txt\n\
+             tokenizer_golden.token.0=pos0\ntokenizer_golden.bucket.0={bucket}\n\
+             train_acc=0.97\n\
+             golden.text.0=pos1 pos2\ngolden.labels.0=0\n\
+             golden.probs.0=0.8\ngolden.probs.1=0.1\ngolden.probs.2=0.1\n\
+             golden.scores.0=0.9\n\
+             perf.vmem_bytes_per_step=100000\nperf.mxu_flops_b64=1000000\n"
+        )
+    }
+
+    #[test]
+    fn parses_minimal_meta() {
+        let d = TempDir::new().unwrap();
+        std::fs::write(d.join("meta.txt"), minimal_meta(true)).unwrap();
+        std::fs::write(d.join("x.hlo.txt"), "HloModule x").unwrap();
+        let m = Meta::load(d.path()).unwrap();
+        assert_eq!(m.batch_variants, vec![8]);
+        assert_eq!(m.golden.probs[0].len(), 3);
+        assert_eq!(m.artifact_path(d.path(), 8), d.join("x.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_dir_errors_with_hint() {
+        let err = Meta::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn tokenizer_divergence_detected() {
+        let d = TempDir::new().unwrap();
+        std::fs::write(d.join("meta.txt"), minimal_meta(false)).unwrap();
+        std::fs::write(d.join("x.hlo.txt"), "HloModule x").unwrap();
+        let err = Meta::load(d.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("divergence"));
+    }
+
+    #[test]
+    fn missing_artifact_detected() {
+        let d = TempDir::new().unwrap();
+        std::fs::write(d.join("meta.txt"), minimal_meta(true)).unwrap();
+        let err = Meta::load(d.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("artifact file missing"));
+    }
+}

@@ -1,0 +1,96 @@
+//! PJRT runtime: loads the AOT-compiled sentiment classifier
+//! (`artifacts/*.hlo.txt`) and serves it from the Rust hot path. Python
+//! never runs here — artifacts are produced once by `make artifacts`.
+
+pub mod batcher;
+pub mod executable;
+pub mod meta;
+
+pub use batcher::{plan, Launch};
+pub use executable::Executable;
+pub use meta::Meta;
+
+use crate::sentiment::{Sentiment, SentimentEngine};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// The PJRT-served sentiment classifier: all compiled batch variants plus
+/// the tokenizer front-end; implements [`SentimentEngine`].
+pub struct ModelEngine {
+    pub meta: Meta,
+    variants: Vec<Executable>,
+    /// Reusable input buffer (largest variant) — no per-call allocation.
+    scratch: Vec<f32>,
+}
+
+impl ModelEngine {
+    /// Load every batch variant from the artifacts directory.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let meta = Meta::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let mut variants = Vec::new();
+        for &b in &meta.batch_variants {
+            let path = meta.artifact_path(artifacts_dir, b);
+            variants.push(
+                Executable::load(&client, &path, b, meta.vocab, meta.classes)
+                    .with_context(|| format!("loading variant b{b}"))?,
+            );
+        }
+        variants.sort_by_key(|v| v.batch);
+        let largest = variants.last().map(|v| v.batch).unwrap_or(0);
+        let scratch = vec![0.0; largest * meta.vocab];
+        Ok(Self { meta, variants, scratch })
+    }
+
+    /// Default artifacts location (repo-root `artifacts/`).
+    pub fn load_default() -> Result<Self> {
+        Self::load(Path::new("artifacts"))
+    }
+
+    fn variant(&self, batch: usize) -> &Executable {
+        self.variants
+            .iter()
+            .find(|v| v.batch == batch)
+            .expect("plan only uses known variants")
+    }
+
+    /// Batch sizes available (ascending).
+    pub fn batch_variants(&self) -> Vec<usize> {
+        self.variants.iter().map(|v| v.batch).collect()
+    }
+}
+
+impl SentimentEngine for ModelEngine {
+    fn score_batch(&mut self, texts: &[String]) -> Result<Vec<Sentiment>> {
+        let variants = self.batch_variants();
+        let mut out = Vec::with_capacity(texts.len());
+        let mut offset = 0usize;
+        for launch in plan(texts.len(), &variants) {
+            let vocab = self.meta.vocab;
+            let buf = &mut self.scratch[..launch.batch * vocab];
+            buf.fill(0.0);
+            for (row, text) in texts[offset..offset + launch.fill].iter().enumerate() {
+                crate::sentiment::tokenizer::vectorize_into(
+                    text,
+                    &mut buf[row * vocab..(row + 1) * vocab],
+                );
+            }
+            let exe = self.variant(launch.batch);
+            let probs = exe.run(&self.scratch[..launch.batch * vocab])?;
+            for row in 0..launch.fill {
+                out.push(Sentiment {
+                    p_pos: probs[row * 3],
+                    p_neg: probs[row * 3 + 1],
+                    p_neu: probs[row * 3 + 2],
+                });
+            }
+            offset += launch.fill;
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-model"
+    }
+}

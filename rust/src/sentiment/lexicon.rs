@@ -1,0 +1,99 @@
+//! Lexicon-based sentiment scorer: a dependency-free baseline engine.
+//!
+//! Serves two roles: (a) a test oracle for the model-backed engine (the
+//! synthetic token families carry their polarity in the token text), and
+//! (b) a fallback `SentimentEngine` when artifacts are absent, so every
+//! example binary runs even before `make artifacts`.
+
+use super::{Sentiment, SentimentEngine};
+
+/// Rule-based scorer over the synthetic token families.
+#[derive(Debug, Default, Clone)]
+pub struct LexiconEngine;
+
+impl LexiconEngine {
+    pub fn new() -> Self {
+        Self
+    }
+
+    fn score_one(&self, text: &str) -> Sentiment {
+        let mut pos = 0u32;
+        let mut neg = 0u32;
+        let mut total = 0u32;
+        for tok in text.split_whitespace() {
+            total += 1;
+            let t = tok.to_lowercase();
+            // "positive"-family tokens but not "topic"/"noise"
+            if t.starts_with("pos") {
+                pos += 1;
+            } else if t.starts_with("neg") {
+                neg += 1;
+            }
+        }
+        if total == 0 {
+            return Sentiment { p_pos: 0.0, p_neg: 0.0, p_neu: 1.0 };
+        }
+        // Smoothed family proportions; neutral absorbs the rest.
+        let p_pos = pos as f32 / total as f32;
+        let p_neg = neg as f32 / total as f32;
+        let p_neu = (1.0 - p_pos - p_neg).max(0.0);
+        let z = p_pos + p_neg + p_neu;
+        Sentiment { p_pos: p_pos / z, p_neg: p_neg / z, p_neu: p_neu / z }
+    }
+}
+
+impl SentimentEngine for LexiconEngine {
+    fn score_batch(&mut self, texts: &[String]) -> anyhow::Result<Vec<Sentiment>> {
+        Ok(texts.iter().map(|t| self.score_one(t)).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "lexicon"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn positive_text_scores_positive() {
+        let mut e = LexiconEngine::new();
+        let s = &e.score_batch(&["pos1 pos2 pos3 neu1".into()]).unwrap()[0];
+        assert!(s.p_pos > s.p_neg);
+        assert!(s.p_pos > 0.5);
+        assert!((s.p_pos + s.p_neg + s.p_neu - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn negative_text_scores_negative() {
+        let mut e = LexiconEngine::new();
+        let s = &e.score_batch(&["neg1 neg2 neu1 topic1".into()]).unwrap()[0];
+        assert!(s.p_neg > s.p_pos);
+    }
+
+    #[test]
+    fn neutral_text_scores_neutral() {
+        let mut e = LexiconEngine::new();
+        let s = &e.score_batch(&["neu1 topic2 noise55".into()]).unwrap()[0];
+        assert!(s.p_neu > 0.9);
+        assert!(s.score() < 0.1);
+    }
+
+    #[test]
+    fn empty_text_is_neutral() {
+        let mut e = LexiconEngine::new();
+        let s = &e.score_batch(&["".into()]).unwrap()[0];
+        assert_eq!(s.p_neu, 1.0);
+    }
+
+    #[test]
+    fn batch_preserves_order() {
+        let mut e = LexiconEngine::new();
+        let out = e
+            .score_batch(&["pos1 pos2".into(), "neg1 neg2".into()])
+            .unwrap();
+        assert!(out[0].p_pos > out[0].p_neg);
+        assert!(out[1].p_neg > out[1].p_pos);
+    }
+}

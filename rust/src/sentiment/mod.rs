@@ -1,0 +1,59 @@
+//! Sentiment engines: the application-level analyzer whose *output* the
+//! appdata trigger consumes (§III). Two implementations: the PJRT-served
+//! trained classifier (`crate::runtime::ModelEngine`) and a dependency-free
+//! lexicon baseline.
+
+pub mod lexicon;
+pub mod tokenizer;
+
+pub use lexicon::LexiconEngine;
+
+/// Class probabilities for one tweet — "the probability that the tweet is
+/// positive, negative or neutral. These three numbers always sum to 1."
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sentiment {
+    pub p_pos: f32,
+    pub p_neg: f32,
+    pub p_neu: f32,
+}
+
+impl Sentiment {
+    /// The paper's *sentiment score* (footnote 1): probability of being
+    /// positive or negative, i.e. the intensity the appdata trigger reads.
+    pub fn score(&self) -> f32 {
+        self.p_pos + self.p_neg
+    }
+
+    /// Dominant label index (0 pos, 1 neg, 2 neu) — label order matches
+    /// `python/compile/vectorizer.LABELS`.
+    pub fn argmax(&self) -> usize {
+        let probs = [self.p_pos, self.p_neg, self.p_neu];
+        (0..3).max_by(|&a, &b| probs[a].total_cmp(&probs[b])).unwrap()
+    }
+}
+
+/// A batch sentiment scorer.
+pub trait SentimentEngine {
+    /// Score a batch of tweet texts, preserving order.
+    fn score_batch(&mut self, texts: &[String]) -> anyhow::Result<Vec<Sentiment>>;
+
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_is_one_minus_neutral() {
+        let s = Sentiment { p_pos: 0.5, p_neg: 0.3, p_neu: 0.2 };
+        assert!((s.score() - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_picks_dominant() {
+        assert_eq!(Sentiment { p_pos: 0.7, p_neg: 0.2, p_neu: 0.1 }.argmax(), 0);
+        assert_eq!(Sentiment { p_pos: 0.1, p_neg: 0.8, p_neu: 0.1 }.argmax(), 1);
+        assert_eq!(Sentiment { p_pos: 0.1, p_neg: 0.2, p_neu: 0.7 }.argmax(), 2);
+    }
+}

@@ -1,0 +1,104 @@
+//! Hashing tokenizer — the Rust twin of `python/compile/vectorizer.py`.
+//!
+//! Both sides MUST produce bit-identical bag-of-words vectors: the
+//! classifier was trained on vectors hashed in Python, and the Rust
+//! coordinator recreates them at serving time. Contract: FNV-1a 64-bit
+//! over UTF-8 bytes of lowercased whitespace tokens, bucket = hash % 1024.
+//! `artifacts/meta.json` carries goldens pinning the two implementations
+//! together (checked by integration tests).
+
+/// Vocabulary size (must equal `vectorizer.VOCAB`).
+pub const VOCAB: usize = 1024;
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// FNV-1a 64-bit hash (mirrors `vectorizer.fnv1a64`).
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Token → vocabulary bucket.
+pub fn bucket(token: &str) -> usize {
+    (fnv1a64(token.as_bytes()) % VOCAB as u64) as usize
+}
+
+/// Lowercased whitespace tokenization (mirrors `vectorizer.tokenize`).
+pub fn tokenize(text: &str) -> Vec<String> {
+    text.to_lowercase().split_whitespace().map(str::to_owned).collect()
+}
+
+/// Tweet text → `[VOCAB]` f32 bucket counts (mirrors
+/// `vectorizer.vectorize`).
+pub fn vectorize(text: &str) -> Vec<f32> {
+    let mut counts = vec![0f32; VOCAB];
+    vectorize_into(text, &mut counts);
+    counts
+}
+
+/// Zero-allocation variant for the serving hot path: writes counts into a
+/// caller-provided `[VOCAB]` slice (zeroed first).
+pub fn vectorize_into(text: &str, counts: &mut [f32]) {
+    debug_assert_eq!(counts.len(), VOCAB);
+    counts.fill(0.0);
+    for token in text.split_whitespace() {
+        // lowercase per token without allocating for pure-ASCII input
+        if token.bytes().all(|b| !b.is_ascii_uppercase()) {
+            counts[bucket(token)] += 1.0;
+        } else {
+            counts[bucket(&token.to_lowercase())] += 1.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_answers() {
+        // Same pins as python/tests/test_model.py::test_fnv_golden.
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_F739_67E8);
+    }
+
+    #[test]
+    fn bucket_in_range() {
+        for tok in ["pos0", "neg47", "noise1234", "çédille", ""] {
+            assert!(bucket(tok) < VOCAB);
+        }
+    }
+
+    #[test]
+    fn vectorize_counts_tokens() {
+        let v = vectorize("gol do brasil gol");
+        assert_eq!(v.iter().sum::<f32>(), 4.0);
+        assert_eq!(v[bucket("gol")], 2.0);
+    }
+
+    #[test]
+    fn case_insensitive() {
+        assert_eq!(vectorize("Gol Do BRASIL"), vectorize("gol do brasil"));
+    }
+
+    #[test]
+    fn vectorize_into_matches_alloc_version() {
+        let text = "pos1 NEG2 neu3 topic4 noise5 pos1";
+        let a = vectorize(text);
+        let mut b = vec![9.9f32; VOCAB]; // dirty buffer must be zeroed
+        vectorize_into(text, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_text_zero_vector() {
+        let v = vectorize("   ");
+        assert!(v.iter().all(|&c| c == 0.0));
+    }
+}

@@ -1,0 +1,154 @@
+//! CPU pool with provisioning delay and CPU-hour accounting.
+//!
+//! §IV-B: "After requesting or releasing resources, another amount of time
+//! will pass before they are available" (Table III: 60 s allocation time).
+//! Releases are immediate (you stop paying when you give the VM back);
+//! allocations arrive `provision_secs` after the request.
+
+/// Homogeneous CPU cluster as the simulator sees it.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    active: u32,
+    /// Pending scale-outs: (available_at, count).
+    pending: Vec<(f64, u32)>,
+    provision_secs: f64,
+    /// Accumulated cost in CPU-seconds.
+    cpu_seconds: f64,
+    /// Floor (the paper never drops below 1 CPU).
+    min_cpus: u32,
+}
+
+impl Cluster {
+    pub fn new(starting_cpus: u32, provision_secs: f64) -> Self {
+        assert!(starting_cpus >= 1);
+        Self {
+            active: starting_cpus,
+            pending: Vec::new(),
+            provision_secs,
+            cpu_seconds: 0.0,
+            min_cpus: 1,
+        }
+    }
+
+    /// CPUs currently serving work.
+    pub fn active(&self) -> u32 {
+        self.active
+    }
+
+    /// CPUs requested but not yet available.
+    pub fn pending(&self) -> u32 {
+        self.pending.iter().map(|&(_, n)| n).sum()
+    }
+
+    /// Request `n` more CPUs, available after the provisioning delay.
+    pub fn scale_out(&mut self, now: f64, n: u32) {
+        if n > 0 {
+            self.pending.push((now + self.provision_secs, n));
+        }
+    }
+
+    /// Release `n` CPUs immediately (never below the 1-CPU floor). Pending
+    /// requests are cancelled first — releasing while a request is in
+    /// flight means we no longer want those machines.
+    pub fn scale_in(&mut self, n: u32) {
+        let mut left = n;
+        while left > 0 {
+            if let Some(last) = self.pending.last_mut() {
+                let take = last.1.min(left);
+                last.1 -= take;
+                left -= take;
+                if last.1 == 0 {
+                    self.pending.pop();
+                }
+            } else {
+                break;
+            }
+        }
+        self.active = self.active.saturating_sub(left).max(self.min_cpus);
+    }
+
+    /// Advance time by `dt` seconds: accrue cost, commission arrivals.
+    pub fn tick(&mut self, now: f64, dt: f64) {
+        self.cpu_seconds += self.active as f64 * dt;
+        let mut arrived = 0;
+        self.pending.retain(|&(at, n)| {
+            if at <= now {
+                arrived += n;
+                false
+            } else {
+                true
+            }
+        });
+        self.active += arrived;
+    }
+
+    /// Total cost so far, in CPU-hours (the Fig 7/8 cost axis).
+    pub fn cpu_hours(&self) -> f64 {
+        self.cpu_seconds / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn provisioning_delay_respected() {
+        let mut c = Cluster::new(1, 60.0);
+        c.scale_out(0.0, 2);
+        assert_eq!(c.active(), 1);
+        assert_eq!(c.pending(), 2);
+        c.tick(59.0, 1.0);
+        assert_eq!(c.active(), 1);
+        c.tick(60.0, 1.0);
+        assert_eq!(c.active(), 3);
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn scale_in_immediate_with_floor() {
+        let mut c = Cluster::new(5, 60.0);
+        c.scale_in(3);
+        assert_eq!(c.active(), 2);
+        c.scale_in(10);
+        assert_eq!(c.active(), 1); // floor
+    }
+
+    #[test]
+    fn scale_in_cancels_pending_first() {
+        let mut c = Cluster::new(2, 60.0);
+        c.scale_out(0.0, 3);
+        c.scale_in(2);
+        assert_eq!(c.pending(), 1);
+        assert_eq!(c.active(), 2); // untouched, cancellation covered it
+        c.scale_in(2);
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.active(), 1);
+    }
+
+    #[test]
+    fn cpu_hours_accounting() {
+        let mut c = Cluster::new(2, 0.0);
+        for i in 0..3600 {
+            c.tick(i as f64, 1.0);
+        }
+        assert!((c.cpu_hours() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pending_cpus_do_not_cost() {
+        let mut c = Cluster::new(1, 1e9); // never arrives
+        c.scale_out(0.0, 100);
+        for i in 0..3600 {
+            c.tick(i as f64, 1.0);
+        }
+        assert!((c.cpu_hours() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_scale_out_noop() {
+        let mut c = Cluster::new(1, 60.0);
+        c.scale_out(0.0, 0);
+        assert_eq!(c.pending(), 0);
+    }
+}

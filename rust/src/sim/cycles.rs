@@ -1,0 +1,276 @@
+//! Algorithm 1 — CPU-cycle distribution among in-flight tweets.
+//!
+//! The paper's simulator distributes each step's cycle budget equally over
+//! the current tweets; tweets that need less than their share finish and
+//! their excess is redistributed over the remaining tweets (walked in
+//! ascending order of remaining cycles so every redistribution is final).
+//!
+//! Two implementations live here:
+//! * [`distribute_paper`] — the literal Algorithm 1 (sort + single pass),
+//!   kept as the executable specification;
+//! * [`distribute`] — the optimized equivalent used on the hot path
+//!   (selection of finishers without a full sort; see EXPERIMENTS.md
+//!   §Perf). A property test asserts the two agree.
+
+/// Outcome of one distribution step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistributeOutcome {
+    /// Indices (into the input slice) of tweets that completed this step.
+    pub completed: Vec<usize>,
+    /// Cycles actually consumed (≤ the step budget; less only when every
+    /// tweet finished).
+    pub consumed: f64,
+}
+
+/// Literal Algorithm 1 from the paper (executable specification).
+///
+/// `remaining[i]` is tweet i's remaining cycle count; entries of finished
+/// tweets are set to 0 and reported in the outcome. O(n log n).
+pub fn distribute_paper(cycles_per_step: f64, remaining: &mut [f64]) -> DistributeOutcome {
+    let n = remaining.len();
+    if n == 0 || cycles_per_step <= 0.0 {
+        return DistributeOutcome { completed: Vec::new(), consumed: 0.0 };
+    }
+    // sort tweetList increasingly by remaining cycles (indices, stable)
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| remaining[a].total_cmp(&remaining[b]));
+
+    let mut tweets_to_process = n;
+    let mut cycles_per_tweet = cycles_per_step / n as f64;
+    let mut completed = Vec::new();
+    let mut consumed = 0.0;
+    for &idx in &order {
+        let left = remaining[idx];
+        if left <= cycles_per_tweet {
+            // tweet finishes; its excess share goes to the others
+            let excess = cycles_per_tweet - left;
+            consumed += left;
+            remaining[idx] = 0.0;
+            completed.push(idx);
+            tweets_to_process -= 1;
+            if tweets_to_process > 0 {
+                cycles_per_tweet += excess / tweets_to_process as f64;
+            }
+        } else {
+            remaining[idx] -= cycles_per_tweet;
+            consumed += cycles_per_tweet;
+        }
+    }
+    DistributeOutcome { completed, consumed }
+}
+
+/// Optimized equal-share distribution (hot-path version).
+///
+/// Equal-share with redistribution is exactly processor sharing within the
+/// step: tweets finish in ascending order of remaining cycles, and a tweet
+/// finishes iff its demand is below the final per-tweet share. Instead of
+/// sorting all n entries we:
+/// 1. compute the naive share C/n;
+/// 2. partition out the (typically few) candidates below a share upper
+///    bound, sort only those, and
+/// 3. replay the redistribution walk over the candidates.
+///
+/// The share only grows as finishers release excess, and it can never
+/// exceed C/n + (total excess)/(remaining), bounded by C/1 in the extreme;
+/// we iterate the partition with the updated share until a fixed point,
+/// which terminates in ≤ a few rounds in practice (each round at least one
+/// new candidate or stop).
+pub fn distribute(cycles_per_step: f64, remaining: &mut [f64]) -> DistributeOutcome {
+    let mut scratch = Distributor::new();
+    let consumed = scratch.distribute(cycles_per_step, remaining);
+    DistributeOutcome { completed: scratch.take_completed(), consumed }
+}
+
+/// Reusable-scratch variant of [`distribute`] for the simulator hot loop:
+/// the completion list and done-marks are owned buffers, so a steady-state
+/// step performs **zero** heap allocations (§Perf).
+#[derive(Debug, Default)]
+pub struct Distributor {
+    completed: Vec<usize>,
+    is_done: Vec<bool>,
+}
+
+impl Distributor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Completions from the last `distribute` call, ascending by index.
+    pub fn completed(&self) -> &[usize] {
+        &self.completed
+    }
+
+    fn take_completed(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Run one equal-share distribution; returns consumed cycles and
+    /// leaves the completion list in [`Self::completed`].
+    pub fn distribute(&mut self, cycles_per_step: f64, remaining: &mut [f64]) -> f64 {
+        let n = remaining.len();
+        self.completed.clear();
+        if n == 0 || cycles_per_step <= 0.0 {
+            return 0.0;
+        }
+
+        // Fixed point: find the final share s* such that
+        //   s* = (C - Σ_{i: r_i ≤ s*} r_i) / (n - |{i: r_i ≤ s*}|)
+        // or everyone finishes. Iterate: start with s = C/n, grow s by
+        // folding in finishers; candidates only ever get added.
+        let mut share = cycles_per_step / n as f64;
+        let mut finished_sum = 0.0;
+        self.is_done.clear();
+        self.is_done.resize(n, false);
+        loop {
+            let mut grew = false;
+            for i in 0..n {
+                if !self.is_done[i] && remaining[i] <= share {
+                    self.is_done[i] = true;
+                    self.completed.push(i);
+                    finished_sum += remaining[i];
+                    grew = true;
+                }
+            }
+            if !grew {
+                break;
+            }
+            let survivors = n - self.completed.len();
+            if survivors == 0 {
+                break;
+            }
+            share = (cycles_per_step - finished_sum) / survivors as f64;
+        }
+
+        let mut consumed = finished_sum;
+        for i in 0..n {
+            if self.is_done[i] {
+                remaining[i] = 0.0;
+            } else {
+                remaining[i] -= share;
+                consumed += share;
+            }
+        }
+        // Report completions in ascending order like the paper's walk.
+        self.completed.sort_unstable();
+        consumed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn total(xs: &[f64]) -> f64 {
+        xs.iter().sum()
+    }
+
+    #[test]
+    fn equal_share_no_completions() {
+        let mut r = [100.0, 100.0, 100.0, 100.0];
+        let out = distribute_paper(40.0, &mut r);
+        assert!(out.completed.is_empty());
+        assert_eq!(r, [90.0; 4]);
+        assert!((out.consumed - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn excess_redistributed_to_heavier_tweets() {
+        // shares: 30 each; tweet0 needs 10, excess 20 split over remaining 2
+        let mut r = [10.0, 100.0, 100.0];
+        let out = distribute_paper(90.0, &mut r);
+        assert_eq!(out.completed, vec![0]);
+        assert_eq!(r[1], 60.0); // 100 - (30 + 10)
+        assert_eq!(r[2], 60.0);
+        assert!((out.consumed - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cascade_of_completions() {
+        let mut r = [1.0, 2.0, 1000.0];
+        let out = distribute_paper(30.0, &mut r);
+        assert_eq!(out.completed, vec![0, 1]);
+        // tweet2 receives everything else: 30 - 3 = 27
+        assert!((r[2] - 973.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_finish_budget_partially_used() {
+        let mut r = [5.0, 5.0];
+        let out = distribute_paper(100.0, &mut r);
+        assert_eq!(out.completed.len(), 2);
+        assert!((out.consumed - 10.0).abs() < 1e-9);
+        assert_eq!(r, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_and_zero_budget() {
+        let mut r: [f64; 0] = [];
+        assert!(distribute_paper(10.0, &mut r).completed.is_empty());
+        let mut r2 = [5.0];
+        let out = distribute_paper(0.0, &mut r2);
+        assert!(out.completed.is_empty());
+        assert_eq!(r2, [5.0]);
+    }
+
+    #[test]
+    fn optimized_matches_paper_on_examples() {
+        for (budget, xs) in [
+            (90.0, vec![10.0, 100.0, 100.0]),
+            (30.0, vec![1.0, 2.0, 1000.0]),
+            (100.0, vec![5.0, 5.0]),
+            (40.0, vec![100.0, 100.0, 100.0, 100.0]),
+            (1.0, vec![0.5, 0.6, 0.7]),
+        ] {
+            let mut a = xs.clone();
+            let mut b = xs.clone();
+            let oa = distribute_paper(budget, &mut a);
+            let ob = distribute(budget, &mut b);
+            let mut ca = oa.completed.clone();
+            ca.sort_unstable();
+            assert_eq!(ca, ob.completed, "budget={budget} xs={xs:?}");
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-6, "{a:?} vs {b:?}");
+            }
+            assert!((oa.consumed - ob.consumed).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn optimized_matches_paper_randomized() {
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let n = rng.range(1, 40) as usize;
+            let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 100.0).collect();
+            let budget = rng.next_f64() * 150.0;
+            let mut a = xs.clone();
+            let mut b = xs.clone();
+            let oa = distribute_paper(budget, &mut a);
+            let ob = distribute(budget, &mut b);
+            let mut ca = oa.completed.clone();
+            ca.sort_unstable();
+            assert_eq!(ca, ob.completed, "xs={xs:?} budget={budget}");
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn conservation_of_cycles() {
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let n = rng.range(1, 30) as usize;
+            let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 50.0 + 0.01).collect();
+            let before = total(&xs);
+            let budget = rng.next_f64() * 80.0;
+            let mut r = xs.clone();
+            let out = distribute(budget, &mut r);
+            let after = total(&r);
+            // consumed == drop in remaining, and ≤ budget
+            assert!((before - after - out.consumed).abs() < 1e-6);
+            assert!(out.consumed <= budget + 1e-9);
+            assert!(r.iter().all(|&v| v >= 0.0));
+        }
+    }
+}

@@ -1,0 +1,347 @@
+//! The discrete-time cluster simulator (§IV-B).
+//!
+//! Main loop, one iteration per `step_secs`:
+//!   1. read tweets posted during the window into the input queue, release
+//!      up to the configured input rate into the processing structure;
+//!   2. distribute the step's CPU cycles over current tweets (Algorithm 1);
+//!   3. move finished tweets to the history log;
+//!   4. at adaptation points, let the auto-scaler react (up/downscale with
+//!      provisioning delay).
+//! The loop continues past the trace horizon until the system drains.
+
+use super::cluster::Cluster;
+use super::cycles::Distributor;
+use super::history::{Completed, History};
+use super::input_queue::InputQueue;
+use crate::autoscale::{AutoScaler, Controller, Observation};
+use crate::config::SimConfig;
+use crate::delay::DelayModel;
+use crate::rng::Rng;
+use crate::workload::{Trace, Tweet, TweetClass};
+
+/// A tweet resident in the processing structure. Remaining cycles live in
+/// a parallel `Vec<f64>` (`remaining`) so Algorithm 1 runs on a dense
+/// slice with no per-step gather/scatter (§Perf).
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    post_time: f64,
+    entered_at: f64,
+    class: TweetClass,
+    sentiment: f32,
+}
+
+/// Per-second sample of the simulated cluster state (for plots/inspection).
+#[derive(Debug, Clone, Copy)]
+pub struct StateSample {
+    pub t: f64,
+    pub cpus: u32,
+    pub in_queue: usize,
+    pub in_process: usize,
+    pub cpu_usage: f64,
+}
+
+/// Outcome of one simulation run.
+pub struct SimResult {
+    pub history: History,
+    pub cpu_hours: f64,
+    /// Scaling decisions taken (time, decision).
+    pub decisions: Vec<(f64, crate::autoscale::Decision)>,
+    /// Per-`sample_every` state samples (empty unless requested).
+    pub samples: Vec<StateSample>,
+    /// Steps executed.
+    pub steps: u64,
+}
+
+impl SimResult {
+    pub fn violation_pct(&self) -> f64 {
+        self.history.violation_pct()
+    }
+}
+
+/// The simulator.
+pub struct Simulator<'a> {
+    cfg: &'a SimConfig,
+    model: &'a DelayModel,
+    /// Sample cluster state every N steps into `SimResult::samples`
+    /// (0 = never).
+    pub sample_every: u64,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(cfg: &'a SimConfig, model: &'a DelayModel) -> Self {
+        Self { cfg, model, sample_every: 0 }
+    }
+
+    /// Run `trace` under `scaler`.
+    pub fn run(&self, trace: &Trace, scaler: Box<dyn AutoScaler>) -> SimResult {
+        let cfg = self.cfg;
+        let mut rng = Rng::new(cfg.seed);
+        let mut cluster = Cluster::new(cfg.starting_cpus, cfg.provision_secs);
+        let mut controller = Controller::new(scaler, cfg.adapt_secs);
+        let mut history = History::new(cfg.sla_secs);
+        let mut queue: InputQueue<Tweet> = match cfg.input_rate {
+            Some(r) => InputQueue::new(r),
+            None => InputQueue::unlimited(),
+        };
+        let mut in_flight: Vec<InFlight> = Vec::new();
+        // parallel to in_flight: remaining cycle budgets (Algorithm 1 input)
+        let mut remaining: Vec<f64> = Vec::new();
+        let mut distributor = Distributor::new();
+        let mut admitted: Vec<Tweet> = Vec::new();
+        let mut samples = Vec::new();
+
+        // The clock starts at the first tweet's post time (§IV-B).
+        let start = trace.tweets.first().map_or(0.0, |t| t.post_time.floor());
+        let mut clock = start;
+        let mut next_tweet = 0usize;
+        let mut steps = 0u64;
+        // Utilization accounting over the current adaptation window.
+        let mut window_avail = 0.0f64;
+        let mut window_used = 0.0f64;
+        let mut cpu_usage = 0.0f64;
+        let mut next_window_reset = start + cfg.adapt_secs;
+
+        loop {
+            let step_end = clock + cfg.step_secs;
+
+            // 1a. tweets posted during this window enter the input queue
+            while next_tweet < trace.tweets.len()
+                && trace.tweets[next_tweet].post_time < step_end
+            {
+                queue.push(trace.tweets[next_tweet]);
+                next_tweet += 1;
+            }
+            // 1b. admit up to the input rate into the processing structure
+            queue.drain_step_into(cfg.step_secs, &mut admitted);
+            for &tw in &admitted {
+                let cycles = self.model.sample_cycles(tw.class, &mut rng);
+                if cycles <= 0.0 {
+                    // zero-cost classes complete instantly at admission
+                    history.record(
+                        Completed {
+                            post_time: tw.post_time,
+                            finished_at: step_end.max(tw.post_time),
+                            class: tw.class,
+                            sentiment: tw.sentiment,
+                        },
+                        step_end - tw.post_time,
+                    );
+                    continue;
+                }
+                in_flight.push(InFlight {
+                    post_time: tw.post_time,
+                    entered_at: clock,
+                    class: tw.class,
+                    sentiment: tw.sentiment,
+                });
+                remaining.push(cycles);
+            }
+
+            // 2. distribute this step's cycles (Algorithm 1, zero-alloc)
+            let budget = cluster.active() as f64 * cfg.cycles_per_cpu_step();
+            if !in_flight.is_empty() {
+                window_used += distributor.distribute(budget, &mut remaining);
+                // 3. finished tweets -> history (walk indices descending so
+                // swap_remove doesn't disturb pending removals)
+                for i in (0..distributor.completed().len()).rev() {
+                    let idx = distributor.completed()[i];
+                    let t = in_flight.swap_remove(idx);
+                    remaining.swap_remove(idx);
+                    history.record(
+                        Completed {
+                            post_time: t.post_time,
+                            finished_at: step_end,
+                            class: t.class,
+                            sentiment: t.sentiment,
+                        },
+                        t.entered_at - t.post_time,
+                    );
+                }
+            }
+            window_avail += budget;
+
+            // cluster time passes (provisioned CPUs arrive, cost accrues)
+            clock = step_end;
+            steps += 1;
+            cluster.tick(clock, cfg.step_secs);
+
+            // 4. adaptation point?
+            cpu_usage = if window_avail > 0.0 { window_used / window_avail } else { cpu_usage };
+            let obs = Observation {
+                now: clock,
+                cpus: cluster.active(),
+                pending_cpus: cluster.pending(),
+                in_system: queue.len() + in_flight.len(),
+                cpu_usage,
+                sentiment: history.sentiment(),
+                cpu_hz: cfg.cpu_hz,
+                sla_secs: cfg.sla_secs,
+            };
+            controller.maybe_adapt(&obs, &mut cluster);
+            // utilization window resets at every adaptation boundary
+            if clock >= next_window_reset {
+                window_avail = 0.0;
+                window_used = 0.0;
+                next_window_reset += cfg.adapt_secs;
+            }
+
+            if self.sample_every > 0 && steps % self.sample_every == 0 {
+                samples.push(StateSample {
+                    t: clock,
+                    cpus: cluster.active(),
+                    in_queue: queue.len(),
+                    in_process: in_flight.len(),
+                    cpu_usage,
+                });
+            }
+
+            // stop once every tweet has been ingested and drained
+            if next_tweet >= trace.tweets.len() && queue.is_empty() && in_flight.is_empty() {
+                break;
+            }
+        }
+
+        SimResult {
+            history,
+            cpu_hours: cluster.cpu_hours(),
+            decisions: controller.decisions().to_vec(),
+            samples,
+            steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscale::{LoadScaler, ThresholdScaler};
+    use crate::workload::{generate, GeneratorConfig, MatchSpec};
+
+    fn trace(total: u64, hours: f64) -> Trace {
+        let spec = MatchSpec {
+            opponent: "Sim",
+            date: "—",
+            total_tweets: total,
+            length_hours: hours,
+            events: vec![],
+        };
+        generate(&spec, &GeneratorConfig::default())
+    }
+
+    fn mix() -> [f64; 3] {
+        [0.30, 0.30, 0.40]
+    }
+
+    #[test]
+    fn conserves_tweets() {
+        let tr = trace(20_000, 0.25);
+        let cfg = SimConfig::default();
+        let model = DelayModel::default();
+        let sim = Simulator::new(&cfg, &model);
+        let res = sim.run(&tr, Box::new(LoadScaler::new(model.clone(), 0.99, mix())));
+        assert_eq!(res.history.completed(), tr.len() as u64);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let tr = trace(5_000, 0.2);
+        let cfg = SimConfig::default();
+        let model = DelayModel::default();
+        let run = || {
+            Simulator::new(&cfg, &model)
+                .run(&tr, Box::new(LoadScaler::new(model.clone(), 0.99, mix())))
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.history.violations(), b.history.violations());
+        assert_eq!(a.cpu_hours, b.cpu_hours);
+        assert_eq!(a.steps, b.steps);
+    }
+
+    #[test]
+    fn overload_without_scaling_violates_sla() {
+        // ~55 t/s of ~31.5e6-cycle tweets on one pinned 2 GHz CPU is ~87%
+        // of capacity on average, but bursty arrivals + no headroom ->
+        // backlog; with a scaler that never acts, violations must appear
+        // given a tight SLA.
+        struct Never;
+        impl crate::autoscale::AutoScaler for Never {
+            fn decide(&mut self, _: &Observation<'_>) -> crate::autoscale::Decision {
+                crate::autoscale::Decision::Hold
+            }
+            fn name(&self) -> String {
+                "never".into()
+            }
+        }
+        let tr = trace(160_000, 0.5); // ≈89 tweets/s > 1-CPU capacity (~63/s)
+        let cfg = SimConfig { sla_secs: 30.0, ..Default::default() };
+        let model = DelayModel::default();
+        let res = Simulator::new(&cfg, &model).run(&tr, Box::new(Never));
+        assert!(res.history.violations() > 0, "expected violations under overload");
+    }
+
+    #[test]
+    fn load_scaler_prevents_most_violations() {
+        let tr = trace(60_000, 0.25); // ≈67 t/s, above 1-CPU capacity
+        let cfg = SimConfig::default();
+        let model = DelayModel::default();
+        let res = Simulator::new(&cfg, &model)
+            .run(&tr, Box::new(LoadScaler::new(model.clone(), 0.99999, mix())));
+        assert!(
+            res.violation_pct() < 1.0,
+            "load scaler should hold SLA, got {}%",
+            res.violation_pct()
+        );
+        assert!(res.cpu_hours > 0.0);
+    }
+
+    #[test]
+    fn threshold_scaler_runs_and_scales() {
+        let tr = trace(60_000, 0.25);
+        let cfg = SimConfig::default();
+        let model = DelayModel::default();
+        let res =
+            Simulator::new(&cfg, &model).run(&tr, Box::new(ThresholdScaler::new(0.6)));
+        assert_eq!(res.history.completed(), tr.len() as u64);
+        assert!(!res.decisions.is_empty(), "threshold should have scaled at least once");
+    }
+
+    #[test]
+    fn cpu_hours_lower_bound() {
+        // At least starting_cpus for the whole horizon.
+        let tr = trace(10_000, 0.25);
+        let cfg = SimConfig::default();
+        let model = DelayModel::default();
+        let res = Simulator::new(&cfg, &model)
+            .run(&tr, Box::new(LoadScaler::new(model.clone(), 0.9, mix())));
+        let horizon_hours = res.steps as f64 * cfg.step_secs / 3600.0;
+        assert!(res.cpu_hours >= horizon_hours - 1e-9);
+    }
+
+    #[test]
+    fn sampling_collects_states() {
+        let tr = trace(5_000, 0.2);
+        let cfg = SimConfig::default();
+        let model = DelayModel::default();
+        let mut sim = Simulator::new(&cfg, &model);
+        sim.sample_every = 60;
+        let res = sim.run(&tr, Box::new(ThresholdScaler::new(0.8)));
+        assert!(!res.samples.is_empty());
+        assert!(res.samples.iter().all(|s| s.cpus >= 1));
+    }
+
+    #[test]
+    fn input_rate_limit_delays_processing() {
+        let tr = trace(20_000, 0.25);
+        let model = DelayModel::default();
+        let free = SimConfig::default();
+        let limited = SimConfig { input_rate: Some(10.0), ..Default::default() };
+        let d_free = Simulator::new(&free, &model)
+            .run(&tr, Box::new(LoadScaler::new(model.clone(), 0.99, mix())));
+        let d_lim = Simulator::new(&limited, &model)
+            .run(&tr, Box::new(LoadScaler::new(model.clone(), 0.99, mix())));
+        assert!(
+            d_lim.history.mean_delay() > d_free.history.mean_delay(),
+            "rate limit should add queueing delay"
+        );
+    }
+}

@@ -1,0 +1,260 @@
+//! Completed-tweet history: SLA accounting, summary statistics, and the
+//! post-time-bucketed sentiment windows the *appdata* trigger reads.
+//!
+//! §IV-B: "Tweets that have used all cycles required are removed ... and
+//! are saved to a history log, from where statistics can later be taken."
+//! §V-B: the sentiment series must be grouped by the tweets' *post* time
+//! (not completion time), and scores only become visible once a tweet is
+//! done being processed — both subtleties are encoded here.
+
+use crate::stats::descriptive::Running;
+use crate::workload::TweetClass;
+
+/// One completed tweet.
+#[derive(Debug, Clone, Copy)]
+pub struct Completed {
+    pub post_time: f64,
+    pub finished_at: f64,
+    pub class: TweetClass,
+    /// NaN when the tweet was not analyzed.
+    pub sentiment: f32,
+}
+
+impl Completed {
+    /// End-to-end delay against which the SLA is checked.
+    pub fn delay(&self) -> f64 {
+        self.finished_at - self.post_time
+    }
+}
+
+/// Post-time-bucketed sentiment accumulator (1-second buckets).
+///
+/// `push` is called when a tweet *finishes* (its score becomes known);
+/// the value lands in the bucket of its *post* time. Window queries then
+/// average over post-time ranges, exactly the §V-B construction.
+#[derive(Debug, Clone, Default)]
+pub struct SentimentWindows {
+    sum: Vec<f64>,
+    count: Vec<u32>,
+}
+
+impl SentimentWindows {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, post_time: f64, sentiment: f32) {
+        if !sentiment.is_finite() {
+            return;
+        }
+        let b = post_time.max(0.0) as usize;
+        if b >= self.sum.len() {
+            self.sum.resize(b + 64, 0.0);
+            self.count.resize(b + 64, 0);
+        }
+        self.sum[b] += sentiment as f64;
+        self.count[b] += 1;
+    }
+
+    /// Mean sentiment of tweets posted in `[from, to)` (seconds), if any
+    /// of them have finished processing.
+    pub fn window_mean(&self, from: f64, to: f64) -> Option<f64> {
+        if to <= from {
+            return None;
+        }
+        let lo = from.max(0.0) as usize;
+        let hi = (to.max(0.0) as usize).min(self.sum.len());
+        if lo >= hi {
+            return None;
+        }
+        let cnt: u64 = self.count[lo..hi].iter().map(|&c| c as u64).sum();
+        if cnt == 0 {
+            return None;
+        }
+        Some(self.sum[lo..hi].iter().sum::<f64>() / cnt as f64)
+    }
+
+    /// Number of scored tweets posted in `[from, to)`.
+    pub fn window_count(&self, from: f64, to: f64) -> u64 {
+        let lo = from.max(0.0) as usize;
+        let hi = (to.max(0.0) as usize).min(self.count.len());
+        if lo >= hi {
+            return 0;
+        }
+        self.count[lo..hi].iter().map(|&c| c as u64).sum()
+    }
+}
+
+/// Full history log with streaming SLA/delay statistics.
+#[derive(Debug, Clone)]
+pub struct History {
+    sla_secs: f64,
+    completed: u64,
+    violations: u64,
+    delay_stats: Running,
+    queue_delay_stats: Running,
+    sentiment: SentimentWindows,
+    /// Optional dense log (delays per completion) for distribution plots;
+    /// disabled on the Fig 7/8 sweeps to keep memory flat.
+    keep_delays: bool,
+    delays: Vec<f64>,
+}
+
+impl History {
+    pub fn new(sla_secs: f64) -> Self {
+        Self {
+            sla_secs,
+            completed: 0,
+            violations: 0,
+            delay_stats: Running::new(),
+            queue_delay_stats: Running::new(),
+            sentiment: SentimentWindows::new(),
+            keep_delays: false,
+            delays: Vec::new(),
+        }
+    }
+
+    /// Keep the per-tweet delay vector (for histogram experiments).
+    pub fn with_delay_log(mut self) -> Self {
+        self.keep_delays = true;
+        self
+    }
+
+    /// Record a completion; `queue_delay` is time spent in the input queue.
+    pub fn record(&mut self, c: Completed, queue_delay: f64) {
+        let d = c.delay();
+        debug_assert!(d >= -1e-9, "negative delay {d}");
+        self.completed += 1;
+        if d > self.sla_secs {
+            self.violations += 1;
+        }
+        self.delay_stats.push(d);
+        self.queue_delay_stats.push(queue_delay);
+        if self.keep_delays {
+            self.delays.push(d);
+        }
+        self.sentiment.push(c.post_time, c.sentiment);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn violations(&self) -> u64 {
+        self.violations
+    }
+
+    /// Percentage of tweets over the SLA (the Fig 7/8 quality axis).
+    pub fn violation_pct(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            100.0 * self.violations as f64 / self.completed as f64
+        }
+    }
+
+    pub fn mean_delay(&self) -> f64 {
+        self.delay_stats.mean()
+    }
+
+    pub fn mean_queue_delay(&self) -> f64 {
+        self.queue_delay_stats.mean()
+    }
+
+    pub fn sentiment(&self) -> &SentimentWindows {
+        &self.sentiment
+    }
+
+    pub fn delays(&self) -> &[f64] {
+        &self.delays
+    }
+
+    pub fn sla_secs(&self) -> f64 {
+        self.sla_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done(post: f64, fin: f64, s: f32) -> Completed {
+        Completed { post_time: post, finished_at: fin, class: TweetClass::Analyzed, sentiment: s }
+    }
+
+    #[test]
+    fn violation_percentage() {
+        let mut h = History::new(10.0);
+        h.record(done(0.0, 5.0, 0.5), 0.0); // ok
+        h.record(done(0.0, 15.0, 0.5), 0.0); // violation
+        h.record(done(0.0, 10.0, 0.5), 0.0); // exactly SLA: ok
+        h.record(done(0.0, 10.1, 0.5), 0.0); // violation
+        assert_eq!(h.completed(), 4);
+        assert_eq!(h.violations(), 2);
+        assert!((h.violation_pct() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delay_means() {
+        let mut h = History::new(100.0);
+        h.record(done(0.0, 4.0, 0.5), 1.0);
+        h.record(done(2.0, 10.0, 0.5), 3.0);
+        assert!((h.mean_delay() - 6.0).abs() < 1e-12);
+        assert!((h.mean_queue_delay() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sentiment_grouped_by_post_time() {
+        let mut h = History::new(100.0);
+        // Posted early, finished late: must land in the early bucket.
+        h.record(done(5.0, 500.0, 0.9), 0.0);
+        h.record(done(6.0, 7.0, 0.3), 0.0);
+        let w = h.sentiment().window_mean(0.0, 10.0).unwrap();
+        assert!((w - 0.6).abs() < 1e-6);
+        assert_eq!(h.sentiment().window_mean(400.0, 600.0), None);
+    }
+
+    #[test]
+    fn nan_sentiment_ignored() {
+        let mut h = History::new(100.0);
+        h.record(
+            Completed {
+                post_time: 1.0,
+                finished_at: 2.0,
+                class: TweetClass::OffTopic,
+                sentiment: f32::NAN,
+            },
+            0.0,
+        );
+        assert_eq!(h.sentiment().window_mean(0.0, 10.0), None);
+        assert_eq!(h.completed(), 1);
+    }
+
+    #[test]
+    fn window_counts() {
+        let mut w = SentimentWindows::new();
+        w.push(10.0, 0.5);
+        w.push(10.4, 0.7);
+        w.push(200.0, 0.9);
+        assert_eq!(w.window_count(10.0, 11.0), 2);
+        assert_eq!(w.window_count(0.0, 1000.0), 3);
+        assert_eq!(w.window_count(50.0, 60.0), 0);
+        assert_eq!(w.window_mean(5.0, 5.0), None);
+    }
+
+    #[test]
+    fn empty_history_zero_pct() {
+        let h = History::new(10.0);
+        assert_eq!(h.violation_pct(), 0.0);
+    }
+
+    #[test]
+    fn delay_log_opt_in() {
+        let mut h = History::new(10.0).with_delay_log();
+        h.record(done(0.0, 3.0, 0.5), 0.0);
+        assert_eq!(h.delays(), &[3.0]);
+        let mut h2 = History::new(10.0);
+        h2.record(done(0.0, 3.0, 0.5), 0.0);
+        assert!(h2.delays().is_empty());
+    }
+}

@@ -1,0 +1,14 @@
+//! Discrete-time cluster simulator (§IV): Algorithm 1 cycle distribution,
+//! rate-limited input queue, CPU pool with provisioning delay, history log
+//! with SLA accounting, and the main loop.
+
+pub mod cluster;
+pub mod cycles;
+pub mod engine;
+pub mod history;
+pub mod input_queue;
+
+pub use cluster::Cluster;
+pub use engine::{SimResult, Simulator, StateSample};
+pub use history::{Completed, History, SentimentWindows};
+pub use input_queue::InputQueue;

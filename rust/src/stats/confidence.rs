@@ -1,0 +1,151 @@
+//! Confidence-interval stopping rule for repeated simulations.
+//!
+//! §V: "All scenarios were repeated until the length of the confidence
+//! interval with 95% confidence was smaller than 10% of the mean." This
+//! module implements that rule (normal-approximation CI over replication
+//! means, which is what a simulation study with dozens of reps uses).
+
+use super::descriptive::{mean, std_dev};
+
+/// z-value for a two-sided 95% confidence interval.
+pub const Z_95: f64 = 1.959_963_984_540_054;
+
+/// Half-width of the 95% CI of the mean of `xs`.
+pub fn ci95_half_width(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return f64::INFINITY;
+    }
+    Z_95 * std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Replication controller: feed per-replication results until `converged`.
+#[derive(Debug, Clone)]
+pub struct Replications {
+    samples: Vec<f64>,
+    min_reps: usize,
+    max_reps: usize,
+    rel_width: f64,
+}
+
+impl Replications {
+    /// `rel_width`: total CI length as a fraction of the mean (paper: 0.10).
+    pub fn new(min_reps: usize, max_reps: usize, rel_width: f64) -> Self {
+        assert!(min_reps >= 2 && max_reps >= min_reps && rel_width > 0.0);
+        Self { samples: Vec::new(), min_reps, max_reps, rel_width }
+    }
+
+    /// Paper defaults: at least 3 reps, at most 50, CI length < 10% of mean.
+    pub fn paper_default() -> Self {
+        Self::new(3, 50, 0.10)
+    }
+
+    pub fn push(&mut self, value: f64) {
+        self.samples.push(value);
+    }
+
+    /// True once the CI criterion is met (or the rep budget is exhausted).
+    pub fn converged(&self) -> bool {
+        if self.samples.len() < self.min_reps {
+            return false;
+        }
+        if self.samples.len() >= self.max_reps {
+            return true;
+        }
+        let m = mean(&self.samples);
+        let half = ci95_half_width(&self.samples);
+        if m == 0.0 {
+            // Degenerate all-zero metric (e.g. 0% SLA misses every rep):
+            // converged if the spread itself is (near) zero.
+            return half < 1e-12;
+        }
+        2.0 * half < self.rel_width * m.abs()
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn half_width(&self) -> f64 {
+        ci95_half_width(&self.samples)
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn half_width_closed_form() {
+        let xs = [10.0, 12.0, 8.0, 10.0];
+        let hw = ci95_half_width(&xs);
+        let want = Z_95 * std_dev(&xs) / 2.0;
+        assert!((hw - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn too_few_samples_infinite() {
+        assert!(ci95_half_width(&[1.0]).is_infinite());
+    }
+
+    #[test]
+    fn converges_on_tight_data() {
+        let mut reps = Replications::new(3, 100, 0.10);
+        for _ in 0..3 {
+            reps.push(100.0);
+        }
+        // zero variance -> CI width 0 < 10% of mean
+        assert!(reps.converged());
+    }
+
+    #[test]
+    fn does_not_converge_below_min_reps() {
+        let mut reps = Replications::new(5, 100, 0.10);
+        for _ in 0..4 {
+            reps.push(1.0);
+        }
+        assert!(!reps.converged());
+    }
+
+    #[test]
+    fn noisy_data_needs_more_reps() {
+        let mut rng = Rng::new(21);
+        let mut reps = Replications::new(3, 10_000, 0.10);
+        let mut used = 0;
+        while !reps.converged() {
+            reps.push(50.0 + 25.0 * rng.normal());
+            used += 1;
+            assert!(used < 10_000, "never converged");
+        }
+        assert!(used > 3, "high-variance metric converged suspiciously fast");
+        // CI criterion actually holds at stop time.
+        assert!(2.0 * reps.half_width() < 0.10 * reps.mean());
+    }
+
+    #[test]
+    fn max_reps_is_a_hard_stop() {
+        let mut reps = Replications::new(2, 4, 0.0001);
+        let mut rng = Rng::new(22);
+        for _ in 0..4 {
+            reps.push(rng.normal() * 1000.0);
+        }
+        assert!(reps.converged());
+    }
+
+    #[test]
+    fn zero_mean_all_zero_converges() {
+        let mut reps = Replications::new(3, 50, 0.10);
+        for _ in 0..3 {
+            reps.push(0.0);
+        }
+        assert!(reps.converged());
+    }
+}

@@ -1,0 +1,116 @@
+//! Exponential moving average — §III-A smooths the sentiment time series
+//! with an EMA over one-minute windows before correlating it with volume.
+
+/// Streaming exponential moving average.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    /// `alpha` in (0, 1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha out of (0,1]: {alpha}");
+        Self { alpha, value: None }
+    }
+
+    /// EMA with the weight expressed as an N-observation span
+    /// (alpha = 2/(N+1), the conventional definition).
+    pub fn with_span(span: usize) -> Self {
+        assert!(span >= 1);
+        Self::new(2.0 / (span as f64 + 1.0))
+    }
+
+    /// Feed one observation, returning the updated average.
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    /// Current average, if any observation has been seen.
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// EMA over a whole series (first output equals first input).
+pub fn ema_series(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut ema = Ema::new(alpha);
+    xs.iter().map(|&x| ema.update(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_value_passthrough() {
+        let mut e = Ema::new(0.3);
+        assert_eq!(e.update(5.0), 5.0);
+    }
+
+    #[test]
+    fn converges_to_constant() {
+        let mut e = Ema::new(0.5);
+        let mut v = 0.0;
+        e.update(0.0);
+        for _ in 0..64 {
+            v = e.update(10.0);
+        }
+        assert!((v - 10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn closed_form_two_steps() {
+        let mut e = Ema::new(0.25);
+        e.update(4.0);
+        let v = e.update(8.0);
+        assert!((v - (0.25 * 8.0 + 0.75 * 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_one_tracks_input() {
+        let mut e = Ema::new(1.0);
+        e.update(1.0);
+        assert_eq!(e.update(42.0), 42.0);
+    }
+
+    #[test]
+    fn series_bounded_by_input_range() {
+        let xs: Vec<f64> = (0..100).map(|i| ((i * 37) % 11) as f64).collect();
+        let out = ema_series(&xs, 0.2);
+        let (lo, hi) = (0.0, 10.0);
+        assert!(out.iter().all(|&v| v >= lo && v <= hi));
+        assert_eq!(out.len(), xs.len());
+    }
+
+    #[test]
+    fn span_alpha_relation() {
+        let e = Ema::with_span(9); // alpha = 0.2
+        assert!((e.alpha - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn invalid_alpha_panics() {
+        Ema::new(0.0);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut e = Ema::new(0.5);
+        e.update(3.0);
+        e.reset();
+        assert_eq!(e.value(), None);
+        assert_eq!(e.update(7.0), 7.0);
+    }
+}

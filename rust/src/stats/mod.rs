@@ -1,0 +1,17 @@
+//! Statistics substrate: everything the paper's measurement study and
+//! simulator need (descriptive stats, Pearson/lagged correlation, EMA,
+//! Weibull fit/sample/quantile, CI stopping rule, Little's Law).
+
+pub mod confidence;
+pub mod descriptive;
+pub mod ema;
+pub mod littles_law;
+pub mod pearson;
+pub mod weibull;
+
+pub use confidence::Replications;
+pub use descriptive::{mean, quantile, std_dev, Running};
+pub use ema::Ema;
+pub use littles_law::LittlesLaw;
+pub use pearson::{lagged_pearson, pearson};
+pub use weibull::Weibull;

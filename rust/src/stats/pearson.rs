@@ -1,0 +1,89 @@
+//! Pearson correlation and lagged cross-correlation (paper Table I).
+
+use super::descriptive::mean;
+
+/// Pearson correlation coefficient of two equal-length series.
+/// Returns NaN when either series is constant or shorter than 2.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len(), "series length mismatch");
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        let dx = x - mx;
+        let dy = y - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return f64::NAN;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Correlation of `xs[t]` with `ys[t + lag]` — Table I correlates the
+/// sentiment at minute *t* with the tweet volume `lag` minutes later.
+pub fn lagged_pearson(xs: &[f64], ys: &[f64], lag: usize) -> f64 {
+    assert_eq!(xs.len(), ys.len(), "series length mismatch");
+    if xs.len() <= lag + 1 {
+        return f64::NAN;
+    }
+    let n = xs.len() - lag;
+    pearson(&xs[..n], &ys[lag..])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_positive_and_negative() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y: Vec<f64> = x.iter().map(|v| 2.0 * v + 1.0).collect();
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yn: Vec<f64> = x.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &yn) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_series_is_nan() {
+        assert!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]).is_nan());
+    }
+
+    #[test]
+    fn known_value() {
+        // hand-computed: r of [1,2,3] vs [1,2,4] = 0.98198...
+        let r = pearson(&[1.0, 2.0, 3.0], &[1.0, 2.0, 4.0]);
+        assert!((r - 0.981_980_506_061_965_9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lag_recovers_shifted_signal() {
+        // ys is xs delayed by 2 plus nothing else -> lag-2 correlation == 1.
+        let xs: Vec<f64> = (0..50).map(|i| ((i as f64) * 0.7).sin()).collect();
+        let mut ys = vec![0.0; 50];
+        for i in 0..48 {
+            ys[i + 2] = xs[i];
+        }
+        let r = lagged_pearson(&xs, &ys, 2);
+        assert!(r > 0.99, "r={r}");
+        assert!(lagged_pearson(&xs, &ys, 0) < r);
+    }
+
+    #[test]
+    fn lag_too_large_is_nan() {
+        assert!(lagged_pearson(&[1.0, 2.0], &[1.0, 2.0], 5).is_nan());
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        pearson(&[1.0], &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Weibull distribution: sampling, quantiles, MLE fitting, fit quality.
+//!
+//! The paper (§IV-A, Fig 6) models per-class tweet processing delays as
+//! Weibull; the *load* auto-scaling algorithm evaluates its quantile
+//! function a-priori, and the simulator samples per-tweet CPU cycles from
+//! the fitted distributions. Fit quality is reported as the normalized
+//! RMSE between the empirical histogram and the fitted density (the paper
+//! reports 0.01 for the off-topic class).
+
+use crate::rng::Rng;
+
+/// Two-parameter Weibull distribution (shape `k`, scale `lambda`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Weibull {
+    pub shape: f64,
+    pub scale: f64,
+}
+
+impl Weibull {
+    pub fn new(shape: f64, scale: f64) -> Self {
+        assert!(shape > 0.0 && scale > 0.0, "invalid weibull params k={shape} λ={scale}");
+        Self { shape, scale }
+    }
+
+    /// Probability density at `x`.
+    pub fn pdf(&self, x: f64) -> f64 {
+        if x < 0.0 {
+            return 0.0;
+        }
+        let (k, l) = (self.shape, self.scale);
+        if x == 0.0 {
+            return if k < 1.0 {
+                f64::INFINITY
+            } else if k == 1.0 {
+                1.0 / l
+            } else {
+                0.0
+            };
+        }
+        (k / l) * (x / l).powf(k - 1.0) * (-(x / l).powf(k)).exp()
+    }
+
+    /// Cumulative distribution at `x`.
+    pub fn cdf(&self, x: f64) -> f64 {
+        if x <= 0.0 {
+            return 0.0;
+        }
+        1.0 - (-(x / self.scale).powf(self.shape)).exp()
+    }
+
+    /// Quantile (inverse CDF) at probability `q` in [0, 1).
+    ///
+    /// This is the function the *load* algorithm evaluates: a high `q`
+    /// (e.g. 0.99999) gives a pessimistic delay estimate covering almost
+    /// all tweets of a class.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..1.0).contains(&q), "quantile prob out of [0,1): {q}");
+        self.scale * (-(1.0 - q).ln()).powf(1.0 / self.shape)
+    }
+
+    /// Distribution mean: λ·Γ(1 + 1/k).
+    pub fn mean(&self) -> f64 {
+        self.scale * gamma(1.0 + 1.0 / self.shape)
+    }
+
+    /// Draw one sample by inverse-transform.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        self.scale * (-rng.next_f64_open().ln()).powf(1.0 / self.shape)
+    }
+
+    /// Maximum-likelihood fit to positive samples.
+    ///
+    /// Solves the profile-likelihood shape equation
+    ///   Σ xᵢᵏ ln xᵢ / Σ xᵢᵏ − 1/k − mean(ln xᵢ) = 0
+    /// by bisection (robust; the LHS is monotone in k), then recovers the
+    /// scale as λ = (Σ xᵢᵏ / n)^{1/k}. Returns None for fewer than 2
+    /// samples or non-positive/degenerate data.
+    pub fn fit(samples: &[f64]) -> Option<Self> {
+        let xs: Vec<f64> = samples.iter().copied().filter(|&x| x > 0.0).collect();
+        if xs.len() < 2 {
+            return None;
+        }
+        let n = xs.len() as f64;
+        let mean_ln = xs.iter().map(|x| x.ln()).sum::<f64>() / n;
+        if xs.iter().all(|&x| (x - xs[0]).abs() < 1e-15) {
+            return None; // degenerate: zero variance
+        }
+
+        let g = |k: f64| -> f64 {
+            let mut sxk = 0.0;
+            let mut sxk_ln = 0.0;
+            for &x in &xs {
+                let xk = x.powf(k);
+                sxk += xk;
+                sxk_ln += xk * x.ln();
+            }
+            sxk_ln / sxk - 1.0 / k - mean_ln
+        };
+
+        // Bracket the root: g is increasing in k, g(k→0+) → −∞,
+        // g(k→∞) → max ln x − mean ln x > 0.
+        let mut lo = 1e-3;
+        let mut hi = 1.0;
+        while g(hi) < 0.0 {
+            hi *= 2.0;
+            if hi > 1e4 {
+                return None;
+            }
+        }
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if g(mid) < 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+            if hi - lo < 1e-12 * hi {
+                break;
+            }
+        }
+        let k = 0.5 * (lo + hi);
+        let scale = (xs.iter().map(|x| x.powf(k)).sum::<f64>() / n).powf(1.0 / k);
+        Some(Self::new(k, scale))
+    }
+
+    /// Normalized RMSE between an empirical histogram of `samples` and this
+    /// distribution's density (normalized by the density range, as in the
+    /// paper's 0.01 NRMSE report for Fig 6).
+    pub fn nrmse(&self, samples: &[f64], bins: usize) -> f64 {
+        if samples.is_empty() || bins == 0 {
+            return f64::NAN;
+        }
+        let hi = samples.iter().copied().fold(f64::MIN, f64::max);
+        let lo = 0.0;
+        if hi <= lo {
+            return f64::NAN;
+        }
+        let counts = super::descriptive::histogram(samples, lo, hi, bins);
+        let width = (hi - lo) / bins as f64;
+        let n = samples.len() as f64;
+        let mut sq = 0.0;
+        let mut dens_min = f64::MAX;
+        let mut dens_max = f64::MIN;
+        for (i, &c) in counts.iter().enumerate() {
+            let mid = lo + (i as f64 + 0.5) * width;
+            let empirical = c as f64 / (n * width);
+            let model = self.pdf(mid);
+            sq += (empirical - model).powi(2);
+            dens_min = dens_min.min(empirical);
+            dens_max = dens_max.max(empirical);
+        }
+        let rmse = (sq / bins as f64).sqrt();
+        if dens_max > dens_min { rmse / (dens_max - dens_min) } else { f64::NAN }
+    }
+}
+
+/// Lanczos approximation of the Gamma function (g=7, n=9 coefficients).
+pub fn gamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        std::f64::consts::PI / ((std::f64::consts::PI * x).sin() * gamma(1.0 - x))
+    } else {
+        let x = x - 1.0;
+        let mut a = C[0];
+        let t = x + G + 0.5;
+        for (i, &c) in C.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        (2.0 * std::f64::consts::PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_known_values() {
+        assert!((gamma(1.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(2.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(5.0) - 24.0).abs() < 1e-8);
+        assert!((gamma(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn cdf_quantile_roundtrip() {
+        let w = Weibull::new(1.7, 42.0);
+        for q in [0.01, 0.5, 0.9, 0.99, 0.99999] {
+            let x = w.quantile(q);
+            assert!((w.cdf(x) - q).abs() < 1e-10, "q={q}");
+        }
+    }
+
+    #[test]
+    fn exponential_special_case() {
+        // k=1 is Exponential(1/λ): median = λ ln 2.
+        let w = Weibull::new(1.0, 10.0);
+        assert!((w.quantile(0.5) - 10.0 * std::f64::consts::LN_2).abs() < 1e-10);
+        assert!((w.mean() - 10.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn sample_mean_matches_analytic() {
+        let w = Weibull::new(2.0, 5.0);
+        let mut rng = Rng::new(11);
+        let n = 100_000;
+        let m = (0..n).map(|_| w.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!((m - w.mean()).abs() / w.mean() < 0.01, "m={m} want {}", w.mean());
+    }
+
+    #[test]
+    fn fit_recovers_parameters() {
+        let truth = Weibull::new(1.5, 20.0);
+        let mut rng = Rng::new(12);
+        let xs: Vec<f64> = (0..20_000).map(|_| truth.sample(&mut rng)).collect();
+        let fit = Weibull::fit(&xs).unwrap();
+        assert!((fit.shape - truth.shape).abs() / truth.shape < 0.03, "k={}", fit.shape);
+        assert!((fit.scale - truth.scale).abs() / truth.scale < 0.03, "λ={}", fit.scale);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate() {
+        assert!(Weibull::fit(&[]).is_none());
+        assert!(Weibull::fit(&[1.0]).is_none());
+        assert!(Weibull::fit(&[3.0, 3.0, 3.0]).is_none());
+        assert!(Weibull::fit(&[-1.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn nrmse_small_for_true_distribution() {
+        let w = Weibull::new(2.0, 30.0);
+        let mut rng = Rng::new(13);
+        let xs: Vec<f64> = (0..50_000).map(|_| w.sample(&mut rng)).collect();
+        let e = w.nrmse(&xs, 40);
+        assert!(e < 0.03, "nrmse={e}"); // paper reports 0.01 for its fit
+        // A wrong model should fit visibly worse.
+        let bad = Weibull::new(0.6, 30.0);
+        assert!(bad.nrmse(&xs, 40) > e * 3.0);
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let w = Weibull::new(1.3, 7.0);
+        let (mut acc, dx) = (0.0, 0.01);
+        let mut x = dx / 2.0;
+        while x < 200.0 {
+            acc += w.pdf(x) * dx;
+            x += dx;
+        }
+        assert!((acc - 1.0).abs() < 1e-3, "integral={acc}");
+    }
+
+    #[test]
+    fn pdf_edge_cases_at_zero() {
+        assert_eq!(Weibull::new(2.0, 1.0).pdf(0.0), 0.0);
+        assert_eq!(Weibull::new(1.0, 2.0).pdf(0.0), 0.5);
+        assert!(Weibull::new(0.5, 1.0).pdf(0.0).is_infinite());
+        assert_eq!(Weibull::new(2.0, 1.0).pdf(-1.0), 0.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Generic Processing-Element graph substrate (the IBM-Streams stand-in).
+//!
+//! §III, Fig 1: the application is a graph of Processing Elements; the
+//! path a tweet takes through the graph defines its *class*. PEs (2)–(4)
+//! are parallelized and CPU-bound; source and sink are free. We model the
+//! measured testbed faithfully: one shared CPU whose cycles are uniformly
+//! distributed over every tweet resident in a *costful* PE (processor
+//! sharing), which is exactly the assumption the paper uses to convert
+//! delay distributions into cycle distributions (§IV-A).
+
+use crate::workload::TweetClass;
+
+/// Identifier of a PE within a [`PeGraph`].
+pub type PeId = usize;
+
+/// One Processing Element.
+#[derive(Debug, Clone)]
+pub struct Pe {
+    pub name: &'static str,
+    /// Free PEs (source, sink) forward instantly and consume no cycles.
+    pub free: bool,
+}
+
+/// Static topology: per-class route through the PEs, in visit order.
+///
+/// Routes encode Fig 1: discarded tweets go source→sink, off-topic tweets
+/// die after the topic filter, analyzed tweets traverse everything. "All
+/// discarded tweets are nevertheless sent to the final statistic
+/// accumulator node."
+#[derive(Debug, Clone)]
+pub struct PeGraph {
+    pub pes: Vec<Pe>,
+    routes: [Vec<PeId>; 3],
+}
+
+impl PeGraph {
+    pub fn new(pes: Vec<Pe>, routes: [Vec<PeId>; 3]) -> Self {
+        for route in &routes {
+            assert!(!route.is_empty(), "empty route");
+            for &pe in route {
+                assert!(pe < pes.len(), "route references unknown PE {pe}");
+            }
+        }
+        Self { pes, routes }
+    }
+
+    /// The visit sequence for a class.
+    pub fn route(&self, class: TweetClass) -> &[PeId] {
+        &self.routes[class as usize]
+    }
+
+    /// Number of costful (non-free) PEs on a class's route.
+    pub fn costful_hops(&self, class: TweetClass) -> usize {
+        self.route(class).iter().filter(|&&p| !self.pes[p].free).count()
+    }
+}
+
+/// The 5-PE sentiment-analysis application graph of Fig 1.
+///
+/// PE indices: 0 source/filter, 1 preprocess, 2 topic filter,
+/// 3 sentiment scorer, 4 sink/statistics accumulator.
+pub fn sentiment_app_graph() -> PeGraph {
+    let pes = vec![
+        Pe { name: "source-filter", free: true },
+        Pe { name: "preprocess", free: false },
+        Pe { name: "topic-filter", free: false },
+        Pe { name: "sentiment-scorer", free: false },
+        Pe { name: "sink-accumulator", free: true },
+    ];
+    PeGraph::new(
+        pes,
+        [
+            vec![0, 4],          // Discarded: dropped by the source filter
+            vec![0, 1, 2, 4],    // OffTopic: dies at the topic filter
+            vec![0, 1, 2, 3, 4], // Analyzed: full path
+        ],
+    )
+}
+
+/// How a tweet's total cycle budget splits across the costful PEs of its
+/// route (fractions sum to 1 per class).
+pub fn cycle_split(class: TweetClass) -> &'static [(PeId, f64)] {
+    match class {
+        TweetClass::Discarded => &[],
+        TweetClass::OffTopic => &[(1, 0.40), (2, 0.60)],
+        TweetClass::Analyzed => &[(1, 0.20), (2, 0.20), (3, 0.60)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_topology() {
+        let g = sentiment_app_graph();
+        assert_eq!(g.pes.len(), 5);
+        assert_eq!(g.route(TweetClass::Discarded), &[0, 4]);
+        assert_eq!(g.route(TweetClass::Analyzed), &[0, 1, 2, 3, 4]);
+        // every route ends at the statistics accumulator (paper: all
+        // discarded tweets are nevertheless sent to the sink)
+        for c in TweetClass::ALL {
+            assert_eq!(*g.route(c).last().unwrap(), 4);
+            assert_eq!(g.route(c)[0], 0);
+        }
+    }
+
+    #[test]
+    fn costful_hops_by_class() {
+        let g = sentiment_app_graph();
+        assert_eq!(g.costful_hops(TweetClass::Discarded), 0);
+        assert_eq!(g.costful_hops(TweetClass::OffTopic), 2);
+        assert_eq!(g.costful_hops(TweetClass::Analyzed), 3);
+    }
+
+    #[test]
+    fn cycle_splits_sum_to_one() {
+        for c in [TweetClass::OffTopic, TweetClass::Analyzed] {
+            let s: f64 = cycle_split(c).iter().map(|&(_, f)| f).sum();
+            assert!((s - 1.0).abs() < 1e-12, "{c:?}");
+        }
+        assert!(cycle_split(TweetClass::Discarded).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown PE")]
+    fn bad_route_panics() {
+        PeGraph::new(
+            vec![Pe { name: "only", free: true }],
+            [vec![0], vec![0], vec![9]],
+        );
+    }
+
+    #[test]
+    fn sentiment_pe_dominates_analyzed_cost() {
+        let split = cycle_split(TweetClass::Analyzed);
+        let sentiment = split.iter().find(|&&(pe, _)| pe == 3).unwrap().1;
+        assert!(sentiment >= 0.5);
+    }
+}

@@ -1,0 +1,11 @@
+//! IBM-Streams-like stream-processing substrate: the Fig 1 PE graph, the
+//! per-tweet tracer, and the processor-sharing testbed replay used to
+//! derive delay distributions (§IV-A).
+
+pub mod graph;
+pub mod pipeline;
+pub mod tracer;
+
+pub use graph::{sentiment_app_graph, Pe, PeGraph};
+pub use pipeline::{replay, ReplayConfig, ReplayResult};
+pub use tracer::{TraceRecord, Tracer};

@@ -1,0 +1,219 @@
+//! Processor-sharing replay of the Fig 1 application — the §IV-A testbed
+//! experiment as code: feed a trace through the PE graph on a single CPU
+//! whose cycles are uniformly shared by every resident tweet, with a
+//! bounded number of tweets admitted simultaneously (the "almost constant
+//! number of tweets processed in the system" the paper observed), and
+//! trace per-tweet delays for the Weibull fits (Fig 6) and Little's-Law
+//! check (Fig 5).
+
+use super::graph::{cycle_split, sentiment_app_graph, PeGraph};
+use super::tracer::{TraceRecord, Tracer};
+use crate::delay::DelayModel;
+use crate::rng::Rng;
+use crate::workload::{Trace, TweetClass};
+
+/// Replay configuration.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// CPU frequency in Hz (paper testbed: 2.6 GHz).
+    pub cpu_hz: f64,
+    /// Admission cap: max tweets resident in the graph (paper ≈ 15 875).
+    pub max_in_flight: usize,
+    /// Simulation step in seconds.
+    pub step_secs: f64,
+    /// Seed for per-tweet cycle sampling.
+    pub seed: u64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        Self { cpu_hz: 2.6e9, max_in_flight: 15_875, step_secs: 1.0, seed: 77 }
+    }
+}
+
+/// A tweet in flight: its remaining per-PE cycle budget along its route.
+struct InFlight {
+    id: u64,
+    class: TweetClass,
+    parsed_at: f64,
+    /// (pe index in route, remaining cycles at that PE) — only costful PEs.
+    hops: Vec<f64>,
+    hop: usize,
+}
+
+/// Result of a replay.
+pub struct ReplayResult {
+    pub tracer: Tracer,
+    /// Wall-clock seconds the replay spanned.
+    pub makespan: f64,
+}
+
+/// Replay `trace` through the sentiment application graph "as fast as the
+/// CPU is able to" (paper: dumps were read at once, not at Twitter rate).
+pub fn replay(trace: &Trace, model: &DelayModel, cfg: &ReplayConfig) -> ReplayResult {
+    let graph = sentiment_app_graph();
+    replay_on(trace, model, cfg, &graph)
+}
+
+fn replay_on(
+    trace: &Trace,
+    model: &DelayModel,
+    cfg: &ReplayConfig,
+    graph: &PeGraph,
+) -> ReplayResult {
+    let mut rng = Rng::new(cfg.seed);
+    let mut tracer = Tracer::new();
+    let mut backlog = trace.tweets.iter();
+    let mut in_flight: Vec<InFlight> = Vec::with_capacity(cfg.max_in_flight);
+    let mut clock = 0.0f64;
+    let mut admitted = 0usize;
+
+    loop {
+        // Admit from the backlog up to the residency cap. Free-PE-only
+        // tweets (Discarded) pass through instantly.
+        while in_flight.len() < cfg.max_in_flight {
+            let Some(tw) = backlog.next() else { break };
+            admitted += 1;
+            if graph.costful_hops(tw.class) == 0 {
+                tracer.record(TraceRecord {
+                    id: tw.id,
+                    class: tw.class,
+                    parsed_at: clock,
+                    sunk_at: clock,
+                });
+                continue;
+            }
+            let total = model.sample_cycles(tw.class, &mut rng);
+            let hops: Vec<f64> =
+                cycle_split(tw.class).iter().map(|&(_, frac)| frac * total).collect();
+            in_flight.push(InFlight { id: tw.id, class: tw.class, parsed_at: clock, hops, hop: 0 });
+        }
+
+        if in_flight.is_empty() {
+            if backlog.len() == 0 {
+                break;
+            }
+            continue;
+        }
+
+        // Processor sharing: this step's cycles split uniformly over all
+        // resident tweets (the §IV-A conversion assumption).
+        let share = cfg.cpu_hz * cfg.step_secs / in_flight.len() as f64;
+        clock += cfg.step_secs;
+        let mut i = 0;
+        while i < in_flight.len() {
+            let t = &mut in_flight[i];
+            let mut budget = share;
+            while budget > 0.0 && t.hop < t.hops.len() {
+                let need = t.hops[t.hop];
+                if need <= budget {
+                    budget -= need;
+                    t.hops[t.hop] = 0.0;
+                    t.hop += 1;
+                } else {
+                    t.hops[t.hop] = need - budget;
+                    budget = 0.0;
+                }
+            }
+            if t.hop == t.hops.len() {
+                tracer.record(TraceRecord {
+                    id: t.id,
+                    class: t.class,
+                    parsed_at: t.parsed_at,
+                    sunk_at: clock,
+                });
+                in_flight.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    debug_assert_eq!(admitted, trace.len());
+    ReplayResult { makespan: clock, tracer }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate, GeneratorConfig, MatchSpec};
+
+    fn tiny_trace(n: u64) -> Trace {
+        let spec = MatchSpec {
+            opponent: "Replay",
+            date: "—",
+            total_tweets: n,
+            length_hours: 0.25,
+            events: vec![],
+        };
+        generate(&spec, &GeneratorConfig::default())
+    }
+
+    #[test]
+    fn every_tweet_reaches_the_sink() {
+        let tr = tiny_trace(5_000);
+        let res = replay(&tr, &DelayModel::default(), &ReplayConfig::default());
+        assert_eq!(res.tracer.len(), tr.len());
+    }
+
+    #[test]
+    fn discarded_tweets_have_zero_delay() {
+        let tr = tiny_trace(3_000);
+        let res = replay(&tr, &DelayModel::default(), &ReplayConfig::default());
+        for d in res.tracer.delays_of(TweetClass::Discarded) {
+            assert_eq!(d, 0.0);
+        }
+    }
+
+    #[test]
+    fn analyzed_slower_than_off_topic() {
+        let tr = tiny_trace(20_000);
+        let res = replay(&tr, &DelayModel::default(), &ReplayConfig::default());
+        let ana = res.tracer.delays_of(TweetClass::Analyzed);
+        let off = res.tracer.delays_of(TweetClass::OffTopic);
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(mean(&ana) > mean(&off), "ana={} off={}", mean(&ana), mean(&off));
+    }
+
+    #[test]
+    fn throughput_matches_capacity() {
+        // With the cap never binding relative to CPU speed, the makespan
+        // should approximate total_cycles / cpu_hz.
+        let tr = tiny_trace(30_000);
+        let cfg = ReplayConfig::default();
+        let model = DelayModel::default();
+        let res = replay(&tr, &model, &cfg);
+        let mix = tr.class_mix();
+        let expected = tr.len() as f64 * model.mean_cycles(mix) / cfg.cpu_hz;
+        let err = (res.makespan - expected).abs() / expected;
+        assert!(err < 0.1, "makespan={} expected≈{}", res.makespan, expected);
+    }
+
+    #[test]
+    fn littles_law_holds_on_replay() {
+        let tr = tiny_trace(30_000);
+        let res = replay(&tr, &DelayModel::default(), &ReplayConfig::default());
+        let ll = res.tracer.littles_law();
+        assert!(ll.holds(0.05), "L={} λW={}", ll.l, ll.lambda * ll.w);
+    }
+
+    #[test]
+    fn residency_cap_respected() {
+        let tr = tiny_trace(30_000);
+        let cfg = ReplayConfig { max_in_flight: 500, ..Default::default() };
+        let res = replay(&tr, &DelayModel::default(), &cfg);
+        let peak = res.tracer.in_system_series().into_iter().max().unwrap();
+        // +1 slack: sampling is at integer seconds
+        assert!(peak <= 501, "peak in-system {peak} > cap");
+        assert_eq!(res.tracer.len(), tr.len());
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let tr = tiny_trace(2_000);
+        let a = replay(&tr, &DelayModel::default(), &ReplayConfig::default());
+        let b = replay(&tr, &DelayModel::default(), &ReplayConfig::default());
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.tracer.records()[10], b.tracer.records()[10]);
+    }
+}

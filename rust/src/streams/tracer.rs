@@ -1,0 +1,157 @@
+//! Per-tweet tracer: the instrumentation §IV-A attached to the real
+//! application ("logged the tweet id and the clock every time a tweet was
+//! parsed and every time it was finished being processed by the sink ...
+//! also logged from which PE the tweet came before reaching the sink").
+
+use crate::stats::littles_law::{from_intervals, LittlesLaw};
+use crate::workload::TweetClass;
+
+/// One completed tweet's trace record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    pub id: u64,
+    pub class: TweetClass,
+    /// Clock when the tweet was parsed (entered the graph), seconds.
+    pub parsed_at: f64,
+    /// Clock when the sink finished it, seconds.
+    pub sunk_at: f64,
+}
+
+impl TraceRecord {
+    /// End-to-end processing delay (the quantity Fig 6 fits Weibulls to).
+    pub fn delay(&self) -> f64 {
+        self.sunk_at - self.parsed_at
+    }
+}
+
+/// Accumulates trace records and derives the §IV-A statistics.
+#[derive(Debug, Default, Clone)]
+pub struct Tracer {
+    records: Vec<TraceRecord>,
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, rec: TraceRecord) {
+        debug_assert!(rec.sunk_at >= rec.parsed_at, "negative delay");
+        self.records.push(rec);
+    }
+
+    pub fn records(&self) -> &[TraceRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Delays of one class (the per-class samples the Weibull fit uses).
+    pub fn delays_of(&self, class: TweetClass) -> Vec<f64> {
+        self.records
+            .iter()
+            .filter(|r| r.class == class)
+            .map(|r| r.delay())
+            .collect()
+    }
+
+    /// All delays.
+    pub fn delays(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.delay()).collect()
+    }
+
+    /// Little's-Law triple over the recorded intervals (Fig 5 check).
+    pub fn littles_law(&self) -> LittlesLaw {
+        let intervals: Vec<(f64, f64)> =
+            self.records.iter().map(|r| (r.parsed_at, r.sunk_at)).collect();
+        from_intervals(&intervals)
+    }
+
+    /// Sampled number-in-system at 1-second boundaries (Fig 5 series).
+    pub fn in_system_series(&self) -> Vec<u32> {
+        if self.records.is_empty() {
+            return Vec::new();
+        }
+        let t1 = self.records.iter().map(|r| r.sunk_at).fold(f64::MIN, f64::max);
+        let n = t1.ceil() as usize + 1;
+        let mut delta = vec![0i64; n + 1];
+        for r in &self.records {
+            let a = r.parsed_at.floor() as usize;
+            // in system during [parsed, sunk): an exact-integer departure
+            // is NOT resident in its departure second
+            let d = (r.sunk_at.ceil() as usize).max(a).min(n);
+            delta[a] += 1;
+            delta[d] -= 1;
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut acc = 0i64;
+        for d in delta.iter().take(n) {
+            acc += d;
+            out.push(acc.max(0) as u32);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, class: TweetClass, a: f64, d: f64) -> TraceRecord {
+        TraceRecord { id, class, parsed_at: a, sunk_at: d }
+    }
+
+    #[test]
+    fn delay_computation() {
+        assert_eq!(rec(1, TweetClass::Analyzed, 2.0, 5.5).delay(), 3.5);
+    }
+
+    #[test]
+    fn per_class_filtering() {
+        let mut t = Tracer::new();
+        t.record(rec(1, TweetClass::Analyzed, 0.0, 4.0));
+        t.record(rec(2, TweetClass::OffTopic, 0.0, 2.0));
+        t.record(rec(3, TweetClass::Analyzed, 1.0, 6.0));
+        assert_eq!(t.delays_of(TweetClass::Analyzed), vec![4.0, 5.0]);
+        assert_eq!(t.delays_of(TweetClass::OffTopic), vec![2.0]);
+        assert!(t.delays_of(TweetClass::Discarded).is_empty());
+    }
+
+    #[test]
+    fn littles_law_on_deterministic_stream() {
+        let mut t = Tracer::new();
+        for i in 0..200 {
+            t.record(rec(i, TweetClass::Analyzed, i as f64, i as f64 + 3.0));
+        }
+        let ll = t.littles_law();
+        assert!((ll.w - 3.0).abs() < 1e-9);
+        assert!(ll.holds(0.01));
+    }
+
+    #[test]
+    fn in_system_series_counts_overlap() {
+        let mut t = Tracer::new();
+        t.record(rec(1, TweetClass::Analyzed, 0.0, 3.0));
+        t.record(rec(2, TweetClass::Analyzed, 1.0, 3.0));
+        let s = t.in_system_series();
+        // t=0: first only; t=1..2: both; t=3: none (exact departures at 3.0)
+        assert_eq!(s[0], 1);
+        assert_eq!(s[1], 2);
+        assert_eq!(s[2], 2);
+        assert_eq!(s[3], 0);
+    }
+
+    #[test]
+    fn empty_tracer() {
+        let t = Tracer::new();
+        assert!(t.is_empty());
+        assert!(t.in_system_series().is_empty());
+        assert!(t.littles_law().holds(0.1));
+    }
+}

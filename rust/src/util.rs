@@ -1,0 +1,286 @@
+//! Small in-tree utilities that keep the crate offline-friendly:
+//! a scoped temporary directory (tests, trace dumps) and a flat
+//! `key=value` metadata format shared with the Python compile path.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A temporary directory removed on drop (in-tree `tempfile` stand-in).
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new() -> Result<Self> {
+        let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "sla-autoscale-{}-{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path)
+            .with_context(|| format!("creating temp dir {}", path.display()))?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn join(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Flat `key=value` metadata document (one pair per line, `#` comments).
+///
+/// This is the interchange format for `artifacts/meta.txt`: trivially
+/// written from Python and parsed here without a JSON dependency. Values
+/// are strings; typed accessors parse on demand. Repeated list items use
+/// `key.N=` suffixes.
+#[derive(Debug, Clone, Default)]
+pub struct FlatMeta {
+    map: BTreeMap<String, String>,
+}
+
+impl FlatMeta {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim_end_matches('\r');
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("meta line {} has no '=': {line:?}", lineno + 1))?;
+            map.insert(k.trim().to_string(), v.to_string());
+        }
+        Ok(Self { map })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.map
+            .get(key)
+            .map(String::as_str)
+            .with_context(|| format!("meta key missing: {key}"))
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(key)?;
+        raw.parse::<T>()
+            .map_err(|e| anyhow::anyhow!("meta key {key}={raw:?}: {e}"))
+    }
+
+    /// All values of `key.0`, `key.1`, ... in index order.
+    pub fn get_list(&self, key: &str) -> Vec<&str> {
+        let mut out = Vec::new();
+        for i in 0.. {
+            match self.map.get(&format!("{key}.{i}")) {
+                Some(v) => out.push(v.as_str()),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Parsed numeric list.
+    pub fn get_list_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get_list(key)
+            .iter()
+            .enumerate()
+            .map(|(i, raw)| {
+                raw.parse::<T>()
+                    .map_err(|e| anyhow::anyhow!("meta key {key}.{i}={raw:?}: {e}"))
+            })
+            .collect()
+    }
+
+    pub fn insert(&mut self, key: &str, value: impl ToString) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.map {
+            out.push_str(k);
+            out.push('=');
+            out.push_str(v);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Minimal micro-benchmark harness (offline stand-in for criterion):
+/// warmup, fixed-duration sampling, mean/σ/min report.
+pub mod bench {
+    use std::time::{Duration, Instant};
+
+    /// Result of one benchmark.
+    #[derive(Debug, Clone)]
+    pub struct Sample {
+        pub name: String,
+        pub iters: u64,
+        pub mean: Duration,
+        pub std_dev: Duration,
+        pub min: Duration,
+    }
+
+    impl Sample {
+        pub fn report(&self) -> String {
+            format!(
+                "{:<44} {:>12} mean {:>12} σ {:>12} min   ({} iters)",
+                self.name,
+                fmt(self.mean),
+                fmt(self.std_dev),
+                fmt(self.min),
+                self.iters
+            )
+        }
+
+        /// Mean iterations per second.
+        pub fn per_sec(&self) -> f64 {
+            1.0 / self.mean.as_secs_f64().max(1e-12)
+        }
+    }
+
+    fn fmt(d: Duration) -> String {
+        let ns = d.as_nanos();
+        if ns < 1_000 {
+            format!("{ns} ns")
+        } else if ns < 1_000_000 {
+            format!("{:.2} µs", ns as f64 / 1e3)
+        } else if ns < 1_000_000_000 {
+            format!("{:.2} ms", ns as f64 / 1e6)
+        } else {
+            format!("{:.3} s", ns as f64 / 1e9)
+        }
+    }
+
+    /// Benchmark `f`, sampling for ~`budget` after brief warmup.
+    pub fn run<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Sample {
+        // warmup: a few calls or 10% of the budget
+        let warm_until = Instant::now() + budget / 10;
+        let mut warm_iters = 0u64;
+        while Instant::now() < warm_until || warm_iters < 3 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 10_000_000 {
+                break;
+            }
+        }
+        let mut times = Vec::new();
+        let end = Instant::now() + budget;
+        while Instant::now() < end {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+            if times.len() > 10_000_000 {
+                break;
+            }
+        }
+        let n = times.len().max(1) as f64;
+        let mean_ns = times.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / n;
+        let var = times
+            .iter()
+            .map(|d| (d.as_nanos() as f64 - mean_ns).powi(2))
+            .sum::<f64>()
+            / n;
+        let min = times.iter().min().copied().unwrap_or_default();
+        let sample = Sample {
+            name: name.to_string(),
+            iters: times.len() as u64,
+            mean: Duration::from_nanos(mean_ns as u64),
+            std_dev: Duration::from_nanos(var.sqrt() as u64),
+            min,
+        };
+        println!("{}", sample.report());
+        sample
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_harness_measures() {
+        let s = bench::run("noop-ish", std::time::Duration::from_millis(30), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.iters > 10);
+        assert!(s.mean.as_nanos() > 0);
+        assert!(s.min <= s.mean);
+    }
+
+    #[test]
+    fn tempdir_creates_and_removes() {
+        let path;
+        {
+            let d = TempDir::new().unwrap();
+            path = d.path().to_path_buf();
+            assert!(path.exists());
+            std::fs::write(d.join("x.txt"), "hi").unwrap();
+        }
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn tempdirs_are_unique() {
+        let a = TempDir::new().unwrap();
+        let b = TempDir::new().unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+
+    #[test]
+    fn flatmeta_roundtrip() {
+        let mut m = FlatMeta::default();
+        m.insert("vocab", 1024);
+        m.insert("labels.0", "positive");
+        m.insert("labels.1", "negative");
+        m.insert("pi", 3.25);
+        let back = FlatMeta::parse(&m.render()).unwrap();
+        assert_eq!(back.get_parsed::<usize>("vocab").unwrap(), 1024);
+        assert_eq!(back.get_list("labels"), vec!["positive", "negative"]);
+        assert_eq!(back.get_parsed::<f64>("pi").unwrap(), 3.25);
+    }
+
+    #[test]
+    fn flatmeta_comments_and_errors() {
+        let m = FlatMeta::parse("# comment\n\nkey=value with = signs\n").unwrap();
+        assert_eq!(m.get("key").unwrap(), "value with = signs");
+        assert!(FlatMeta::parse("no-equals-here\n").is_err());
+        assert!(m.get("missing").is_err());
+        assert!(m.get_parsed::<u32>("key").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let m = FlatMeta::parse("xs.0=1\nxs.1=2\nxs.2=3\n").unwrap();
+        assert_eq!(m.get_list_parsed::<u32>("xs").unwrap(), vec![1, 2, 3]);
+        assert!(m.get_list("ys").is_empty());
+    }
+}

@@ -1,0 +1,130 @@
+//! Burst-pulse math: how a notorious match event turns into an arrival-rate
+//! surge and a *leading* sentiment surge (§III-A: "peaks of sentiment
+//! variation tend to appear just a minute or two before peaks of tweets").
+
+use super::matches::BurstEvent;
+
+impl BurstEvent {
+    /// Rate-multiplier contribution at `t_min` minutes (0 before onset).
+    ///
+    /// Shape: saturating rise with constant `rise_min`, exponential decay
+    /// with constant `decay_min`, scaled so the pulse peak equals
+    /// `magnitude - 1` (the event multiplies the local base rate by up to
+    /// `magnitude`).
+    pub fn volume_pulse(&self, t_min: f64) -> f64 {
+        let dt = t_min - self.minute;
+        if dt <= 0.0 {
+            return 0.0;
+        }
+        let raw = (1.0 - (-dt / self.rise_min).exp()) * (-dt / self.decay_min).exp();
+        (self.magnitude - 1.0) * raw / self.peak_raw()
+    }
+
+    /// Sentiment pulse: same shape but onset shifted `lead_min` earlier and
+    /// a faster rise — the first excited tweets about the event land before
+    /// the mass reaction. Normalized to peak 1.
+    pub fn sentiment_pulse(&self, t_min: f64, lead_min: f64) -> f64 {
+        let rise = (self.rise_min * 0.5).max(0.2);
+        // Excitement out-lives the posting surge (people stay worked up
+        // after the burst of messages) — this is what sustains the Table I
+        // correlation out to ten-minute lags.
+        let decay = self.decay_min * 1.6;
+        let dt = t_min - (self.minute - lead_min);
+        if dt <= 0.0 {
+            return 0.0;
+        }
+        let raw = (1.0 - (-dt / rise).exp()) * (-dt / decay).exp();
+        // normalize by this shape's own peak
+        let t_peak = rise * (1.0 + decay / rise).ln();
+        let peak = (1.0 - (-t_peak / rise).exp()) * (-t_peak / decay).exp();
+        raw / peak
+    }
+
+    /// Peak value of the un-normalized rise×decay shape.
+    fn peak_raw(&self) -> f64 {
+        // maximize (1-e^{-t/r})e^{-t/d}: t* = r ln(1 + d/r)
+        let t = self.rise_min * (1.0 + self.decay_min / self.rise_min).ln();
+        (1.0 - (-t / self.rise_min).exp()) * (-t / self.decay_min).exp()
+    }
+}
+
+/// Total rate multiplier at `t_min` for a burst schedule: `1 + Σ pulses`.
+pub fn rate_multiplier(events: &[BurstEvent], t_min: f64) -> f64 {
+    1.0 + events.iter().map(|e| e.volume_pulse(t_min)).sum::<f64>()
+}
+
+/// Combined sentiment excitation in [0, 1] at `t_min` (pulses saturate).
+pub fn sentiment_excitation(events: &[BurstEvent], t_min: f64, lead_min: f64) -> f64 {
+    let s: f64 = events.iter().map(|e| e.sentiment_pulse(t_min, lead_min)).sum();
+    s.min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev() -> BurstEvent {
+        BurstEvent::new(100.0, 3.0, 1.0, 6.0)
+    }
+
+    #[test]
+    fn zero_before_onset() {
+        assert_eq!(ev().volume_pulse(99.9), 0.0);
+        assert_eq!(ev().volume_pulse(50.0), 0.0);
+    }
+
+    #[test]
+    fn peak_equals_magnitude_minus_one() {
+        let e = ev();
+        let peak = (0..4000)
+            .map(|i| e.volume_pulse(95.0 + i as f64 * 0.01))
+            .fold(f64::MIN, f64::max);
+        assert!((peak - 2.0).abs() < 1e-3, "peak={peak}");
+    }
+
+    #[test]
+    fn pulse_decays() {
+        let e = ev();
+        assert!(e.volume_pulse(140.0) < 0.02);
+    }
+
+    #[test]
+    fn sentiment_leads_volume() {
+        let e = ev();
+        let lead = 1.5;
+        // Find both argmaxes.
+        let argmax = |f: &dyn Fn(f64) -> f64| {
+            (0..6000)
+                .map(|i| 90.0 + i as f64 * 0.01)
+                .max_by(|a, b| f(*a).total_cmp(&f(*b)))
+                .unwrap()
+        };
+        let t_vol = argmax(&|t| e.volume_pulse(t));
+        let t_sent = argmax(&|t| e.sentiment_pulse(t, lead));
+        assert!(
+            t_sent + 0.5 < t_vol,
+            "sentiment peak {t_sent} should lead volume peak {t_vol}"
+        );
+    }
+
+    #[test]
+    fn multiplier_baseline_one() {
+        let events = [ev()];
+        assert!((rate_multiplier(&events, 0.0) - 1.0).abs() < 1e-12);
+        assert!(rate_multiplier(&events, 101.5) > 2.0);
+    }
+
+    #[test]
+    fn excitation_saturates_at_one() {
+        let events = [
+            BurstEvent::new(100.0, 5.0, 0.5, 8.0),
+            BurstEvent::new(100.5, 5.0, 0.5, 8.0),
+            BurstEvent::new(101.0, 5.0, 0.5, 8.0),
+        ];
+        let m = (0..2000)
+            .map(|i| sentiment_excitation(&events, 98.0 + i as f64 * 0.01, 1.5))
+            .fold(f64::MIN, f64::max);
+        assert!(m <= 1.0 + 1e-12);
+        assert!(m > 0.99);
+    }
+}

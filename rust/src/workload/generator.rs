@@ -1,0 +1,302 @@
+//! Synthetic match-trace generator, calibrated to Table II and shaped to
+//! reproduce the paper's measured structure:
+//!
+//! * per-minute volumes like Fig 4 (bursty, match-specific schedules);
+//! * sentiment level ↔ future volume correlation like Table I
+//!   (0.79 at lag 0 decaying slowly over 10 minutes);
+//! * sentiment surges *leading* volume bursts by 1–2 minutes (Fig 3) —
+//!   the signal the appdata algorithm exists to exploit.
+//!
+//! The mechanism: two latent processes drive both series. A *slow*
+//! "interest" process (AR(1), ~20-minute correlation time) modulates the
+//! base rate and the sentiment level together — this is what keeps the
+//! Table I correlation high out to lag 10. A *fast* per-event excitation
+//! pulse spikes sentiment ~1.5 minutes before each volume burst — this is
+//! the early-warning signal the appdata algorithm exploits (Fig 3).
+
+use super::burst::{rate_multiplier, sentiment_excitation};
+use super::matches::MatchSpec;
+use super::trace::{Trace, Tweet, TweetClass};
+use crate::rng::Rng;
+
+/// Tunables for trace synthesis (defaults reproduce the paper's structure).
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    pub seed: u64,
+    /// Minutes by which sentiment leads volume (paper: "a minute or two").
+    pub lead_min: f64,
+    /// Class mix: [discarded at PE1, off-topic, analyzed]. §III: "most
+    /// tweets are discarded in the processes".
+    pub class_mix: [f64; 3],
+    /// Baseline sentiment level (paper: "above 0.4 for most part").
+    pub base_sentiment: f64,
+    /// Sentiment swing added at full excitation (base + swing ≲ 1).
+    pub sentiment_swing: f64,
+    /// Std-dev of per-tweet sentiment noise.
+    pub tweet_noise: f64,
+    /// Std-dev of the slow per-minute sentiment wander.
+    pub minute_noise: f64,
+    /// Rate swing of the slow shared interest process (multiplicative).
+    pub interest_swing: f64,
+    /// Sentiment loading on the slow shared interest process (additive).
+    pub sentiment_interest: f64,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        Self {
+            seed: 2013,
+            lead_min: 1.5,
+            class_mix: [0.30, 0.30, 0.40],
+            base_sentiment: 0.33,
+            sentiment_swing: 0.50,
+            tweet_noise: 0.10,
+            minute_noise: 0.015,
+            interest_swing: 1.2,
+            sentiment_interest: 0.22,
+        }
+    }
+}
+
+/// Slow shared "interest" process in [0, 1]: logistic-squashed AR(1) with
+/// a ~20-minute correlation time, one value per second (interpolated from
+/// per-minute steps). Both the arrival rate and the sentiment level load
+/// on it, which is what sustains the sentiment→volume correlation over
+/// ten-minute lags (Table I).
+pub fn interest_profile(spec: &MatchSpec, cfg: &GeneratorConfig) -> Vec<f64> {
+    let secs = spec.length_secs() as usize;
+    let mins = secs / 60 + 2;
+    let mut rng = Rng::new(cfg.seed ^ fnv_str(spec.opponent)).split(0x1A7E);
+    let mut x = 0.0f64;
+    let phi: f64 = 0.97; // per-minute AR(1) coefficient (~33 min memory)
+    let sd = (1.0 - phi * phi).sqrt(); // stationary variance 1
+    let per_min: Vec<f64> = (0..mins)
+        .map(|_| {
+            x = phi * x + sd * rng.normal();
+            1.0 / (1.0 + (-x).exp())
+        })
+        .collect();
+    (0..secs)
+        .map(|s| {
+            let m = s / 60;
+            let frac = (s % 60) as f64 / 60.0;
+            per_min[m] * (1.0 - frac) + per_min[m + 1] * frac
+        })
+        .collect()
+}
+
+/// Per-second arrival-rate profile (tweets/second), calibrated so the
+/// expected total equals `spec.total_tweets`.
+pub fn rate_profile(spec: &MatchSpec, cfg: &GeneratorConfig) -> Vec<f64> {
+    let secs = spec.length_secs() as usize;
+    let interest = interest_profile(spec, cfg);
+    let mut shape = Vec::with_capacity(secs);
+    for s in 0..secs {
+        let t_min = s as f64 / 60.0;
+        // Mild base drift: interest builds over the monitoring window
+        // (Fig 4 shows later-match minutes generally busier than early).
+        let base = 1.0 + 0.35 * (t_min / (spec.length_hours * 60.0));
+        let slow = 1.0 + cfg.interest_swing * interest[s];
+        shape.push(base * slow * rate_multiplier(&spec.events, t_min));
+    }
+    let integral: f64 = shape.iter().sum();
+    let scale = spec.total_tweets as f64 / integral;
+    shape.iter_mut().for_each(|v| *v *= scale);
+    shape
+}
+
+/// Per-second latent sentiment level in [0, 1] (before per-tweet noise).
+pub fn sentiment_profile(spec: &MatchSpec, cfg: &GeneratorConfig) -> Vec<f64> {
+    let secs = spec.length_secs() as usize;
+    let interest = interest_profile(spec, cfg);
+    let mut rng = Rng::new(cfg.seed).split(0x5EED_5E17);
+    let mut wander = 0.0f64;
+    let mut out = Vec::with_capacity(secs);
+    // Sentiment reads the interest process slightly *ahead* (excited users
+    // tweet opinions before the mass posts arrive), same lead as events.
+    let lead_secs = (cfg.lead_min * 60.0) as usize;
+    for s in 0..secs {
+        let t_min = s as f64 / 60.0;
+        if s % 60 == 0 {
+            // slow bounded random walk, one step per minute
+            wander = (wander + cfg.minute_noise * rng.normal()).clamp(-0.05, 0.05);
+        }
+        let exc = sentiment_excitation(&spec.events, t_min, cfg.lead_min);
+        let slow = interest[(s + lead_secs).min(secs - 1)];
+        out.push(
+            (cfg.base_sentiment
+                + cfg.sentiment_swing * exc
+                + cfg.sentiment_interest * slow
+                + wander)
+                .clamp(0.0, 1.0),
+        );
+    }
+    out
+}
+
+/// Generate the full synthetic trace for one match.
+pub fn generate(spec: &MatchSpec, cfg: &GeneratorConfig) -> Trace {
+    let rates = rate_profile(spec, cfg);
+    let sentiment = sentiment_profile(spec, cfg);
+    let rng = Rng::new(cfg.seed ^ fnv_str(spec.opponent));
+    let mut arrivals = rng.split(1);
+    let mut classes = rng.split(2);
+    let mut noise = rng.split(3);
+
+    let mut tweets = Vec::with_capacity(spec.total_tweets as usize + 1024);
+    let mut id = 0u64;
+    for (sec, (&rate, &s_level)) in rates.iter().zip(&sentiment).enumerate() {
+        let n = arrivals.poisson(rate);
+        for _ in 0..n {
+            let post_time = sec as f64 + arrivals.next_f64();
+            let class = TweetClass::ALL[classes.weighted(&cfg.class_mix)];
+            let sentiment = if class == TweetClass::Analyzed {
+                (s_level + cfg.tweet_noise * noise.normal()).clamp(0.0, 1.0) as f32
+            } else {
+                f32::NAN
+            };
+            tweets.push(Tweet { id, post_time, class, sentiment });
+            id += 1;
+        }
+    }
+    Trace::new(tweets)
+}
+
+/// FNV-1a over a str (stable per-match seed derivation).
+fn fnv_str(s: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::lagged_pearson;
+    use crate::workload::matches::{all_matches, by_opponent, BurstEvent};
+
+    fn small_spec() -> MatchSpec {
+        MatchSpec {
+            opponent: "Test",
+            date: "—",
+            total_tweets: 60_000,
+            length_hours: 1.0,
+            events: vec![
+                BurstEvent::new(20.0, 3.5, 0.8, 11.0),
+                BurstEvent::new(42.0, 4.0, 0.7, 12.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn total_calibrated_to_spec() {
+        let spec = small_spec();
+        let tr = generate(&spec, &GeneratorConfig::default());
+        let err = (tr.len() as f64 - spec.total_tweets as f64).abs() / spec.total_tweets as f64;
+        assert!(err < 0.02, "total={} want≈{}", tr.len(), spec.total_tweets);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = small_spec();
+        let a = generate(&spec, &GeneratorConfig::default());
+        let b = generate(&spec, &GeneratorConfig::default());
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.tweets[100].post_time, b.tweets[100].post_time);
+        let mut cfg = GeneratorConfig::default();
+        cfg.seed += 1;
+        let c = generate(&spec, &cfg);
+        assert_ne!(a.tweets[100].post_time, c.tweets[100].post_time);
+    }
+
+    #[test]
+    fn class_mix_respected() {
+        let tr = generate(&small_spec(), &GeneratorConfig::default());
+        let mix = tr.class_mix();
+        for (got, want) in mix.iter().zip([0.30, 0.30, 0.40]) {
+            assert!((got - want).abs() < 0.01, "mix={mix:?}");
+        }
+    }
+
+    #[test]
+    fn bursts_visible_in_volume() {
+        let tr = generate(&small_spec(), &GeneratorConfig::default());
+        let vol = tr.volume_per_minute();
+        // burst minute ~21-23 should be well above quiet minute ~10
+        let burst = vol[22] as f64;
+        let quiet = vol[10] as f64;
+        assert!(burst > 2.0 * quiet, "burst={burst} quiet={quiet}");
+    }
+
+    #[test]
+    fn sentiment_volume_lag_correlation_positive_and_decaying() {
+        // The Table I structure: corr(sentiment(t), vol(t+k)) strong at
+        // small k, decaying but still high at k=10.
+        let tr = generate(&small_spec(), &GeneratorConfig::default());
+        let sent = tr.sentiment_per_minute();
+        let vol: Vec<f64> = tr.volume_per_minute().iter().map(|&v| v as f64).collect();
+        let n = sent.len().min(vol.len());
+        let r0 = lagged_pearson(&sent[..n], &vol[..n], 0);
+        let r10 = lagged_pearson(&sent[..n], &vol[..n], 10);
+        assert!(r0 > 0.55, "r0={r0}");
+        assert!(r10 > 0.15, "r10={r10}");
+        assert!(r0 > r10, "r0={r0} r10={r10}");
+    }
+
+    #[test]
+    fn sentiment_leads_volume_peak() {
+        let spec = MatchSpec {
+            opponent: "Lead",
+            date: "—",
+            total_tweets: 80_000,
+            length_hours: 1.0,
+            events: vec![BurstEvent::new(30.0, 4.0, 0.8, 12.0)],
+        };
+        let tr = generate(&spec, &GeneratorConfig::default());
+        let sent = tr.sentiment_per_minute();
+        let vol = tr.volume_per_minute();
+        let vol_peak = (20..50).max_by_key(|&i| vol[i]).unwrap();
+        // first minute in the window where sentiment exceeds base+0.4
+        let sent_rise = (20..50).find(|&i| sent[i] > 0.70).unwrap();
+        assert!(
+            sent_rise < vol_peak,
+            "sentiment rise {sent_rise} not before volume peak {vol_peak}"
+        );
+    }
+
+    #[test]
+    fn all_seven_matches_generate() {
+        // Smoke over the real specs with a scaled-down clone (keep CI fast).
+        for mut spec in all_matches() {
+            spec.total_tweets /= 50;
+            let tr = generate(&spec, &GeneratorConfig::default());
+            assert!(!tr.is_empty(), "{} empty", spec.opponent);
+            assert!(tr.horizon() <= spec.length_secs());
+        }
+    }
+
+    #[test]
+    fn sentiment_in_unit_interval() {
+        let tr = generate(&small_spec(), &GeneratorConfig::default());
+        for t in &tr.tweets {
+            if let Some(s) = t.sentiment_opt() {
+                assert!((0.0..=1.0).contains(&(s as f64)));
+            }
+        }
+    }
+
+    #[test]
+    fn volume_profiles_of_final_dwarf_friendlies() {
+        let spain = by_opponent("Spain").unwrap();
+        let england = by_opponent("England").unwrap();
+        let cfg = GeneratorConfig::default();
+        let rs = rate_profile(&spain, &cfg);
+        let re = rate_profile(&england, &cfg);
+        let max_s = rs.iter().cloned().fold(f64::MIN, f64::max);
+        let max_e = re.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max_s > 4.0 * max_e, "spain peak {max_s} vs england {max_e}");
+    }
+}

@@ -1,0 +1,218 @@
+//! The seven Brazil matches of the paper's workload (Table II), plus the
+//! burst-event schedule each match's volume profile is built from.
+//!
+//! The real tweet dumps are IBM-internal; per DESIGN.md §2 we regenerate
+//! synthetic traces *calibrated to Table II* (total tweets, monitoring
+//! length) with burst schedules shaped after the paper's Fig 4 narrative:
+//! friendlies have small late peaks, group-phase matches have a few mid-
+//! match peaks (Mexico's one great abrupt peak at ~180 min), and the
+//! semi-final/final have many large bursts.
+
+/// One burst event in a match (a goal, a polemic refereeing decision...).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BurstEvent {
+    /// Event onset, minutes from monitoring start.
+    pub minute: f64,
+    /// Peak arrival-rate multiplier relative to the match's base rate.
+    pub magnitude: f64,
+    /// Rise time constant (minutes). Small = abrupt (Mexico's peak).
+    pub rise_min: f64,
+    /// Decay time constant (minutes).
+    pub decay_min: f64,
+}
+
+impl BurstEvent {
+    pub const fn new(minute: f64, magnitude: f64, rise_min: f64, decay_min: f64) -> Self {
+        Self { minute, magnitude, rise_min, decay_min }
+    }
+}
+
+/// Static description of one monitored match (one row of Table II).
+#[derive(Debug, Clone)]
+pub struct MatchSpec {
+    /// Opponent ("England", ... , "Spain").
+    pub opponent: &'static str,
+    /// Match date as printed in Table II.
+    pub date: &'static str,
+    /// Total tweets captured (Table II).
+    pub total_tweets: u64,
+    /// Monitoring length in hours (Table II).
+    pub length_hours: f64,
+    /// Burst schedule (paper Fig 4 narrative).
+    pub events: Vec<BurstEvent>,
+}
+
+impl MatchSpec {
+    /// Tweets per hour (Table II derived column).
+    pub fn tweets_per_hour(&self) -> f64 {
+        self.total_tweets as f64 / self.length_hours
+    }
+
+    /// Monitoring length in seconds.
+    pub fn length_secs(&self) -> f64 {
+        self.length_hours * 3600.0
+    }
+
+    /// Average arrival rate in tweets/second.
+    pub fn mean_rate(&self) -> f64 {
+        self.total_tweets as f64 / self.length_secs()
+    }
+}
+
+/// All seven matches, in Table II order.
+pub fn all_matches() -> Vec<MatchSpec> {
+    vec![
+        // Friendlies: low volume, repercussion only near the end.
+        MatchSpec {
+            opponent: "England",
+            date: "June 2nd",
+            total_tweets: 370_471,
+            length_hours: 2.62,
+            events: vec![
+                BurstEvent::new(130.0, 2.2, 1.5, 10.8),
+                BurstEvent::new(148.0, 2.8, 1.2, 12.6),
+            ],
+        },
+        MatchSpec {
+            opponent: "France",
+            date: "June 9th",
+            total_tweets: 281_882,
+            length_hours: 2.93,
+            events: vec![
+                BurstEvent::new(150.0, 2.0, 1.5, 10.8),
+                BurstEvent::new(166.0, 2.5, 1.3, 12.6),
+            ],
+        },
+        // Group phase: a few mid-match peaks.
+        MatchSpec {
+            opponent: "Japan",
+            date: "June 15th",
+            total_tweets: 736_171,
+            length_hours: 4.08,
+            events: vec![
+                BurstEvent::new(95.0, 2.4, 1.5, 10.8),
+                BurstEvent::new(140.0, 2.8, 1.2, 10.8),
+                BurstEvent::new(185.0, 3.2, 1.5, 14.4),
+            ],
+        },
+        MatchSpec {
+            opponent: "Mexico",
+            date: "June 19th",
+            total_tweets: 615_831,
+            length_hours: 3.79,
+            events: vec![
+                BurstEvent::new(105.0, 2.0, 1.8, 10.8),
+                // The "great peak ... around 180 minutes ... happens more
+                // abruptly while others have small increase just before"
+                // (§V-A) — tiny rise constant, big magnitude.
+                BurstEvent::new(180.0, 5.5, 0.4, 12.6),
+            ],
+        },
+        MatchSpec {
+            opponent: "Italy",
+            date: "June 22nd",
+            total_tweets: 518_952,
+            length_hours: 3.42,
+            events: vec![
+                BurstEvent::new(80.0, 2.2, 1.5, 10.8),
+                BurstEvent::new(125.0, 2.6, 1.3, 10.8),
+                BurstEvent::new(170.0, 3.0, 1.5, 14.4),
+            ],
+        },
+        // Semi-final: big volume, multiple strong bursts.
+        MatchSpec {
+            opponent: "Uruguay",
+            date: "June 26th",
+            total_tweets: 1_763_353,
+            length_hours: 3.44,
+            events: vec![
+                BurstEvent::new(70.0, 2.6, 1.0, 10.8),
+                BurstEvent::new(110.0, 3.8, 0.6, 12.6),
+                BurstEvent::new(150.0, 3.2, 0.9, 10.8),
+                BurstEvent::new(182.0, 5.0, 0.45, 16.2),
+            ],
+        },
+        // Final: most tweets, highest and most numerous peaks (§V-A).
+        MatchSpec {
+            opponent: "Spain",
+            date: "June 30th",
+            total_tweets: 4_309_863,
+            length_hours: 4.18,
+            events: vec![
+                BurstEvent::new(60.0, 2.8, 0.8, 10.8),
+                BurstEvent::new(95.0, 4.2, 0.5, 12.6),
+                BurstEvent::new(120.0, 3.2, 0.7, 10.8),
+                BurstEvent::new(150.0, 6.0, 0.35, 14.4),
+                BurstEvent::new(185.0, 4.8, 0.45, 12.6),
+                BurstEvent::new(215.0, 6.5, 0.35, 18.0),
+            ],
+        },
+    ]
+}
+
+/// Look up a match by (case-insensitive) opponent name.
+pub fn by_opponent(name: &str) -> Option<MatchSpec> {
+    all_matches().into_iter().find(|m| m.opponent.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_row_count_and_totals() {
+        let ms = all_matches();
+        assert_eq!(ms.len(), 7);
+        let total: u64 = ms.iter().map(|m| m.total_tweets).sum();
+        assert_eq!(total, 8_596_523); // sum of Table II
+    }
+
+    #[test]
+    fn tweets_per_hour_matches_table2() {
+        // Table II prints derived tweets/hour; check a few rows.
+        let ms = all_matches();
+        let england = &ms[0];
+        assert!((england.tweets_per_hour() - 141_401.0).abs() < 500.0);
+        let spain = &ms[6];
+        assert!((spain.tweets_per_hour() - 1_031_067.0).abs() < 500.0);
+    }
+
+    #[test]
+    fn spain_is_biggest_and_has_most_events() {
+        let ms = all_matches();
+        let spain = ms.iter().max_by_key(|m| m.total_tweets).unwrap();
+        assert_eq!(spain.opponent, "Spain");
+        assert_eq!(spain.events.len(), ms.iter().map(|m| m.events.len()).max().unwrap());
+    }
+
+    #[test]
+    fn mexico_peak_abrupt_within_group_phase() {
+        // §V-A singles out Mexico's ~180-min peak as the abrupt one among
+        // the group-phase matches (the finals have goal-moment spikes too).
+        let mexico = by_opponent("mexico").unwrap();
+        let abrupt = mexico.events.iter().map(|e| e.rise_min).fold(f64::MAX, f64::min);
+        assert!(abrupt <= 0.5, "Mexico peak rise {abrupt} not abrupt");
+        for name in ["England", "France", "Japan", "Italy"] {
+            for e in &by_opponent(name).unwrap().events {
+                assert!(e.rise_min >= abrupt, "{name} has a more abrupt event");
+            }
+        }
+    }
+
+    #[test]
+    fn events_inside_monitoring_window() {
+        for m in all_matches() {
+            for e in &m.events {
+                assert!(e.minute > 0.0 && e.minute < m.length_hours * 60.0,
+                        "{} event at {} outside window", m.opponent, e.minute);
+                assert!(e.magnitude > 1.0 && e.rise_min > 0.0 && e.decay_min > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_by_opponent() {
+        assert!(by_opponent("SPAIN").is_some());
+        assert!(by_opponent("Germany").is_none());
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload substrate: Table II match catalogue, burst-pulse math, the
+//! calibrated synthetic trace generator, the CSV trace model, and token
+//! text rendering for the live-serving path.
+
+pub mod burst;
+pub mod generator;
+pub mod matches;
+pub mod text;
+pub mod trace;
+
+pub use generator::{generate, GeneratorConfig};
+pub use matches::{all_matches, by_opponent, BurstEvent, MatchSpec};
+pub use trace::{Trace, Tweet, TweetClass};

@@ -1,0 +1,132 @@
+//! Synthetic tweet *text* generation for the live-serving path.
+//!
+//! The trace-driven simulator only needs (post_time, class, sentiment),
+//! but the end-to-end serving example feeds real token strings through the
+//! PJRT-compiled classifier. This module renders a tweet's latent
+//! sentiment into tokens drawn from the same families the build-time
+//! training corpus uses (python/compile/corpus.py): pos*/neg* sentiment
+//! words, neu* chatter, topic* match vocabulary and open noise.
+
+use crate::rng::Rng;
+
+/// Token-family sizes — must match python/compile/corpus.py.
+pub const SENTIMENT_WORDS: u64 = 48;
+pub const NEUTRAL_WORDS: u64 = 96;
+pub const TOPIC_WORDS: u64 = 32;
+pub const NOISE_WORDS: u64 = 4096;
+
+/// Polarity of an excited tweet (which sentiment pole the event drives).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Polarity {
+    Positive,
+    Negative,
+}
+
+/// Render one tweet's tokens.
+///
+/// `intensity` in [0, 1] is the latent sentiment score: the share of
+/// sentiment-bearing tokens grows with it, so the trained classifier's
+/// `sentiment_score` (p_pos + p_neg) recovers it approximately.
+pub fn render_tweet(rng: &mut Rng, intensity: f64, polarity: Polarity) -> String {
+    let len = rng.range(6, 22);
+    let mut out = String::with_capacity(len as usize * 8);
+    // Sentiment-bearing token probability rises superlinearly with
+    // intensity (calm chatter is mostly neutral even when mildly excited;
+    // goal moments are wall-to-wall sentiment words) — this gives the
+    // classifier's recovered score the dynamic range the appdata window
+    // comparison needs. The rest splits between neutral, topic and noise
+    // like the training mix.
+    let i = intensity.clamp(0.0, 1.0);
+    let p_sent = 0.03 + 0.65 * i * i;
+    let p_opp = 0.05;
+    for i in 0..len {
+        if i > 0 {
+            out.push(' ');
+        }
+        let r = rng.next_f64();
+        let (fam, pool) = if r < p_sent {
+            match polarity {
+                Polarity::Positive => ("pos", SENTIMENT_WORDS),
+                Polarity::Negative => ("neg", SENTIMENT_WORDS),
+            }
+        } else if r < p_sent + p_opp {
+            match polarity {
+                Polarity::Positive => ("neg", SENTIMENT_WORDS),
+                Polarity::Negative => ("pos", SENTIMENT_WORDS),
+            }
+        } else {
+            let r2 = rng.next_f64();
+            if r2 < 0.45 {
+                ("neu", NEUTRAL_WORDS)
+            } else if r2 < 0.72 {
+                ("topic", TOPIC_WORDS)
+            } else {
+                ("noise", NOISE_WORDS)
+            }
+        };
+        out.push_str(fam);
+        out.push_str(&rng.below(pool).to_string());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_count_in_range() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let t = render_tweet(&mut rng, 0.5, Polarity::Positive);
+            let n = t.split_whitespace().count();
+            assert!((6..=22).contains(&n), "len={n}");
+        }
+    }
+
+    #[test]
+    fn intensity_raises_sentiment_token_share() {
+        let mut rng = Rng::new(2);
+        let share = |intensity: f64, rng: &mut Rng| {
+            let mut sent = 0usize;
+            let mut total = 0usize;
+            for _ in 0..400 {
+                let t = render_tweet(rng, intensity, Polarity::Positive);
+                for tok in t.split_whitespace() {
+                    total += 1;
+                    if tok.starts_with("pos") {
+                        sent += 1;
+                    }
+                }
+            }
+            sent as f64 / total as f64
+        };
+        let low = share(0.1, &mut rng);
+        let high = share(0.9, &mut rng);
+        assert!(high > low + 0.3, "low={low} high={high}");
+    }
+
+    #[test]
+    fn polarity_selects_family() {
+        let mut rng = Rng::new(3);
+        let t = (0..50)
+            .map(|_| render_tweet(&mut rng, 1.0, Polarity::Negative))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let neg = t.split_whitespace().filter(|w| w.starts_with("neg")).count();
+        let pos = t.split_whitespace().filter(|w| w.starts_with("pos")).count();
+        assert!(neg > 5 * pos.max(1), "neg={neg} pos={pos}");
+    }
+
+    #[test]
+    fn tokens_are_from_known_families() {
+        let mut rng = Rng::new(4);
+        let t = render_tweet(&mut rng, 0.5, Polarity::Positive);
+        for tok in t.split_whitespace() {
+            assert!(
+                ["pos", "neg", "neu", "topic", "noise"].iter().any(|f| tok.starts_with(f)),
+                "unknown family: {tok}"
+            );
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! Tweet/trace data model and the CSV interchange format.
+//!
+//! §IV-B: "tweet data from different sources was consolidated into a CSV
+//! file for each match ... The class, post time and sentiment scores were
+//! used for the simulations." We mirror that: a trace row is
+//! `(id, post_time, class, sentiment)`; per-tweet CPU cycles are assigned
+//! by the simulator from the class delay model at replication setup, as in
+//! the paper ("Before the simulation begins all tweets are read from the
+//! CSV file and a random number of cycles is assigned").
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Path a tweet takes through the Fig 1 operator graph (its *class*).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum TweetClass {
+    /// Dropped by the source-side keyword filter, PE (1). Delay ≈ 0 in the
+    /// paper's measurements ("simply given a zero delay distribution").
+    Discarded = 0,
+    /// Passed the filter but judged off-topic mid-pipeline; no sentiment.
+    OffTopic = 1,
+    /// Full path: sentiment analyzed and accumulated.
+    Analyzed = 2,
+}
+
+impl TweetClass {
+    pub const ALL: [TweetClass; 3] =
+        [TweetClass::Discarded, TweetClass::OffTopic, TweetClass::Analyzed];
+
+    pub fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(Self::Discarded),
+            1 => Some(Self::OffTopic),
+            2 => Some(Self::Analyzed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Discarded => "discarded",
+            Self::OffTopic => "off-topic",
+            Self::Analyzed => "analyzed",
+        }
+    }
+}
+
+/// One trace row: a tweet as the simulator sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tweet {
+    pub id: u64,
+    /// Post time, seconds from monitoring start. Arrival time == post time
+    /// (the paper assumes zero network delay, §IV-B).
+    pub post_time: f64,
+    pub class: TweetClass,
+    /// Sentiment score (probability the tweet is positive or negative,
+    /// footnote 1). NaN encodes "no sentiment" for non-analyzed classes.
+    pub sentiment: f32,
+}
+
+impl Tweet {
+    /// Sentiment, if this tweet was actually analyzed.
+    pub fn sentiment_opt(&self) -> Option<f32> {
+        if self.class == TweetClass::Analyzed && self.sentiment.is_finite() {
+            Some(self.sentiment)
+        } else {
+            None
+        }
+    }
+}
+
+/// A whole match trace (tweets sorted by post time).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub tweets: Vec<Tweet>,
+}
+
+impl Trace {
+    pub fn new(mut tweets: Vec<Tweet>) -> Self {
+        tweets.sort_by(|a, b| a.post_time.total_cmp(&b.post_time));
+        Self { tweets }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tweets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tweets.is_empty()
+    }
+
+    /// Monitoring horizon: last post time (seconds).
+    pub fn horizon(&self) -> f64 {
+        self.tweets.last().map_or(0.0, |t| t.post_time)
+    }
+
+    /// Per-minute tweet counts (Fig 4 series).
+    pub fn volume_per_minute(&self) -> Vec<u64> {
+        let mins = (self.horizon() / 60.0).floor() as usize + 1;
+        let mut counts = vec![0u64; mins];
+        for t in &self.tweets {
+            counts[(t.post_time / 60.0) as usize] += 1;
+        }
+        counts
+    }
+
+    /// Per-minute mean sentiment of analyzed tweets (NaN-free; minutes with
+    /// no analyzed tweet carry the previous value, seeded with 0).
+    pub fn sentiment_per_minute(&self) -> Vec<f64> {
+        let mins = (self.horizon() / 60.0).floor() as usize + 1;
+        let mut sum = vec![0.0f64; mins];
+        let mut cnt = vec![0u64; mins];
+        for t in &self.tweets {
+            if let Some(s) = t.sentiment_opt() {
+                let m = (t.post_time / 60.0) as usize;
+                sum[m] += s as f64;
+                cnt[m] += 1;
+            }
+        }
+        let mut out = Vec::with_capacity(mins);
+        let mut last = 0.0;
+        for i in 0..mins {
+            if cnt[i] > 0 {
+                last = sum[i] / cnt[i] as f64;
+            }
+            out.push(last);
+        }
+        out
+    }
+
+    /// Class proportions (fractions summing to 1 for a non-empty trace).
+    pub fn class_mix(&self) -> [f64; 3] {
+        let mut counts = [0usize; 3];
+        for t in &self.tweets {
+            counts[t.class as usize] += 1;
+        }
+        let n = self.len().max(1) as f64;
+        [counts[0] as f64 / n, counts[1] as f64 / n, counts[2] as f64 / n]
+    }
+
+    /// Write the CSV interchange file (`id,post_time,class,sentiment`).
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "id,post_time,class,sentiment")?;
+        for t in &self.tweets {
+            writeln!(w, "{},{:.3},{},{}", t.id, t.post_time, t.class as u8, t.sentiment)?;
+        }
+        Ok(())
+    }
+
+    /// Read a CSV trace written by [`Trace::write_csv`].
+    pub fn read_csv<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let reader = std::io::BufReader::new(f);
+        let mut tweets = Vec::new();
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line?;
+            if lineno == 0 {
+                if line != "id,post_time,class,sentiment" {
+                    bail!("bad trace header: {line:?}");
+                }
+                continue;
+            }
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split(',');
+            let (a, b, c, d) = (
+                parts.next().context("missing id")?,
+                parts.next().context("missing post_time")?,
+                parts.next().context("missing class")?,
+                parts.next().context("missing sentiment")?,
+            );
+            tweets.push(Tweet {
+                id: a.parse().with_context(|| format!("line {}: id {a:?}", lineno + 1))?,
+                post_time: b.parse()?,
+                class: TweetClass::from_u8(c.parse()?)
+                    .with_context(|| format!("line {}: bad class {c:?}", lineno + 1))?,
+                sentiment: d.parse()?,
+            });
+        }
+        Ok(Self::new(tweets))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        Trace::new(vec![
+            Tweet { id: 2, post_time: 61.0, class: TweetClass::Analyzed, sentiment: 0.8 },
+            Tweet { id: 1, post_time: 0.5, class: TweetClass::Discarded, sentiment: f32::NAN },
+            Tweet { id: 3, post_time: 62.0, class: TweetClass::OffTopic, sentiment: f32::NAN },
+            Tweet { id: 4, post_time: 130.0, class: TweetClass::Analyzed, sentiment: 0.4 },
+        ])
+    }
+
+    #[test]
+    fn constructor_sorts_by_post_time() {
+        let tr = sample_trace();
+        let times: Vec<f64> = tr.tweets.iter().map(|t| t.post_time).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn volume_and_sentiment_series() {
+        let tr = sample_trace();
+        assert_eq!(tr.volume_per_minute(), vec![1, 2, 1]);
+        let s = tr.sentiment_per_minute();
+        assert_eq!(s.len(), 3);
+        assert!((s[0] - 0.0).abs() < 1e-9); // no analyzed tweet yet
+        assert!((s[1] - 0.8).abs() < 1e-6);
+        assert!((s[2] - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn class_mix_sums_to_one() {
+        let mix = sample_trace().class_mix();
+        assert!((mix.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((mix[2] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sentiment_opt_rules() {
+        let t = Tweet { id: 0, post_time: 0.0, class: TweetClass::OffTopic, sentiment: 0.9 };
+        assert_eq!(t.sentiment_opt(), None); // class gates the score
+        let t2 = Tweet { id: 0, post_time: 0.0, class: TweetClass::Analyzed, sentiment: f32::NAN };
+        assert_eq!(t2.sentiment_opt(), None);
+        let t3 = Tweet { id: 0, post_time: 0.0, class: TweetClass::Analyzed, sentiment: 0.9 };
+        assert_eq!(t3.sentiment_opt(), Some(0.9));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.join("trace.csv");
+        let tr = sample_trace();
+        tr.write_csv(&path).unwrap();
+        let back = Trace::read_csv(&path).unwrap();
+        assert_eq!(back.len(), tr.len());
+        for (a, b) in tr.tweets.iter().zip(&back.tweets) {
+            assert_eq!(a.id, b.id);
+            assert!((a.post_time - b.post_time).abs() < 1e-3);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.sentiment.is_nan(), b.sentiment.is_nan());
+        }
+    }
+
+    #[test]
+    fn csv_rejects_garbage() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "wrong,header\n").unwrap();
+        assert!(Trace::read_csv(&path).is_err());
+        std::fs::write(&path, "id,post_time,class,sentiment\n1,0.0,9,0.5\n").unwrap();
+        assert!(Trace::read_csv(&path).is_err());
+    }
+
+    #[test]
+    fn empty_trace() {
+        let tr = Trace::default();
+        assert!(tr.is_empty());
+        assert_eq!(tr.horizon(), 0.0);
+        assert_eq!(tr.volume_per_minute(), vec![0]);
+    }
+
+    #[test]
+    fn class_from_u8_roundtrip() {
+        for c in TweetClass::ALL {
+            assert_eq!(TweetClass::from_u8(c as u8), Some(c));
+        }
+        assert_eq!(TweetClass::from_u8(7), None);
+    }
+}

@@ -1,0 +1,176 @@
+//! CLI smoke tests (the shipped binary) and failure-injection tests
+//! (corrupted artifacts, hostile configs, degenerate workloads).
+
+use sla_autoscale::autoscale::{AutoScaler, LoadScaler, ThresholdScaler};
+use sla_autoscale::config::SimConfig;
+use sla_autoscale::delay::DelayModel;
+use sla_autoscale::runtime::{Executable, Meta};
+use sla_autoscale::sim::Simulator;
+use sla_autoscale::util::TempDir;
+use sla_autoscale::workload::{generate, GeneratorConfig, MatchSpec, Trace};
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_sla-autoscale"))
+}
+
+#[test]
+fn cli_matches_lists_table2() {
+    let out = bin().arg("matches").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for m in ["England", "Spain", "4309863"] {
+        assert!(text.contains(m), "missing {m} in:\n{text}");
+    }
+}
+
+#[test]
+fn cli_no_args_prints_usage() {
+    let out = bin().output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+}
+
+#[test]
+fn cli_unknown_opponent_fails_cleanly() {
+    let out = bin().args(["sim", "Germany"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown opponent"));
+}
+
+#[test]
+fn cli_unknown_experiment_lists_available() {
+    let out = bin().args(["exp", "fig99"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("fig7"), "should list ids: {err}");
+}
+
+#[test]
+fn cli_gen_writes_csv_roundtrip() {
+    let dir = TempDir::new().unwrap();
+    let path = dir.join("england.csv");
+    let out = bin()
+        .args(["gen", "England", "--out", path.to_str().unwrap(), "--seed", "5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let trace = Trace::read_csv(&path).unwrap();
+    assert!(trace.len() > 300_000, "got {}", trace.len());
+}
+
+#[test]
+fn cli_sim_fast_runs_and_reports() {
+    let out = bin()
+        .args(["sim", "France", "--algo", "threshold-80", "--fast"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("CPU-hours"), "{text}");
+    assert!(text.contains("threshold-80%"));
+}
+
+#[test]
+fn cli_bad_algo_rejected() {
+    let out = bin().args(["sim", "France", "--algo", "magic-9000"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown algorithm"));
+}
+
+// ---------- failure injection ----------
+
+#[test]
+fn corrupted_hlo_artifact_fails_compilation_not_process() {
+    let dir = TempDir::new().unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule this is not valid hlo {{{").unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let err = Executable::load(&client, &dir.join("bad.hlo.txt"), 8, 1024, 3);
+    assert!(err.is_err(), "corrupted HLO must be rejected");
+}
+
+#[test]
+fn truncated_meta_rejected_with_context() {
+    let dir = TempDir::new().unwrap();
+    std::fs::write(dir.join("meta.txt"), "vocab=1024\nembed=64\n").unwrap();
+    let err = Meta::load(dir.path()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("meta key missing"), "{msg}");
+}
+
+#[test]
+fn zero_tweet_workload_is_a_noop_simulation() {
+    let trace = Trace::default();
+    let cfg = SimConfig::default();
+    let model = DelayModel::default();
+    let res = Simulator::new(&cfg, &model)
+        .run(&trace, Box::new(ThresholdScaler::new(0.8)));
+    assert_eq!(res.history.completed(), 0);
+    assert_eq!(res.violation_pct(), 0.0);
+}
+
+#[test]
+fn pathological_config_still_terminates() {
+    // 10 ms steps, instant provisioning, sub-second adapt cadence.
+    let spec = MatchSpec {
+        opponent: "Edge",
+        date: "—",
+        total_tweets: 2_000,
+        length_hours: 0.05,
+        events: vec![],
+    };
+    let trace = generate(&spec, &GeneratorConfig::default());
+    let cfg = SimConfig {
+        step_secs: 0.01,
+        adapt_secs: 0.5,
+        provision_secs: 0.0,
+        sla_secs: 10.0,
+        ..Default::default()
+    };
+    let model = DelayModel::default();
+    let res = Simulator::new(&cfg, &model)
+        .run(&trace, Box::new(LoadScaler::new(model.clone(), 0.99, [0.3, 0.3, 0.4])));
+    assert_eq!(res.history.completed(), trace.len() as u64);
+}
+
+#[test]
+fn enormous_provisioning_delay_bounds_cost_but_hurts_quality() {
+    let spec = MatchSpec {
+        opponent: "SlowCloud",
+        date: "—",
+        total_tweets: 60_000,
+        length_hours: 0.25,
+        events: vec![],
+    };
+    let trace = generate(&spec, &GeneratorConfig::default());
+    let model = DelayModel::default();
+    let fast_cloud = SimConfig { provision_secs: 10.0, ..Default::default() };
+    let slow_cloud = SimConfig { provision_secs: 1200.0, ..Default::default() };
+    let run = |cfg: &SimConfig| {
+        Simulator::new(cfg, &model)
+            .run(&trace, Box::new(LoadScaler::new(model.clone(), 0.99999, [0.3, 0.3, 0.4])))
+    };
+    let fast = run(&fast_cloud);
+    let slow = run(&slow_cloud);
+    assert!(
+        slow.history.mean_delay() > fast.history.mean_delay(),
+        "slow provisioning must hurt delay: {:.1} vs {:.1}",
+        slow.history.mean_delay(),
+        fast.history.mean_delay()
+    );
+}
+
+#[test]
+fn scaler_names_stable_for_reports() {
+    // Experiment reports and EXPERIMENTS.md key off these exact names.
+    let model = DelayModel::default();
+    assert_eq!(ThresholdScaler::new(0.6).name(), "threshold-60%");
+    assert_eq!(
+        LoadScaler::new(model.clone(), 0.9999, [0.3, 0.3, 0.4]).name(),
+        "load-q99.99%"
+    );
+    assert_eq!(
+        LoadScaler::new(model, 0.9, [0.3, 0.3, 0.4]).name(),
+        "load-q90%"
+    );
+}

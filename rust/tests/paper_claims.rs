@@ -1,0 +1,158 @@
+//! Integration: the paper's qualitative claims ("shape" assertions from
+//! DESIGN.md §6) checked end-to-end on fast-mode statistical replicas.
+
+use sla_autoscale::autoscale::{AppdataScaler, Composite, LoadScaler, ThresholdScaler};
+use sla_autoscale::config::SimConfig;
+use sla_autoscale::delay::DelayModel;
+use sla_autoscale::experiments::common::{default_mix, scale_config, trace_for};
+use sla_autoscale::experiments::{fig7, fig8, table1};
+use sla_autoscale::sim::Simulator;
+use sla_autoscale::workload::by_opponent;
+
+/// §V-A: "both the threshold and the load algorithms performed perfectly
+/// for both matches" (England, France) — no SLA violations on friendlies.
+#[test]
+fn friendlies_are_violation_free() {
+    for opponent in ["England", "France"] {
+        let spec = by_opponent(opponent).unwrap();
+        let trace = trace_for(&spec, true);
+        let cfg = scale_config(&SimConfig::default(), true);
+        let model = DelayModel::default();
+        for scaler in [
+            Box::new(ThresholdScaler::new(0.60)) as Box<dyn sla_autoscale::autoscale::AutoScaler>,
+            Box::new(LoadScaler::new(model.clone(), 0.99999, default_mix())),
+        ] {
+            let name = scaler.name();
+            let res = Simulator::new(&cfg, &model).run(&trace, scaler);
+            assert!(
+                res.violation_pct() < 0.05,
+                "{opponent} under {name}: {:.3}% violations",
+                res.violation_pct()
+            );
+        }
+    }
+}
+
+/// §V-A: load cost is ~flat across quantiles ("cost differences for
+/// different quantiles is insignificant").
+#[test]
+fn load_cost_flat_in_quantile() {
+    let spec = by_opponent("Italy").unwrap();
+    let results = fig7::run_match(&spec, true, 3);
+    let costs: Vec<f64> = results
+        .iter()
+        .filter(|r| r.name.starts_with("load"))
+        .map(|r| r.cpu_hours)
+        .collect();
+    let (lo, hi) = costs.iter().fold((f64::MAX, f64::MIN), |(l, h), &c| (l.min(c), h.max(c)));
+    assert!(
+        (hi - lo) / lo < 0.15,
+        "load cost spread too wide: {lo:.2}..{hi:.2} CPU-h"
+    );
+}
+
+/// §V-A headline: replacing threshold-60% with load on the big matches
+/// saves a large fraction of CPU-hours (paper: 43% Uruguay, 33% Spain).
+#[test]
+fn load_saves_cpu_hours_on_finals() {
+    for (opponent, min_saving) in [("Uruguay", 0.15), ("Spain", 0.15)] {
+        let spec = by_opponent(opponent).unwrap();
+        let results = fig7::run_match(&spec, true, 3);
+        let thr60 = results.iter().find(|r| r.name == "threshold-60%").unwrap();
+        let load = results.iter().find(|r| r.name == "load-q99.999%").unwrap();
+        let saving = 1.0 - load.cpu_hours / thr60.cpu_hours;
+        assert!(
+            saving > min_saving,
+            "{opponent}: load saves only {:.0}% (paper: 33-43%)",
+            saving * 100.0
+        );
+    }
+}
+
+/// Fig 8 / abstract headline: appdata cuts SLA violations by ~95% versus
+/// the threshold algorithm (paper: 95.24%), improves on load alone
+/// (paper: 92.81% there; our load baseline is stronger so the relative
+/// headroom is smaller — see EXPERIMENTS.md), and costs less than
+/// threshold-60% while doing so.
+#[test]
+fn appdata_reduces_violations_substantially() {
+    let results = fig8::run_spain(true, 3);
+    let load = results.iter().find(|r| r.name == "load-only").unwrap();
+    let thr = results.iter().find(|r| r.name == "threshold-60%").unwrap();
+    let best = results
+        .iter()
+        .filter(|r| r.name.starts_with("appdata"))
+        .min_by(|a, b| a.violation_pct.total_cmp(&b.violation_pct))
+        .unwrap();
+    assert!(thr.violation_pct > 0.0, "Spain must stress the threshold algorithm");
+    let vs_thr = 1.0 - best.violation_pct / thr.violation_pct;
+    assert!(
+        vs_thr > 0.80,
+        "appdata best {:.2}% vs threshold-60% {:.2}% — only {:.0}% (paper: 95.24%)",
+        best.violation_pct,
+        thr.violation_pct,
+        vs_thr * 100.0
+    );
+    // appdata never does worse than load alone (it only adds capacity)
+    assert!(
+        best.violation_pct <= load.violation_pct + 0.02,
+        "appdata best {:.3}% worse than load {:.3}%",
+        best.violation_pct,
+        load.violation_pct
+    );
+}
+
+/// Table I shape: correlation high at lag 0, still clearly positive at
+/// lag 10, monotone-ish decay (paper: 0.79 → 0.70).
+#[test]
+fn table1_correlation_shape() {
+    let c = table1::correlations(true);
+    assert!(c[0] > 0.60, "lag0 = {}", c[0]);
+    assert!(c[10] > 0.30, "lag10 = {}", c[10]);
+    assert!(c[0] > c[10]);
+    // no wild sign flips anywhere
+    assert!(c.iter().all(|&r| r > 0.0), "{c:?}");
+}
+
+/// Mexico's abrupt peak (§V-A): the load algorithm's multi-CPU upscaling
+/// beats the threshold algorithm's one-at-a-time on quality for at least
+/// one threshold setting, at lower cost for all.
+#[test]
+fn mexico_peak_favors_load() {
+    let spec = by_opponent("Mexico").unwrap();
+    let results = fig7::run_match(&spec, true, 3);
+    let load_best = results
+        .iter()
+        .filter(|r| r.name.starts_with("load"))
+        .min_by(|a, b| a.violation_pct.total_cmp(&b.violation_pct))
+        .unwrap();
+    let thr_high = results.iter().find(|r| r.name == "threshold-99%").unwrap();
+    assert!(
+        load_best.violation_pct <= thr_high.violation_pct + 0.05,
+        "load best {:.2}% vs threshold-99% {:.2}%",
+        load_best.violation_pct,
+        thr_high.violation_pct
+    );
+}
+
+/// Full-campaign determinism: the same seed reproduces identical results.
+#[test]
+fn campaign_determinism() {
+    let spec = by_opponent("Japan").unwrap();
+    let trace = trace_for(&spec, true);
+    let cfg = scale_config(&SimConfig::default(), true);
+    let model = DelayModel::default();
+    let run = || {
+        Simulator::new(&cfg, &model).run(
+            &trace,
+            Box::new(Composite::new(
+                LoadScaler::new(model.clone(), 0.99999, default_mix()),
+                AppdataScaler::new(4),
+            )),
+        )
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.history.violations(), b.history.violations());
+    assert_eq!(a.cpu_hours, b.cpu_hours);
+    assert_eq!(a.decisions.len(), b.decisions.len());
+}

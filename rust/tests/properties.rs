@@ -1,0 +1,244 @@
+//! Property-based tests (in-tree harness: seeded random generation over
+//! many cases, shrink-free but reproducible — every failure prints the
+//! case seed). Each property runs a few hundred randomized cases.
+
+use sla_autoscale::rng::Rng;
+use sla_autoscale::sim::cycles::{distribute, distribute_paper};
+use sla_autoscale::sim::{Cluster, InputQueue};
+use sla_autoscale::stats::descriptive::{quantile, quantile_sorted};
+use sla_autoscale::stats::ema::ema_series;
+use sla_autoscale::stats::weibull::Weibull;
+use sla_autoscale::util::FlatMeta;
+use sla_autoscale::workload::{Trace, Tweet, TweetClass};
+
+/// Run `cases` random trials of a property with reproducible sub-seeds.
+fn for_all(cases: u64, seed: u64, mut prop: impl FnMut(&mut Rng, u64)) {
+    let root = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = root.split(case + 1);
+        prop(&mut rng, case);
+    }
+}
+
+#[test]
+fn prop_algorithm1_optimized_equals_paper() {
+    for_all(500, 0xA160, |rng, case| {
+        let n = rng.range(0, 60) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 200.0 + 0.001).collect();
+        let budget = rng.next_f64() * 300.0;
+        let mut a = xs.clone();
+        let mut b = xs.clone();
+        let oa = distribute_paper(budget, &mut a);
+        let ob = distribute(budget, &mut b);
+        let mut ca = oa.completed.clone();
+        ca.sort_unstable();
+        assert_eq!(ca, ob.completed, "case {case}: xs={xs:?} budget={budget}");
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!((x - y).abs() < 1e-6, "case {case} idx {i}: {x} vs {y}");
+        }
+        assert!((oa.consumed - ob.consumed).abs() < 1e-6, "case {case}");
+    });
+}
+
+#[test]
+fn prop_algorithm1_invariants() {
+    for_all(500, 0xA161, |rng, case| {
+        let n = rng.range(1, 80) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 100.0 + 1e-9).collect();
+        let budget = rng.next_f64() * 200.0;
+        let before: f64 = xs.iter().sum();
+        let mut r = xs.clone();
+        let out = distribute(budget, &mut r);
+        // conservation: consumed cycles equal the drop in remaining work
+        let after: f64 = r.iter().sum();
+        assert!((before - after - out.consumed).abs() < 1e-6, "case {case}");
+        // never overspends the budget, never leaves negative work
+        assert!(out.consumed <= budget + 1e-9, "case {case}");
+        assert!(r.iter().all(|&v| v >= 0.0), "case {case}");
+        // completed tweets are zeroed; survivors keep positive work
+        for &i in &out.completed {
+            assert_eq!(r[i], 0.0, "case {case} idx {i}");
+        }
+        for (i, &v) in r.iter().enumerate() {
+            if !out.completed.contains(&i) {
+                assert!(v > 0.0, "case {case} idx {i}: survivor with no work");
+            }
+        }
+        // work-conserving: if anything remains, the full budget was used
+        if r.iter().any(|&v| v > 0.0) {
+            assert!((out.consumed - budget).abs() < 1e-6, "case {case}: left work but idle cycles");
+        }
+    });
+}
+
+#[test]
+fn prop_cluster_accounting() {
+    for_all(200, 0xC105, |rng, case| {
+        let mut cluster = Cluster::new(rng.range(1, 5) as u32, rng.next_f64() * 120.0);
+        let mut expected_cpu_seconds = 0.0;
+        let mut now = 0.0;
+        for _ in 0..rng.range(10, 200) {
+            match rng.below(4) {
+                0 => cluster.scale_out(now, rng.range(0, 5) as u32),
+                1 => cluster.scale_in(rng.range(0, 3) as u32),
+                _ => {}
+            }
+            expected_cpu_seconds += cluster.active() as f64;
+            now += 1.0;
+            cluster.tick(now, 1.0);
+            // invariant: at least one CPU always
+            assert!(cluster.active() >= 1, "case {case}");
+        }
+        assert!(
+            (cluster.cpu_hours() * 3600.0 - expected_cpu_seconds).abs() < 1e-6,
+            "case {case}: accounting drift"
+        );
+    });
+}
+
+#[test]
+fn prop_input_queue_conserves_and_orders() {
+    for_all(200, 0x1F1F0, |rng, case| {
+        let rate = if rng.chance(0.3) { f64::INFINITY } else { rng.next_f64() * 20.0 + 0.1 };
+        let mut q = InputQueue::new(rate);
+        let mut pushed = 0u64;
+        let mut popped: Vec<u64> = Vec::new();
+        for _ in 0..rng.range(5, 60) {
+            let n = rng.range(0, 30);
+            for _ in 0..n {
+                q.push(pushed);
+                pushed += 1;
+            }
+            popped.extend(q.drain_step(1.0));
+        }
+        // drain the rest
+        for _ in 0..10_000 {
+            let got = q.drain_step(1.0);
+            if got.is_empty() && q.is_empty() {
+                break;
+            }
+            popped.extend(got);
+        }
+        assert_eq!(popped.len() as u64, pushed, "case {case}: lost tweets");
+        assert!(popped.windows(2).all(|w| w[0] < w[1]), "case {case}: FIFO broken");
+    });
+}
+
+#[test]
+fn prop_weibull_quantile_monotone_and_inverts_cdf() {
+    for_all(200, 0x3E1B, |rng, case| {
+        let w = Weibull::new(rng.next_f64() * 3.0 + 0.2, rng.next_f64() * 100.0 + 0.1);
+        let mut last = 0.0;
+        for i in 1..40 {
+            let q = i as f64 / 40.0;
+            let x = w.quantile(q);
+            assert!(x >= last, "case {case}: quantile not monotone");
+            assert!((w.cdf(x) - q).abs() < 1e-9, "case {case}: cdf∘quantile ≠ id");
+            last = x;
+        }
+    });
+}
+
+#[test]
+fn prop_empirical_quantile_bounds() {
+    for_all(200, 0x0E57, |rng, case| {
+        let n = rng.range(1, 200) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal() * 10.0).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for i in 0..=10 {
+            let q = i as f64 / 10.0;
+            let v = quantile(&xs, q);
+            assert!(v >= sorted[0] - 1e-12 && v <= sorted[n - 1] + 1e-12, "case {case}");
+            assert!((v - quantile_sorted(&sorted, q)).abs() < 1e-12, "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_ema_bounded_by_input_range() {
+    for_all(200, 0x00EA, |rng, case| {
+        let n = rng.range(1, 300) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 100.0 - 50.0).collect();
+        let alpha = rng.next_f64() * 0.99 + 0.01;
+        let out = ema_series(&xs, alpha);
+        let lo = xs.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = xs.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(
+            out.iter().all(|&v| v >= lo - 1e-9 && v <= hi + 1e-9),
+            "case {case}: EMA escaped input range"
+        );
+    });
+}
+
+#[test]
+fn prop_trace_csv_roundtrip() {
+    let dir = sla_autoscale::util::TempDir::new().unwrap();
+    for_all(25, 0xC5F, |rng, case| {
+        let n = rng.range(0, 300) as usize;
+        let tweets: Vec<Tweet> = (0..n)
+            .map(|i| {
+                let class = TweetClass::ALL[rng.below(3) as usize];
+                Tweet {
+                    id: i as u64,
+                    post_time: rng.next_f64() * 10_000.0,
+                    class,
+                    sentiment: if class == TweetClass::Analyzed {
+                        rng.next_f64() as f32
+                    } else {
+                        f32::NAN
+                    },
+                }
+            })
+            .collect();
+        let trace = Trace::new(tweets);
+        let path = dir.join(&format!("t{case}.csv"));
+        trace.write_csv(&path).unwrap();
+        let back = Trace::read_csv(&path).unwrap();
+        assert_eq!(back.len(), trace.len(), "case {case}");
+        for (a, b) in trace.tweets.iter().zip(&back.tweets) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.class, b.class);
+            assert!((a.post_time - b.post_time).abs() < 2e-3, "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_flatmeta_roundtrip() {
+    for_all(100, 0xF1A7, |rng, case| {
+        let mut m = FlatMeta::default();
+        let n = rng.range(0, 40);
+        let mut keys = Vec::new();
+        for i in 0..n {
+            let key = format!("k{i}.{}", rng.below(10));
+            let val = format!("v {} = {}", rng.next_u64(), rng.next_f64());
+            m.insert(&key, &val);
+            keys.push((key, val));
+        }
+        let back = FlatMeta::parse(&m.render()).unwrap();
+        for (k, v) in keys {
+            assert_eq!(back.get(&k).unwrap(), v, "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_covers_any_n() {
+    use sla_autoscale::runtime::plan;
+    for_all(300, 0xBA7C, |rng, case| {
+        // random ascending variant sets
+        let mut variants: Vec<usize> =
+            (0..rng.range(1, 4)).map(|_| 1 << rng.range(0, 9)).collect();
+        variants.sort_unstable();
+        variants.dedup();
+        let n = rng.range(0, 2000) as usize;
+        let p = plan(n, &variants);
+        let covered: usize = p.iter().map(|l| l.fill).sum();
+        assert_eq!(covered, n, "case {case}: variants={variants:?}");
+        for l in &p {
+            assert!(variants.contains(&l.batch), "case {case}");
+            assert!(l.fill >= 1 && l.fill <= l.batch, "case {case}");
+        }
+    });
+}

@@ -1,0 +1,120 @@
+//! Integration: the PJRT-served artifacts must reproduce, bit-for-bit-ish,
+//! the probabilities the Python side computed at export time — the
+//! definitive check that HLO text round-trips numerics and that the Rust
+//! tokenizer matches the Python vectorizer.
+//!
+//! Requires `make artifacts`; tests are skipped (not failed) otherwise so
+//! `cargo test` stays meaningful on a fresh checkout.
+
+use sla_autoscale::runtime::{Meta, ModelEngine};
+use sla_autoscale::sentiment::{Sentiment, SentimentEngine};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("meta.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn meta_loads_and_validates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let meta = Meta::load(dir).expect("meta loads");
+    assert_eq!(meta.vocab, 1024);
+    assert_eq!(meta.classes, 3);
+    assert_eq!(meta.labels, vec!["positive", "negative", "neutral"]);
+    assert!(meta.batch_variants.contains(&64));
+    assert!(meta.train_acc > 0.9);
+}
+
+#[test]
+fn golden_probs_reproduced_through_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let meta = Meta::load(dir).unwrap();
+    let mut engine = ModelEngine::load(dir).expect("engine loads");
+    let scores = engine.score_batch(&meta.golden.texts).expect("scores");
+    assert_eq!(scores.len(), meta.golden.texts.len());
+    for (i, (got, want)) in scores.iter().zip(&meta.golden.probs).enumerate() {
+        let g = [got.p_pos, got.p_neg, got.p_neu];
+        for (a, b) in g.iter().zip(want) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "golden {i}: rust {g:?} vs python {want:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_scores_and_labels_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let meta = Meta::load(dir).unwrap();
+    let mut engine = ModelEngine::load(dir).unwrap();
+    let scores = engine.score_batch(&meta.golden.texts).unwrap();
+    let mut correct = 0;
+    for (i, s) in scores.iter().enumerate() {
+        assert!((s.score() - meta.golden.scores[i]).abs() < 1e-4);
+        if s.argmax() == meta.golden.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    // The classifier has >90% train accuracy; on 8 goldens allow 1 miss.
+    assert!(correct >= meta.golden.texts.len() - 1, "only {correct} correct");
+}
+
+#[test]
+fn probabilities_form_a_simplex() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = ModelEngine::load(dir).unwrap();
+    let texts: Vec<String> = (0..100)
+        .map(|i| format!("pos{} neg{} neu{} topic{} noise{}", i % 48, (i * 7) % 48, i % 96, i % 32, i))
+        .collect();
+    let scores = engine.score_batch(&texts).unwrap();
+    assert_eq!(scores.len(), 100);
+    for s in &scores {
+        let sum = s.p_pos + s.p_neg + s.p_neu;
+        assert!((sum - 1.0).abs() < 1e-4, "not a simplex: {s:?}");
+        assert!(s.p_pos >= 0.0 && s.p_neg >= 0.0 && s.p_neu >= 0.0);
+    }
+}
+
+#[test]
+fn batch_plan_sizes_are_transparent() {
+    // Scoring n tweets must give n results for awkward n (crosses variant
+    // boundaries: 1, 7, 8, 9, 63, 64, 65, 255, 256, 257, 300).
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = ModelEngine::load(dir).unwrap();
+    for n in [1usize, 7, 8, 9, 63, 64, 65, 255, 256, 257, 300] {
+        let texts: Vec<String> = (0..n).map(|_| "pos1 pos2 neu3 topic4".to_string()).collect();
+        let scores = engine.score_batch(&texts).unwrap();
+        assert_eq!(scores.len(), n, "n={n}");
+        // identical rows → identical scores regardless of padding/variant
+        let first = scores[0];
+        for s in &scores {
+            assert!((s.p_pos - first.p_pos).abs() < 1e-5, "padding leaked into row scores");
+        }
+    }
+}
+
+#[test]
+fn model_engine_agrees_with_lexicon_on_polarity() {
+    // The trained classifier and the rule-based lexicon must agree on the
+    // dominant pole for strongly-polarized synthetic tweets.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = ModelEngine::load(dir).unwrap();
+    let mut lex = sla_autoscale::sentiment::LexiconEngine::new();
+    let texts: Vec<String> = vec![
+        "pos1 pos2 pos3 pos4 pos5 topic1".into(),
+        "neg1 neg2 neg3 neg4 neg5 topic1".into(),
+        "neu1 neu2 neu3 neu4 topic2 noise77".into(),
+    ];
+    let m: Vec<Sentiment> = model.score_batch(&texts).unwrap();
+    let l: Vec<Sentiment> = lex.score_batch(&texts).unwrap();
+    for (i, (a, b)) in m.iter().zip(&l).enumerate() {
+        assert_eq!(a.argmax(), b.argmax(), "disagree on {i}: model {a:?} lexicon {b:?}");
+    }
+}
