@@ -1,0 +1,61 @@
+//! Scenario-engine wall-clock: serial vs parallel execution of the same
+//! CI-converged grid, verifying bit-identical results while measuring
+//! the speedup (the PR's ≥2x-on-4-cores headline).
+//!
+//! Run: `cargo run --release --bench bench_matrix`
+
+use sla_autoscale::autoscale::ScalerSpec;
+use sla_autoscale::config::SimConfig;
+use sla_autoscale::scenario::{
+    default_threads, Overrides, ScenarioMatrix, TraceSource,
+};
+use std::time::Instant;
+
+fn main() {
+    println!("== bench_matrix (fast 20x replicas) ==");
+    let cfg = sla_autoscale::scenario::scale_config(&SimConfig::default(), true);
+    let sources = [
+        TraceSource::opponent("Japan", true),
+        TraceSource::opponent("Mexico", true),
+        TraceSource::opponent("Italy", true),
+        TraceSource::opponent("Uruguay", true),
+    ];
+    let mut scalers = ScalerSpec::threshold_sweep();
+    scalers.extend(ScalerSpec::load_sweep());
+    scalers.push(ScalerSpec::load_plus_appdata(0.99999, 4));
+    let matrix = ScenarioMatrix::cross(&sources, &cfg, &[Overrides::default()], &scalers, 3);
+    println!(
+        "grid: {} matches x {} scalers = {} CI-converged scenarios",
+        sources.len(),
+        scalers.len(),
+        matrix.len()
+    );
+
+    // Warm the trace cache so both timings measure simulation, not
+    // generation (the serial path would otherwise pay it first).
+    for s in &sources {
+        s.load().expect("trace generates");
+    }
+
+    let t0 = Instant::now();
+    let serial = matrix.run_serial().expect("serial run");
+    let serial_secs = t0.elapsed().as_secs_f64();
+    println!("serial   (1 thread):   {serial_secs:>7.2} s");
+
+    let threads = default_threads();
+    let t1 = Instant::now();
+    let parallel = matrix.run(threads).expect("parallel run");
+    let parallel_secs = t1.elapsed().as_secs_f64();
+    println!("parallel ({threads} threads): {parallel_secs:>7.2} s");
+    println!("speedup: {:.2}x", serial_secs / parallel_secs.max(1e-9));
+
+    // The speedup must be free: results are bit-identical.
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.name, p.name);
+        assert_eq!(s.reps, p.reps, "{}", s.name);
+        assert_eq!(s.violation_pct.to_bits(), p.violation_pct.to_bits(), "{}", s.name);
+        assert_eq!(s.cpu_hours.to_bits(), p.cpu_hours.to_bits(), "{}", s.name);
+    }
+    println!("determinism: serial and parallel results bit-identical ✓");
+}

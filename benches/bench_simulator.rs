@@ -5,10 +5,10 @@
 use sla_autoscale::autoscale::{AppdataScaler, Composite, LoadScaler, ThresholdScaler};
 use sla_autoscale::config::SimConfig;
 use sla_autoscale::delay::DelayModel;
-use sla_autoscale::experiments::common::{default_mix, scale_config, trace_for};
+use sla_autoscale::experiments::common::{default_mix, scale_config, scale_spec, trace_for};
 use sla_autoscale::sim::Simulator;
 use sla_autoscale::util::bench;
-use sla_autoscale::workload::by_opponent;
+use sla_autoscale::workload::{by_opponent, generate, GeneratorConfig};
 use std::time::Duration;
 
 fn main() {
@@ -63,9 +63,11 @@ fn main() {
         println!("    -> {:.1}M simulated tweets/s", n * s.per_sec() / 1e6);
     }
 
-    // Trace generation itself (workload substrate).
-    let spec = by_opponent("Spain").unwrap();
+    // Trace generation itself (workload substrate) — calls `generate`
+    // directly: `trace_for` now hits the process-wide trace cache and
+    // would only measure an Arc clone.
+    let spec = scale_spec(&by_opponent("Spain").unwrap(), true);
     bench::run("workload/generate Spain (fast)", Duration::from_secs(3), || {
-        std::hint::black_box(trace_for(&spec, true));
+        std::hint::black_box(generate(&spec, &GeneratorConfig::default()));
     });
 }

@@ -1,14 +1,14 @@
 //! Match day: the full 7-match campaign under all three algorithm
-//! families — the Fig 7 comparison as a single run, plus the §V-A
-//! cost-saving headlines.
+//! families — the Fig 7 comparison as a single declarative scenario
+//! matrix, run replication-parallel, plus the §V-A cost-saving headlines.
 //!
 //! Run: `cargo run --release --example match_day [-- --full]`
 //! (`--full` uses the unscaled Table II volumes; takes a few minutes.)
 
-use sla_autoscale::experiments::common::{run_scenario, scale_config, trace_for, default_mix};
-use sla_autoscale::autoscale::{AppdataScaler, Composite, LoadScaler, ThresholdScaler};
+use sla_autoscale::autoscale::ScalerSpec;
 use sla_autoscale::config::SimConfig;
-use sla_autoscale::delay::DelayModel;
+use sla_autoscale::experiments::common::scale_config;
+use sla_autoscale::scenario::{default_threads, Overrides, ScenarioMatrix, TraceSource};
 use sla_autoscale::workload::all_matches;
 
 fn main() {
@@ -17,44 +17,31 @@ fn main() {
         println!("(20x fast replica; pass --full for unscaled Table II volumes)\n");
     }
     let cfg = scale_config(&SimConfig::default(), fast);
-    let model = DelayModel::default();
-    let mix = default_mix();
 
+    // The whole campaign as one grid: 7 matches x 3 algorithm families.
+    let sources: Vec<TraceSource> = all_matches()
+        .iter()
+        .map(|m| TraceSource::opponent(m.opponent, fast))
+        .collect();
+    let scalers = [
+        ScalerSpec::threshold(60.0),
+        ScalerSpec::load(0.99999),
+        ScalerSpec::load_plus_appdata(0.99999, 4),
+    ];
+    let matrix =
+        ScenarioMatrix::cross(&sources, &cfg, &[Overrides::default()], &scalers, 3);
+    let started = std::time::Instant::now();
+    let results = matrix.run(default_threads()).expect("campaign runs");
     println!(
-        "{:<10} {:<26} {:>10} {:>10} {:>5}",
-        "match", "algorithm", "tweets>SLA", "CPU-hours", "reps"
+        "{:<38} {:>10} {:>10} {:>5}",
+        "scenario", "tweets>SLA", "CPU-hours", "reps"
     );
     let mut savings = Vec::new();
-    for spec in all_matches() {
-        let trace = trace_for(&spec, fast);
-        let mut rows = Vec::new();
-        let m1 = model.clone();
-        rows.push(run_scenario(
-            &trace, &cfg, &model,
-            || Box::new(ThresholdScaler::new(0.60)),
-            "threshold-60%".into(), 3,
-        ));
-        let m2 = m1.clone();
-        rows.push(run_scenario(
-            &trace, &cfg, &model,
-            move || Box::new(LoadScaler::new(m2.clone(), 0.99999, mix)),
-            "load-q99.999%".into(), 3,
-        ));
-        let m3 = m1.clone();
-        rows.push(run_scenario(
-            &trace, &cfg, &model,
-            move || {
-                Box::new(Composite::new(
-                    LoadScaler::new(m3.clone(), 0.99999, mix),
-                    AppdataScaler::new(4),
-                ))
-            },
-            "load+appdata+4".into(), 3,
-        ));
-        for r in &rows {
+    for (spec, rows) in all_matches().iter().zip(results.chunks(scalers.len())) {
+        for r in rows {
             println!(
-                "{:<10} {:<26} {:>9.2}% {:>10.2} {:>5}",
-                spec.opponent, r.name, r.violation_pct, r.cpu_hours, r.reps
+                "{:<38} {:>9.2}% {:>10.2} {:>5}",
+                r.name, r.violation_pct, r.cpu_hours, r.reps
             );
         }
         let saving = 1.0 - rows[1].cpu_hours / rows[0].cpu_hours;
@@ -65,4 +52,10 @@ fn main() {
     for (m, s) in savings {
         println!("  {m:<10} {:>5.1}%", s * 100.0);
     }
+    println!(
+        "\n{} scenarios on {} threads in {:.2} s",
+        results.len(),
+        default_threads(),
+        started.elapsed().as_secs_f64()
+    );
 }

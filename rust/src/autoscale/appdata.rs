@@ -35,11 +35,14 @@ pub struct AppdataScaler {
 }
 
 impl AppdataScaler {
+    /// The paper's tuned comparison-window length (§V-B).
+    pub const DEFAULT_WINDOW_SECS: f64 = 120.0;
+
     pub fn new(extra_cpus: u32) -> Self {
         Self {
             jump_threshold: 0.5,
             extra_cpus,
-            window_secs: 120.0,
+            window_secs: Self::DEFAULT_WINDOW_SECS,
             min_samples: 10,
             cooldown_secs: 120.0,
             last_fire: f64::NEG_INFINITY,
@@ -81,7 +84,13 @@ impl AutoScaler for AppdataScaler {
     }
 
     fn name(&self) -> String {
-        format!("appdata+{}", self.extra_cpus)
+        // Kept in lockstep with `ScalerSpec::Appdata`'s string form: the
+        // window only appears when it differs from the paper's 120 s.
+        if (self.window_secs - Self::DEFAULT_WINDOW_SECS).abs() < 1e-9 {
+            format!("appdata+{}", self.extra_cpus)
+        } else {
+            format!("appdata+{}@w{}", self.extra_cpus, super::fmt_param(self.window_secs))
+        }
     }
 }
 

@@ -78,9 +78,7 @@ impl AutoScaler for LoadScaler {
 
     fn name(&self) -> String {
         // print like the paper: 99.999% (trim float artifacts)
-        let pct = format!("{:.5}", self.quantile * 100.0);
-        let pct = pct.trim_end_matches('0').trim_end_matches('.');
-        format!("load-q{pct}%")
+        format!("load-q{}%", super::fmt_quantile_pct(self.quantile))
     }
 }
 

@@ -1,11 +1,14 @@
 //! Auto-scaling algorithms (§IV-C): the classic CPU-usage *threshold*
 //! rule, the a-priori *load* algorithm, the application-data *appdata*
-//! peak detector, and the load+appdata composite the paper evaluates.
+//! peak detector, and the load+appdata composite the paper evaluates —
+//! plus the [`ScalerSpec`] registry that builds any of them (and any
+//! composite combination) from a declarative name + parameters.
 
 pub mod appdata;
 pub mod controller;
 pub mod load;
 pub mod predictive;
+pub mod spec;
 pub mod threshold;
 pub mod vertical;
 
@@ -13,6 +16,7 @@ pub use appdata::AppdataScaler;
 pub use controller::Controller;
 pub use load::LoadScaler;
 pub use predictive::PredictiveScaler;
+pub use spec::ScalerSpec;
 pub use threshold::ThresholdScaler;
 pub use vertical::VerticalScaler;
 
@@ -62,6 +66,45 @@ pub trait AutoScaler {
 
     /// Human-readable name (used in experiment reports).
     fn name(&self) -> String;
+}
+
+/// Shortest stable rendering of a numeric scaler parameter: integral
+/// values print without decimals, anything else with f64's full
+/// round-trip precision — so spec strings parse back to the same value
+/// (62.5 must not print as "62").
+pub(crate) fn fmt_param(v: f64) -> String {
+    let rounded = v.round();
+    if (v - rounded).abs() < 1e-9 {
+        format!("{rounded:.0}")
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Quantile as the paper prints it ("99.999"), falling back to full
+/// precision when 5 decimals would round up to "100" (which would no
+/// longer parse as a quantile).
+pub(crate) fn fmt_quantile_pct(quantile: f64) -> String {
+    let pct = quantile * 100.0;
+    let s = format!("{pct:.5}");
+    let s = s.trim_end_matches('0').trim_end_matches('.');
+    if s == "100" {
+        format!("{pct}")
+    } else {
+        s.to_string()
+    }
+}
+
+/// Boxed trait objects are scalers too, so [`Composite`] can combine
+/// registry-built scalers of erased type.
+impl AutoScaler for Box<dyn AutoScaler> {
+    fn decide(&mut self, obs: &Observation<'_>) -> Decision {
+        (**self).decide(obs)
+    }
+
+    fn name(&self) -> String {
+        (**self).name()
+    }
 }
 
 /// *load* + *appdata* composite (§V-B: "Its use was put to test together

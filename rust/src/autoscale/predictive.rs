@@ -87,7 +87,7 @@ impl AutoScaler for PredictiveScaler {
     }
 
     fn name(&self) -> String {
-        format!("predictive-h{:.0}s", self.horizon_secs)
+        format!("predictive-h{}s", super::fmt_param(self.horizon_secs))
     }
 }
 

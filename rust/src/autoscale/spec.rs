@@ -1,0 +1,334 @@
+//! Declarative scaler specifications: the registry that turns a name +
+//! parameters into any [`AutoScaler`] the crate knows how to build.
+//!
+//! Every experiment scenario used to carry its own `Fn() -> Box<dyn
+//! AutoScaler>` factory closure; a [`ScalerSpec`] is the data those
+//! closures were hiding. Specs are plain values (`Send + Sync`), so the
+//! parallel scenario runner can rebuild a fresh scaler per replication on
+//! any thread, and they round-trip through their string form so the CLI
+//! can accept arbitrary scaler grids.
+//!
+//! String grammar (each form equals the built scaler's `name()`):
+//!
+//! ```text
+//! threshold-60%                 CPU-usage threshold rule (upper bound %)
+//! load-q99.999%                 a-priori load algorithm at a quantile
+//! appdata+4                     sentiment-peak detector, +4 CPUs per peak
+//! appdata+4@w60                 ... with a non-default 60 s window
+//! predictive-h120s              linear-trend forecast, 120 s horizon
+//! vertical-ladder               instance-type ladder (vertical scaling)
+//! load-q99.999%+appdata+4       composite: base "+" peak detector
+//! ```
+
+use super::{
+    AppdataScaler, AutoScaler, Composite as CompositeScaler, LoadScaler, PredictiveScaler,
+    ThresholdScaler, VerticalScaler,
+};
+use crate::delay::DelayModel;
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// Quantile used by registry-built `predictive` / `vertical` scalers
+/// (the paper's headline setting; not encoded in their names).
+pub const REGISTRY_QUANTILE: f64 = 0.99999;
+
+/// A buildable description of one auto-scaling algorithm configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScalerSpec {
+    /// CPU-usage threshold rule; `upper_pct` in (0, 100].
+    Threshold { upper_pct: f64 },
+    /// A-priori *load* algorithm; `quantile` in (0, 1).
+    Load { quantile: f64 },
+    /// Application-data peak detector (never scales in on its own).
+    Appdata { extra: u32, window_secs: f64 },
+    /// Linear-trend forecaster over in-system counts.
+    Predictive { horizon_secs: f64 },
+    /// Instance-type ladder (vertical scaling on the horizontal API).
+    Vertical,
+    /// `base` handles ordinary traffic, `peaks` pre-provisions bursts.
+    Composite { base: Box<ScalerSpec>, peaks: Box<ScalerSpec> },
+}
+
+impl ScalerSpec {
+    /// Threshold rule from an upper bound in percent (e.g. `60.0`).
+    pub fn threshold(upper_pct: f64) -> Self {
+        Self::Threshold { upper_pct }
+    }
+
+    /// Load algorithm at a quantile in (0, 1) (e.g. `0.99999`).
+    pub fn load(quantile: f64) -> Self {
+        Self::Load { quantile }
+    }
+
+    /// Appdata detector with the paper's tuned 120 s window.
+    pub fn appdata(extra: u32) -> Self {
+        Self::Appdata { extra, window_secs: AppdataScaler::DEFAULT_WINDOW_SECS }
+    }
+
+    /// Appdata detector with an explicit comparison window.
+    pub fn appdata_windowed(extra: u32, window_secs: f64) -> Self {
+        Self::Appdata { extra, window_secs }
+    }
+
+    /// Predictive scaler with the given forecast horizon (seconds).
+    pub fn predictive(horizon_secs: f64) -> Self {
+        Self::Predictive { horizon_secs }
+    }
+
+    /// Composite of two specs (`base` + `peaks`).
+    pub fn composite(base: ScalerSpec, peaks: ScalerSpec) -> Self {
+        Self::Composite { base: Box::new(base), peaks: Box::new(peaks) }
+    }
+
+    /// The paper's §V-B configuration: load at `quantile` plus the appdata
+    /// peak detector pre-provisioning `extra` CPUs.
+    pub fn load_plus_appdata(quantile: f64, extra: u32) -> Self {
+        Self::composite(Self::load(quantile), Self::appdata(extra))
+    }
+
+    /// The paper's threshold sweep: 60..99% upper bounds (Fig 7).
+    pub fn threshold_sweep() -> Vec<Self> {
+        [60.0, 70.0, 80.0, 90.0, 99.0].into_iter().map(Self::threshold).collect()
+    }
+
+    /// The paper's load-quantile sweep: q = 0.9 .. 0.99999 (Fig 7).
+    pub fn load_sweep() -> Vec<Self> {
+        [0.90, 0.99, 0.999, 0.9999, 0.99999].into_iter().map(Self::load).collect()
+    }
+
+    /// The paper's appdata sweep: load(`quantile`) + 1..=10 extra CPUs (Fig 8).
+    pub fn appdata_sweep(quantile: f64) -> Vec<Self> {
+        (1..=10).map(|extra| Self::load_plus_appdata(quantile, extra)).collect()
+    }
+
+    /// Construct the scaler this spec describes. `model` and `mix` are the
+    /// a-priori knowledge (per-class cycle distributions, class mix) the
+    /// load-family algorithms assume.
+    pub fn build(&self, model: &DelayModel, mix: [f64; 3]) -> Box<dyn AutoScaler> {
+        match self {
+            Self::Threshold { upper_pct } => Box::new(ThresholdScaler::new(*upper_pct / 100.0)),
+            Self::Load { quantile } => Box::new(LoadScaler::new(model.clone(), *quantile, mix)),
+            Self::Appdata { extra, window_secs } => {
+                let mut scaler = AppdataScaler::new(*extra);
+                scaler.window_secs = *window_secs;
+                Box::new(scaler)
+            }
+            Self::Predictive { horizon_secs } => Box::new(PredictiveScaler::new(
+                model.clone(),
+                REGISTRY_QUANTILE,
+                mix,
+                *horizon_secs,
+            )),
+            Self::Vertical => {
+                Box::new(VerticalScaler::new(model.clone(), REGISTRY_QUANTILE, mix))
+            }
+            Self::Composite { base, peaks } => Box::new(CompositeScaler::new(
+                base.build(model, mix),
+                peaks.build(model, mix),
+            )),
+        }
+    }
+
+    /// Parse the string form (see module docs for the grammar). The
+    /// composite form splits at the first `+` where both sides parse.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if let Some(atom) = Self::parse_atom(s) {
+            return Ok(atom);
+        }
+        for (i, c) in s.char_indices() {
+            if c != '+' {
+                continue;
+            }
+            if let Some(base) = Self::parse_atom(&s[..i]) {
+                if let Ok(peaks) = Self::parse(&s[i + 1..]) {
+                    return Ok(Self::composite(base, peaks));
+                }
+            }
+        }
+        bail!(
+            "unknown algorithm {s:?} (expected threshold-<pct>% | load-q<pct>% | \
+             appdata+<n>[@w<secs>] | predictive-h<secs>s | vertical-ladder | <base>+<peaks>)"
+        )
+    }
+
+    fn parse_atom(s: &str) -> Option<Self> {
+        if let Some(rest) = s.strip_prefix("threshold-") {
+            let rest = rest.strip_suffix('%').unwrap_or(rest);
+            let pct: f64 = rest.parse().ok()?;
+            if pct > 0.0 && pct <= 100.0 {
+                return Some(Self::threshold(pct));
+            }
+            return None;
+        }
+        if let Some(rest) = s.strip_prefix("load-q") {
+            let rest = rest.strip_suffix('%').unwrap_or(rest);
+            let pct: f64 = rest.parse().ok()?;
+            if pct > 0.0 && pct < 100.0 {
+                return Some(Self::load(pct / 100.0));
+            }
+            return None;
+        }
+        if let Some(rest) = s.strip_prefix("load-") {
+            // legacy CLI form: a bare quantile, e.g. load-0.99999
+            let q: f64 = rest.parse().ok()?;
+            if q > 0.0 && q < 1.0 {
+                return Some(Self::load(q));
+            }
+            return None;
+        }
+        if let Some(rest) = s.strip_prefix("appdata+") {
+            let (extra_s, window) = match rest.split_once("@w") {
+                Some((e, w)) => (e, w.parse().ok()?),
+                None => (rest, AppdataScaler::DEFAULT_WINDOW_SECS),
+            };
+            let extra: u32 = extra_s.parse().ok()?;
+            if extra > 0 && window > 0.0 {
+                return Some(Self::appdata_windowed(extra, window));
+            }
+            return None;
+        }
+        if let Some(rest) = s.strip_prefix("predictive-h") {
+            let rest = rest.strip_suffix('s').unwrap_or(rest);
+            let horizon: f64 = rest.parse().ok()?;
+            if horizon > 0.0 {
+                return Some(Self::predictive(horizon));
+            }
+            return None;
+        }
+        if s == "vertical-ladder" || s == "vertical" {
+            return Some(Self::Vertical);
+        }
+        None
+    }
+}
+
+impl fmt::Display for ScalerSpec {
+    /// Must stay in lockstep with each scaler's `name()` (tested below).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Threshold { upper_pct } => {
+                write!(f, "threshold-{}%", super::fmt_param(*upper_pct))
+            }
+            Self::Load { quantile } => {
+                write!(f, "load-q{}%", super::fmt_quantile_pct(*quantile))
+            }
+            Self::Appdata { extra, window_secs } => {
+                if (*window_secs - AppdataScaler::DEFAULT_WINDOW_SECS).abs() < 1e-9 {
+                    write!(f, "appdata+{extra}")
+                } else {
+                    write!(f, "appdata+{extra}@w{}", super::fmt_param(*window_secs))
+                }
+            }
+            Self::Predictive { horizon_secs } => {
+                write!(f, "predictive-h{}s", super::fmt_param(*horizon_secs))
+            }
+            Self::Vertical => write!(f, "vertical-ladder"),
+            Self::Composite { base, peaks } => write!(f, "{base}+{peaks}"),
+        }
+    }
+}
+
+impl std::str::FromStr for ScalerSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mix() -> [f64; 3] {
+        [0.30, 0.30, 0.40]
+    }
+
+    /// One spec per variant (plus sweeps) — the registry's full surface.
+    fn registry_grid() -> Vec<ScalerSpec> {
+        let mut grid = ScalerSpec::threshold_sweep();
+        grid.extend(ScalerSpec::load_sweep());
+        grid.push(ScalerSpec::appdata(4));
+        grid.push(ScalerSpec::appdata_windowed(2, 60.0));
+        grid.push(ScalerSpec::predictive(120.0));
+        grid.push(ScalerSpec::Vertical);
+        // non-integral parameters must survive the string form too
+        grid.push(ScalerSpec::threshold(62.5));
+        grid.push(ScalerSpec::appdata_windowed(3, 90.5));
+        grid.push(ScalerSpec::predictive(45.5));
+        grid.extend(ScalerSpec::appdata_sweep(0.99999));
+        grid.push(ScalerSpec::composite(
+            ScalerSpec::threshold(80.0),
+            ScalerSpec::appdata_windowed(3, 240.0),
+        ));
+        grid
+    }
+
+    #[test]
+    fn every_variant_constructs_and_name_matches_spec_string() {
+        let model = DelayModel::default();
+        for spec in registry_grid() {
+            let scaler = spec.build(&model, mix());
+            assert_eq!(scaler.name(), spec.to_string(), "spec {spec:?}");
+        }
+    }
+
+    #[test]
+    fn string_form_round_trips() {
+        for spec in registry_grid() {
+            let s = spec.to_string();
+            let back = ScalerSpec::parse(&s).unwrap_or_else(|e| panic!("{s:?}: {e}"));
+            assert_eq!(back, spec, "{s:?}");
+            assert_eq!(back.to_string(), s);
+        }
+    }
+
+    #[test]
+    fn parses_legacy_and_relaxed_forms() {
+        assert_eq!(ScalerSpec::parse("threshold-80").unwrap(), ScalerSpec::threshold(80.0));
+        assert_eq!(ScalerSpec::parse("load-0.99999").unwrap(), ScalerSpec::load(0.99999));
+        assert_eq!(ScalerSpec::parse("vertical").unwrap(), ScalerSpec::Vertical);
+        assert_eq!(
+            ScalerSpec::parse(" load-q90% ").unwrap(),
+            ScalerSpec::load(0.9),
+        );
+    }
+
+    #[test]
+    fn composite_parse_binds_first_valid_split() {
+        let spec = ScalerSpec::parse("load-q99.999%+appdata+4").unwrap();
+        assert_eq!(spec, ScalerSpec::load_plus_appdata(0.99999, 4));
+        // three-way chains associate to the right
+        let chain = ScalerSpec::parse("threshold-80%+appdata+1+appdata+2").unwrap();
+        assert_eq!(
+            chain,
+            ScalerSpec::composite(
+                ScalerSpec::threshold(80.0),
+                ScalerSpec::composite(ScalerSpec::appdata(1), ScalerSpec::appdata(2)),
+            )
+        );
+    }
+
+    #[test]
+    fn garbage_rejected_with_algorithm_error() {
+        for bad in ["magic-9000", "threshold-500%", "load-q0%", "appdata+0", "", "+", "load-"] {
+            let err = ScalerSpec::parse(bad).unwrap_err();
+            assert!(
+                format!("{err}").contains("unknown algorithm"),
+                "{bad:?}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn built_scalers_match_direct_construction() {
+        let model = DelayModel::default();
+        // The spec path must not perturb parameters (exact float equality).
+        let via_spec = ScalerSpec::load(0.99999).build(&model, mix());
+        let direct = LoadScaler::new(model.clone(), 0.99999, mix());
+        assert_eq!(via_spec.name(), crate::autoscale::AutoScaler::name(&direct));
+        let thr = ScalerSpec::threshold(60.0).build(&model, mix());
+        assert_eq!(thr.name(), "threshold-60%");
+    }
+}

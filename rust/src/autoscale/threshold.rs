@@ -39,7 +39,7 @@ impl AutoScaler for ThresholdScaler {
     }
 
     fn name(&self) -> String {
-        format!("threshold-{:.0}%", self.upper * 100.0)
+        format!("threshold-{}%", super::fmt_param(self.upper * 100.0))
     }
 }
 

@@ -11,30 +11,17 @@
 //!   scaler.
 //! * **predictive (system-metric) vs appdata (application-metric)** —
 //!   Scryer-style forecasting from §II as a forward-looking baseline.
+//!
+//! Each ablation is a declarative scenario matrix over the engine in
+//! `crate::scenario` — the config axis uses `Overrides`, the scaler axis
+//! `ScalerSpec`.
 
-use super::common::{default_mix, run_scenario, scale_config, trace_for, ScenarioResult};
-use super::report::table;
-use crate::autoscale::{
-    AppdataScaler, Composite, LoadScaler, PredictiveScaler, VerticalScaler,
-};
+use super::common::scale_config;
+use super::report::{result_rows, table, RESULT_HEADERS};
+use crate::autoscale::ScalerSpec;
 use crate::config::SimConfig;
-use crate::delay::DelayModel;
-use crate::workload::by_opponent;
+use crate::scenario::{default_threads, Overrides, Scenario, ScenarioMatrix, TraceSource};
 use anyhow::Result;
-
-fn rows(results: &[ScenarioResult]) -> Vec<Vec<String>> {
-    results
-        .iter()
-        .map(|r| {
-            vec![
-                r.name.clone(),
-                format!("{:.2}%", r.violation_pct),
-                format!("{:.2}", r.cpu_hours),
-                r.reps.to_string(),
-            ]
-        })
-        .collect()
-}
 
 /// §V-B window-length sweep for the appdata detector on Brazil vs Spain.
 pub struct AblationWindow;
@@ -49,31 +36,29 @@ impl super::Experiment for AblationWindow {
     }
 
     fn run(&self, fast: bool) -> Result<String> {
-        let spec = by_opponent("Spain").unwrap();
-        let trace = trace_for(&spec, fast);
+        let source = TraceSource::opponent("Spain", fast);
         let cfg = scale_config(&SimConfig::default(), fast);
-        let model = DelayModel::default();
-        let mix = default_mix();
-        let mut results = Vec::new();
-        for window in [30.0, 60.0, 120.0, 240.0, 480.0] {
-            let m = model.clone();
-            results.push(run_scenario(
-                &trace,
-                &cfg,
-                &model,
-                move || {
-                    let mut app = AppdataScaler::new(4);
-                    app.window_secs = window;
-                    Box::new(Composite::new(LoadScaler::new(m.clone(), 0.99999, mix), app))
-                },
-                format!("appdata+4/w={window:.0}s"),
-                if fast { 3 } else { 6 },
-            ));
-        }
+        let max_reps = if fast { 3 } else { 6 };
+        let grid: Vec<Scenario> = [30.0, 60.0, 120.0, 240.0, 480.0]
+            .into_iter()
+            .map(|window| {
+                Scenario::new(
+                    source.clone(),
+                    cfg.clone(),
+                    ScalerSpec::composite(
+                        ScalerSpec::load(0.99999),
+                        ScalerSpec::appdata_windowed(4, window),
+                    ),
+                    max_reps,
+                )
+                .named(format!("appdata+4/w={window:.0}s"))
+            })
+            .collect();
+        let results = ScenarioMatrix::from_rows(grid).run(default_threads())?;
         Ok(table(
             "Ablation — appdata window length (Brazil vs Spain)",
-            &["scenario", "tweets>SLA", "CPU-hours", "reps"],
-            &rows(&results),
+            &RESULT_HEADERS,
+            &result_rows(&results),
         ))
     }
 }
@@ -91,44 +76,29 @@ impl super::Experiment for AblationTiming {
     }
 
     fn run(&self, fast: bool) -> Result<String> {
-        let spec = by_opponent("Spain").unwrap();
-        let trace = trace_for(&spec, fast);
-        let model = DelayModel::default();
-        let mix = default_mix();
-        let mut results = Vec::new();
-        for (adapt, provision) in
-            [(30.0, 30.0), (60.0, 60.0), (60.0, 180.0), (120.0, 300.0)]
-        {
-            let base = SimConfig { adapt_secs: adapt, provision_secs: provision, ..Default::default() };
-            let cfg = scale_config(&base, fast);
-            let m = model.clone();
-            results.push(run_scenario(
-                &trace,
-                &cfg,
-                &model,
-                move || Box::new(LoadScaler::new(m.clone(), 0.99999, mix)),
-                format!("load/adapt={adapt:.0}s,prov={provision:.0}s"),
-                if fast { 3 } else { 6 },
-            ));
-            let m = model.clone();
-            results.push(run_scenario(
-                &trace,
-                &cfg,
-                &model,
-                move || {
-                    Box::new(Composite::new(
-                        LoadScaler::new(m.clone(), 0.99999, mix),
-                        AppdataScaler::new(4),
-                    ))
-                },
-                format!("+appdata4/adapt={adapt:.0}s,prov={provision:.0}s"),
-                if fast { 3 } else { 6 },
-            ));
-        }
+        let base = scale_config(&SimConfig::default(), fast);
+        let timings: Vec<Overrides> = [(30.0, 30.0), (60.0, 60.0), (60.0, 180.0), (120.0, 300.0)]
+            .into_iter()
+            .map(|(adapt, provision)| Overrides {
+                adapt_secs: Some(adapt),
+                provision_secs: Some(provision),
+                ..Default::default()
+            })
+            .collect();
+        let scalers =
+            [ScalerSpec::load(0.99999), ScalerSpec::load_plus_appdata(0.99999, 4)];
+        let matrix = ScenarioMatrix::cross(
+            &[TraceSource::opponent("Spain", fast)],
+            &base,
+            &timings,
+            &scalers,
+            if fast { 3 } else { 6 },
+        );
+        let results = matrix.run(default_threads())?;
         Ok(table(
             "Ablation — adaptation/provisioning timing (Brazil vs Spain)",
-            &["scenario", "tweets>SLA", "CPU-hours", "reps"],
-            &rows(&results),
+            &RESULT_HEADERS,
+            &result_rows(&results),
         ))
     }
 }
@@ -146,35 +116,22 @@ impl super::Experiment for AblationStrategies {
     }
 
     fn run(&self, fast: bool) -> Result<String> {
-        let spec = by_opponent("Uruguay").unwrap();
-        let trace = trace_for(&spec, fast);
+        let source = TraceSource::opponent("Uruguay", fast);
         let cfg = scale_config(&SimConfig::default(), fast);
-        let model = DelayModel::default();
-        let mix = default_mix();
-        let reps = if fast { 3 } else { 6 };
-        let mut results = Vec::new();
-        let m = model.clone();
-        results.push(run_scenario(
-            &trace, &cfg, &model,
-            move || Box::new(LoadScaler::new(m.clone(), 0.99999, mix)),
-            "horizontal/load-q99.999%".into(), reps,
-        ));
-        let m = model.clone();
-        results.push(run_scenario(
-            &trace, &cfg, &model,
-            move || Box::new(VerticalScaler::new(m.clone(), 0.99999, mix)),
-            "vertical/ladder".into(), reps,
-        ));
-        let m = model.clone();
-        results.push(run_scenario(
-            &trace, &cfg, &model,
-            move || Box::new(PredictiveScaler::new(m.clone(), 0.99999, mix, 120.0)),
-            "predictive/h=120s".into(), reps,
-        ));
+        let max_reps = if fast { 3 } else { 6 };
+        let row = |scaler: ScalerSpec, name: &str| {
+            Scenario::new(source.clone(), cfg.clone(), scaler, max_reps).named(name)
+        };
+        let grid = vec![
+            row(ScalerSpec::load(0.99999), "horizontal/load-q99.999%"),
+            row(ScalerSpec::Vertical, "vertical/ladder"),
+            row(ScalerSpec::predictive(120.0), "predictive/h=120s"),
+        ];
+        let results = ScenarioMatrix::from_rows(grid).run(default_threads())?;
         Ok(table(
             "Ablation — scaling strategies (Brazil vs Uruguay)",
-            &["scenario", "tweets>SLA", "CPU-hours", "reps"],
-            &rows(&results),
+            &RESULT_HEADERS,
+            &result_rows(&results),
         ))
     }
 }

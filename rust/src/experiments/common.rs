@@ -1,79 +1,21 @@
-//! Shared experiment plumbing: fast-mode scaling and CI-driven replication.
+//! Shared experiment plumbing, now a thin veneer over the scenario
+//! engine (`crate::scenario`): fast-mode scaling, the process-wide trace
+//! cache, and the CI-replication result type all live there and are
+//! re-exported here for the experiment modules and external callers.
 
-use crate::autoscale::AutoScaler;
-use crate::config::SimConfig;
-use crate::delay::DelayModel;
-use crate::sim::Simulator;
-use crate::stats::Replications;
-use crate::workload::{generate, GeneratorConfig, MatchSpec, Trace};
+use crate::scenario::TraceSource;
+use crate::workload::{GeneratorConfig, MatchSpec, Trace};
+use std::sync::Arc;
 
-/// Volume scale factor used in fast mode.
-pub const FAST_FACTOR: u64 = 20;
+pub use crate::scenario::{scale_config, scale_spec, ScenarioResult, FAST_FACTOR};
 
-/// Fast-mode replica of a match: tweets/second and per-CPU capacity are
-/// both divided by `FAST_FACTOR`, so the *load* (and therefore the scaling
-/// dynamics, violation percentages and CPU-hour costs) is statistically
-/// unchanged while the simulation shrinks 20×.
-pub fn scale_spec(spec: &MatchSpec, fast: bool) -> MatchSpec {
-    if !fast {
-        return spec.clone();
-    }
-    MatchSpec { total_tweets: spec.total_tweets / FAST_FACTOR, ..spec.clone() }
-}
-
-/// Companion config scaling (see [`scale_spec`]).
-pub fn scale_config(cfg: &SimConfig, fast: bool) -> SimConfig {
-    if !fast {
-        return cfg.clone();
-    }
-    SimConfig { cpu_hz: cfg.cpu_hz / FAST_FACTOR as f64, ..cfg.clone() }
-}
-
-/// Generate the trace for a (possibly fast-scaled) match.
-pub fn trace_for(spec: &MatchSpec, fast: bool) -> Trace {
-    generate(&scale_spec(spec, fast), &GeneratorConfig::default())
-}
-
-/// Outcome of a CI-converged scenario.
-#[derive(Debug, Clone)]
-pub struct ScenarioResult {
-    pub name: String,
-    pub violation_pct: f64,
-    pub cpu_hours: f64,
-    pub reps: usize,
-}
-
-/// Run one (trace, scaler-factory) scenario repeatedly until the paper's
-/// CI rule converges on the violation percentage; costs are averaged over
-/// the same replications.
-pub fn run_scenario<F>(
-    trace: &Trace,
-    base_cfg: &SimConfig,
-    model: &DelayModel,
-    make_scaler: F,
-    name: String,
-    max_reps: usize,
-) -> ScenarioResult
-where
-    F: Fn() -> Box<dyn AutoScaler>,
-{
-    let mut viol = Replications::new(3, max_reps.max(3), 0.10);
-    let mut cost = 0.0;
-    let mut rep = 0u64;
-    while !viol.converged() {
-        let cfg = base_cfg.with_seed(base_cfg.seed.wrapping_add(rep * 7919));
-        let sim = Simulator::new(&cfg, model);
-        let res = sim.run(trace, make_scaler());
-        viol.push(res.violation_pct());
-        cost += res.cpu_hours;
-        rep += 1;
-    }
-    ScenarioResult {
-        name,
-        violation_pct: viol.mean(),
-        cpu_hours: cost / rep as f64,
-        reps: rep as usize,
-    }
+/// Generate (or reuse from the process cache) the trace for a possibly
+/// fast-scaled match. Shared `Arc` — the Spain trace backs half the
+/// experiment suite and is generated exactly once.
+pub fn trace_for(spec: &MatchSpec, fast: bool) -> Arc<Trace> {
+    TraceSource::spec(spec.clone(), fast)
+        .load()
+        .expect("synthetic trace generation is infallible")
 }
 
 /// Default class mix (must match `GeneratorConfig::default().class_mix`).
@@ -84,7 +26,7 @@ pub fn default_mix() -> [f64; 3] {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::autoscale::LoadScaler;
+    use crate::config::SimConfig;
     use crate::workload::by_opponent;
 
     #[test]
@@ -102,26 +44,16 @@ mod tests {
     }
 
     #[test]
-    fn scenario_produces_converged_result() {
-        let spec = MatchSpec {
-            opponent: "CI",
-            date: "—",
-            total_tweets: 20_000,
-            length_hours: 0.25,
-            events: vec![],
-        };
-        let trace = generate(&spec, &GeneratorConfig::default());
-        let cfg = SimConfig::default();
-        let model = DelayModel::default();
-        let r = run_scenario(
-            &trace,
-            &cfg,
-            &model,
-            || Box::new(LoadScaler::new(DelayModel::default(), 0.99, default_mix())),
-            "t".into(),
-            5,
-        );
-        assert!(r.reps >= 3);
-        assert!(r.cpu_hours > 0.0);
+    fn trace_for_shares_the_cached_trace() {
+        let spec = by_opponent("France").unwrap();
+        let a = trace_for(&spec, true);
+        let b = trace_for(&spec, true);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn default_mix_matches_generator() {
+        assert_eq!(default_mix(), GeneratorConfig::default().class_mix);
     }
 }

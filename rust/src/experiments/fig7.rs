@@ -7,12 +7,12 @@
 //! threshold on quality too. England/France: both perfect (left out of
 //! the paper's figure, included with `--all` / `fast=false` runs here).
 
-use super::common::{default_mix, run_scenario, scale_config, trace_for, ScenarioResult};
-use super::report::table;
+use super::common::scale_config;
+use super::report::{result_rows, table, RESULT_HEADERS};
 use super::Experiment;
-use crate::autoscale::{LoadScaler, ThresholdScaler};
+use crate::autoscale::ScalerSpec;
 use crate::config::SimConfig;
-use crate::delay::DelayModel;
+use crate::scenario::{default_threads, Scenario, ScenarioMatrix, ScenarioResult, TraceSource};
 use crate::workload::{all_matches, MatchSpec};
 use anyhow::Result;
 
@@ -21,36 +21,24 @@ pub struct Fig7;
 /// The five matches of the paper's figure.
 pub const FIGURE_MATCHES: [&str; 5] = ["Japan", "Mexico", "Italy", "Uruguay", "Spain"];
 
-/// All scenario results for one match.
+/// The figure's scaler axis: the threshold sweep then the load sweep.
+pub fn scaler_grid() -> Vec<ScalerSpec> {
+    let mut grid = ScalerSpec::threshold_sweep();
+    grid.extend(ScalerSpec::load_sweep());
+    grid
+}
+
+/// All scenario results for one match (grid order, CI-converged).
 pub fn run_match(spec: &MatchSpec, fast: bool, max_reps: usize) -> Vec<ScenarioResult> {
-    let trace = trace_for(spec, fast);
     let cfg = scale_config(&SimConfig::default(), fast);
-    let model = DelayModel::default();
-    let mix = default_mix();
-    let mut out = Vec::new();
-    for thr in [0.60, 0.70, 0.80, 0.90, 0.99] {
-        out.push(run_scenario(
-            &trace,
-            &cfg,
-            &model,
-            || Box::new(ThresholdScaler::new(thr)),
-            format!("threshold-{:.0}%", thr * 100.0),
-            max_reps,
-        ));
-    }
-    for q in [0.90, 0.99, 0.999, 0.9999, 0.99999] {
-        let model_c = model.clone();
-        let name = crate::autoscale::AutoScaler::name(&mut LoadScaler::new(model.clone(), q, mix));
-        out.push(run_scenario(
-            &trace,
-            &cfg,
-            &model,
-            move || Box::new(LoadScaler::new(model_c.clone(), q, mix)),
-            name,
-            max_reps,
-        ));
-    }
-    out
+    let source = TraceSource::spec(spec.clone(), fast);
+    let rows: Vec<Scenario> = scaler_grid()
+        .into_iter()
+        .map(|scaler| Scenario::new(source.clone(), cfg.clone(), scaler, max_reps))
+        .collect();
+    ScenarioMatrix::from_rows(rows)
+        .run(default_threads())
+        .expect("fig7 matrix runs")
 }
 
 impl Experiment for Fig7 {
@@ -71,21 +59,11 @@ impl Experiment for Fig7 {
             if fast && !FIGURE_MATCHES.contains(&spec.opponent) {
                 continue;
             }
-            let rows: Vec<Vec<String>> = run_match(&spec, fast, max_reps)
-                .into_iter()
-                .map(|r| {
-                    vec![
-                        r.name,
-                        format!("{:.2}%", r.violation_pct),
-                        format!("{:.2}", r.cpu_hours),
-                        r.reps.to_string(),
-                    ]
-                })
-                .collect();
+            let results = run_match(&spec, fast, max_reps);
             out.push_str(&table(
                 &format!("Fig 7 — BRA vs {}", spec.opponent),
-                &["algorithm", "tweets>SLA", "CPU-hours", "reps"],
-                &rows,
+                &RESULT_HEADERS,
+                &result_rows(&results),
             ));
             out.push('\n');
         }
@@ -130,5 +108,14 @@ mod tests {
             .map(|r| r.cpu_hours)
             .collect();
         assert!(thr[0] > thr[4], "60% ({}) should cost more than 99% ({})", thr[0], thr[4]);
+    }
+
+    #[test]
+    fn grid_order_is_thresholds_then_loads() {
+        let names: Vec<String> = scaler_grid().iter().map(|s| s.to_string()).collect();
+        assert_eq!(names[0], "threshold-60%");
+        assert_eq!(names[4], "threshold-99%");
+        assert_eq!(names[5], "load-q90%");
+        assert_eq!(names[9], "load-q99.999%");
     }
 }

@@ -5,61 +5,38 @@
 //! CPU-h); at +10, 0.12% miss at 34.78 CPU-h — a 92.81% improvement over
 //! load alone and 95.24% over the best threshold at only 12.05% more cost.
 
-use super::common::{default_mix, run_scenario, scale_config, trace_for, ScenarioResult};
-use super::report::table;
+use super::common::scale_config;
+use super::report::{result_rows, table, RESULT_HEADERS};
 use super::Experiment;
-use crate::autoscale::{AppdataScaler, Composite, LoadScaler, ThresholdScaler};
+use crate::autoscale::ScalerSpec;
 use crate::config::SimConfig;
-use crate::delay::DelayModel;
+use crate::scenario::{default_threads, Scenario, ScenarioMatrix, ScenarioResult, TraceSource};
 use crate::workload::by_opponent;
 use anyhow::Result;
 
 pub struct Fig8;
 
+/// The quantile the paper pairs with the appdata detector (§V-B).
+pub const LOAD_QUANTILE: f64 = 0.99999;
+
 /// Scenario results: load-only baseline, appdata +1..+10, threshold-60%.
 pub fn run_spain(fast: bool, max_reps: usize) -> Vec<ScenarioResult> {
     let spec = by_opponent("Spain").unwrap();
-    let trace = trace_for(&spec, fast);
     let cfg = scale_config(&SimConfig::default(), fast);
-    let model = DelayModel::default();
-    let mix = default_mix();
-    let q = 0.99999;
+    let source = TraceSource::spec(spec, fast);
+    let row = |scaler: ScalerSpec| Scenario::new(source.clone(), cfg.clone(), scaler, max_reps);
 
-    let mut out = Vec::new();
-    let m = model.clone();
-    out.push(run_scenario(
-        &trace,
-        &cfg,
-        &model,
-        move || Box::new(LoadScaler::new(m.clone(), q, mix)),
-        "load-only".into(),
-        max_reps,
-    ));
-    for extra in 1..=10u32 {
-        let m = model.clone();
-        out.push(run_scenario(
-            &trace,
-            &cfg,
-            &model,
-            move || {
-                Box::new(Composite::new(
-                    LoadScaler::new(m.clone(), q, mix),
-                    AppdataScaler::new(extra),
-                ))
-            },
-            format!("appdata+{extra}"),
-            max_reps,
-        ));
-    }
-    out.push(run_scenario(
-        &trace,
-        &cfg,
-        &model,
-        || Box::new(ThresholdScaler::new(0.60)),
-        "threshold-60%".into(),
-        max_reps,
-    ));
-    out
+    let mut rows = vec![row(ScalerSpec::load(LOAD_QUANTILE)).named("load-only")];
+    rows.extend(
+        ScalerSpec::appdata_sweep(LOAD_QUANTILE)
+            .into_iter()
+            .enumerate()
+            .map(|(i, scaler)| row(scaler).named(format!("appdata+{}", i + 1))),
+    );
+    rows.push(row(ScalerSpec::threshold(60.0)));
+    ScenarioMatrix::from_rows(rows)
+        .run(default_threads())
+        .expect("fig8 matrix runs")
 }
 
 impl Experiment for Fig8 {
@@ -74,21 +51,10 @@ impl Experiment for Fig8 {
     fn run(&self, fast: bool) -> Result<String> {
         let max_reps = if fast { 3 } else { 10 };
         let results = run_spain(fast, max_reps);
-        let rows: Vec<Vec<String>> = results
-            .iter()
-            .map(|r| {
-                vec![
-                    r.name.clone(),
-                    format!("{:.2}%", r.violation_pct),
-                    format!("{:.2}", r.cpu_hours),
-                    r.reps.to_string(),
-                ]
-            })
-            .collect();
         let mut out = table(
             "Fig 8 — appdata on Brazil vs Spain",
-            &["algorithm", "tweets>SLA", "CPU-hours", "reps"],
-            &rows,
+            &RESULT_HEADERS,
+            &result_rows(&results),
         );
         // headline claims
         let load = &results[0];

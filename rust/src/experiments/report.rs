@@ -1,5 +1,26 @@
 //! ASCII report rendering for experiment outputs (tables and series).
 
+use crate::scenario::ScenarioResult;
+
+/// Column headers matching [`result_rows`].
+pub const RESULT_HEADERS: [&str; 4] = ["scenario", "tweets>SLA", "CPU-hours", "reps"];
+
+/// Render scenario results as table rows (shared by every experiment
+/// that prints a scenario matrix, and by the CLI `matrix` subcommand).
+pub fn result_rows(results: &[ScenarioResult]) -> Vec<Vec<String>> {
+    results
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                format!("{:.2}%", r.violation_pct),
+                format!("{:.2}", r.cpu_hours),
+                r.reps.to_string(),
+            ]
+        })
+        .collect()
+}
+
 /// Render an ASCII table with a header row.
 pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
     let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();

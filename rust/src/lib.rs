@@ -5,17 +5,26 @@
 //! MASCOTS 2015) as a three-layer Rust + JAX + Pallas system:
 //!
 //! * **Layer 3 (this crate)** — workload generation, the stream-processing
-//!   substrate, the discrete-time cluster simulator, the three auto-scaling
-//!   algorithms (*threshold*, *load*, *appdata*), the experiment harness
-//!   that regenerates every table and figure of the paper, and a live
-//!   serving coordinator.
+//!   substrate, the discrete-time cluster simulator, the auto-scaling
+//!   algorithms (*threshold*, *load*, *appdata*, plus predictive and
+//!   vertical baselines), the experiment harness that regenerates every
+//!   table and figure of the paper, and a live serving coordinator.
 //! * **Layer 2** — a JAX sentiment classifier (`python/compile/model.py`),
 //!   trained at build time and AOT-lowered to HLO text.
 //! * **Layer 1** — the fused Pallas MLP kernel inside that classifier
 //!   (`python/compile/kernels/mlp.py`).
 //!
-//! The Rust binary loads `artifacts/*.hlo.txt` through PJRT (`runtime`) —
-//! Python never runs on the request path.
+//! The evaluation stack is built on the **scenario engine** ([`scenario`]):
+//! experiments declare (trace source × config overrides × scaler spec)
+//! matrices as plain data — the scaler axis is an
+//! [`autoscale::ScalerSpec`], a registry entry that round-trips through
+//! its string form (`load-q99.999%+appdata+4`) so the CLI `matrix`
+//! subcommand accepts arbitrary grids. The runner caches generated match
+//! traces behind `Arc<Trace>` (one generation per process) and executes
+//! CI replications on scoped threads, bit-identically to the serial path.
+//!
+//! The Rust binary loads `artifacts/*.hlo.txt` through PJRT (`runtime`,
+//! behind the `pjrt` feature) — Python never runs on the request path.
 
 pub mod autoscale;
 pub mod config;
@@ -24,6 +33,7 @@ pub mod delay;
 pub mod experiments;
 pub mod rng;
 pub mod runtime;
+pub mod scenario;
 pub mod sentiment;
 pub mod sim;
 pub mod stats;

@@ -3,12 +3,11 @@
 //! PJRT sentiment model live.
 
 use anyhow::{bail, Result};
-use sla_autoscale::autoscale::{
-    AppdataScaler, AutoScaler, Composite, LoadScaler, ThresholdScaler,
-};
+use sla_autoscale::autoscale::{AutoScaler, ScalerSpec};
 use sla_autoscale::config::SimConfig;
 use sla_autoscale::delay::DelayModel;
 use sla_autoscale::experiments;
+use sla_autoscale::scenario::{self, Overrides, ScenarioMatrix, TraceSource};
 use sla_autoscale::sim::Simulator;
 use sla_autoscale::workload::{all_matches, by_opponent, generate, GeneratorConfig};
 
@@ -21,12 +20,20 @@ USAGE:
   sla-autoscale gen <opponent> [--out trace.csv] [--seed N]
       Generate a synthetic match trace and write it as CSV.
   sla-autoscale sim <opponent> [--algo SPEC] [--config FILE] [--fast]
-      Simulate one match. SPEC: threshold-<pct> | load-<quantile> |
-      appdata-<extra>   (default: load-0.99999)
+      Simulate one match (default SPEC: load-q99.999%).
+  sla-autoscale matrix <opponents|all> [--algos SPEC[,SPEC...]] [--fast]
+      [--threads N] [--serial] [--max-reps N] [--config FILE]
+      [--sla S] [--adapt S] [--provision S] [--seed N]
+      Run an arbitrary scenario grid (opponents x algorithms) with
+      CI-converged replications in parallel, and print the result table.
   sla-autoscale exp <id|all> [--fast]
-      Regenerate a paper table/figure (table1..3, fig2..8).
+      Regenerate a paper table/figure (table1..3, fig2..8, ablations).
   sla-autoscale serve [opponent] [--count N] [--artifacts DIR]
       Serve the PJRT-compiled sentiment model on a generated live stream.
+
+Algorithm SPECs (the scaler registry's string forms; composable with '+'):
+  threshold-<pct>%   load-q<pct>%   appdata+<n>[@w<secs>]
+  predictive-h<secs>s   vertical-ladder   e.g. load-q99.999%+appdata+4
 ";
 
 /// Tiny argument cursor (offline stand-in for clap).
@@ -61,21 +68,15 @@ impl Args {
     }
 }
 
-fn parse_algo(spec: &str, model: &DelayModel, mix: [f64; 3]) -> Result<Box<dyn AutoScaler>> {
-    if let Some(p) = spec.strip_prefix("threshold-") {
-        let pct: f64 = p.parse()?;
-        return Ok(Box::new(ThresholdScaler::new(pct / 100.0)));
-    }
-    if let Some(q) = spec.strip_prefix("load-") {
-        return Ok(Box::new(LoadScaler::new(model.clone(), q.parse()?, mix)));
-    }
+/// Parse a scaler spec, keeping the legacy `appdata-<extra>` shorthand
+/// for the paper's load(99.999%)+appdata composite.
+fn parse_algo(spec: &str) -> Result<ScalerSpec> {
     if let Some(e) = spec.strip_prefix("appdata-") {
-        return Ok(Box::new(Composite::new(
-            LoadScaler::new(model.clone(), 0.99999, mix),
-            AppdataScaler::new(e.parse()?),
-        )));
+        if let Ok(extra) = e.parse::<u32>() {
+            return Ok(ScalerSpec::load_plus_appdata(0.99999, extra));
+        }
     }
-    bail!("unknown algorithm {spec:?} (threshold-<pct> | load-<q> | appdata-<extra>)")
+    ScalerSpec::parse(spec)
 }
 
 fn main() -> Result<()> {
@@ -116,7 +117,8 @@ fn main() -> Result<()> {
             let trace = experiments::common::trace_for(&spec, fast);
             let model = DelayModel::default();
             let mix = experiments::common::default_mix();
-            let scaler = parse_algo(args.opt("--algo").unwrap_or("load-0.99999"), &model, mix)?;
+            let scaler =
+                parse_algo(args.opt("--algo").unwrap_or("load-q99.999%"))?.build(&model, mix);
             let name = scaler.name();
             let sim = Simulator::new(&cfg, &model);
             let res = sim.run(&trace, scaler);
@@ -127,6 +129,82 @@ fn main() -> Result<()> {
                 res.cpu_hours,
                 res.decisions.len(),
                 res.history.mean_delay(),
+            );
+        }
+        Some("matrix") => {
+            let Some(who) = args.positional(1) else {
+                bail!("matrix: missing opponents (comma-separated names or 'all')")
+            };
+            let fast = args.flag("--fast");
+            let opponents: Vec<String> = if who.eq_ignore_ascii_case("all") {
+                all_matches().iter().map(|m| m.opponent.to_string()).collect()
+            } else {
+                who.split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            };
+            if opponents.is_empty() {
+                bail!("matrix: no opponents given");
+            }
+            let sources: Vec<TraceSource> =
+                opponents.iter().map(|o| TraceSource::opponent(o.clone(), fast)).collect();
+            let scalers: Vec<ScalerSpec> = args
+                .opt("--algos")
+                .unwrap_or("threshold-60%,load-q99.999%,load-q99.999%+appdata+4")
+                .split(',')
+                .map(|a| parse_algo(a.trim()))
+                .collect::<Result<_>>()?;
+            let base = match args.opt("--config") {
+                Some(p) => SimConfig::from_file(p)?,
+                None => SimConfig::default(),
+            };
+            let mut overrides = Overrides::default();
+            if let Some(v) = args.opt("--sla") {
+                overrides.sla_secs = Some(v.parse()?);
+            }
+            if let Some(v) = args.opt("--adapt") {
+                overrides.adapt_secs = Some(v.parse()?);
+            }
+            if let Some(v) = args.opt("--provision") {
+                overrides.provision_secs = Some(v.parse()?);
+            }
+            if let Some(v) = args.opt("--seed") {
+                overrides.seed = Some(v.parse()?);
+            }
+            let max_reps: usize =
+                args.opt("--max-reps").unwrap_or(if fast { "3" } else { "10" }).parse()?;
+            let threads = if args.flag("--serial") {
+                1
+            } else {
+                match args.opt("--threads") {
+                    Some(t) => t.parse()?,
+                    None => scenario::default_threads(),
+                }
+            };
+            let cfg = experiments::common::scale_config(&base, fast);
+            let matrix = ScenarioMatrix::cross(
+                &sources,
+                &cfg,
+                std::slice::from_ref(&overrides),
+                &scalers,
+                max_reps,
+            );
+            let started = std::time::Instant::now();
+            let results = matrix.run(threads)?;
+            print!(
+                "{}",
+                experiments::report::table(
+                    &format!("scenario matrix — {} scenarios", results.len()),
+                    &experiments::report::RESULT_HEADERS,
+                    &experiments::report::result_rows(&results),
+                )
+            );
+            println!(
+                "ran {} scenarios on {} thread(s) in {:.2} s",
+                results.len(),
+                threads,
+                started.elapsed().as_secs_f64()
             );
         }
         Some("exp") => {

@@ -4,12 +4,46 @@
 //! serialized protos — the crate's xla_extension 0.5.1 rejects jax≥0.5
 //! 64-bit instruction ids) → `HloModuleProto::from_text_file` →
 //! `client.compile` → `execute`.
+//!
+//! The `xla` crate is not vendored in this repository, so everything that
+//! touches it is gated behind the `pjrt` feature. Without the feature the
+//! same API compiles to a stub whose constructors return a descriptive
+//! error — callers (CLI `serve`, runtime tests, live-serving example)
+//! degrade gracefully instead of failing the build.
 
-use anyhow::{ensure, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{ensure, Context};
 use std::path::Path;
+
+/// The PJRT client handle scalers compile against. A unit placeholder
+/// when the `pjrt` feature is off (its constructor then always errors).
+#[cfg(feature = "pjrt")]
+pub type Client = xla::PjRtClient;
+
+/// The PJRT client handle (stub: the `pjrt` feature is disabled).
+#[cfg(not(feature = "pjrt"))]
+pub struct Client;
+
+/// Construct the process-wide CPU client.
+#[cfg(feature = "pjrt")]
+pub fn cpu_client() -> Result<Client> {
+    xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))
+}
+
+/// Construct the process-wide CPU client (stub: always errors).
+#[cfg(not(feature = "pjrt"))]
+pub fn cpu_client() -> Result<Client> {
+    anyhow::bail!(
+        "sla-autoscale was built without the `pjrt` feature; \
+         PJRT artifacts cannot be loaded (rebuild with --features pjrt \
+         and the image's xla crate added to [dependencies])"
+    )
+}
 
 /// A compiled sentiment-model variant with a fixed batch size.
 pub struct Executable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     /// Rows per launch (static shape).
     pub batch: usize,
@@ -19,10 +53,11 @@ pub struct Executable {
     pub classes: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Load + compile one HLO-text artifact on the given PJRT client.
     pub fn load(
-        client: &xla::PjRtClient,
+        client: &Client,
         path: &Path,
         batch: usize,
         vocab: usize,
@@ -73,5 +108,27 @@ impl Executable {
             self.classes
         );
         Ok(probs)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    /// Stub loader: always errors (the `pjrt` feature is disabled).
+    pub fn load(
+        _client: &Client,
+        path: &Path,
+        _batch: usize,
+        _vocab: usize,
+        _classes: usize,
+    ) -> Result<Self> {
+        anyhow::bail!(
+            "cannot load {}: sla-autoscale was built without the `pjrt` feature",
+            path.display()
+        )
+    }
+
+    /// Stub executor: always errors (the `pjrt` feature is disabled).
+    pub fn run(&self, _counts: &[f32]) -> Result<Vec<f32>> {
+        anyhow::bail!("sla-autoscale was built without the `pjrt` feature")
     }
 }

@@ -1,13 +1,17 @@
 //! PJRT runtime: loads the AOT-compiled sentiment classifier
 //! (`artifacts/*.hlo.txt`) and serves it from the Rust hot path. Python
 //! never runs here — artifacts are produced once by `make artifacts`.
+//!
+//! The XLA/PJRT backend requires the non-vendored `xla` crate and is
+//! gated behind the `pjrt` cargo feature; without it the loaders return
+//! a descriptive error (see `executable::cpu_client`).
 
 pub mod batcher;
 pub mod executable;
 pub mod meta;
 
 pub use batcher::{plan, Launch};
-pub use executable::Executable;
+pub use executable::{cpu_client, Client, Executable};
 pub use meta::Meta;
 
 use crate::sentiment::{Sentiment, SentimentEngine};
@@ -27,8 +31,7 @@ impl ModelEngine {
     /// Load every batch variant from the artifacts directory.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
         let meta = Meta::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let client = cpu_client()?;
         let mut variants = Vec::new();
         for &b in &meta.batch_variants {
             let path = meta.artifact_path(artifacts_dir, b);

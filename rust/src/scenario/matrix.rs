@@ -1,0 +1,286 @@
+//! Declarative scenario matrices: (trace source × config overrides ×
+//! scaler spec) grids, the shape of the paper's whole evaluation.
+//!
+//! A [`Scenario`] is one cell of the grid — pure data, no closures — and
+//! a [`ScenarioMatrix`] is an ordered list of them plus the shared
+//! a-priori knowledge (delay model, class mix) the load-family scalers
+//! assume. Experiments declare their grids here and hand them to the
+//! runner; nothing in an experiment module builds a scaler by hand.
+
+use super::runner;
+use super::runner::ScenarioResult;
+use super::source::TraceSource;
+use crate::autoscale::ScalerSpec;
+use crate::config::SimConfig;
+use crate::delay::DelayModel;
+use crate::workload::GeneratorConfig;
+use anyhow::Result;
+
+/// One (trace, config, scaler) scenario, run to CI convergence.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Report label (defaults to the scaler spec's string form).
+    pub name: String,
+    pub source: TraceSource,
+    pub config: SimConfig,
+    pub scaler: ScalerSpec,
+    /// Replication budget for the CI stopping rule.
+    pub max_reps: usize,
+}
+
+impl Scenario {
+    pub fn new(source: TraceSource, config: SimConfig, scaler: ScalerSpec, max_reps: usize) -> Self {
+        let name = scaler.to_string();
+        Self { name, source, config, scaler, max_reps }
+    }
+
+    /// Override the report label.
+    pub fn named(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+}
+
+/// Optional knob overrides layered on a base [`SimConfig`] — the config
+/// axis of a grid (each field mirrors a Table III knob).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Overrides {
+    pub cpu_hz: Option<f64>,
+    pub starting_cpus: Option<u32>,
+    pub step_secs: Option<f64>,
+    pub sla_secs: Option<f64>,
+    pub adapt_secs: Option<f64>,
+    pub provision_secs: Option<f64>,
+    pub input_rate: Option<f64>,
+    pub seed: Option<u64>,
+}
+
+impl Overrides {
+    /// Base config with every set field replaced.
+    pub fn apply(&self, base: &SimConfig) -> SimConfig {
+        let mut cfg = base.clone();
+        if let Some(v) = self.cpu_hz {
+            cfg.cpu_hz = v;
+        }
+        if let Some(v) = self.starting_cpus {
+            cfg.starting_cpus = v;
+        }
+        if let Some(v) = self.step_secs {
+            cfg.step_secs = v;
+        }
+        if let Some(v) = self.sla_secs {
+            cfg.sla_secs = v;
+        }
+        if let Some(v) = self.adapt_secs {
+            cfg.adapt_secs = v;
+        }
+        if let Some(v) = self.provision_secs {
+            cfg.provision_secs = v;
+        }
+        if let Some(v) = self.input_rate {
+            cfg.input_rate = Some(v);
+        }
+        if let Some(v) = self.seed {
+            cfg.seed = v;
+        }
+        cfg
+    }
+
+    pub fn is_empty(&self) -> bool {
+        *self == Self::default()
+    }
+
+    /// Compact label of the set fields ("adapt=30s,prov=60s").
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(v) = self.cpu_hz {
+            parts.push(format!("cpu={:.1}GHz", v / 1e9));
+        }
+        if let Some(v) = self.starting_cpus {
+            parts.push(format!("cpus0={v}"));
+        }
+        if let Some(v) = self.step_secs {
+            parts.push(format!("step={v}s"));
+        }
+        if let Some(v) = self.sla_secs {
+            parts.push(format!("sla={v:.0}s"));
+        }
+        if let Some(v) = self.adapt_secs {
+            parts.push(format!("adapt={v:.0}s"));
+        }
+        if let Some(v) = self.provision_secs {
+            parts.push(format!("prov={v:.0}s"));
+        }
+        if let Some(v) = self.input_rate {
+            parts.push(format!("rate={v:.0}/s"));
+        }
+        if let Some(v) = self.seed {
+            parts.push(format!("seed={v}"));
+        }
+        parts.join(",")
+    }
+}
+
+/// An ordered scenario grid with shared a-priori knowledge.
+#[derive(Debug, Clone)]
+pub struct ScenarioMatrix {
+    pub scenarios: Vec<Scenario>,
+    /// Per-class cycle distributions the load-family scalers assume.
+    pub model: DelayModel,
+    /// Class mix "known from the training data".
+    pub mix: [f64; 3],
+}
+
+impl Default for ScenarioMatrix {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScenarioMatrix {
+    pub fn new() -> Self {
+        Self::from_rows(Vec::new())
+    }
+
+    pub fn from_rows(scenarios: Vec<Scenario>) -> Self {
+        Self {
+            scenarios,
+            model: DelayModel::default(),
+            mix: GeneratorConfig::default().class_mix,
+        }
+    }
+
+    pub fn with_model(mut self, model: DelayModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    pub fn push(&mut self, scenario: Scenario) -> &mut Self {
+        self.scenarios.push(scenario);
+        self
+    }
+
+    /// Full cross product: every source × every override × every scaler,
+    /// in that nesting order. Names are `[source/]scaler[/overrides]`,
+    /// with the source prefix only when the grid spans several sources.
+    pub fn cross(
+        sources: &[TraceSource],
+        base: &SimConfig,
+        overrides: &[Overrides],
+        scalers: &[ScalerSpec],
+        max_reps: usize,
+    ) -> Self {
+        let mut rows = Vec::with_capacity(sources.len() * overrides.len() * scalers.len());
+        for source in sources {
+            for ov in overrides {
+                for scaler in scalers {
+                    let mut name = String::new();
+                    if sources.len() > 1 {
+                        name.push_str(&source.label());
+                        name.push('/');
+                    }
+                    name.push_str(&scaler.to_string());
+                    if !ov.is_empty() {
+                        name.push('/');
+                        name.push_str(&ov.label());
+                    }
+                    rows.push(
+                        Scenario::new(source.clone(), ov.apply(base), scaler.clone(), max_reps)
+                            .named(name),
+                    );
+                }
+            }
+        }
+        Self::from_rows(rows)
+    }
+
+    pub fn len(&self) -> usize {
+        self.scenarios.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+
+    /// Run every scenario, `threads`-wide (see [`runner::run_matrix`]).
+    pub fn run(&self, threads: usize) -> Result<Vec<ScenarioResult>> {
+        runner::run_matrix(self, threads)
+    }
+
+    /// The strictly sequential reference path (identical results).
+    pub fn run_serial(&self) -> Result<Vec<ScenarioResult>> {
+        runner::run_matrix(self, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_apply_and_label() {
+        let base = SimConfig::default();
+        let ov = Overrides {
+            adapt_secs: Some(30.0),
+            provision_secs: Some(300.0),
+            ..Default::default()
+        };
+        let cfg = ov.apply(&base);
+        assert_eq!(cfg.adapt_secs, 30.0);
+        assert_eq!(cfg.provision_secs, 300.0);
+        assert_eq!(cfg.cpu_hz, base.cpu_hz);
+        assert_eq!(ov.label(), "adapt=30s,prov=300s");
+        assert!(Overrides::default().is_empty());
+        assert!(!ov.is_empty());
+    }
+
+    #[test]
+    fn cross_orders_and_names_rows() {
+        let sources =
+            [TraceSource::opponent("Japan", true), TraceSource::opponent("Spain", true)];
+        let scalers = [ScalerSpec::threshold(60.0), ScalerSpec::load(0.99999)];
+        let m = ScenarioMatrix::cross(
+            &sources,
+            &SimConfig::default(),
+            &[Overrides::default()],
+            &scalers,
+            3,
+        );
+        assert_eq!(m.len(), 4);
+        let names: Vec<&str> = m.scenarios.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "Japan/threshold-60%",
+                "Japan/load-q99.999%",
+                "Spain/threshold-60%",
+                "Spain/load-q99.999%",
+            ]
+        );
+    }
+
+    #[test]
+    fn single_source_names_omit_prefix() {
+        let m = ScenarioMatrix::cross(
+            &[TraceSource::opponent("Japan", true)],
+            &SimConfig::default(),
+            &[Overrides { sla_secs: Some(120.0), ..Default::default() }],
+            &[ScalerSpec::threshold(80.0)],
+            3,
+        );
+        assert_eq!(m.scenarios[0].name, "threshold-80%/sla=120s");
+        assert_eq!(m.scenarios[0].config.sla_secs, 120.0);
+    }
+
+    #[test]
+    fn scenario_default_name_is_spec_string() {
+        let s = Scenario::new(
+            TraceSource::opponent("Japan", true),
+            SimConfig::default(),
+            ScalerSpec::load_plus_appdata(0.99999, 4),
+            3,
+        );
+        assert_eq!(s.name, "load-q99.999%+appdata+4");
+        assert_eq!(s.named("x").name, "x");
+    }
+}

@@ -1,0 +1,51 @@
+//! Scenario engine: declarative (trace × config × scaler) matrices and a
+//! parallel CI-convergence runner.
+//!
+//! The paper's evaluation is a grid of scenarios — seven match traces,
+//! Table III configuration knobs, and a family of auto-scaling algorithms
+//! — each repeated "until the length of the confidence interval with 95%
+//! confidence was smaller than 10% of the mean" (§V). This module makes
+//! that grid a first-class value:
+//!
+//! * [`TraceSource`] names a workload; generated traces are cached
+//!   process-wide behind `Arc<Trace>`, so each match is generated once no
+//!   matter how many scenarios (or experiment modules) share it.
+//! * [`Scenario`] / [`ScenarioMatrix`] declare grid rows as plain data —
+//!   the scaler axis is an [`crate::autoscale::ScalerSpec`], not a
+//!   factory closure.
+//! * [`run_matrix`](runner::run_matrix) executes rows on a scoped worker
+//!   pool and replications in deterministic waves; results are
+//!   bit-identical to the serial path (replications fold in seed order).
+//!
+//! The whole simulation path (`Trace`, `SimConfig`, `DelayModel`,
+//! `ScalerSpec`, `Simulator`) is `Send + Sync`-clean, asserted below.
+
+pub mod matrix;
+pub mod runner;
+pub mod source;
+
+pub use matrix::{Overrides, Scenario, ScenarioMatrix};
+pub use runner::{default_threads, run_replications, run_matrix, ScenarioResult};
+pub use source::{clear_trace_cache, scale_config, scale_spec, TraceSource, FAST_FACTOR};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn simulation_path_is_send_sync_clean() {
+        // Everything the parallel runner shares across scoped threads.
+        assert_send_sync::<crate::config::SimConfig>();
+        assert_send_sync::<crate::delay::DelayModel>();
+        assert_send_sync::<crate::workload::Trace>();
+        assert_send_sync::<crate::autoscale::ScalerSpec>();
+        assert_send_sync::<TraceSource>();
+        assert_send_sync::<Scenario>();
+        assert_send_sync::<ScenarioMatrix>();
+        assert_send_sync::<ScenarioResult>();
+        assert_send_sync::<crate::sim::Cluster>();
+        assert_send_sync::<crate::sim::History>();
+    }
+}

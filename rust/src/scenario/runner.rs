@@ -1,0 +1,266 @@
+//! Parallel scenario execution with CI-convergence semantics identical
+//! to the original serial loop.
+//!
+//! Two levels of parallelism, both on scoped threads (no runtime deps):
+//!
+//! * **across scenarios** — a worker pool pulls grid rows off an atomic
+//!   cursor; every row is independent (own trace Arc, own config, own
+//!   scaler built from its spec on the worker thread);
+//! * **across replications** — inside one scenario, seeds are evaluated
+//!   in waves of `wave` concurrent simulations, then *pushed in seed
+//!   order* into the paper's CI stopping rule, checking convergence after
+//!   every push exactly like the serial loop did.
+//!
+//! Because each replication is a pure function of `(trace, config(seed),
+//! model, spec)` and results are folded in seed order, the parallel path
+//! is bit-identical to the serial one — `violation_pct`, `cpu_hours` and
+//! the replication count all match (tested in `rust/tests/scenario_engine.rs`).
+
+use super::matrix::ScenarioMatrix;
+use crate::autoscale::ScalerSpec;
+use crate::config::SimConfig;
+use crate::delay::DelayModel;
+use crate::sim::Simulator;
+use crate::stats::Replications;
+use crate::workload::Trace;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Outcome of a CI-converged scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub name: String,
+    pub violation_pct: f64,
+    pub cpu_hours: f64,
+    pub reps: usize,
+}
+
+/// Worker threads to use by default: one per hardware thread.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run one scenario until the paper's CI rule converges on the violation
+/// percentage; costs are averaged over the same replications. `wave` is
+/// the number of replications evaluated concurrently per round (1 = the
+/// serial reference path; any value yields bit-identical results).
+#[allow(clippy::too_many_arguments)]
+pub fn run_replications(
+    trace: &Trace,
+    base_cfg: &SimConfig,
+    model: &DelayModel,
+    scaler: &ScalerSpec,
+    mix: [f64; 3],
+    name: String,
+    max_reps: usize,
+    wave: usize,
+) -> ScenarioResult {
+    // One replication: deterministic in (seed, trace, config, spec).
+    let run_one = |rep: u64| -> (f64, f64) {
+        let cfg = base_cfg.with_seed(base_cfg.seed.wrapping_add(rep.wrapping_mul(7919)));
+        let sim = Simulator::new(&cfg, model);
+        let res = sim.run(trace, scaler.build(model, mix));
+        (res.violation_pct(), res.cpu_hours)
+    };
+
+    let effective_max = max_reps.max(3);
+    let mut viol = Replications::new(3, effective_max, 0.10);
+    let mut cost = 0.0;
+    let mut rep = 0u64;
+    let wave = wave.max(1);
+    'converge: loop {
+        // Never start replications past the hard rep cap — they could
+        // never be folded (overshoot past the CI-convergence point is
+        // unknowable in advance; overshoot past max_reps is not).
+        let take = wave.min(effective_max - rep as usize);
+        let batch: Vec<(f64, f64)> = if take == 1 {
+            vec![run_one(rep)]
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..take)
+                    .map(|i| {
+                        let f = &run_one;
+                        let r = rep + i as u64;
+                        s.spawn(move || f(r))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("replication thread panicked"))
+                    .collect()
+            })
+        };
+        // Fold in seed order; a wave overshooting the convergence point
+        // discards the excess, reproducing the serial stopping rep.
+        for (v, c) in batch {
+            viol.push(v);
+            cost += c;
+            rep += 1;
+            if viol.converged() {
+                break 'converge;
+            }
+        }
+    }
+    ScenarioResult {
+        name,
+        violation_pct: viol.mean(),
+        cpu_hours: cost / rep as f64,
+        reps: rep as usize,
+    }
+}
+
+/// Run a whole matrix `threads`-wide; the result order matches the row
+/// order regardless of scheduling. With more rows than threads the
+/// parallelism is spent across scenarios (serial replications inside
+/// each); with fewer rows the spare threads parallelize replications.
+pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> Result<Vec<ScenarioResult>> {
+    let n = matrix.scenarios.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let threads = threads.max(1);
+    let workers = threads.min(n);
+    let wave = (threads / workers).max(1);
+    if workers == 1 && wave == 1 {
+        let mut results = Vec::with_capacity(n);
+        for s in &matrix.scenarios {
+            let trace = s.source.load()?;
+            results.push(run_replications(
+                &trace,
+                &s.config,
+                &matrix.model,
+                &s.scaler,
+                matrix.mix,
+                s.name.clone(),
+                s.max_reps,
+                1,
+            ));
+        }
+        return Ok(results);
+    }
+
+    // Traces load lazily *inside* the workers: the source cache's per-key
+    // slots let workers generating different traces proceed in parallel
+    // while duplicates of the same trace block on one generation.
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<ScenarioResult>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let row = &matrix.scenarios[i];
+                let outcome = row.source.load().map(|trace| {
+                    run_replications(
+                        &trace,
+                        &row.config,
+                        &matrix.model,
+                        &row.scaler,
+                        matrix.mix,
+                        row.name.clone(),
+                        row.max_reps,
+                        wave,
+                    )
+                });
+                *slots[i].lock().expect("result slot poisoned") = Some(outcome);
+            });
+        }
+    });
+    let mut results = Vec::with_capacity(n);
+    for slot in slots {
+        let outcome = slot
+            .into_inner()
+            .expect("result slot poisoned")
+            .expect("every scenario ran to completion");
+        results.push(outcome?);
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{Scenario, TraceSource};
+    use crate::workload::MatchSpec;
+
+    fn tiny_source() -> TraceSource {
+        TraceSource::spec(
+            MatchSpec {
+                opponent: "RunnerCI",
+                date: "—",
+                total_tweets: 20_000,
+                length_hours: 0.25,
+                events: vec![],
+            },
+            false,
+        )
+    }
+
+    #[test]
+    fn scenario_produces_converged_result() {
+        let trace = tiny_source().load().unwrap();
+        let cfg = SimConfig::default();
+        let model = DelayModel::default();
+        let r = run_replications(
+            &trace,
+            &cfg,
+            &model,
+            &ScalerSpec::load(0.99),
+            [0.30, 0.30, 0.40],
+            "t".into(),
+            5,
+            1,
+        );
+        assert!(r.reps >= 3);
+        assert!(r.cpu_hours > 0.0);
+    }
+
+    #[test]
+    fn empty_matrix_is_a_noop() {
+        let m = ScenarioMatrix::new();
+        assert!(m.run(8).unwrap().is_empty());
+    }
+
+    #[test]
+    fn matrix_preserves_row_order_under_parallelism() {
+        let src = tiny_source();
+        let cfg = SimConfig::default();
+        let rows = vec![
+            Scenario::new(src.clone(), cfg.clone(), ScalerSpec::threshold(60.0), 3),
+            Scenario::new(src.clone(), cfg.clone(), ScalerSpec::threshold(90.0), 3),
+            Scenario::new(src.clone(), cfg.clone(), ScalerSpec::load(0.99), 3),
+            Scenario::new(src, cfg, ScalerSpec::load(0.99999), 3),
+        ];
+        let want: Vec<String> = rows.iter().map(|r| r.name.clone()).collect();
+        let got: Vec<String> = ScenarioMatrix::from_rows(rows)
+            .run(4)
+            .unwrap()
+            .into_iter()
+            .map(|r| r.name)
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn wave_overshoot_discards_excess_reps() {
+        // All-zero violations converge exactly at min_reps = 3; a wave of
+        // 8 must still report 3 reps, like the serial path.
+        let trace = tiny_source().load().unwrap();
+        let cfg = SimConfig::default();
+        let model = DelayModel::default();
+        let spec = ScalerSpec::load(0.99999);
+        let serial = run_replications(
+            &trace, &cfg, &model, &spec, [0.30, 0.30, 0.40], "s".into(), 10, 1,
+        );
+        let wide = run_replications(
+            &trace, &cfg, &model, &spec, [0.30, 0.30, 0.40], "p".into(), 10, 8,
+        );
+        assert_eq!(serial.reps, wide.reps);
+        assert_eq!(serial.violation_pct.to_bits(), wide.violation_pct.to_bits());
+        assert_eq!(serial.cpu_hours.to_bits(), wide.cpu_hours.to_bits());
+    }
+}

@@ -1,0 +1,202 @@
+//! Trace sources and the process-wide trace cache.
+//!
+//! A [`TraceSource`] names a workload declaratively (catalogue match,
+//! explicit [`MatchSpec`], or CSV dump) instead of holding a generated
+//! `Trace`. Loading goes through a process-wide cache keyed by everything
+//! that affects generation, so a match trace shared by many scenarios —
+//! the Spain trace alone backs Table I, Figs 2–4 and Figs 7–8 — is
+//! generated exactly once per process and shared as `Arc<Trace>` across
+//! scenario threads.
+
+use crate::config::SimConfig;
+use crate::workload::{by_opponent, generate, GeneratorConfig, MatchSpec, Trace};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Volume scale factor used in fast mode.
+pub const FAST_FACTOR: u64 = 20;
+
+/// Fast-mode replica of a match: tweets/second and per-CPU capacity are
+/// both divided by [`FAST_FACTOR`], so the *load* (and therefore the
+/// scaling dynamics, violation percentages and CPU-hour costs) is
+/// statistically unchanged while the simulation shrinks 20×.
+pub fn scale_spec(spec: &MatchSpec, fast: bool) -> MatchSpec {
+    if !fast {
+        return spec.clone();
+    }
+    MatchSpec { total_tweets: spec.total_tweets / FAST_FACTOR, ..spec.clone() }
+}
+
+/// Companion config scaling (see [`scale_spec`]).
+pub fn scale_config(cfg: &SimConfig, fast: bool) -> SimConfig {
+    if !fast {
+        return cfg.clone();
+    }
+    SimConfig { cpu_hz: cfg.cpu_hz / FAST_FACTOR as f64, ..cfg.clone() }
+}
+
+/// Where a scenario's workload comes from.
+#[derive(Debug, Clone)]
+pub enum TraceSource {
+    /// A Table II match looked up by opponent name.
+    Match { opponent: String, fast: bool },
+    /// An explicit match spec (fast-scaled on load when `fast`).
+    Spec { spec: MatchSpec, fast: bool },
+    /// A CSV trace written by `Trace::write_csv` (never cached — the file
+    /// can change between loads).
+    Csv { path: PathBuf },
+}
+
+impl TraceSource {
+    pub fn opponent(name: impl Into<String>, fast: bool) -> Self {
+        Self::Match { opponent: name.into(), fast }
+    }
+
+    pub fn spec(spec: MatchSpec, fast: bool) -> Self {
+        Self::Spec { spec, fast }
+    }
+
+    pub fn csv(path: impl Into<PathBuf>) -> Self {
+        Self::Csv { path: path.into() }
+    }
+
+    /// Short label for scenario names ("Spain", "trace.csv", ...).
+    pub fn label(&self) -> String {
+        match self {
+            Self::Match { opponent, .. } => opponent.clone(),
+            Self::Spec { spec, .. } => spec.opponent.to_string(),
+            Self::Csv { path } => path
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_else(|| path.display().to_string()),
+        }
+    }
+
+    /// The (possibly fast-scaled) spec this source generates from.
+    fn resolve_spec(&self) -> Result<MatchSpec> {
+        match self {
+            Self::Match { opponent, fast } => {
+                let spec = by_opponent(opponent)
+                    .ok_or_else(|| anyhow!("unknown opponent {opponent:?}"))?;
+                Ok(scale_spec(&spec, *fast))
+            }
+            Self::Spec { spec, fast } => Ok(scale_spec(spec, *fast)),
+            Self::Csv { path } => Err(anyhow!("{} is a CSV source", path.display())),
+        }
+    }
+
+    /// Load (or reuse) the trace. Generated sources are cached for the
+    /// process lifetime; see [`clear_trace_cache`].
+    pub fn load(&self) -> Result<Arc<Trace>> {
+        if let Self::Csv { path } = self {
+            return Ok(Arc::new(Trace::read_csv(path)?));
+        }
+        let spec = self.resolve_spec()?;
+        let key = spec_key(&spec);
+        // Two-level locking: the map lock is held only to fetch/insert the
+        // per-key slot, so concurrent workers generating *different* traces
+        // proceed in parallel while duplicates of the *same* key block on
+        // the slot's one-time initialization.
+        let slot = {
+            let mut map = cache().lock().expect("trace cache poisoned");
+            map.entry(key).or_default().clone()
+        };
+        Ok(slot.get_or_init(|| Arc::new(generate(&spec, &GeneratorConfig::default()))).clone())
+    }
+}
+
+type Slot = Arc<OnceLock<Arc<Trace>>>;
+
+static CACHE: OnceLock<Mutex<HashMap<String, Slot>>> = OnceLock::new();
+
+fn cache() -> &'static Mutex<HashMap<String, Slot>> {
+    CACHE.get_or_init(Default::default)
+}
+
+/// Drop every cached trace (long-lived processes sweeping many workloads).
+pub fn clear_trace_cache() {
+    cache().lock().expect("trace cache poisoned").clear();
+}
+
+/// Every field that influences generation, exactly rendered.
+fn spec_key(spec: &MatchSpec) -> String {
+    use std::fmt::Write;
+    let mut key = format!(
+        "{}|{}|{}|{}",
+        spec.opponent, spec.date, spec.total_tweets, spec.length_hours
+    );
+    for e in &spec.events {
+        let _ = write!(key, "|{},{},{},{}", e.minute, e.magnitude, e.rise_min, e.decay_min);
+    }
+    key
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(total: u64) -> MatchSpec {
+        MatchSpec {
+            opponent: "CacheTest",
+            date: "—",
+            total_tweets: total,
+            length_hours: 0.05,
+            events: vec![],
+        }
+    }
+
+    #[test]
+    fn same_source_shares_one_generated_trace() {
+        let src = TraceSource::spec(tiny_spec(4_000), false);
+        let a = src.load().unwrap();
+        let b = src.clone().load().unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "cache must hand out the same Arc");
+        assert_eq!(a.len(), b.len());
+    }
+
+    #[test]
+    fn different_sizes_get_different_entries() {
+        let a = TraceSource::spec(tiny_spec(4_000), false).load().unwrap();
+        let b = TraceSource::spec(tiny_spec(2_000), false).load().unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert!(a.len() > b.len());
+    }
+
+    #[test]
+    fn fast_flag_scales_catalogue_match() {
+        let fast = TraceSource::opponent("England", true).load().unwrap();
+        let spec = by_opponent("England").unwrap();
+        let want = spec.total_tweets / FAST_FACTOR;
+        let got = fast.len() as u64;
+        assert!(
+            (got as f64 - want as f64).abs() / want as f64 < 0.05,
+            "generated {got} vs calibrated {want}"
+        );
+    }
+
+    #[test]
+    fn unknown_opponent_is_an_error() {
+        let err = TraceSource::opponent("Germany", true).load().unwrap_err();
+        assert!(format!("{err}").contains("unknown opponent"));
+    }
+
+    #[test]
+    fn csv_roundtrip_is_uncached() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.join("t.csv");
+        let trace = TraceSource::spec(tiny_spec(1_000), false).load().unwrap();
+        trace.write_csv(&path).unwrap();
+        let a = TraceSource::csv(&path).load().unwrap();
+        let b = TraceSource::csv(&path).load().unwrap();
+        assert_eq!(a.len(), trace.len());
+        assert!(!Arc::ptr_eq(&a, &b), "CSV loads must re-read the file");
+    }
+
+    #[test]
+    fn labels_are_short() {
+        assert_eq!(TraceSource::opponent("Spain", true).label(), "Spain");
+        assert_eq!(TraceSource::csv("/tmp/x/trace.csv").label(), "trace.csv");
+    }
+}

@@ -4,7 +4,7 @@
 use sla_autoscale::autoscale::{AutoScaler, LoadScaler, ThresholdScaler};
 use sla_autoscale::config::SimConfig;
 use sla_autoscale::delay::DelayModel;
-use sla_autoscale::runtime::{Executable, Meta};
+use sla_autoscale::runtime::{cpu_client, Executable, Meta};
 use sla_autoscale::sim::Simulator;
 use sla_autoscale::util::TempDir;
 use sla_autoscale::workload::{generate, GeneratorConfig, MatchSpec, Trace};
@@ -78,15 +78,74 @@ fn cli_bad_algo_rejected() {
     assert!(String::from_utf8_lossy(&out.stderr).contains("unknown algorithm"));
 }
 
+#[test]
+fn cli_sim_accepts_composite_spec() {
+    let out = bin()
+        .args(["sim", "France", "--algo", "load-q99.999%+appdata+2", "--fast"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("load-q99.999%+appdata+2"));
+}
+
+#[test]
+fn cli_matrix_runs_a_grid() {
+    let out = bin()
+        .args([
+            "matrix",
+            "France,England",
+            "--algos",
+            "threshold-80%,load-q99%",
+            "--fast",
+            "--threads",
+            "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for want in [
+        "scenario matrix — 4 scenarios",
+        "France/threshold-80%",
+        "France/load-q99%",
+        "England/threshold-80%",
+        "England/load-q99%",
+    ] {
+        assert!(text.contains(want), "missing {want:?} in:\n{text}");
+    }
+}
+
+#[test]
+fn cli_matrix_rejects_bad_algo_and_opponent() {
+    let out = bin().args(["matrix", "France", "--algos", "magic-9000"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown algorithm"));
+
+    let out = bin().args(["matrix", "Atlantis", "--fast"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown opponent"));
+}
+
 // ---------- failure injection ----------
 
 #[test]
 fn corrupted_hlo_artifact_fails_compilation_not_process() {
     let dir = TempDir::new().unwrap();
     std::fs::write(dir.join("bad.hlo.txt"), "HloModule this is not valid hlo {{{").unwrap();
-    let client = xla::PjRtClient::cpu().unwrap();
-    let err = Executable::load(&client, &dir.join("bad.hlo.txt"), 8, 1024, 3);
-    assert!(err.is_err(), "corrupted HLO must be rejected");
+    #[cfg(not(feature = "pjrt"))]
+    {
+        // built without the `pjrt` feature: loading must error, not panic
+        assert!(cpu_client().is_err(), "stub client must report the missing feature");
+        let err =
+            Executable::load(&sla_autoscale::runtime::Client, &dir.join("bad.hlo.txt"), 8, 1024, 3);
+        assert!(err.is_err(), "stub loader must report the missing feature");
+    }
+    #[cfg(feature = "pjrt")]
+    {
+        let client = cpu_client().unwrap();
+        let err = Executable::load(&client, &dir.join("bad.hlo.txt"), 8, 1024, 3);
+        assert!(err.is_err(), "corrupted HLO must be rejected");
+    }
 }
 
 #[test]

@@ -1,0 +1,158 @@
+//! Integration tests for the scenario engine: determinism of the parallel
+//! runner vs the serial reference path, trace-cache sharing, and the
+//! scaler registry driving real simulations.
+
+use sla_autoscale::autoscale::ScalerSpec;
+use sla_autoscale::config::SimConfig;
+use sla_autoscale::delay::DelayModel;
+use sla_autoscale::scenario::{run_replications, Overrides, ScenarioMatrix, TraceSource};
+use sla_autoscale::workload::MatchSpec;
+use std::sync::Arc;
+
+fn small_source(total: u64) -> TraceSource {
+    TraceSource::spec(
+        MatchSpec {
+            opponent: "EngineIT",
+            date: "—",
+            total_tweets: total,
+            length_hours: 0.25,
+            events: vec![],
+        },
+        false,
+    )
+}
+
+fn mix() -> [f64; 3] {
+    [0.30, 0.30, 0.40]
+}
+
+/// The headline determinism guarantee: for a fixed seed set, the parallel
+/// replication path produces bit-identical `violation_pct` / `cpu_hours`
+/// (and the same rep count) as the serial path, for every scaler family.
+#[test]
+fn parallel_replications_bit_identical_to_serial() {
+    let trace = small_source(40_000).load().unwrap();
+    let cfg = SimConfig { sla_secs: 60.0, ..Default::default() };
+    let model = DelayModel::default();
+    let specs = [
+        ScalerSpec::threshold(70.0),
+        ScalerSpec::load(0.99),
+        ScalerSpec::load_plus_appdata(0.99999, 2),
+        ScalerSpec::predictive(120.0),
+        ScalerSpec::Vertical,
+    ];
+    for spec in &specs {
+        let serial = run_replications(
+            &trace, &cfg, &model, spec, mix(), spec.to_string(), 6, 1,
+        );
+        for wave in [2, 4, 8] {
+            let par = run_replications(
+                &trace, &cfg, &model, spec, mix(), spec.to_string(), 6, wave,
+            );
+            assert_eq!(serial.reps, par.reps, "{spec} wave={wave}");
+            assert_eq!(
+                serial.violation_pct.to_bits(),
+                par.violation_pct.to_bits(),
+                "{spec} wave={wave}: {} vs {}",
+                serial.violation_pct,
+                par.violation_pct
+            );
+            assert_eq!(
+                serial.cpu_hours.to_bits(),
+                par.cpu_hours.to_bits(),
+                "{spec} wave={wave}: {} vs {}",
+                serial.cpu_hours,
+                par.cpu_hours
+            );
+        }
+    }
+}
+
+/// Whole-matrix determinism: threaded execution returns the same rows in
+/// the same order as the serial path.
+#[test]
+fn matrix_parallel_matches_serial() {
+    let cfg = SimConfig::default();
+    let sources = [small_source(25_000), small_source(12_000)];
+    let scalers = [ScalerSpec::threshold(60.0), ScalerSpec::load(0.99999)];
+    let matrix = ScenarioMatrix::cross(
+        &sources,
+        &cfg,
+        &[Overrides::default()],
+        &scalers,
+        4,
+    );
+    let serial = matrix.run_serial().unwrap();
+    let parallel = matrix.run(4).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.name, p.name);
+        assert_eq!(s.reps, p.reps, "{}", s.name);
+        assert_eq!(s.violation_pct.to_bits(), p.violation_pct.to_bits(), "{}", s.name);
+        assert_eq!(s.cpu_hours.to_bits(), p.cpu_hours.to_bits(), "{}", s.name);
+    }
+}
+
+/// Config overrides are a real grid axis: a tighter SLA must not improve
+/// (and in an overloaded setting worsens) the violation percentage.
+#[test]
+fn override_axis_changes_outcomes() {
+    let cfg = SimConfig::default();
+    let overrides = [
+        Overrides { sla_secs: Some(300.0), ..Default::default() },
+        Overrides { sla_secs: Some(5.0), ..Default::default() },
+    ];
+    let matrix = ScenarioMatrix::cross(
+        &[small_source(40_000)],
+        &cfg,
+        &overrides,
+        &[ScalerSpec::threshold(99.0)],
+        3,
+    );
+    let results = matrix.run(2).unwrap();
+    assert_eq!(results.len(), 2);
+    assert!(
+        results[1].violation_pct >= results[0].violation_pct,
+        "5 s SLA ({:.2}%) cannot beat 300 s SLA ({:.2}%)",
+        results[1].violation_pct,
+        results[0].violation_pct
+    );
+}
+
+/// Each distinct trace is generated once per process and shared.
+#[test]
+fn matrix_rows_share_cached_traces() {
+    let src = small_source(8_000);
+    let a = src.load().unwrap();
+    let b = src.load().unwrap();
+    assert!(Arc::ptr_eq(&a, &b));
+    // and the experiments' trace_for goes through the same cache
+    let spec = sla_autoscale::workload::by_opponent("Japan").unwrap();
+    let x = sla_autoscale::experiments::common::trace_for(&spec, true);
+    let y = TraceSource::opponent("Japan", true).load().unwrap();
+    assert!(Arc::ptr_eq(&x, &y), "trace_for and TraceSource must share the cache");
+}
+
+/// Registry specs drive real simulations end to end (every family).
+#[test]
+fn registry_specs_simulate_end_to_end() {
+    let trace = small_source(12_000).load().unwrap();
+    let cfg = SimConfig::default();
+    let model = DelayModel::default();
+    for spec_str in [
+        "threshold-80%",
+        "load-q99.999%",
+        "load-q99.999%+appdata+3",
+        "predictive-h120s",
+        "vertical-ladder",
+        "threshold-90%+appdata+2@w60",
+    ] {
+        let spec = ScalerSpec::parse(spec_str).unwrap();
+        let r = run_replications(
+            &trace, &cfg, &model, &spec, mix(), spec.to_string(), 3, 2,
+        );
+        assert_eq!(r.name, spec_str, "name survives the round trip");
+        assert!(r.cpu_hours > 0.0, "{spec_str}");
+        assert!(r.reps >= 3, "{spec_str}");
+    }
+}
