@@ -2,13 +2,14 @@
 //! CI-converged grid, verifying bit-identical results while measuring
 //! the speedup (the PR's ≥2x-on-4-cores headline).
 //!
-//! Run: `cargo run --release --bench bench_matrix`
+//! Run: `cargo bench --bench bench_matrix`
 
 use sla_autoscale::autoscale::ScalerSpec;
 use sla_autoscale::config::SimConfig;
 use sla_autoscale::scenario::{
     default_threads, Overrides, ScenarioMatrix, TraceSource,
 };
+use sla_autoscale::util::bench;
 use std::time::Instant;
 
 fn main() {
@@ -58,4 +59,33 @@ fn main() {
         assert_eq!(s.cpu_hours.to_bits(), p.cpu_hours.to_bits(), "{}", s.name);
     }
     println!("determinism: serial and parallel results bit-identical ✓");
+
+    // Machine-readable trajectory (PERF.md §Recording benchmarks).
+    let scenarios = matrix.len() as f64;
+    let mut report = bench::JsonReport::new("bench_matrix");
+    report.set_note(
+        "serial vs parallel wall time of the same CI-converged grid; \
+         regenerate with `cargo bench --bench bench_matrix`.",
+    );
+    report.push_metrics(
+        "matrix/serial",
+        "current",
+        &[("secs", serial_secs), ("scenarios_per_sec", scenarios / serial_secs.max(1e-9))],
+    );
+    report.push_metrics(
+        "matrix/parallel",
+        "current",
+        &[
+            ("secs", parallel_secs),
+            ("threads", threads as f64),
+            ("scenarios_per_sec", scenarios / parallel_secs.max(1e-9)),
+        ],
+    );
+    report.push_metrics(
+        "matrix/speedup",
+        "current",
+        &[("parallel_over_serial", serial_secs / parallel_secs.max(1e-9))],
+    );
+    report.write("BENCH_matrix.json").expect("writing BENCH_matrix.json");
+    println!("wrote BENCH_matrix.json");
 }

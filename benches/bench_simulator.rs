@@ -1,22 +1,152 @@
 //! End-to-end simulator benchmarks: one full match simulation per paper
 //! scenario family (the Fig 7/8 workhorse). Reports wall time and
-//! simulated-tweet throughput — the §Perf L3 headline numbers.
+//! simulated-tweet throughput, and writes the machine-readable
+//! `BENCH_simulator.json` perf trajectory (PERF.md §Recording benchmarks).
+//!
+//! Besides the end-to-end runs (role `after` — the virtual-time engine),
+//! a kernel replica drives the *same* arrival/budget schedule through the
+//! pre-overhaul dense-slice fixed-point distributor (role `before`) and
+//! the virtual-time [`PsSchedule`], so every run re-measures the
+//! before/after hot-loop ratio on the current machine.
+//!
+//! Env: `BENCH_BUDGET_SECS` shrinks/extends the per-benchmark sampling
+//! budget (CI smoke uses 1).
 
 use sla_autoscale::autoscale::{AppdataScaler, Composite, LoadScaler, ThresholdScaler};
 use sla_autoscale::config::SimConfig;
 use sla_autoscale::delay::DelayModel;
 use sla_autoscale::experiments::common::{default_mix, scale_config, scale_spec, trace_for};
+use sla_autoscale::rng::Rng;
+use sla_autoscale::sim::cycles::{Distributor, PsSchedule};
 use sla_autoscale::sim::Simulator;
 use sla_autoscale::util::bench;
-use sla_autoscale::workload::{by_opponent, generate, GeneratorConfig};
+use sla_autoscale::workload::{by_opponent, generate, GeneratorConfig, TweetClass};
 use std::time::Duration;
+
+fn budget() -> Duration {
+    std::env::var("BENCH_BUDGET_SECS")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Duration::from_secs_f64)
+        .unwrap_or(Duration::from_secs(3))
+}
+
+/// Per-step arrival schedule for the kernel replica: cycle costs drawn
+/// from the paper's delay model at a Spain-burst-like rate, with the
+/// budget set just above the offered load so the in-flight set plateaus
+/// high — the regime where the old distributor's O(in-flight) per-step
+/// cost dominated whole sweeps.
+fn kernel_schedule(model: &DelayModel) -> (Vec<Vec<f64>>, f64) {
+    let mut rng = Rng::new(0xBE7C);
+    let per_step = 60usize;
+    let steps = 1500usize;
+    let mut arrivals = Vec::with_capacity(steps);
+    let mut total_cycles = 0.0;
+    for _ in 0..steps {
+        let mut step = Vec::with_capacity(per_step);
+        for k in 0..per_step {
+            let class = if k % 2 == 0 { TweetClass::Analyzed } else { TweetClass::OffTopic };
+            let c = model.sample_cycles(class, &mut rng).max(1.0);
+            total_cycles += c;
+            step.push(c);
+        }
+        arrivals.push(step);
+    }
+    // 2% headroom over the mean offered load: long queues, slow drain.
+    let budget_cycles = 1.02 * total_cycles / steps as f64;
+    (arrivals, budget_cycles)
+}
+
+/// The pre-overhaul inner loop: dense remaining-cycles slice, fixed-point
+/// distributor, swap_remove compaction. Returns completions (sanity).
+fn legacy_kernel(arrivals: &[Vec<f64>], budget_cycles: f64) -> u64 {
+    let mut remaining: Vec<f64> = Vec::new();
+    let mut distributor = Distributor::new();
+    let mut done = 0u64;
+    for step in arrivals {
+        remaining.extend_from_slice(step);
+        if !remaining.is_empty() {
+            distributor.distribute(budget_cycles, &mut remaining);
+            for i in (0..distributor.completed().len()).rev() {
+                let idx = distributor.completed()[i];
+                remaining.swap_remove(idx);
+                done += 1;
+            }
+        }
+    }
+    done
+}
+
+/// The overhauled inner loop: virtual-time processor sharing.
+fn virtual_time_kernel(arrivals: &[Vec<f64>], budget_cycles: f64) -> u64 {
+    let mut ps = PsSchedule::new();
+    let mut done = 0u64;
+    let mut slot = 0u32;
+    for step in arrivals {
+        for &c in step {
+            ps.insert(c, slot);
+            slot = slot.wrapping_add(1);
+        }
+        if !ps.is_empty() {
+            ps.step(budget_cycles);
+            done += ps.completed().len() as u64;
+        }
+    }
+    done
+}
 
 fn main() {
     println!("== bench_simulator (fast 20x replicas) ==");
+    let dur = budget();
     let cfg = scale_config(&SimConfig::default(), true);
     let model = DelayModel::default();
     let mix = default_mix();
+    let mut report = bench::JsonReport::new("bench_simulator");
+    report.set_note(
+        "roles: before = pre-overhaul dense-slice kernel replica, after = virtual-time \
+         engine/kernel. Regenerate with `cargo bench --bench bench_simulator` \
+         (BENCH_BUDGET_SECS trims sampling). See PERF.md.",
+    );
 
+    // Hot-loop kernel replica: identical schedule, both distributors.
+    let (arrivals, kernel_budget) = kernel_schedule(&model);
+    let kernel_tweets: usize = arrivals.iter().map(Vec::len).sum();
+    let legacy_done = legacy_kernel(&arrivals, kernel_budget);
+    let vt_done = virtual_time_kernel(&arrivals, kernel_budget);
+    // Same completions up to float dust on the final step's stragglers.
+    assert!(
+        (legacy_done as i64 - vt_done as i64).abs() <= 1,
+        "kernel divergence: legacy {legacy_done} vs virtual-time {vt_done}"
+    );
+    let s_legacy = bench::run(
+        &format!("kernel/burst-replica/legacy-fixed-point ({kernel_tweets} tweets)"),
+        dur,
+        || {
+            std::hint::black_box(legacy_kernel(&arrivals, kernel_budget));
+        },
+    );
+    let legacy_tps = kernel_tweets as f64 * s_legacy.per_sec();
+    println!("    -> {:.2}M distributed tweets/s", legacy_tps / 1e6);
+    report.push_sample("before", &s_legacy, &[("simulated_tweets_per_sec", legacy_tps)]);
+    let s_vt = bench::run(
+        &format!("kernel/burst-replica/virtual-time ({kernel_tweets} tweets)"),
+        dur,
+        || {
+            std::hint::black_box(virtual_time_kernel(&arrivals, kernel_budget));
+        },
+    );
+    let vt_tps = kernel_tweets as f64 * s_vt.per_sec();
+    println!("    -> {:.2}M distributed tweets/s", vt_tps / 1e6);
+    report.push_sample("after", &s_vt, &[("simulated_tweets_per_sec", vt_tps)]);
+    report.push_metrics(
+        "kernel/burst-replica/speedup",
+        "current",
+        &[("after_over_before", vt_tps / legacy_tps.max(1e-12))],
+    );
+    println!("    => kernel speedup {:.2}x", vt_tps / legacy_tps.max(1e-12));
+
+    // End-to-end simulations (the acceptance profile is
+    // sim/Spain/load-q99.999%).
     for opponent in ["Japan", "Uruguay", "Spain"] {
         let spec = by_opponent(opponent).unwrap();
         let trace = trace_for(&spec, true);
@@ -24,50 +154,49 @@ fn main() {
 
         let s = bench::run(
             &format!("sim/{opponent}/threshold-60%  ({} tweets)", trace.len()),
-            Duration::from_secs(3),
+            dur,
             || {
                 let sim = Simulator::new(&cfg, &model);
                 std::hint::black_box(sim.run(&trace, Box::new(ThresholdScaler::new(0.6))));
             },
         );
         println!("    -> {:.1}M simulated tweets/s", n * s.per_sec() / 1e6);
+        report.push_sample("after", &s, &[("simulated_tweets_per_sec", n * s.per_sec())]);
 
         let m = model.clone();
-        let s = bench::run(
-            &format!("sim/{opponent}/load-q99.999%"),
-            Duration::from_secs(3),
-            || {
-                let sim = Simulator::new(&cfg, &model);
-                std::hint::black_box(
-                    sim.run(&trace, Box::new(LoadScaler::new(m.clone(), 0.99999, mix))),
-                );
-            },
-        );
+        let s = bench::run(&format!("sim/{opponent}/load-q99.999%"), dur, || {
+            let sim = Simulator::new(&cfg, &model);
+            std::hint::black_box(
+                sim.run(&trace, Box::new(LoadScaler::new(m.clone(), 0.99999, mix))),
+            );
+        });
         println!("    -> {:.1}M simulated tweets/s", n * s.per_sec() / 1e6);
+        report.push_sample("after", &s, &[("simulated_tweets_per_sec", n * s.per_sec())]);
 
         let m = model.clone();
-        let s = bench::run(
-            &format!("sim/{opponent}/load+appdata+4"),
-            Duration::from_secs(3),
-            || {
-                let sim = Simulator::new(&cfg, &model);
-                std::hint::black_box(sim.run(
-                    &trace,
-                    Box::new(Composite::new(
-                        LoadScaler::new(m.clone(), 0.99999, mix),
-                        AppdataScaler::new(4),
-                    )),
-                ));
-            },
-        );
+        let s = bench::run(&format!("sim/{opponent}/load+appdata+4"), dur, || {
+            let sim = Simulator::new(&cfg, &model);
+            std::hint::black_box(sim.run(
+                &trace,
+                Box::new(Composite::new(
+                    LoadScaler::new(m.clone(), 0.99999, mix),
+                    AppdataScaler::new(4),
+                )),
+            ));
+        });
         println!("    -> {:.1}M simulated tweets/s", n * s.per_sec() / 1e6);
+        report.push_sample("after", &s, &[("simulated_tweets_per_sec", n * s.per_sec())]);
     }
 
     // Trace generation itself (workload substrate) — calls `generate`
     // directly: `trace_for` now hits the process-wide trace cache and
     // would only measure an Arc clone.
     let spec = scale_spec(&by_opponent("Spain").unwrap(), true);
-    bench::run("workload/generate Spain (fast)", Duration::from_secs(3), || {
+    let s = bench::run("workload/generate Spain (fast)", dur, || {
         std::hint::black_box(generate(&spec, &GeneratorConfig::default()));
     });
+    report.push_sample("after", &s, &[]);
+
+    report.write("BENCH_simulator.json").expect("writing BENCH_simulator.json");
+    println!("wrote BENCH_simulator.json");
 }

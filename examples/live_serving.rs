@@ -29,8 +29,7 @@ fn main() -> anyhow::Result<()> {
     // Only topical tweets reach the sentiment PE (Fig 1: the source filter
     // and topic filter discard the rest), and stride-sample so the stream
     // spans the whole match (all six bursts).
-    let analyzed: Vec<_> =
-        full.tweets.iter().filter(|t| t.sentiment_opt().is_some()).cloned().collect();
+    let analyzed: Vec<_> = full.iter().filter(|t| t.sentiment_opt().is_some()).collect();
     let stride = (analyzed.len() / STREAM_N).max(1);
     let sampled: Vec<_> = analyzed.iter().step_by(stride).cloned().collect();
     let n = sampled.len();

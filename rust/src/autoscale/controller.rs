@@ -47,6 +47,13 @@ impl Controller {
     pub fn decisions(&self) -> &[(f64, Decision)] {
         &self.decisions
     }
+
+    /// Next adaptation time, absolute seconds. The simulator's idle
+    /// fast-forward must stop before any step whose end reaches this
+    /// boundary (same `1e-9` slack as [`Controller::maybe_adapt`]).
+    pub fn next_adapt(&self) -> f64 {
+        self.next_adapt
+    }
 }
 
 #[cfg(test)]

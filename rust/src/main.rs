@@ -255,7 +255,7 @@ fn serve(opponent: &str, count: u64, artifacts: &str) -> Result<()> {
     println!("serving BRA vs {opponent} through the PJRT sentiment model");
     let mut rng = Rng::new(42);
     let started = std::time::Instant::now();
-    for (i, tw) in trace.tweets.iter().take(n).enumerate() {
+    for (i, tw) in trace.iter().take(n).enumerate() {
         let intensity = tw.sentiment_opt().unwrap_or(0.2) as f64;
         let pol = if rng.chance(0.5) { Polarity::Positive } else { Polarity::Negative };
         let text = render_tweet(&mut rng, intensity, pol);

@@ -32,7 +32,7 @@ pub struct Meta {
     pub tokenizer_goldens: Vec<(String, usize)>,
     pub train_acc: f64,
     pub golden: Golden,
-    /// Static L1 perf-model numbers (EXPERIMENTS.md §Perf).
+    /// Static L1 perf-model numbers (PERF.md).
     pub vmem_bytes_per_step: u64,
     pub mxu_flops_b64: u64,
 }

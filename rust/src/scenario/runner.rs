@@ -20,12 +20,26 @@ use super::matrix::ScenarioMatrix;
 use crate::autoscale::ScalerSpec;
 use crate::config::SimConfig;
 use crate::delay::DelayModel;
-use crate::sim::Simulator;
+use crate::sim::{SimScratch, Simulator};
 use crate::stats::Replications;
 use crate::workload::Trace;
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
+
+/// Cap on pooled hot-loop scratches: a burst of wide waves must not pin
+/// unbounded buffer memory for the process lifetime.
+const SCRATCH_POOL_MAX: usize = 64;
+
+/// Process-wide pool of [`SimScratch`] buffers. Sharing across *all*
+/// scenarios (not per `run_replications` call) is what makes replication
+/// sweeps allocation-free: a matrix row's typical 3-replication wave
+/// reuses the buffers warmed by earlier rows instead of allocating its
+/// own and dropping them at convergence.
+fn scratch_pool() -> &'static Mutex<Vec<SimScratch>> {
+    static POOL: OnceLock<Mutex<Vec<SimScratch>>> = OnceLock::new();
+    POOL.get_or_init(Default::default)
+}
 
 /// Outcome of a CI-converged scenario.
 #[derive(Debug, Clone)]
@@ -57,11 +71,21 @@ pub fn run_replications(
     wave: usize,
 ) -> ScenarioResult {
     // One replication: deterministic in (seed, trace, config, spec).
+    // Hot-loop buffers circulate through the process-wide scratch pool,
+    // so steady-state sweeps allocate nothing per replication (results
+    // are unaffected — `SimScratch` reuse is invisible by construction).
     let run_one = |rep: u64| -> (f64, f64) {
+        let mut scratch =
+            scratch_pool().lock().expect("scratch pool poisoned").pop().unwrap_or_default();
         let cfg = base_cfg.with_seed(base_cfg.seed.wrapping_add(rep.wrapping_mul(7919)));
         let sim = Simulator::new(&cfg, model);
-        let res = sim.run(trace, scaler.build(model, mix));
-        (res.violation_pct(), res.cpu_hours)
+        let res = sim.run_with_scratch(trace, scaler.build(model, mix), &mut scratch);
+        let out = (res.violation_pct(), res.cpu_hours);
+        let mut pool = scratch_pool().lock().expect("scratch pool poisoned");
+        if pool.len() < SCRATCH_POOL_MAX {
+            pool.push(scratch);
+        }
+        out
     };
 
     let effective_max = max_reps.max(3);

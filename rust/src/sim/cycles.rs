@@ -5,12 +5,19 @@
 //! their excess is redistributed over the remaining tweets (walked in
 //! ascending order of remaining cycles so every redistribution is final).
 //!
-//! Two implementations live here:
+//! Three implementations live here:
 //! * [`distribute_paper`] — the literal Algorithm 1 (sort + single pass),
 //!   kept as the executable specification;
-//! * [`distribute`] — the optimized equivalent used on the hot path
-//!   (selection of finishers without a full sort; see EXPERIMENTS.md
-//!   §Perf). A property test asserts the two agree.
+//! * [`distribute`] / [`Distributor`] — the dense-slice fixed-point
+//!   equivalent (the previous hot-path version, O(in-flight) per step),
+//!   kept for the spec-equivalence property tests and as the "before"
+//!   kernel in `benches/bench_simulator.rs`;
+//! * [`PsSchedule`] — the virtual-time processor-sharing schedule the
+//!   simulator now runs on: steps with no completions are O(1) and each
+//!   completion is O(log n). See PERF.md §Virtual-time distributor.
+//!
+//! Property tests assert all three agree per step (completion sets
+//! identical, remaining cycles within 1e-6).
 
 /// Outcome of one distribution step.
 #[derive(Debug, Clone, PartialEq)]
@@ -81,9 +88,11 @@ pub fn distribute(cycles_per_step: f64, remaining: &mut [f64]) -> DistributeOutc
     DistributeOutcome { completed: scratch.take_completed(), consumed }
 }
 
-/// Reusable-scratch variant of [`distribute`] for the simulator hot loop:
-/// the completion list and done-marks are owned buffers, so a steady-state
-/// step performs **zero** heap allocations (§Perf).
+/// Reusable-scratch variant of [`distribute`]: the completion list and
+/// done-marks are owned buffers, so a step performs **zero** heap
+/// allocations. Superseded on the simulator hot loop by [`PsSchedule`]
+/// (PERF.md §Virtual-time distributor); kept as the dense-slice reference
+/// kernel.
 #[derive(Debug, Default)]
 pub struct Distributor {
     completed: Vec<usize>,
@@ -153,6 +162,147 @@ impl Distributor {
         // Report completions in ascending order like the paper's walk.
         self.completed.sort_unstable();
         consumed
+    }
+}
+
+/// Virtual-time processor-sharing schedule — the simulator's hot-path
+/// distributor (PERF.md §Virtual-time distributor).
+///
+/// Equal-share-with-redistribution (Algorithm 1) *is* processor sharing
+/// within a step: tweets finish in ascending order of remaining cycles
+/// and every survivor attains the same final share. So the whole
+/// in-flight set can be kept in virtual time: a global attained-share
+/// offset `V` grows as cycles are distributed, each job is keyed by the
+/// immutable finish tag `remaining_at_entry + V_at_entry` in a min-heap,
+/// and a job completes exactly when `V` reaches its tag. A step with no
+/// completions advances `V` once — O(1) regardless of the in-flight
+/// count — and each completion costs one heap pop, O(log n); the old
+/// dense-slice distributors paid O(n) per step in full-slice subtraction
+/// and fixed-point rescans.
+#[derive(Debug, Clone, Default)]
+pub struct PsSchedule {
+    /// Attained share per job since the last rebase (virtual time `V`).
+    offset: f64,
+    /// Min-ordered by finish tag, ties broken by slot id — an arbitrary
+    /// but deterministic order (slot ids are slab positions, not
+    /// admission order; exact ties change nothing but pop order).
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<PsEntry>>,
+    /// Slots completed by the last [`PsSchedule::step`], ascending by
+    /// remaining cycles (the paper's walk order).
+    completed: Vec<u32>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct PsEntry {
+    tag: f64,
+    slot: u32,
+}
+
+impl Eq for PsEntry {}
+
+impl PartialOrd for PsEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for PsEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.tag.total_cmp(&other.tag).then_with(|| self.slot.cmp(&other.slot))
+    }
+}
+
+/// Rebase tags once the offset outgrows this bound, keeping `tag - V`
+/// (remaining cycles) well inside f64 precision on very long busy spells.
+const REBASE_OFFSET: f64 = 1e12;
+
+impl PsSchedule {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Jobs currently in flight.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current virtual time; `tag - offset()` is a job's remaining cycles.
+    /// Only meaningful relative to tags returned by [`PsSchedule::insert`]
+    /// since the schedule last drained (tags rebase when it empties).
+    pub fn offset(&self) -> f64 {
+        self.offset
+    }
+
+    /// Admit a job needing `cycles`; returns its finish tag.
+    pub fn insert(&mut self, cycles: f64, slot: u32) -> f64 {
+        let tag = self.offset + cycles;
+        self.heap.push(std::cmp::Reverse(PsEntry { tag, slot }));
+        tag
+    }
+
+    /// Slots completed by the last [`PsSchedule::step`] call.
+    pub fn completed(&self) -> &[u32] {
+        &self.completed
+    }
+
+    /// Forget all jobs and rewind virtual time (scratch reuse).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.completed.clear();
+        self.offset = 0.0;
+    }
+
+    /// Distribute one step's `budget` cycles (Algorithm 1). Completions
+    /// land in [`PsSchedule::completed`]; returns the cycles consumed
+    /// (== `budget` unless every job finished).
+    pub fn step(&mut self, budget: f64) -> f64 {
+        self.completed.clear();
+        if budget <= 0.0 || self.heap.is_empty() {
+            return 0.0;
+        }
+        if self.offset > REBASE_OFFSET {
+            self.rebase();
+        }
+        let mut left = budget;
+        let mut consumed = 0.0;
+        while let Some(&std::cmp::Reverse(top)) = self.heap.peek() {
+            let n = self.heap.len() as f64;
+            // Cycles needed for every current job to attain the next
+            // finisher's remaining share.
+            let need = (top.tag - self.offset).max(0.0) * n;
+            if need <= left {
+                left -= need;
+                consumed += need;
+                self.offset = self.offset.max(top.tag);
+                self.heap.pop();
+                self.completed.push(top.slot);
+            } else {
+                self.offset += left / n;
+                consumed += left;
+                break;
+            }
+        }
+        if self.heap.is_empty() {
+            // No outstanding tags: rewind virtual time for free.
+            self.offset = 0.0;
+        }
+        consumed
+    }
+
+    fn rebase(&mut self) {
+        let off = self.offset;
+        self.heap = std::mem::take(&mut self.heap)
+            .into_vec()
+            .into_iter()
+            .map(|std::cmp::Reverse(e)| {
+                std::cmp::Reverse(PsEntry { tag: (e.tag - off).max(0.0), slot: e.slot })
+            })
+            .collect();
+        self.offset = 0.0;
     }
 }
 
@@ -272,5 +422,153 @@ mod tests {
             assert!(out.consumed <= budget + 1e-9);
             assert!(r.iter().all(|&v| v >= 0.0));
         }
+    }
+
+    /// Run one `distribute_paper` step and one `PsSchedule` step on the
+    /// same jobs, returning (paper remaining, paper completions-as-slots).
+    fn paper_step(budget: f64, jobs: &[(u32, f64)]) -> (Vec<f64>, Vec<u32>) {
+        let mut remaining: Vec<f64> = jobs.iter().map(|&(_, c)| c).collect();
+        let out = distribute_paper(budget, &mut remaining);
+        let mut slots: Vec<u32> = out.completed.iter().map(|&i| jobs[i].0).collect();
+        slots.sort_unstable();
+        (remaining, slots)
+    }
+
+    #[test]
+    fn schedule_no_completion_step_advances_share_only() {
+        let mut ps = PsSchedule::new();
+        let t0 = ps.insert(100.0, 0);
+        let t1 = ps.insert(100.0, 1);
+        let consumed = ps.step(40.0);
+        assert!(ps.completed().is_empty());
+        assert!((consumed - 40.0).abs() < 1e-9);
+        // each of the two jobs attained 20 cycles
+        assert!((t0 - ps.offset() - 80.0).abs() < 1e-9);
+        assert!((t1 - ps.offset() - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_cascade_matches_paper() {
+        // 1 and 2 finish in one step; the excess cascades to the survivor.
+        let jobs = [(7u32, 1.0), (8u32, 2.0), (9u32, 1000.0)];
+        let (paper_rem, paper_done) = paper_step(30.0, &jobs);
+        let mut ps = PsSchedule::new();
+        let mut tags = Vec::new();
+        for &(slot, c) in &jobs {
+            tags.push(ps.insert(c, slot));
+        }
+        let consumed = ps.step(30.0);
+        let mut done = ps.completed().to_vec();
+        done.sort_unstable();
+        assert_eq!(done, paper_done);
+        assert_eq!(done, vec![7, 8]);
+        assert!((consumed - 30.0).abs() < 1e-9);
+        // survivor's remaining matches the paper walk: 1000 - 27 = 973
+        assert!((tags[2] - ps.offset() - paper_rem[2]).abs() < 1e-6);
+        assert!((tags[2] - ps.offset() - 973.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn schedule_completion_order_is_ascending_remaining() {
+        let mut ps = PsSchedule::new();
+        ps.insert(5.0, 3);
+        ps.insert(1.0, 4);
+        ps.insert(3.0, 5);
+        ps.step(1000.0);
+        assert_eq!(ps.completed(), &[4, 5, 3]);
+    }
+
+    #[test]
+    fn schedule_drain_rewinds_offset_and_reports_partial_consumption() {
+        let mut ps = PsSchedule::new();
+        ps.insert(5.0, 0);
+        ps.insert(5.0, 1);
+        let consumed = ps.step(100.0);
+        assert!((consumed - 10.0).abs() < 1e-9);
+        assert!(ps.is_empty());
+        assert_eq!(ps.offset(), 0.0);
+        // a fresh admission after the drain starts from a clean tag
+        let tag = ps.insert(4.0, 2);
+        assert_eq!(tag, 4.0);
+    }
+
+    #[test]
+    fn schedule_zero_budget_and_empty_are_noops() {
+        let mut ps = PsSchedule::new();
+        assert_eq!(ps.step(10.0), 0.0);
+        ps.insert(5.0, 0);
+        assert_eq!(ps.step(0.0), 0.0);
+        assert!(ps.completed().is_empty());
+        assert_eq!(ps.len(), 1);
+    }
+
+    #[test]
+    fn schedule_multi_step_sequence_matches_paper() {
+        // Drive both implementations through the same arrival/budget
+        // sequence and compare after every step.
+        let mut rng = Rng::new(0x5CED);
+        for _case in 0..100 {
+            let mut ps = PsSchedule::new();
+            let mut jobs: Vec<(u32, f64)> = Vec::new(); // live (slot, remaining)
+            let mut tags: Vec<(u32, f64)> = Vec::new(); // live (slot, tag)
+            let mut next_slot = 0u32;
+            for _step in 0..30 {
+                for _ in 0..rng.below(5) {
+                    let c = rng.next_f64() * 80.0 + 0.01;
+                    let tag = ps.insert(c, next_slot);
+                    jobs.push((next_slot, c));
+                    tags.push((next_slot, tag));
+                    next_slot += 1;
+                }
+                let budget = rng.next_f64() * 100.0;
+                let (rem, done) = paper_step(budget, &jobs);
+                let consumed = ps.step(budget);
+                let mut got = ps.completed().to_vec();
+                got.sort_unstable();
+                assert_eq!(got, done);
+                if budget > 0.0 && !jobs.is_empty() {
+                    let total: f64 = jobs.iter().map(|&(_, c)| c).sum();
+                    assert!((consumed - budget.min(total)).abs() < 1e-6);
+                }
+                // drop completed, check survivors' remaining cycles
+                let keep: Vec<bool> = rem.iter().map(|&r| r > 0.0).collect();
+                let mut kept_jobs = Vec::new();
+                let mut kept_tags = Vec::new();
+                for (k, (&(slot, _), &(tslot, tag))) in jobs.iter().zip(&tags).enumerate() {
+                    if keep[k] {
+                        kept_jobs.push((slot, rem[k]));
+                        kept_tags.push((tslot, tag));
+                    }
+                }
+                jobs = kept_jobs;
+                tags = kept_tags;
+                if !ps.is_empty() {
+                    for (&(_, r), &(_, tag)) in jobs.iter().zip(&tags) {
+                        assert!((tag - ps.offset() - r).abs() < 1e-6);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_rebase_preserves_remaining() {
+        let mut ps = PsSchedule::new();
+        // Push virtual time past the rebase bound with a heavy resident
+        // job, then check its remaining survives the tag rewrite.
+        ps.insert(5e12, 0);
+        for _ in 0..10 {
+            ps.step(2e11); // single job: offset grows by the full budget
+        }
+        // attained = 10 * 2e11 = 2e12 > REBASE_OFFSET: next step rebases
+        ps.insert(7.0, 1);
+        let consumed = ps.step(4.0); // 2 jobs, 2 cycles each: no finish
+        assert!((consumed - 4.0).abs() < 1e-3);
+        let done_before = ps.completed().len();
+        assert_eq!(done_before, 0);
+        // the light job finishes next step; the heavy one keeps its lead
+        ps.step(20.0);
+        assert_eq!(ps.completed(), &[1]);
+        assert_eq!(ps.len(), 1);
     }
 }

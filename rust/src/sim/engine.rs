@@ -8,26 +8,61 @@
 //!   4. at adaptation points, let the auto-scaler react (up/downscale with
 //!      provisioning delay).
 //! The loop continues past the trace horizon until the system drains.
+//!
+//! Hot-path layout (PERF.md): arrivals are ingested as CSR-indexed column
+//! ranges straight from the [`Trace`] (no per-tweet structs or queue
+//! traffic on the default unlimited-rate path), the in-flight set lives in
+//! a virtual-time [`PsSchedule`] (steps with no completions are O(1),
+//! completions O(log n)) with payloads in a slot slab, idle stretches
+//! fast-forward through a bare arithmetic loop that reproduces the full
+//! body's accumulations bit-for-bit, and all buffers come from a reusable
+//! [`SimScratch`] so replication sweeps run allocation-free.
 
 use super::cluster::Cluster;
-use super::cycles::Distributor;
+use super::cycles::PsSchedule;
 use super::history::{Completed, History};
 use super::input_queue::InputQueue;
 use crate::autoscale::{AutoScaler, Controller, Observation};
 use crate::config::SimConfig;
 use crate::delay::DelayModel;
 use crate::rng::Rng;
-use crate::workload::{Trace, Tweet, TweetClass};
+use crate::workload::Trace;
 
-/// A tweet resident in the processing structure. Remaining cycles live in
-/// a parallel `Vec<f64>` (`remaining`) so Algorithm 1 runs on a dense
-/// slice with no per-step gather/scatter (§Perf).
+/// Payload of a tweet resident in the processing structure, stored in the
+/// slot slab parallel to its [`PsSchedule`] entry.
 #[derive(Debug, Clone, Copy)]
 struct InFlight {
     post_time: f64,
     entered_at: f64,
-    class: TweetClass,
+    class: crate::workload::TweetClass,
     sentiment: f32,
+}
+
+/// Reusable hot-loop buffers. One `SimScratch` per worker thread lets the
+/// scenario runner's replication waves run allocation-free: the schedule
+/// heap, the payload slab, its free list, the admission buffer and the
+/// input queue all keep their capacity across runs.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    schedule: PsSchedule,
+    slab: Vec<InFlight>,
+    free: Vec<u32>,
+    queue: InputQueue<u32>,
+    admitted: Vec<u32>,
+}
+
+impl SimScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, input_rate: Option<f64>) {
+        self.schedule.clear();
+        self.slab.clear();
+        self.free.clear();
+        self.queue.reset(input_rate);
+        self.admitted.clear();
+    }
 }
 
 /// Per-second sample of the simulated cluster state (for plots/inspection).
@@ -67,31 +102,90 @@ pub struct Simulator<'a> {
     pub sample_every: u64,
 }
 
+/// Admit trace tweet `i` into the processing structure (or complete it
+/// instantly when its class costs no cycles).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn admit_tweet(
+    trace: &Trace,
+    i: usize,
+    clock: f64,
+    step_end: f64,
+    model: &DelayModel,
+    rng: &mut Rng,
+    history: &mut History,
+    schedule: &mut PsSchedule,
+    slab: &mut Vec<InFlight>,
+    free: &mut Vec<u32>,
+) {
+    let class = trace.class(i);
+    let cycles = model.sample_cycles(class, rng);
+    let post_time = trace.post_time(i);
+    let sentiment = trace.sentiment(i);
+    if cycles <= 0.0 {
+        // zero-cost classes complete instantly at admission
+        history.record(
+            Completed { post_time, finished_at: step_end.max(post_time), class, sentiment },
+            step_end - post_time,
+        );
+        return;
+    }
+    let payload = InFlight { post_time, entered_at: clock, class, sentiment };
+    let slot = match free.pop() {
+        Some(s) => {
+            slab[s as usize] = payload;
+            s
+        }
+        None => {
+            slab.push(payload);
+            (slab.len() - 1) as u32
+        }
+    };
+    schedule.insert(cycles, slot);
+}
+
 impl<'a> Simulator<'a> {
     pub fn new(cfg: &'a SimConfig, model: &'a DelayModel) -> Self {
         Self { cfg, model, sample_every: 0 }
     }
 
-    /// Run `trace` under `scaler`.
+    /// Run `trace` under `scaler` with a run-local scratch.
     pub fn run(&self, trace: &Trace, scaler: Box<dyn AutoScaler>) -> SimResult {
+        let mut scratch = SimScratch::new();
+        self.run_with_scratch(trace, scaler, &mut scratch)
+    }
+
+    /// Run `trace` under `scaler`, reusing `scratch`'s buffers. Results
+    /// are identical to [`Simulator::run`]; replication sweeps that hand
+    /// the same scratch to consecutive runs skip all hot-loop allocation.
+    pub fn run_with_scratch(
+        &self,
+        trace: &Trace,
+        scaler: Box<dyn AutoScaler>,
+        scratch: &mut SimScratch,
+    ) -> SimResult {
         let cfg = self.cfg;
         let mut rng = Rng::new(cfg.seed);
         let mut cluster = Cluster::new(cfg.starting_cpus, cfg.provision_secs);
         let mut controller = Controller::new(scaler, cfg.adapt_secs);
         let mut history = History::new(cfg.sla_secs);
-        let mut queue: InputQueue<Tweet> = match cfg.input_rate {
-            Some(r) => InputQueue::new(r),
-            None => InputQueue::unlimited(),
-        };
-        let mut in_flight: Vec<InFlight> = Vec::new();
-        // parallel to in_flight: remaining cycle budgets (Algorithm 1 input)
-        let mut remaining: Vec<f64> = Vec::new();
-        let mut distributor = Distributor::new();
-        let mut admitted: Vec<Tweet> = Vec::new();
+        // Pre-size the sentiment buckets only for sane horizons; degenerate
+        // ones (absolute timestamps, far-future stragglers) fall back to
+        // geometric growth — same cap as the trace's CSR index.
+        let horizon = trace.horizon();
+        if horizon.is_finite()
+            && (horizon as usize) <= trace.len().saturating_mul(4).saturating_add(1024)
+        {
+            history = history.with_sentiment_horizon(horizon);
+        }
+        scratch.reset(cfg.input_rate);
+        let unlimited = cfg.input_rate.is_none();
+        let SimScratch { schedule, slab, free, queue, admitted } = scratch;
         let mut samples = Vec::new();
 
         // The clock starts at the first tweet's post time (§IV-B).
-        let start = trace.tweets.first().map_or(0.0, |t| t.post_time.floor());
+        let n_tweets = trace.len();
+        let start = if n_tweets == 0 { 0.0 } else { trace.post_time(0).floor() };
         let mut clock = start;
         let mut next_tweet = 0usize;
         let mut steps = 0u64;
@@ -104,49 +198,60 @@ impl<'a> Simulator<'a> {
         loop {
             let step_end = clock + cfg.step_secs;
 
-            // 1a. tweets posted during this window enter the input queue
-            while next_tweet < trace.tweets.len()
-                && trace.tweets[next_tweet].post_time < step_end
-            {
-                queue.push(trace.tweets[next_tweet]);
-                next_tweet += 1;
-            }
-            // 1b. admit up to the input rate into the processing structure
-            queue.drain_step_into(cfg.step_secs, &mut admitted);
-            for &tw in &admitted {
-                let cycles = self.model.sample_cycles(tw.class, &mut rng);
-                if cycles <= 0.0 {
-                    // zero-cost classes complete instantly at admission
-                    history.record(
-                        Completed {
-                            post_time: tw.post_time,
-                            finished_at: step_end.max(tw.post_time),
-                            class: tw.class,
-                            sentiment: tw.sentiment,
-                        },
-                        step_end - tw.post_time,
+            // 1. tweets posted during this window, as one CSR-indexed
+            // column range ...
+            let arrived = trace.lower_bound_from(next_tweet, step_end);
+            if unlimited {
+                // ... admitted directly (the unlimited-rate queue is a
+                // same-step pass-through, so it is skipped entirely)
+                for i in next_tweet..arrived {
+                    admit_tweet(
+                        trace,
+                        i,
+                        clock,
+                        step_end,
+                        self.model,
+                        &mut rng,
+                        &mut history,
+                        schedule,
+                        slab,
+                        free,
                     );
-                    continue;
                 }
-                in_flight.push(InFlight {
-                    post_time: tw.post_time,
-                    entered_at: clock,
-                    class: tw.class,
-                    sentiment: tw.sentiment,
-                });
-                remaining.push(cycles);
+            } else {
+                // ... or metered through the input queue (§IV-B), which
+                // holds column indices, not tweet payloads
+                for i in next_tweet..arrived {
+                    queue.push(i as u32);
+                }
+                queue.drain_step_into(cfg.step_secs, admitted);
+                for k in 0..admitted.len() {
+                    admit_tweet(
+                        trace,
+                        admitted[k] as usize,
+                        clock,
+                        step_end,
+                        self.model,
+                        &mut rng,
+                        &mut history,
+                        schedule,
+                        slab,
+                        free,
+                    );
+                }
             }
+            next_tweet = arrived;
 
-            // 2. distribute this step's cycles (Algorithm 1, zero-alloc)
+            // 2. distribute this step's cycles (Algorithm 1, virtual time)
             let budget = cluster.active() as f64 * cfg.cycles_per_cpu_step();
-            if !in_flight.is_empty() {
-                window_used += distributor.distribute(budget, &mut remaining);
-                // 3. finished tweets -> history (walk indices descending so
-                // swap_remove doesn't disturb pending removals)
-                for i in (0..distributor.completed().len()).rev() {
-                    let idx = distributor.completed()[i];
-                    let t = in_flight.swap_remove(idx);
-                    remaining.swap_remove(idx);
+            if !schedule.is_empty() {
+                window_used += schedule.step(budget);
+                // 3. finished tweets -> history, slots back to the free
+                // list (ascending-remaining order, the paper's walk)
+                for k in 0..schedule.completed().len() {
+                    let slot = schedule.completed()[k];
+                    let t = slab[slot as usize];
+                    free.push(slot);
                     history.record(
                         Completed {
                             post_time: t.post_time,
@@ -171,7 +276,7 @@ impl<'a> Simulator<'a> {
                 now: clock,
                 cpus: cluster.active(),
                 pending_cpus: cluster.pending(),
-                in_system: queue.len() + in_flight.len(),
+                in_system: queue.len() + schedule.len(),
                 cpu_usage,
                 sentiment: history.sentiment(),
                 cpu_hz: cfg.cpu_hz,
@@ -190,14 +295,51 @@ impl<'a> Simulator<'a> {
                     t: clock,
                     cpus: cluster.active(),
                     in_queue: queue.len(),
-                    in_process: in_flight.len(),
+                    in_process: schedule.len(),
                     cpu_usage,
                 });
             }
 
             // stop once every tweet has been ingested and drained
-            if next_tweet >= trace.tweets.len() && queue.is_empty() && in_flight.is_empty() {
+            if next_tweet >= n_tweets && queue.is_empty() && schedule.is_empty() {
                 break;
+            }
+
+            // Idle fast-forward: with nothing in flight, nothing queued
+            // and no CPUs in provisioning, the only observable events
+            // before the next arrival are adaptation points, window
+            // resets and samples. Burn the idle steps in a bare loop that
+            // performs exactly the per-step accumulations of the full
+            // body — the state (and thus every later decision) is
+            // bit-identical to dense stepping, just without queue, scaler
+            // and bookkeeping overhead. Rate-limited runs keep dense
+            // stepping: the queue's read credit updates every step.
+            let idle = unlimited
+                && schedule.is_empty()
+                && next_tweet < n_tweets
+                && cluster.pending() == 0;
+            if idle {
+                let next_post = trace.post_time(next_tweet);
+                let bare_budget = cluster.active() as f64 * cfg.cycles_per_cpu_step();
+                loop {
+                    let end = clock + cfg.step_secs;
+                    if next_post < end {
+                        break; // the next step ingests an arrival
+                    }
+                    if end + 1e-9 >= controller.next_adapt() {
+                        break; // adaptation due: run it through the full body
+                    }
+                    if end >= next_window_reset {
+                        break; // window reset due
+                    }
+                    if self.sample_every > 0 && (steps + 1) % self.sample_every == 0 {
+                        break; // sample due
+                    }
+                    window_avail += bare_budget;
+                    clock = end;
+                    steps += 1;
+                    cluster.tick(clock, cfg.step_secs);
+                }
             }
         }
 
@@ -215,7 +357,7 @@ impl<'a> Simulator<'a> {
 mod tests {
     use super::*;
     use crate::autoscale::{LoadScaler, ThresholdScaler};
-    use crate::workload::{generate, GeneratorConfig, MatchSpec};
+    use crate::workload::{generate, GeneratorConfig, MatchSpec, Trace, Tweet, TweetClass};
 
     fn trace(total: u64, hours: f64) -> Trace {
         let spec = MatchSpec {
@@ -343,5 +485,82 @@ mod tests {
             d_lim.history.mean_delay() > d_free.history.mean_delay(),
             "rate limit should add queueing delay"
         );
+    }
+
+    /// A trace with long arrival gaps (exercises idle fast-forward).
+    fn sparse_trace() -> Trace {
+        let mut tweets = Vec::new();
+        let mut id = 0u64;
+        for burst_start in [0.0f64, 700.0, 3_333.0, 9_000.0] {
+            for k in 0..40 {
+                tweets.push(Tweet {
+                    id,
+                    post_time: burst_start + k as f64 * 0.25,
+                    class: TweetClass::ALL[(id % 3) as usize],
+                    sentiment: if id % 3 == 2 { 0.5 } else { f32::NAN },
+                });
+                id += 1;
+            }
+        }
+        Trace::new(tweets)
+    }
+
+    /// Fast-forward must be invisible: an effectively-unlimited input
+    /// rate forces dense per-second stepping through the same admission
+    /// schedule, so every statistic must match the fast-forwarding
+    /// unlimited-rate run bit for bit.
+    #[test]
+    fn fast_forward_matches_dense_stepping() {
+        let tr = sparse_trace();
+        let model = DelayModel::default();
+        let ff_cfg = SimConfig::default(); // input_rate: None -> fast-forward
+        let dense_cfg = SimConfig { input_rate: Some(1e15), ..Default::default() };
+        for scaler in [0.6f64, 0.9] {
+            let ff = Simulator::new(&ff_cfg, &model)
+                .run(&tr, Box::new(ThresholdScaler::new(scaler)));
+            let dense = Simulator::new(&dense_cfg, &model)
+                .run(&tr, Box::new(ThresholdScaler::new(scaler)));
+            assert_eq!(ff.steps, dense.steps, "threshold-{scaler}");
+            assert_eq!(ff.history.completed(), dense.history.completed());
+            assert_eq!(ff.history.violations(), dense.history.violations());
+            assert_eq!(ff.cpu_hours.to_bits(), dense.cpu_hours.to_bits());
+            assert_eq!(ff.decisions, dense.decisions, "threshold-{scaler}");
+        }
+    }
+
+    #[test]
+    fn fast_forward_sparse_trace_deterministic_and_conserving() {
+        let tr = sparse_trace();
+        let cfg = SimConfig::default();
+        let model = DelayModel::default();
+        let run = || Simulator::new(&cfg, &model).run(&tr, Box::new(ThresholdScaler::new(0.6)));
+        let (a, b) = (run(), run());
+        assert_eq!(a.history.completed(), tr.len() as u64);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.cpu_hours.to_bits(), b.cpu_hours.to_bits());
+        assert_eq!(a.decisions, b.decisions);
+        // the run must span the horizon (fast-forward skips work, not time)
+        assert!(a.steps as f64 * cfg.step_secs >= tr.horizon() - tr.post_time(0));
+    }
+
+    #[test]
+    fn scratch_reuse_is_invisible() {
+        let tr = trace(15_000, 0.2);
+        let cfg = SimConfig::default();
+        let model = DelayModel::default();
+        let fresh = Simulator::new(&cfg, &model)
+            .run(&tr, Box::new(LoadScaler::new(model.clone(), 0.99, mix())));
+        let mut scratch = SimScratch::new();
+        for _ in 0..3 {
+            let again = Simulator::new(&cfg, &model).run_with_scratch(
+                &tr,
+                Box::new(LoadScaler::new(model.clone(), 0.99, mix())),
+                &mut scratch,
+            );
+            assert_eq!(fresh.history.violations(), again.history.violations());
+            assert_eq!(fresh.cpu_hours.to_bits(), again.cpu_hours.to_bits());
+            assert_eq!(fresh.steps, again.steps);
+            assert_eq!(fresh.decisions, again.decisions);
+        }
     }
 }

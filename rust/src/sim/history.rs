@@ -32,15 +32,58 @@ impl Completed {
 /// `push` is called when a tweet *finishes* (its score becomes known);
 /// the value lands in the bucket of its *post* time. Window queries then
 /// average over post-time ranges, exactly the §V-B construction.
+///
+/// Alongside the per-bucket sums, per-[`CHUNK`]-bucket aggregates are
+/// maintained on push, so a window query reads at most `window / CHUNK`
+/// chunk aggregates plus two partial chunks — effectively O(1) for the
+/// appdata trigger's fixed 120 s windows, independent of the trace
+/// length, where the old code re-summed every bucket per query (PERF.md
+/// §Sentiment windows). Buckets are append-mostly (late completions can
+/// land in old post-time buckets), which chunk aggregates absorb in O(1)
+/// per push; partial chunks are still read bucket-by-bucket left to
+/// right, keeping summation order deterministic.
 #[derive(Debug, Clone, Default)]
 pub struct SentimentWindows {
     sum: Vec<f64>,
     count: Vec<u32>,
+    chunk_sum: Vec<f64>,
+    chunk_count: Vec<u64>,
 }
+
+/// Buckets per maintained chunk aggregate (power of two: cheap div/mod).
+const CHUNK: usize = 64;
 
 impl SentimentWindows {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Pre-size for a known horizon (seconds) so a simulation never
+    /// reallocates the buckets mid-run. Callers cap `secs` against the
+    /// workload size (see the engine) — a degenerate horizon would
+    /// allocate O(horizon) eagerly.
+    pub fn with_capacity_secs(secs: f64) -> Self {
+        let mut w = Self::new();
+        if secs > 0.0 && secs.is_finite() {
+            w.ensure(secs as usize);
+        }
+        w
+    }
+
+    /// Grow geometrically to cover `bucket` (the old `resize(b + 64)`
+    /// policy reallocated every ~64 simulated seconds on long traces).
+    fn ensure(&mut self, bucket: usize) {
+        if bucket < self.sum.len() {
+            return;
+        }
+        let want = (bucket + 1)
+            .next_power_of_two()
+            .max(CHUNK)
+            .max(self.sum.len().saturating_mul(2));
+        self.sum.resize(want, 0.0);
+        self.count.resize(want, 0);
+        self.chunk_sum.resize(want / CHUNK, 0.0);
+        self.chunk_count.resize(want / CHUNK, 0);
     }
 
     pub fn push(&mut self, post_time: f64, sentiment: f32) {
@@ -48,12 +91,37 @@ impl SentimentWindows {
             return;
         }
         let b = post_time.max(0.0) as usize;
-        if b >= self.sum.len() {
-            self.sum.resize(b + 64, 0.0);
-            self.count.resize(b + 64, 0);
-        }
-        self.sum[b] += sentiment as f64;
+        self.ensure(b);
+        let s = sentiment as f64;
+        self.sum[b] += s;
         self.count[b] += 1;
+        self.chunk_sum[b / CHUNK] += s;
+        self.chunk_count[b / CHUNK] += 1;
+    }
+
+    /// Sum/count over buckets `[lo, hi)`: partial edge chunks bucket by
+    /// bucket, full chunks from the maintained aggregates, all left to
+    /// right.
+    fn range_sums(&self, lo: usize, hi: usize) -> (f64, u64) {
+        let mut sum = 0.0f64;
+        let mut cnt = 0u64;
+        let mut b = lo;
+        while b < hi && b % CHUNK != 0 {
+            sum += self.sum[b];
+            cnt += self.count[b] as u64;
+            b += 1;
+        }
+        while b + CHUNK <= hi {
+            sum += self.chunk_sum[b / CHUNK];
+            cnt += self.chunk_count[b / CHUNK];
+            b += CHUNK;
+        }
+        while b < hi {
+            sum += self.sum[b];
+            cnt += self.count[b] as u64;
+            b += 1;
+        }
+        (sum, cnt)
     }
 
     /// Mean sentiment of tweets posted in `[from, to)` (seconds), if any
@@ -67,11 +135,11 @@ impl SentimentWindows {
         if lo >= hi {
             return None;
         }
-        let cnt: u64 = self.count[lo..hi].iter().map(|&c| c as u64).sum();
+        let (sum, cnt) = self.range_sums(lo, hi);
         if cnt == 0 {
             return None;
         }
-        Some(self.sum[lo..hi].iter().sum::<f64>() / cnt as f64)
+        Some(sum / cnt as f64)
     }
 
     /// Number of scored tweets posted in `[from, to)`.
@@ -81,7 +149,7 @@ impl SentimentWindows {
         if lo >= hi {
             return 0;
         }
-        self.count[lo..hi].iter().map(|&c| c as u64).sum()
+        self.range_sums(lo, hi).1
     }
 }
 
@@ -117,6 +185,13 @@ impl History {
     /// Keep the per-tweet delay vector (for histogram experiments).
     pub fn with_delay_log(mut self) -> Self {
         self.keep_delays = true;
+        self
+    }
+
+    /// Pre-size the sentiment buckets for a trace horizon (seconds), so
+    /// the windows never reallocate during the run.
+    pub fn with_sentiment_horizon(mut self, secs: f64) -> Self {
+        self.sentiment = SentimentWindows::with_capacity_secs(secs);
         self
     }
 
@@ -240,6 +315,53 @@ mod tests {
         assert_eq!(w.window_count(0.0, 1000.0), 3);
         assert_eq!(w.window_count(50.0, 60.0), 0);
         assert_eq!(w.window_mean(5.0, 5.0), None);
+    }
+
+    #[test]
+    fn chunked_sums_match_naive_on_random_windows() {
+        // The chunk aggregates must agree with a plain bucket re-sum for
+        // arbitrary (mis)aligned windows, including pushes into old
+        // buckets after later ones were filled.
+        let mut w = SentimentWindows::new();
+        let mut naive_sum = vec![0.0f64; 4096];
+        let mut naive_cnt = vec![0u64; 4096];
+        let mut rng = crate::rng::Rng::new(0xC0DE);
+        for _ in 0..20_000 {
+            let b = rng.below(3000) as f64 + rng.next_f64();
+            let s = rng.next_f64() as f32;
+            w.push(b, s);
+            naive_sum[b as usize] += s as f64;
+            naive_cnt[b as usize] += 1;
+        }
+        for _ in 0..500 {
+            let lo = rng.below(3100);
+            let hi = lo + rng.below(400);
+            let (from, to) = (lo as f64, hi as f64);
+            let cnt: u64 = naive_cnt[lo as usize..hi as usize].iter().sum();
+            assert_eq!(w.window_count(from, to), cnt, "[{from},{to})");
+            let sum: f64 = naive_sum[lo as usize..hi as usize].iter().sum();
+            match w.window_mean(from, to) {
+                Some(m) => {
+                    assert!(cnt > 0);
+                    assert!((m - sum / cnt as f64).abs() < 1e-9, "[{from},{to})");
+                }
+                None => assert_eq!(cnt, 0, "[{from},{to})"),
+            }
+        }
+    }
+
+    #[test]
+    fn horizon_presizing_matches_default_growth() {
+        let mut a = SentimentWindows::with_capacity_secs(5_000.0);
+        let mut b = SentimentWindows::new();
+        for (t, s) in [(4.0, 0.25f32), (4999.0, 0.75), (10_000.0, 0.5)] {
+            a.push(t, s);
+            b.push(t, s);
+        }
+        for (lo, hi) in [(0.0, 5.0), (4990.0, 5000.0), (0.0, 20_000.0)] {
+            assert_eq!(a.window_count(lo, hi), b.window_count(lo, hi));
+            assert_eq!(a.window_mean(lo, hi), b.window_mean(lo, hi));
+        }
     }
 
     #[test]

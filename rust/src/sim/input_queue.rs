@@ -16,6 +16,12 @@ pub struct InputQueue<T> {
     credit: f64,
 }
 
+impl<T> Default for InputQueue<T> {
+    fn default() -> Self {
+        Self::unlimited()
+    }
+}
+
 impl<T> InputQueue<T> {
     pub fn new(rate_per_sec: f64) -> Self {
         assert!(rate_per_sec > 0.0, "input rate must be positive");
@@ -25,6 +31,17 @@ impl<T> InputQueue<T> {
     /// Unlimited-rate queue (the experiments' default).
     pub fn unlimited() -> Self {
         Self::new(f64::INFINITY)
+    }
+
+    /// Re-arm for a fresh run without dropping the ring buffer (scratch
+    /// reuse in the simulator): clears queued items and read credit and
+    /// installs the new rate (`None` = unlimited).
+    pub fn reset(&mut self, rate_per_sec: Option<f64>) {
+        let r = rate_per_sec.unwrap_or(f64::INFINITY);
+        assert!(r > 0.0, "input rate must be positive");
+        self.rate_per_sec = r;
+        self.credit = 0.0;
+        self.queue.clear();
     }
 
     pub fn push(&mut self, item: T) {
@@ -119,6 +136,23 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn zero_rate_rejected() {
         InputQueue::<u32>::new(0.0);
+    }
+
+    #[test]
+    fn reset_rearms_queue() {
+        let mut q = InputQueue::new(1.0);
+        q.push(1);
+        q.push(2);
+        q.drain_step(1.0);
+        q.reset(None);
+        assert!(q.is_empty());
+        q.push(7);
+        assert_eq!(q.drain_step(1.0), vec![7]); // unlimited now
+        q.reset(Some(2.0));
+        for i in 0..10 {
+            q.push(i);
+        }
+        assert_eq!(q.drain_step(1.0).len(), 2); // fresh credit at rate 2/s
     }
 
     #[test]

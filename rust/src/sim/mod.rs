@@ -9,6 +9,7 @@ pub mod history;
 pub mod input_queue;
 
 pub use cluster::Cluster;
-pub use engine::{SimResult, Simulator, StateSample};
+pub use cycles::PsSchedule;
+pub use engine::{SimResult, SimScratch, Simulator, StateSample};
 pub use history::{Completed, History, SentimentWindows};
 pub use input_queue::InputQueue;

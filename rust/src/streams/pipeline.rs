@@ -63,7 +63,7 @@ fn replay_on(
 ) -> ReplayResult {
     let mut rng = Rng::new(cfg.seed);
     let mut tracer = Tracer::new();
-    let mut backlog = trace.tweets.iter();
+    let mut backlog = trace.iter();
     let mut in_flight: Vec<InFlight> = Vec::with_capacity(cfg.max_in_flight);
     let mut clock = 0.0f64;
     let mut admitted = 0usize;

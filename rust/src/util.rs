@@ -180,6 +180,100 @@ pub mod bench {
         }
     }
 
+    /// Machine-readable bench log: named entries (timing samples plus
+    /// derived metrics) rendered as a `BENCH_*.json` file. JSON is
+    /// hand-rolled — the crate stays serde-free — and the schema is
+    /// documented in PERF.md §Recording benchmarks.
+    #[derive(Debug, Clone, Default)]
+    pub struct JsonReport {
+        bench: String,
+        note: String,
+        entries: Vec<String>,
+    }
+
+    impl JsonReport {
+        pub fn new(bench: &str) -> Self {
+            Self { bench: bench.to_string(), note: String::new(), entries: Vec::new() }
+        }
+
+        /// Free-form context shown next to the entries (host, profile...).
+        pub fn set_note(&mut self, note: &str) {
+            self.note = note.to_string();
+        }
+
+        /// Record one measured sample. `role` tags the entry ("before" /
+        /// "after" / "current"); `metrics` carries derived numbers such as
+        /// `("simulated_tweets_per_sec", 1.2e6)`.
+        pub fn push_sample(&mut self, role: &str, s: &Sample, metrics: &[(&str, f64)]) {
+            let mut obj = format!(
+                "{{\"id\":{},\"role\":{},\"iters\":{},\"mean_ns\":{},\"min_ns\":{},\"std_dev_ns\":{}",
+                json_str(&s.name),
+                json_str(role),
+                s.iters,
+                s.mean.as_nanos(),
+                s.min.as_nanos(),
+                s.std_dev.as_nanos()
+            );
+            for (k, v) in metrics {
+                obj.push_str(&format!(",{}:{}", json_str(k), json_num(*v)));
+            }
+            obj.push('}');
+            self.entries.push(obj);
+        }
+
+        /// Record a metric-only entry (no timing sample).
+        pub fn push_metrics(&mut self, id: &str, role: &str, metrics: &[(&str, f64)]) {
+            let mut obj = format!("{{\"id\":{},\"role\":{}", json_str(id), json_str(role));
+            for (k, v) in metrics {
+                obj.push_str(&format!(",{}:{}", json_str(k), json_num(*v)));
+            }
+            obj.push('}');
+            self.entries.push(obj);
+        }
+
+        pub fn render(&self) -> String {
+            format!(
+                "{{\n  \"bench\": {},\n  \"schema\": 1,\n  \"note\": {},\n  \"entries\": [\n    {}\n  ]\n}}\n",
+                json_str(&self.bench),
+                json_str(&self.note),
+                self.entries.join(",\n    ")
+            )
+        }
+
+        /// Write to `path` (repo-root `BENCH_<name>.json` convention).
+        pub fn write(&self, path: &str) -> std::io::Result<()> {
+            std::fs::write(path, self.render())
+        }
+    }
+
+    /// Minimal JSON string escaping (quotes, backslashes, control chars).
+    fn json_str(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                c if (c as u32) < 0x20 => {
+                    out.push_str(&format!("\\u{:04x}", c as u32));
+                }
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+        out
+    }
+
+    /// JSON number (floats render without exponent in Rust's `Display`;
+    /// non-finite values become `null`).
+    fn json_num(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".to_string()
+        }
+    }
+
     /// Benchmark `f`, sampling for ~`budget` after brief warmup.
     pub fn run<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Sample {
         // warmup: a few calls or 10% of the budget
@@ -234,6 +328,28 @@ mod tests {
         assert!(s.iters > 10);
         assert!(s.mean.as_nanos() > 0);
         assert!(s.min <= s.mean);
+    }
+
+    #[test]
+    fn json_report_renders_and_writes() {
+        let mut r = bench::JsonReport::new("bench_test");
+        r.set_note("unit test");
+        let s = bench::run("fast \"op\"", std::time::Duration::from_millis(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        r.push_sample("after", &s, &[("ops_per_sec", s.per_sec())]);
+        r.push_metrics("context", "current", &[("threads", 4.0), ("bad", f64::NAN)]);
+        let out = r.render();
+        assert!(out.contains("\"bench\": \"bench_test\""));
+        assert!(out.contains("\\\"op\\\"")); // quotes escaped
+        assert!(out.contains("\"ops_per_sec\":"));
+        assert!(out.contains("\"bad\":null")); // non-finite -> null
+        assert!(out.contains("\"role\":\"before\"") || out.contains("\"role\":\"after\""));
+        assert_eq!(out.matches('{').count(), out.matches('}').count());
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("BENCH_test.json");
+        r.write(path.to_str().unwrap()).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), out);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 use super::burst::{rate_multiplier, sentiment_excitation};
 use super::matches::MatchSpec;
-use super::trace::{Trace, Tweet, TweetClass};
+use super::trace::{Trace, TweetClass};
 use crate::rng::Rng;
 
 /// Tunables for trace synthesis (defaults reproduce the paper's structure).
@@ -135,31 +135,50 @@ pub fn sentiment_profile(spec: &MatchSpec, cfg: &GeneratorConfig) -> Vec<f64> {
 }
 
 /// Generate the full synthetic trace for one match.
+///
+/// Writes the trace's columns directly (no per-tweet structs, no global
+/// sort): each second's small batch is ordered locally, and seconds only
+/// ascend, so the concatenated columns are globally sorted — the same
+/// order (ids assigned pre-sort, stable ties) the old sort-at-the-end
+/// construction produced.
 pub fn generate(spec: &MatchSpec, cfg: &GeneratorConfig) -> Trace {
     let rates = rate_profile(spec, cfg);
     let sentiment = sentiment_profile(spec, cfg);
     let rng = Rng::new(cfg.seed ^ fnv_str(spec.opponent));
     let mut arrivals = rng.split(1);
-    let mut classes = rng.split(2);
+    let mut classes_rng = rng.split(2);
     let mut noise = rng.split(3);
 
-    let mut tweets = Vec::with_capacity(spec.total_tweets as usize + 1024);
+    let cap = spec.total_tweets as usize + 1024;
+    let mut ids = Vec::with_capacity(cap);
+    let mut post_times = Vec::with_capacity(cap);
+    let mut classes = Vec::with_capacity(cap);
+    let mut sentiments = Vec::with_capacity(cap);
+    let mut batch: Vec<(u64, f64, TweetClass, f32)> = Vec::new();
     let mut id = 0u64;
     for (sec, (&rate, &s_level)) in rates.iter().zip(&sentiment).enumerate() {
         let n = arrivals.poisson(rate);
+        batch.clear();
         for _ in 0..n {
             let post_time = sec as f64 + arrivals.next_f64();
-            let class = TweetClass::ALL[classes.weighted(&cfg.class_mix)];
+            let class = TweetClass::ALL[classes_rng.weighted(&cfg.class_mix)];
             let sentiment = if class == TweetClass::Analyzed {
                 (s_level + cfg.tweet_noise * noise.normal()).clamp(0.0, 1.0) as f32
             } else {
                 f32::NAN
             };
-            tweets.push(Tweet { id, post_time, class, sentiment });
+            batch.push((id, post_time, class, sentiment));
             id += 1;
         }
+        batch.sort_by(|a, b| a.1.total_cmp(&b.1)); // stable, like the old global sort
+        for &(tid, pt, cl, sv) in &batch {
+            ids.push(tid);
+            post_times.push(pt);
+            classes.push(cl);
+            sentiments.push(sv);
+        }
     }
-    Trace::new(tweets)
+    Trace::from_sorted_columns(ids, post_times, classes, sentiments)
 }
 
 /// FNV-1a over a str (stable per-match seed derivation).
@@ -205,11 +224,11 @@ mod tests {
         let a = generate(&spec, &GeneratorConfig::default());
         let b = generate(&spec, &GeneratorConfig::default());
         assert_eq!(a.len(), b.len());
-        assert_eq!(a.tweets[100].post_time, b.tweets[100].post_time);
+        assert_eq!(a.post_time(100), b.post_time(100));
         let mut cfg = GeneratorConfig::default();
         cfg.seed += 1;
         let c = generate(&spec, &cfg);
-        assert_ne!(a.tweets[100].post_time, c.tweets[100].post_time);
+        assert_ne!(a.post_time(100), c.post_time(100));
     }
 
     #[test]
@@ -281,7 +300,7 @@ mod tests {
     #[test]
     fn sentiment_in_unit_interval() {
         let tr = generate(&small_spec(), &GeneratorConfig::default());
-        for t in &tr.tweets {
+        for t in tr.iter() {
             if let Some(s) = t.sentiment_opt() {
                 assert!((0.0..=1.0).contains(&(s as f64)));
             }

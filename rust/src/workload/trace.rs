@@ -7,6 +7,13 @@
 //! by the simulator from the class delay model at replication setup, as in
 //! the paper ("Before the simulation begins all tweets are read from the
 //! CSV file and a random number of cycles is assigned").
+//!
+//! Storage is columnar (struct-of-arrays) with a per-second CSR offset
+//! index: the simulator ingests each step's arrivals as an index *range*
+//! (one O(1) [`Trace::lower_bound`] lookup) instead of scanning per-tweet
+//! structs, and the derived series (`volume_per_minute`,
+//! `sentiment_per_minute`, `class_mix`) are single passes over dense
+//! columns. See PERF.md §Trace substrate.
 
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufWriter, Write};
@@ -47,7 +54,9 @@ impl TweetClass {
     }
 }
 
-/// One trace row: a tweet as the simulator sees it.
+/// One trace row: a tweet as the simulator sees it. This is the
+/// *interchange* view — [`Trace`] stores the same fields columnar and
+/// materializes `Tweet` values on demand ([`Trace::tweet`], [`Trace::iter`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Tweet {
     pub id: u64,
@@ -71,51 +80,191 @@ impl Tweet {
     }
 }
 
-/// A whole match trace (tweets sorted by post time).
-#[derive(Debug, Clone, Default)]
+/// A whole match trace: columnar storage sorted by post time, plus a
+/// per-second CSR index (`second_offsets[s]..second_offsets[s + 1]` are
+/// the tweets posted during second `s`).
+#[derive(Debug, Clone)]
 pub struct Trace {
-    pub tweets: Vec<Tweet>,
+    ids: Vec<u64>,
+    post_times: Vec<f64>,
+    classes: Vec<TweetClass>,
+    sentiments: Vec<f32>,
+    /// CSR offsets into the columns, one entry per whole second of the
+    /// horizon plus a trailing sentinel (always at least `[0]`).
+    second_offsets: Vec<u32>,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Self::from_sorted_columns(Vec::new(), Vec::new(), Vec::new(), Vec::new())
+    }
 }
 
 impl Trace {
+    /// Build from interchange rows. Skips the O(n log n) sort when the
+    /// rows are already ordered by post time (the generator and our own
+    /// CSV files always are) — sortedness is checked in O(n) first.
     pub fn new(mut tweets: Vec<Tweet>) -> Self {
-        tweets.sort_by(|a, b| a.post_time.total_cmp(&b.post_time));
-        Self { tweets }
+        if !tweets.windows(2).all(|w| w[0].post_time <= w[1].post_time) {
+            tweets.sort_by(|a, b| a.post_time.total_cmp(&b.post_time));
+        }
+        let n = tweets.len();
+        let mut ids = Vec::with_capacity(n);
+        let mut post_times = Vec::with_capacity(n);
+        let mut classes = Vec::with_capacity(n);
+        let mut sentiments = Vec::with_capacity(n);
+        for t in &tweets {
+            ids.push(t.id);
+            post_times.push(t.post_time);
+            classes.push(t.class);
+            sentiments.push(t.sentiment);
+        }
+        Self::from_sorted_columns(ids, post_times, classes, sentiments)
+    }
+
+    /// Build directly from columns already sorted by post time — the
+    /// generator's zero-copy path (no per-tweet structs, no sort).
+    pub fn from_sorted_columns(
+        ids: Vec<u64>,
+        post_times: Vec<f64>,
+        classes: Vec<TweetClass>,
+        sentiments: Vec<f32>,
+    ) -> Self {
+        assert_eq!(ids.len(), post_times.len(), "column length mismatch");
+        assert_eq!(classes.len(), post_times.len(), "column length mismatch");
+        assert_eq!(sentiments.len(), post_times.len(), "column length mismatch");
+        assert!(post_times.len() < u32::MAX as usize, "trace too large for the u32 CSR index");
+        debug_assert!(
+            post_times.windows(2).all(|w| w[0] <= w[1]),
+            "columns must be sorted by post time"
+        );
+        let second_offsets = build_second_index(&post_times);
+        Self { ids, post_times, classes, sentiments, second_offsets }
     }
 
     pub fn len(&self) -> usize {
-        self.tweets.len()
+        self.post_times.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.tweets.is_empty()
+        self.post_times.is_empty()
     }
 
     /// Monitoring horizon: last post time (seconds).
     pub fn horizon(&self) -> f64 {
-        self.tweets.last().map_or(0.0, |t| t.post_time)
+        self.post_times.last().copied().unwrap_or(0.0)
     }
 
-    /// Per-minute tweet counts (Fig 4 series).
+    /// Post time of tweet `i`.
+    #[inline]
+    pub fn post_time(&self, i: usize) -> f64 {
+        self.post_times[i]
+    }
+
+    /// Class of tweet `i`.
+    #[inline]
+    pub fn class(&self, i: usize) -> TweetClass {
+        self.classes[i]
+    }
+
+    /// Raw sentiment column value of tweet `i` (NaN = not analyzed).
+    #[inline]
+    pub fn sentiment(&self, i: usize) -> f32 {
+        self.sentiments[i]
+    }
+
+    /// Id of tweet `i`.
+    #[inline]
+    pub fn id(&self, i: usize) -> u64 {
+        self.ids[i]
+    }
+
+    /// The post-time column (sorted ascending).
+    pub fn post_times(&self) -> &[f64] {
+        &self.post_times
+    }
+
+    /// Materialize tweet `i` as an interchange row.
+    pub fn tweet(&self, i: usize) -> Tweet {
+        Tweet {
+            id: self.ids[i],
+            post_time: self.post_times[i],
+            class: self.classes[i],
+            sentiment: self.sentiments[i],
+        }
+    }
+
+    /// Iterate materialized rows in post-time order.
+    pub fn iter(&self) -> impl ExactSizeIterator<Item = Tweet> + '_ {
+        (0..self.len()).map(move |i| self.tweet(i))
+    }
+
+    /// Index range of the tweets posted during whole second `s`.
+    pub fn second_range(&self, s: usize) -> std::ops::Range<usize> {
+        self.lower_bound(s as f64)..self.lower_bound(s as f64 + 1.0)
+    }
+
+    /// Index of the first tweet posted at or after `t`. O(1) with the
+    /// per-second CSR index (one lookup plus a scan bounded by one
+    /// second's arrivals, zero-length at the engine's whole-second step
+    /// boundaries); O(log n) binary search when the index was skipped
+    /// (degenerate horizons, see [`build_second_index`]).
+    pub fn lower_bound(&self, t: f64) -> usize {
+        self.lower_bound_from(0, t)
+    }
+
+    /// [`Trace::lower_bound`] with a monotone cursor hint: every tweet
+    /// before `hint` is known to be earlier than `t`, so the within-second
+    /// scan starts at `max(hint, second start)` — sub-second stepping over
+    /// a busy second stays O(arrivals), not O(arrivals · steps).
+    pub fn lower_bound_from(&self, hint: usize, t: f64) -> usize {
+        let n = self.post_times.len();
+        let hint = hint.min(n);
+        if n == 0 {
+            return hint;
+        }
+        if self.second_offsets.len() == 1 {
+            // Index was skipped: binary search past the cursor.
+            return hint + self.post_times[hint..].partition_point(|&p| p < t);
+        }
+        let mut i = hint;
+        if t > 0.0 {
+            let nsec = self.second_offsets.len() - 1;
+            let s = t as usize; // floor: t > 0 here
+            if s >= nsec {
+                return n; // past the horizon — every tweet is earlier
+            }
+            i = i.max(self.second_offsets[s] as usize);
+        }
+        // t <= 0 (pre-kickoff timestamps live in bucket 0) scans from the
+        // cursor alone.
+        while i < n && self.post_times[i] < t {
+            i += 1;
+        }
+        i
+    }
+
+    /// Per-minute tweet counts (Fig 4 series). Single column pass.
     pub fn volume_per_minute(&self) -> Vec<u64> {
         let mins = (self.horizon() / 60.0).floor() as usize + 1;
         let mut counts = vec![0u64; mins];
-        for t in &self.tweets {
-            counts[(t.post_time / 60.0) as usize] += 1;
+        for &t in &self.post_times {
+            counts[(t / 60.0) as usize] += 1;
         }
         counts
     }
 
     /// Per-minute mean sentiment of analyzed tweets (NaN-free; minutes with
-    /// no analyzed tweet carry the previous value, seeded with 0).
+    /// no analyzed tweet carry the previous value, seeded with 0). Single
+    /// pass over the class/sentiment/post-time columns.
     pub fn sentiment_per_minute(&self) -> Vec<f64> {
         let mins = (self.horizon() / 60.0).floor() as usize + 1;
         let mut sum = vec![0.0f64; mins];
         let mut cnt = vec![0u64; mins];
-        for t in &self.tweets {
-            if let Some(s) = t.sentiment_opt() {
-                let m = (t.post_time / 60.0) as usize;
-                sum[m] += s as f64;
+        for i in 0..self.len() {
+            if self.classes[i] == TweetClass::Analyzed && self.sentiments[i].is_finite() {
+                let m = (self.post_times[i] / 60.0) as usize;
+                sum[m] += self.sentiments[i] as f64;
                 cnt[m] += 1;
             }
         }
@@ -131,10 +280,11 @@ impl Trace {
     }
 
     /// Class proportions (fractions summing to 1 for a non-empty trace).
+    /// Single pass over the class column.
     pub fn class_mix(&self) -> [f64; 3] {
         let mut counts = [0usize; 3];
-        for t in &self.tweets {
-            counts[t.class as usize] += 1;
+        for &c in &self.classes {
+            counts[c as usize] += 1;
         }
         let n = self.len().max(1) as f64;
         [counts[0] as f64 / n, counts[1] as f64 / n, counts[2] as f64 / n]
@@ -146,46 +296,105 @@ impl Trace {
             .with_context(|| format!("creating {}", path.as_ref().display()))?;
         let mut w = BufWriter::new(f);
         writeln!(w, "id,post_time,class,sentiment")?;
-        for t in &self.tweets {
-            writeln!(w, "{},{:.3},{},{}", t.id, t.post_time, t.class as u8, t.sentiment)?;
+        for i in 0..self.len() {
+            writeln!(
+                w,
+                "{},{:.3},{},{}",
+                self.ids[i], self.post_times[i], self.classes[i] as u8, self.sentiments[i]
+            )?;
         }
         Ok(())
     }
 
-    /// Read a CSV trace written by [`Trace::write_csv`].
+    /// Read a CSV trace written by [`Trace::write_csv`]. The column
+    /// vectors are pre-sized from the file length and lines are parsed
+    /// through one reused buffer (no per-line `String` allocation).
     pub fn read_csv<P: AsRef<Path>>(path: P) -> Result<Self> {
         let f = std::fs::File::open(path.as_ref())
             .with_context(|| format!("opening {}", path.as_ref().display()))?;
-        let reader = std::io::BufReader::new(f);
-        let mut tweets = Vec::new();
-        for (lineno, line) in reader.lines().enumerate() {
-            let line = line?;
-            if lineno == 0 {
-                if line != "id,post_time,class,sentiment" {
-                    bail!("bad trace header: {line:?}");
+        // ~21 bytes per row in our own dumps; a high estimate only wastes
+        // capacity, a low one costs a few doublings.
+        let approx_rows = (f.metadata().map(|m| m.len()).unwrap_or(0) / 21) as usize;
+        let mut reader = std::io::BufReader::new(f);
+        let mut ids = Vec::with_capacity(approx_rows);
+        let mut post_times: Vec<f64> = Vec::with_capacity(approx_rows);
+        let mut classes = Vec::with_capacity(approx_rows);
+        let mut sentiments = Vec::with_capacity(approx_rows);
+        let mut line = String::new();
+        let mut lineno = 0usize;
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            lineno += 1;
+            let l = line.trim_end_matches(|c| c == '\n' || c == '\r');
+            if lineno == 1 {
+                if l != "id,post_time,class,sentiment" {
+                    bail!("bad trace header: {l:?}");
                 }
                 continue;
             }
-            if line.is_empty() {
+            if l.is_empty() {
                 continue;
             }
-            let mut parts = line.split(',');
+            let mut parts = l.split(',');
             let (a, b, c, d) = (
                 parts.next().context("missing id")?,
                 parts.next().context("missing post_time")?,
                 parts.next().context("missing class")?,
                 parts.next().context("missing sentiment")?,
             );
-            tweets.push(Tweet {
-                id: a.parse().with_context(|| format!("line {}: id {a:?}", lineno + 1))?,
-                post_time: b.parse()?,
-                class: TweetClass::from_u8(c.parse()?)
-                    .with_context(|| format!("line {}: bad class {c:?}", lineno + 1))?,
-                sentiment: d.parse()?,
-            });
+            ids.push(a.parse().with_context(|| format!("line {lineno}: id {a:?}"))?);
+            post_times.push(b.parse()?);
+            classes.push(
+                TweetClass::from_u8(c.parse()?)
+                    .with_context(|| format!("line {lineno}: bad class {c:?}"))?,
+            );
+            sentiments.push(d.parse()?);
         }
-        Ok(Self::new(tweets))
+        if post_times.windows(2).all(|w| w[0] <= w[1]) {
+            return Ok(Self::from_sorted_columns(ids, post_times, classes, sentiments));
+        }
+        // External CSVs may be unordered: argsort once (stable, like
+        // `Trace::new`) and gather each column through the permutation.
+        let mut order: Vec<u32> = (0..post_times.len() as u32).collect();
+        order.sort_by(|&x, &y| post_times[x as usize].total_cmp(&post_times[y as usize]));
+        Ok(Self::from_sorted_columns(
+            order.iter().map(|&i| ids[i as usize]).collect(),
+            order.iter().map(|&i| post_times[i as usize]).collect(),
+            order.iter().map(|&i| classes[i as usize]).collect(),
+            order.iter().map(|&i| sentiments[i as usize]).collect(),
+        ))
     }
+}
+
+/// Counting-sort pass building the per-second CSR offsets.
+///
+/// Degenerate horizons (absolute unix timestamps, far-future stragglers)
+/// would make a dense per-second table arbitrarily large, so indexing is
+/// skipped — the sentinel `[0]` alone — whenever the horizon dwarfs the
+/// tweet count; lookups then fall back to binary search.
+fn build_second_index(post_times: &[f64]) -> Vec<u32> {
+    if post_times.is_empty() {
+        return vec![0];
+    }
+    let horizon = post_times.last().copied().unwrap_or(0.0).max(0.0);
+    if !horizon.is_finite() {
+        return vec![0];
+    }
+    let nsec = horizon as usize + 1;
+    if nsec > post_times.len().saturating_mul(4).saturating_add(1024) {
+        return vec![0];
+    }
+    let mut offsets = vec![0u32; nsec + 1];
+    for &t in post_times {
+        offsets[t.max(0.0) as usize + 1] += 1;
+    }
+    for s in 0..nsec {
+        offsets[s + 1] += offsets[s];
+    }
+    offsets
 }
 
 #[cfg(test)]
@@ -204,8 +413,23 @@ mod tests {
     #[test]
     fn constructor_sorts_by_post_time() {
         let tr = sample_trace();
-        let times: Vec<f64> = tr.tweets.iter().map(|t| t.post_time).collect();
-        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        assert!(tr.post_times().windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(tr.id(0), 1);
+        assert_eq!(tr.tweet(1).id, 2);
+    }
+
+    #[test]
+    fn presorted_input_is_preserved() {
+        let rows = vec![
+            Tweet { id: 7, post_time: 1.0, class: TweetClass::Analyzed, sentiment: 0.1 },
+            Tweet { id: 8, post_time: 2.0, class: TweetClass::Analyzed, sentiment: 0.2 },
+            Tweet { id: 9, post_time: 2.0, class: TweetClass::OffTopic, sentiment: f32::NAN },
+        ];
+        let tr = Trace::new(rows.clone());
+        for (i, want) in rows.iter().enumerate() {
+            assert_eq!(tr.tweet(i).id, want.id);
+            assert_eq!(tr.post_time(i), want.post_time);
+        }
     }
 
     #[test]
@@ -237,6 +461,66 @@ mod tests {
     }
 
     #[test]
+    fn csr_second_ranges_and_lower_bound() {
+        let tr = sample_trace();
+        assert_eq!(tr.second_range(0), 0..1);
+        assert_eq!(tr.second_range(61), 1..2);
+        assert_eq!(tr.second_range(62), 2..3);
+        assert_eq!(tr.second_range(1), 1..1); // empty second
+        assert_eq!(tr.second_range(10_000), 4..4); // past horizon
+        assert_eq!(tr.lower_bound(0.0), 0);
+        assert_eq!(tr.lower_bound(0.5), 0);
+        assert_eq!(tr.lower_bound(0.6), 1);
+        assert_eq!(tr.lower_bound(61.0), 1);
+        assert_eq!(tr.lower_bound(62.0), 2);
+        assert_eq!(tr.lower_bound(130.5), 4);
+        assert_eq!(tr.lower_bound(1e9), 4);
+    }
+
+    #[test]
+    fn lower_bound_matches_linear_scan() {
+        let tr = sample_trace();
+        let mut cursor = 0usize;
+        for k in 0..300 {
+            let t = k as f64 * 0.5;
+            let linear = tr.post_times().iter().filter(|&&p| p < t).count();
+            assert_eq!(tr.lower_bound(t), linear, "t={t}");
+            // the hinted variant agrees under a monotone cursor
+            cursor = tr.lower_bound_from(cursor, t);
+            assert_eq!(cursor, linear, "t={t}");
+        }
+    }
+
+    #[test]
+    fn negative_and_degenerate_times_fall_back_gracefully() {
+        // Pre-kickoff timestamps (bucket 0) stay addressable.
+        let tr = Trace::new(vec![
+            Tweet { id: 0, post_time: -5.0, class: TweetClass::Analyzed, sentiment: 0.5 },
+            Tweet { id: 1, post_time: -1.5, class: TweetClass::Analyzed, sentiment: 0.5 },
+            Tweet { id: 2, post_time: 3.0, class: TweetClass::Analyzed, sentiment: 0.5 },
+        ]);
+        assert_eq!(tr.lower_bound(-2.0), 1);
+        assert_eq!(tr.lower_bound(0.0), 2);
+        assert_eq!(tr.lower_bound(4.0), 3);
+        assert_eq!(tr.lower_bound_from(1, -1.0), 2);
+        // Absolute-timestamp horizon: the dense per-second index is
+        // skipped; lookups stay correct via binary search.
+        let abs = Trace::new(vec![
+            Tweet { id: 0, post_time: 1.7e9, class: TweetClass::Analyzed, sentiment: 0.5 },
+            Tweet { id: 1, post_time: 1.7e9 + 60.0, class: TweetClass::Analyzed, sentiment: 0.5 },
+        ]);
+        assert_eq!(abs.lower_bound(0.0), 0);
+        assert_eq!(abs.lower_bound(1.7e9 + 1.0), 1);
+        assert_eq!(abs.lower_bound(2e9), 2);
+        let mut cursor = 0;
+        for t in [1.7e9, 1.7e9 + 30.0, 1.7e9 + 61.0] {
+            cursor = abs.lower_bound_from(cursor, t);
+        }
+        assert_eq!(cursor, 2);
+        assert_eq!(abs.second_range(0), 0..0);
+    }
+
+    #[test]
     fn csv_roundtrip() {
         let dir = crate::util::TempDir::new().unwrap();
         let path = dir.join("trace.csv");
@@ -244,12 +528,27 @@ mod tests {
         tr.write_csv(&path).unwrap();
         let back = Trace::read_csv(&path).unwrap();
         assert_eq!(back.len(), tr.len());
-        for (a, b) in tr.tweets.iter().zip(&back.tweets) {
+        for (a, b) in tr.iter().zip(back.iter()) {
             assert_eq!(a.id, b.id);
             assert!((a.post_time - b.post_time).abs() < 1e-3);
             assert_eq!(a.class, b.class);
             assert_eq!(a.sentiment.is_nan(), b.sentiment.is_nan());
         }
+    }
+
+    #[test]
+    fn csv_unsorted_file_is_sorted_on_read() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.join("shuffled.csv");
+        std::fs::write(
+            &path,
+            "id,post_time,class,sentiment\n3,9.0,2,0.3\n1,1.0,2,0.1\n2,4.0,2,0.2\n",
+        )
+        .unwrap();
+        let tr = Trace::read_csv(&path).unwrap();
+        assert_eq!(tr.post_times(), &[1.0, 4.0, 9.0]);
+        assert_eq!(tr.id(0), 1);
+        assert_eq!(tr.id(2), 3);
     }
 
     #[test]
@@ -268,6 +567,8 @@ mod tests {
         assert!(tr.is_empty());
         assert_eq!(tr.horizon(), 0.0);
         assert_eq!(tr.volume_per_minute(), vec![0]);
+        assert_eq!(tr.lower_bound(5.0), 0);
+        assert_eq!(tr.second_range(0), 0..0);
     }
 
     #[test]

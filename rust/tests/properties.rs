@@ -3,7 +3,7 @@
 //! case seed). Each property runs a few hundred randomized cases.
 
 use sla_autoscale::rng::Rng;
-use sla_autoscale::sim::cycles::{distribute, distribute_paper};
+use sla_autoscale::sim::cycles::{distribute, distribute_paper, PsSchedule};
 use sla_autoscale::sim::{Cluster, InputQueue};
 use sla_autoscale::stats::descriptive::{quantile, quantile_sorted};
 use sla_autoscale::stats::ema::ema_series;
@@ -68,6 +68,111 @@ fn prop_algorithm1_invariants() {
         if r.iter().any(|&v| v > 0.0) {
             assert!((out.consumed - budget).abs() < 1e-6, "case {case}: left work but idle cycles");
         }
+    });
+}
+
+/// Per-step equivalence of the virtual-time distributor against the
+/// paper's executable spec over whole random episodes: same completion
+/// sets, consumed cycles and remaining cycles (within 1e-6), including
+/// adversarial cascade mixes (clusters of near-identical tiny costs whose
+/// redistribution excess finishes whole chains within one step).
+#[test]
+fn prop_virtual_time_schedule_equals_paper_per_step() {
+    for_all(300, 0xF1A5, |rng, case| {
+        let mut ps = PsSchedule::new();
+        let mut reference: Vec<f64> = Vec::new(); // dense remaining (spec side)
+        let mut live: Vec<u32> = Vec::new(); // reference index -> slot
+        let mut tags: Vec<f64> = Vec::new(); // slot -> finish tag
+        let mut next_slot = 0u32;
+        let steps = rng.range(1, 50);
+        for step in 0..steps {
+            // Arrivals: usually a few spread-out costs; sometimes an
+            // adversarial cascade cluster of near-equal tiny costs.
+            let cascade = rng.chance(0.3);
+            let n_arr = if cascade { rng.range(3, 12) } else { rng.range(0, 6) };
+            let base = rng.next_f64() * 1e-3 + 1e-6;
+            for _ in 0..n_arr {
+                let cycles = if cascade {
+                    base * (1.0 + rng.next_f64() * 1e-6)
+                } else {
+                    rng.next_f64() * 100.0 + 0.01
+                };
+                tags.push(ps.insert(cycles, next_slot));
+                reference.push(cycles);
+                live.push(next_slot);
+                next_slot += 1;
+            }
+            let budget = rng.next_f64() * 120.0;
+            let out = distribute_paper(budget, &mut reference);
+            let consumed = ps.step(budget);
+            assert!(
+                (consumed - out.consumed).abs() < 1e-6,
+                "case {case} step {step}: consumed {consumed} vs {}",
+                out.consumed
+            );
+            let mut want: Vec<u32> = out.completed.iter().map(|&j| live[j]).collect();
+            want.sort_unstable();
+            let mut got: Vec<u32> = ps.completed().to_vec();
+            got.sort_unstable();
+            assert_eq!(want, got, "case {case} step {step}: completion sets differ");
+            // compact the spec side like the engine does
+            let mut done = out.completed.clone();
+            done.sort_unstable_by(|a, b| b.cmp(a));
+            for j in done {
+                reference.swap_remove(j);
+                live.swap_remove(j);
+            }
+            // survivors' remaining cycles agree
+            for (j, &slot) in live.iter().enumerate() {
+                let rem = tags[slot as usize] - ps.offset();
+                assert!(
+                    (rem - reference[j]).abs() < 1e-6,
+                    "case {case} step {step} slot {slot}: {rem} vs {}",
+                    reference[j]
+                );
+            }
+        }
+    });
+}
+
+/// The fast-forwarding engine stays deterministic per seed on traces with
+/// long idle gaps, and conserves every tweet.
+#[test]
+fn prop_fast_forward_engine_deterministic_per_seed() {
+    use sla_autoscale::autoscale::ThresholdScaler;
+    use sla_autoscale::config::SimConfig;
+    use sla_autoscale::delay::DelayModel;
+    use sla_autoscale::sim::Simulator;
+    for_all(10, 0xFA57, |rng, case| {
+        // random sparse trace: a few bursts separated by dead air
+        let mut tweets = Vec::new();
+        let mut id = 0u64;
+        let mut t = 0.0f64;
+        for _ in 0..rng.range(2, 6) {
+            t += rng.next_f64() * 2_000.0 + 120.0; // gap
+            for _ in 0..rng.range(5, 60) {
+                t += rng.next_f64() * 0.4;
+                let class = TweetClass::ALL[rng.below(3) as usize];
+                tweets.push(Tweet {
+                    id,
+                    post_time: t,
+                    class,
+                    sentiment: if class == TweetClass::Analyzed { 0.5 } else { f32::NAN },
+                });
+                id += 1;
+            }
+        }
+        let trace = Trace::new(tweets);
+        let cfg = SimConfig { seed: 1000 + case, ..Default::default() };
+        let model = DelayModel::default();
+        let run =
+            || Simulator::new(&cfg, &model).run(&trace, Box::new(ThresholdScaler::new(0.6)));
+        let (a, b) = (run(), run());
+        assert_eq!(a.history.completed(), trace.len() as u64, "case {case}");
+        assert_eq!(a.history.violations(), b.history.violations(), "case {case}");
+        assert_eq!(a.steps, b.steps, "case {case}");
+        assert_eq!(a.cpu_hours.to_bits(), b.cpu_hours.to_bits(), "case {case}");
+        assert_eq!(a.decisions, b.decisions, "case {case}");
     });
 }
 
@@ -196,7 +301,7 @@ fn prop_trace_csv_roundtrip() {
         trace.write_csv(&path).unwrap();
         let back = Trace::read_csv(&path).unwrap();
         assert_eq!(back.len(), trace.len(), "case {case}");
-        for (a, b) in trace.tweets.iter().zip(&back.tweets) {
+        for (a, b) in trace.iter().zip(back.iter()) {
             assert_eq!(a.id, b.id);
             assert_eq!(a.class, b.class);
             assert!((a.post_time - b.post_time).abs() < 2e-3, "case {case}");
