@@ -7,9 +7,10 @@
 use sla_autoscale::autoscale::ScalerSpec;
 use sla_autoscale::config::SimConfig;
 use sla_autoscale::scenario::{
-    default_threads, Overrides, ScenarioMatrix, TraceSource,
+    default_threads, scale_spec, Overrides, ScenarioMatrix, TraceSource,
 };
-use sla_autoscale::util::bench;
+use sla_autoscale::util::{bench, TempDir};
+use sla_autoscale::workload::{by_opponent, generate, store, GeneratorConfig};
 use std::time::Instant;
 
 fn main() {
@@ -86,6 +87,46 @@ fn main() {
         "current",
         &[("parallel_over_serial", serial_secs / parallel_secs.max(1e-9))],
     );
+
+    // Disk trace store: what a cross-process cache hit saves vs
+    // regeneration (fast-mode Japan, the grid's first trace).
+    let dir = TempDir::new().expect("temp dir");
+    let path = dir.join("japan.trace");
+    let trace = sources[0].load().expect("trace cached above");
+    let spec = scale_spec(&by_opponent("Japan").expect("catalogue"), true);
+
+    let t = Instant::now();
+    store::write_trace(&path, &trace).expect("store write");
+    let write_secs = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let back = store::read_trace(&path).expect("store read");
+    let read_secs = t.elapsed().as_secs_f64();
+    assert_eq!(back.len(), trace.len(), "store round trip");
+    let t = Instant::now();
+    let regen = generate(&spec, &GeneratorConfig::default());
+    let gen_secs = t.elapsed().as_secs_f64();
+    assert_eq!(regen.len(), trace.len(), "regeneration is deterministic");
+    println!(
+        "trace store ({} tweets): write {:.1} ms, read {:.1} ms, regenerate {:.1} ms \
+         ({:.1}x read speedup)",
+        trace.len(),
+        write_secs * 1e3,
+        read_secs * 1e3,
+        gen_secs * 1e3,
+        gen_secs / read_secs.max(1e-9)
+    );
+    report.push_metrics(
+        "trace_store/roundtrip",
+        "current",
+        &[
+            ("tweets", trace.len() as f64),
+            ("write_secs", write_secs),
+            ("read_secs", read_secs),
+            ("generate_secs", gen_secs),
+            ("read_speedup_over_generate", gen_secs / read_secs.max(1e-9)),
+        ],
+    );
+
     report.write("BENCH_matrix.json").expect("writing BENCH_matrix.json");
     println!("wrote BENCH_matrix.json");
 }

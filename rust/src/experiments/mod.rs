@@ -15,6 +15,7 @@ pub mod report;
 pub mod table1;
 pub mod table2;
 pub mod table3;
+pub mod workload_axis;
 
 use anyhow::Result;
 
@@ -44,6 +45,7 @@ pub fn all() -> Vec<Box<dyn Experiment>> {
         Box::new(ablations::AblationWindow),
         Box::new(ablations::AblationTiming),
         Box::new(ablations::AblationStrategies),
+        Box::new(workload_axis::WorkloadAxis),
     ]
 }
 
@@ -61,6 +63,7 @@ mod tests {
         let ids: Vec<&str> = all().iter().map(|e| e.id()).collect();
         for want in [
             "table1", "table2", "table3", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+            "workload",
         ] {
             assert!(ids.contains(&want), "missing experiment {want}");
         }

@@ -1,0 +1,164 @@
+//! Workload-shape sweep (beyond the paper): where does appdata's
+//! advantage collapse?
+//!
+//! The paper's headline — appdata cutting SLA violations by up to 95% —
+//! is measured on one synthetic workload shape, and auto-scaler rankings
+//! are known to be workload-dependent (Qu et al., PAPERS.md). This
+//! experiment sweeps the *generator* axis of the scenario engine: a
+//! `lead_min × sentiment_swing` grid over one bursty match, running the
+//! paper's best composite (`load-q99.999%+appdata+4`) against its own
+//! `load-q99.999%` baseline on every shape. With `lead_min = 0` the
+//! sentiment surge no longer *precedes* the volume burst — the
+//! early-warning signal appdata exploits is gone by construction — and
+//! with a small `sentiment_swing` the surge drowns in tweet noise; the
+//! advantage table shows both collapse modes directly.
+
+use super::common::scale_config;
+use super::report::{result_rows, table, RESULT_HEADERS};
+use super::Experiment;
+use crate::autoscale::ScalerSpec;
+use crate::config::SimConfig;
+use crate::scenario::{default_threads, Overrides, ScenarioMatrix, TraceSource};
+use crate::workload::{by_opponent, GeneratorConfig};
+use anyhow::Result;
+
+pub struct WorkloadAxis;
+
+/// The swept match: Mexico's one great abrupt peak (§V-A) is the
+/// cleanest stage for an early-warning signal.
+pub const SWEEP_OPPONENT: &str = "Mexico";
+
+/// Sentiment lead times (minutes) — 0 removes the early warning.
+pub fn lead_grid(fast: bool) -> Vec<f64> {
+    if fast {
+        vec![0.0, 1.5]
+    } else {
+        vec![0.0, 0.5, 1.5, 3.0]
+    }
+}
+
+/// Sentiment swing at full excitation — small swings drown in noise.
+pub fn swing_grid(fast: bool) -> Vec<f64> {
+    if fast {
+        vec![0.5]
+    } else {
+        vec![0.1, 0.5]
+    }
+}
+
+/// The generator grid, swing-major then lead (row order of the report).
+pub fn gen_grid(fast: bool) -> Vec<GeneratorConfig> {
+    let mut gens = Vec::new();
+    for &swing in &swing_grid(fast) {
+        for &lead in &lead_grid(fast) {
+            gens.push(GeneratorConfig {
+                lead_min: lead,
+                sentiment_swing: swing,
+                ..GeneratorConfig::default()
+            });
+        }
+    }
+    gens
+}
+
+/// The two scalers whose gap *is* the appdata advantage.
+pub fn scaler_pair() -> [ScalerSpec; 2] {
+    [ScalerSpec::load(0.99999), ScalerSpec::load_plus_appdata(0.99999, 4)]
+}
+
+/// The full sweep matrix: one source × every generator config × the
+/// load/appdata pair (rows pair up per shape: baseline then composite).
+pub fn build_matrix(fast: bool, max_reps: usize) -> ScenarioMatrix {
+    let spec = by_opponent(SWEEP_OPPONENT).expect("catalogue match");
+    let cfg = scale_config(&SimConfig::default(), fast);
+    ScenarioMatrix::cross_gen(
+        &[TraceSource::spec(spec, fast)],
+        &gen_grid(fast),
+        &cfg,
+        &[Overrides::default()],
+        &scaler_pair(),
+        max_reps,
+    )
+}
+
+impl Experiment for WorkloadAxis {
+    fn id(&self) -> &'static str {
+        "workload"
+    }
+
+    fn description(&self) -> &'static str {
+        "workload-shape sweep: lead x swing grid, where the appdata advantage collapses"
+    }
+
+    fn run(&self, fast: bool) -> Result<String> {
+        let max_reps = if fast { 3 } else { 10 };
+        let matrix = build_matrix(fast, max_reps);
+        let results = matrix.run(default_threads())?;
+        let mut out = table(
+            &format!("Workload axis — BRA vs {SWEEP_OPPONENT}, generator sweep"),
+            &RESULT_HEADERS,
+            &result_rows(&results),
+        );
+        out.push('\n');
+
+        let gens = gen_grid(fast);
+        let mut rows = Vec::with_capacity(gens.len());
+        for (i, g) in gens.iter().enumerate() {
+            let load = &results[2 * i];
+            let appdata = &results[2 * i + 1];
+            rows.push(vec![
+                format!("{:.1}", g.lead_min),
+                format!("{:.2}", g.sentiment_swing),
+                format!("{:.2}%", load.violation_pct),
+                format!("{:.2}%", appdata.violation_pct),
+                format!("{:+.2}pp", load.violation_pct - appdata.violation_pct),
+            ]);
+        }
+        out.push_str(&table(
+            "appdata advantage by workload shape (violation-pct delta)",
+            &["lead(min)", "swing", "load>SLA", "+appdata>SLA", "advantage"],
+            &rows,
+        ));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn grid_pairs_scalers_per_shape() {
+        let m = build_matrix(true, 3);
+        let gens = gen_grid(true);
+        assert_eq!(m.len(), gens.len() * 2);
+        for (i, row) in m.scenarios.iter().enumerate() {
+            assert!(row.name.starts_with("load-q99.999%"), "{}", row.name);
+            assert_eq!(i % 2 == 1, row.name.contains("+appdata"), "{}", row.name);
+            assert_eq!(*row.source.generator().unwrap(), gens[i / 2], "{}", row.name);
+        }
+    }
+
+    #[test]
+    fn shapes_load_distinct_traces() {
+        let m = build_matrix(true, 3);
+        let a = m.scenarios[0].source.load().unwrap();
+        let b = m.scenarios[2].source.load().unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "each shape must get its own trace");
+        // ... while the scaler pair within a shape shares one
+        let a2 = m.scenarios[1].source.load().unwrap();
+        assert!(Arc::ptr_eq(&a, &a2));
+    }
+
+    #[test]
+    fn report_renders_both_tables() {
+        let out = WorkloadAxis.run(true).unwrap();
+        assert!(out.contains("Workload axis"), "{out}");
+        assert!(out.contains("appdata advantage by workload shape"), "{out}");
+        assert!(out.contains("lead=0.00m"), "{out}");
+        // one advantage row per generator config (cells end in "pp")
+        let pp_rows = out.lines().filter(|l| l.trim_end().ends_with("pp")).count();
+        assert_eq!(pp_rows, gen_grid(true).len(), "{out}");
+    }
+}

@@ -24,10 +24,16 @@ USAGE:
   sla-autoscale matrix <opponents|all> [--algos SPEC[,SPEC...]] [--fast]
       [--threads N] [--serial] [--max-reps N] [--config FILE]
       [--sla S] [--adapt S] [--provision S] [--seed N]
+      [--lead-min M[,M...]] [--cache-dir DIR] [--stream]
       Run an arbitrary scenario grid (opponents x algorithms) with
       CI-converged replications in parallel, and print the result table.
+      --lead-min sweeps the generator's sentiment lead (a workload-shape
+      axis: one scenario row per value); --cache-dir persists generated
+      traces to a versioned on-disk store reused across runs; --stream
+      prints a CSV line per scenario as it converges.
   sla-autoscale exp <id|all> [--fast]
-      Regenerate a paper table/figure (table1..3, fig2..8, ablations).
+      Regenerate a paper table/figure (table1..3, fig2..8, ablations,
+      workload).
   sla-autoscale serve [opponent] [--count N] [--artifacts DIR]
       Serve the PJRT-compiled sentiment model on a generated live stream.
 
@@ -65,6 +71,16 @@ impl Args {
             }
         }
         None
+    }
+}
+
+/// Quote a streamed CSV field when needed (scenario names with
+/// multi-field override labels contain commas).
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
     }
 }
 
@@ -182,16 +198,49 @@ fn main() -> Result<()> {
                     None => scenario::default_threads(),
                 }
             };
+            let gens: Vec<GeneratorConfig> = match args.opt("--lead-min") {
+                Some(list) => list
+                    .split(',')
+                    .filter(|s| !s.trim().is_empty())
+                    .map(|v| {
+                        Ok(GeneratorConfig {
+                            lead_min: v.trim().parse()?,
+                            ..GeneratorConfig::default()
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+                None => vec![GeneratorConfig::default()],
+            };
+            if gens.is_empty() {
+                bail!("matrix: --lead-min given but no values parsed");
+            }
             let cfg = experiments::common::scale_config(&base, fast);
-            let matrix = ScenarioMatrix::cross(
+            let mut matrix = ScenarioMatrix::cross_gen(
                 &sources,
+                &gens,
                 &cfg,
                 std::slice::from_ref(&overrides),
                 &scalers,
                 max_reps,
             );
+            if let Some(dir) = args.opt("--cache-dir") {
+                matrix = matrix.with_cache_dir(dir);
+            }
             let started = std::time::Instant::now();
-            let results = matrix.run(threads)?;
+            let results = if args.flag("--stream") {
+                println!("scenario,violation_pct,cpu_hours,reps");
+                matrix.run_with(threads, |_, r| {
+                    println!(
+                        "{},{:.4},{:.4},{}",
+                        csv_field(&r.name),
+                        r.violation_pct,
+                        r.cpu_hours,
+                        r.reps
+                    );
+                })?
+            } else {
+                matrix.run(threads)?
+            };
             print!(
                 "{}",
                 experiments::report::table(

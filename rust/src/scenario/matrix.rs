@@ -15,6 +15,7 @@ use crate::config::SimConfig;
 use crate::delay::DelayModel;
 use crate::workload::GeneratorConfig;
 use anyhow::Result;
+use std::path::PathBuf;
 
 /// One (trace, config, scaler) scenario, run to CI convergence.
 #[derive(Debug, Clone)]
@@ -129,6 +130,9 @@ pub struct ScenarioMatrix {
     pub model: DelayModel,
     /// Class mix "known from the training data".
     pub mix: [f64; 3],
+    /// On-disk trace cache directory: generated traces are persisted here
+    /// (versioned binary store) and reused across processes.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for ScenarioMatrix {
@@ -147,11 +151,19 @@ impl ScenarioMatrix {
             scenarios,
             model: DelayModel::default(),
             mix: GeneratorConfig::default().class_mix,
+            cache_dir: None,
         }
     }
 
     pub fn with_model(mut self, model: DelayModel) -> Self {
         self.model = model;
+        self
+    }
+
+    /// Persist generated traces under `dir` (and load them back from
+    /// there in later processes) — see `crate::workload::store`.
+    pub fn with_cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cache_dir = Some(dir.into());
         self
     }
 
@@ -170,24 +182,61 @@ impl ScenarioMatrix {
         scalers: &[ScalerSpec],
         max_reps: usize,
     ) -> Self {
-        let mut rows = Vec::with_capacity(sources.len() * overrides.len() * scalers.len());
+        Self::cross_gen(
+            sources,
+            std::slice::from_ref(&GeneratorConfig::default()),
+            base,
+            overrides,
+            scalers,
+            max_reps,
+        )
+    }
+
+    /// [`Self::cross`] with a workload-shape axis: every source is
+    /// re-generated under every [`GeneratorConfig`], nested
+    /// source × generator × override × scaler. Names gain a trailing
+    /// `/gen-label` segment when the grid spans several configs (the
+    /// default config labels itself `gen-default`). CSV sources carry no
+    /// generator, so they appear once per override × scaler — not once
+    /// per config, which would duplicate identical rows under
+    /// workload-shape names they don't have.
+    pub fn cross_gen(
+        sources: &[TraceSource],
+        gens: &[GeneratorConfig],
+        base: &SimConfig,
+        overrides: &[Overrides],
+        scalers: &[ScalerSpec],
+        max_reps: usize,
+    ) -> Self {
+        let cells = sources.len() * gens.len() * overrides.len() * scalers.len();
+        let mut rows = Vec::with_capacity(cells);
         for source in sources {
-            for ov in overrides {
-                for scaler in scalers {
-                    let mut name = String::new();
-                    if sources.len() > 1 {
-                        name.push_str(&source.label());
-                        name.push('/');
+            let generated = source.generator().is_some();
+            let source_gens = if generated { gens } else { &gens[..gens.len().min(1)] };
+            for gen in source_gens {
+                let shaped = source.clone().with_generator(gen.clone());
+                for ov in overrides {
+                    for scaler in scalers {
+                        let mut name = String::new();
+                        if sources.len() > 1 {
+                            name.push_str(&source.label());
+                            name.push('/');
+                        }
+                        name.push_str(&scaler.to_string());
+                        if !ov.is_empty() {
+                            name.push('/');
+                            name.push_str(&ov.label());
+                        }
+                        if gens.len() > 1 && generated {
+                            let g = gen.label();
+                            name.push('/');
+                            name.push_str(if g.is_empty() { "gen-default" } else { g.as_str() });
+                        }
+                        rows.push(
+                            Scenario::new(shaped.clone(), ov.apply(base), scaler.clone(), max_reps)
+                                .named(name),
+                        );
                     }
-                    name.push_str(&scaler.to_string());
-                    if !ov.is_empty() {
-                        name.push('/');
-                        name.push_str(&ov.label());
-                    }
-                    rows.push(
-                        Scenario::new(source.clone(), ov.apply(base), scaler.clone(), max_reps)
-                            .named(name),
-                    );
                 }
             }
         }
@@ -205,6 +254,18 @@ impl ScenarioMatrix {
     /// Run every scenario, `threads`-wide (see [`runner::run_matrix`]).
     pub fn run(&self, threads: usize) -> Result<Vec<ScenarioResult>> {
         runner::run_matrix(self, threads)
+    }
+
+    /// [`Self::run`] with a streaming callback: `on_result(row, result)`
+    /// fires as each scenario converges (completion order under
+    /// parallelism; row order serially), while the returned vector stays
+    /// in row order. Long sweeps report progress instead of going silent
+    /// until the whole grid finishes.
+    pub fn run_with<F>(&self, threads: usize, on_result: F) -> Result<Vec<ScenarioResult>>
+    where
+        F: Fn(usize, &ScenarioResult) + Sync,
+    {
+        runner::run_matrix_with(self, threads, on_result)
     }
 
     /// The strictly sequential reference path (identical results).
@@ -270,6 +331,68 @@ mod tests {
         );
         assert_eq!(m.scenarios[0].name, "threshold-80%/sla=120s");
         assert_eq!(m.scenarios[0].config.sla_secs, 120.0);
+    }
+
+    #[test]
+    fn cross_gen_adds_a_workload_shape_axis() {
+        let gens = [
+            GeneratorConfig::default(),
+            GeneratorConfig { lead_min: 0.0, ..GeneratorConfig::default() },
+        ];
+        let m = ScenarioMatrix::cross_gen(
+            &[TraceSource::opponent("Japan", true)],
+            &gens,
+            &SimConfig::default(),
+            &[Overrides::default()],
+            &[ScalerSpec::threshold(60.0)],
+            3,
+        );
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.scenarios[0].name, "threshold-60%/gen-default");
+        assert_eq!(m.scenarios[1].name, "threshold-60%/lead=0.00m");
+        assert!(m.scenarios[0].source.generator().unwrap().is_default());
+        assert_eq!(m.scenarios[1].source.generator().unwrap().lead_min, 0.0);
+    }
+
+    #[test]
+    fn csv_sources_skip_the_generator_axis() {
+        // A CSV source has no generator; sweeping configs over it would
+        // duplicate identical rows under shape names it doesn't have.
+        let gens = [
+            GeneratorConfig::default(),
+            GeneratorConfig { lead_min: 0.0, ..GeneratorConfig::default() },
+        ];
+        let m = ScenarioMatrix::cross_gen(
+            &[TraceSource::csv("t.csv")],
+            &gens,
+            &SimConfig::default(),
+            &[Overrides::default()],
+            &[ScalerSpec::threshold(60.0)],
+            3,
+        );
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.scenarios[0].name, "threshold-60%");
+    }
+
+    #[test]
+    fn single_gen_grids_keep_legacy_names() {
+        // `cross` delegates to `cross_gen`; one-config grids must not grow
+        // a `/gen-default` suffix.
+        let m = ScenarioMatrix::cross(
+            &[TraceSource::opponent("Japan", true)],
+            &SimConfig::default(),
+            &[Overrides::default()],
+            &[ScalerSpec::threshold(60.0)],
+            3,
+        );
+        assert_eq!(m.scenarios[0].name, "threshold-60%");
+    }
+
+    #[test]
+    fn cache_dir_is_builder_configured() {
+        let m = ScenarioMatrix::new().with_cache_dir("/tmp/traces");
+        assert_eq!(m.cache_dir.as_deref(), Some(std::path::Path::new("/tmp/traces")));
+        assert!(ScenarioMatrix::new().cache_dir.is_none());
     }
 
     #[test]

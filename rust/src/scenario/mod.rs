@@ -7,15 +7,20 @@
 //! confidence was smaller than 10% of the mean" (§V). This module makes
 //! that grid a first-class value:
 //!
-//! * [`TraceSource`] names a workload; generated traces are cached
-//!   process-wide behind `Arc<Trace>`, so each match is generated once no
-//!   matter how many scenarios (or experiment modules) share it.
+//! * [`TraceSource`] names a workload — optionally with a non-default
+//!   `GeneratorConfig`, the workload-*shape* axis; generated traces are
+//!   cached process-wide behind `Arc<Trace>` (keyed by spec *and*
+//!   generator fingerprint) and, when a matrix has a `cache_dir`, in the
+//!   versioned on-disk store (`crate::workload::store`) shared across
+//!   processes.
 //! * [`Scenario`] / [`ScenarioMatrix`] declare grid rows as plain data —
 //!   the scaler axis is an [`crate::autoscale::ScalerSpec`], not a
 //!   factory closure.
 //! * [`run_matrix`](runner::run_matrix) executes rows on a scoped worker
 //!   pool and replications in deterministic waves; results are
 //!   bit-identical to the serial path (replications fold in seed order).
+//!   [`run_matrix_with`](runner::run_matrix_with) additionally streams
+//!   each result out as its scenario converges.
 //!
 //! The whole simulation path (`Trace`, `SimConfig`, `DelayModel`,
 //! `ScalerSpec`, `Simulator`) is `Send + Sync`-clean, asserted below.
@@ -25,7 +30,7 @@ pub mod runner;
 pub mod source;
 
 pub use matrix::{Overrides, Scenario, ScenarioMatrix};
-pub use runner::{default_threads, run_replications, run_matrix, ScenarioResult};
+pub use runner::{default_threads, run_replications, run_matrix, run_matrix_with, ScenarioResult};
 pub use source::{clear_trace_cache, scale_config, scale_spec, TraceSource, FAST_FACTOR};
 
 #[cfg(test)]

@@ -41,6 +41,40 @@ fn scratch_pool() -> &'static Mutex<Vec<SimScratch>> {
     POOL.get_or_init(Default::default)
 }
 
+/// Lock the scratch pool, recovering from poisoning. A panicking
+/// replication used to poison the pool and every *unrelated* scenario
+/// then died with "scratch pool poisoned" instead of the original error.
+/// Recovery is safe *with the pooled scratches intact*: the lock is only
+/// ever held for a `Vec` push/pop, so pooled buffers are never
+/// mid-mutation when a panic strikes (the panicking replication's own
+/// scratch was checked out and is simply lost), and pooling keeps
+/// working after the poison. The panic itself is surfaced by
+/// [`join_wave`], not by cascading lock failures.
+fn lock_pool() -> std::sync::MutexGuard<'static, Vec<SimScratch>> {
+    scratch_pool().lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Join a wave of replication threads, collecting results in spawn
+/// (= seed) order. If any thread panicked, the *first* panic payload is
+/// re-raised after every handle is joined, so the original failure — not
+/// a downstream lock poisoning — reaches the caller.
+fn join_wave<T>(handles: Vec<std::thread::ScopedJoinHandle<'_, T>>) -> Vec<T> {
+    let mut out = Vec::with_capacity(handles.len());
+    let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
+    for h in handles {
+        match h.join() {
+            Ok(v) => out.push(v),
+            Err(payload) => {
+                first_panic.get_or_insert(payload);
+            }
+        }
+    }
+    if let Some(payload) = first_panic {
+        std::panic::resume_unwind(payload);
+    }
+    out
+}
+
 /// Outcome of a CI-converged scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioResult {
@@ -75,13 +109,12 @@ pub fn run_replications(
     // so steady-state sweeps allocate nothing per replication (results
     // are unaffected — `SimScratch` reuse is invisible by construction).
     let run_one = |rep: u64| -> (f64, f64) {
-        let mut scratch =
-            scratch_pool().lock().expect("scratch pool poisoned").pop().unwrap_or_default();
+        let mut scratch = lock_pool().pop().unwrap_or_default();
         let cfg = base_cfg.with_seed(base_cfg.seed.wrapping_add(rep.wrapping_mul(7919)));
         let sim = Simulator::new(&cfg, model);
         let res = sim.run_with_scratch(trace, scaler.build(model, mix), &mut scratch);
         let out = (res.violation_pct(), res.cpu_hours);
-        let mut pool = scratch_pool().lock().expect("scratch pool poisoned");
+        let mut pool = lock_pool();
         if pool.len() < SCRATCH_POOL_MAX {
             pool.push(scratch);
         }
@@ -109,10 +142,7 @@ pub fn run_replications(
                         s.spawn(move || f(r))
                     })
                     .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("replication thread panicked"))
-                    .collect()
+                join_wave(handles)
             })
         };
         // Fold in seed order; a wave overshooting the convergence point
@@ -139,18 +169,35 @@ pub fn run_replications(
 /// parallelism is spent across scenarios (serial replications inside
 /// each); with fewer rows the spare threads parallelize replications.
 pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> Result<Vec<ScenarioResult>> {
+    run_matrix_with(matrix, threads, |_, _| {})
+}
+
+/// [`run_matrix`] with a streaming callback: `on_result(row, result)` is
+/// invoked once per scenario as it converges — row order on the serial
+/// path, completion order under parallelism (the callback runs on worker
+/// threads; each row fires exactly once). The returned vector is always
+/// in row order, so streamed and batch output carry identical content.
+pub fn run_matrix_with<F>(
+    matrix: &ScenarioMatrix,
+    threads: usize,
+    on_result: F,
+) -> Result<Vec<ScenarioResult>>
+where
+    F: Fn(usize, &ScenarioResult) + Sync,
+{
     let n = matrix.scenarios.len();
     if n == 0 {
         return Ok(Vec::new());
     }
+    let disk = matrix.cache_dir.as_deref();
     let threads = threads.max(1);
     let workers = threads.min(n);
     let wave = (threads / workers).max(1);
     if workers == 1 && wave == 1 {
         let mut results = Vec::with_capacity(n);
-        for s in &matrix.scenarios {
-            let trace = s.source.load()?;
-            results.push(run_replications(
+        for (i, s) in matrix.scenarios.iter().enumerate() {
+            let trace = s.source.load_cached(disk)?;
+            let res = run_replications(
                 &trace,
                 &s.config,
                 &matrix.model,
@@ -159,7 +206,9 @@ pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> Result<Vec<Scenari
                 s.name.clone(),
                 s.max_reps,
                 1,
-            ));
+            );
+            on_result(i, &res);
+            results.push(res);
         }
         return Ok(results);
     }
@@ -170,6 +219,7 @@ pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> Result<Vec<Scenari
     let cursor = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<Result<ScenarioResult>>>> =
         (0..n).map(|_| Mutex::new(None)).collect();
+    let on_result = &on_result;
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
@@ -178,7 +228,7 @@ pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> Result<Vec<Scenari
                     break;
                 }
                 let row = &matrix.scenarios[i];
-                let outcome = row.source.load().map(|trace| {
+                let outcome = row.source.load_cached(disk).map(|trace| {
                     run_replications(
                         &trace,
                         &row.config,
@@ -190,7 +240,10 @@ pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> Result<Vec<Scenari
                         wave,
                     )
                 });
-                *slots[i].lock().expect("result slot poisoned") = Some(outcome);
+                if let Ok(res) = &outcome {
+                    on_result(i, res);
+                }
+                *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(outcome);
             });
         }
     });
@@ -198,7 +251,7 @@ pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> Result<Vec<Scenari
     for slot in slots {
         let outcome = slot
             .into_inner()
-            .expect("result slot poisoned")
+            .unwrap_or_else(|e| e.into_inner())
             .expect("every scenario ran to completion");
         results.push(outcome?);
     }
@@ -267,6 +320,91 @@ mod tests {
             .map(|r| r.name)
             .collect();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn poisoned_scratch_pool_recovers_instead_of_cascading() {
+        // Poison the process-wide pool: panic while holding its lock.
+        let _ = std::panic::catch_unwind(|| {
+            let _guard = scratch_pool().lock().unwrap();
+            panic!("deliberate poison");
+        });
+        // Unrelated scenarios must still run to completion (the old code
+        // died here with "scratch pool poisoned").
+        let trace = tiny_source().load().unwrap();
+        let r = run_replications(
+            &trace,
+            &SimConfig::default(),
+            &DelayModel::default(),
+            &ScalerSpec::threshold(70.0),
+            [0.30, 0.30, 0.40],
+            "after-poison".into(),
+            3,
+            2,
+        );
+        assert!(r.reps >= 3);
+        assert!(r.cpu_hours > 0.0);
+    }
+
+    #[test]
+    fn wave_join_surfaces_the_first_panic_payload() {
+        let caught = std::panic::catch_unwind(|| {
+            std::thread::scope(|s| {
+                let handles = vec![
+                    s.spawn(|| 1u32),
+                    s.spawn(|| panic!("original replication failure")),
+                    s.spawn(|| 3u32),
+                ];
+                join_wave(handles)
+            })
+        });
+        let payload = caught.expect_err("a panicking wave must propagate");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(
+            msg.contains("original replication failure"),
+            "panic payload was {msg:?}, not the original failure"
+        );
+    }
+
+    #[test]
+    fn streaming_callback_fires_once_per_row_with_batch_content() {
+        let src = tiny_source();
+        let cfg = SimConfig::default();
+        let rows = vec![
+            Scenario::new(src.clone(), cfg.clone(), ScalerSpec::threshold(60.0), 3),
+            Scenario::new(src.clone(), cfg.clone(), ScalerSpec::threshold(90.0), 3),
+            Scenario::new(src, cfg, ScalerSpec::load(0.99), 3),
+        ];
+        let matrix = ScenarioMatrix::from_rows(rows);
+        for threads in [1, 4] {
+            let streamed: Mutex<Vec<(usize, String, u64, u64, usize)>> = Mutex::new(Vec::new());
+            let batch = matrix
+                .run_with(threads, |i, r| {
+                    streamed.lock().unwrap().push((
+                        i,
+                        r.name.clone(),
+                        r.violation_pct.to_bits(),
+                        r.cpu_hours.to_bits(),
+                        r.reps,
+                    ));
+                })
+                .unwrap();
+            let mut streamed = streamed.into_inner().unwrap();
+            streamed.sort_by_key(|(i, ..)| *i);
+            assert_eq!(streamed.len(), batch.len(), "threads={threads}");
+            for ((i, name, viol, cost, reps), want) in streamed.iter().zip(&batch) {
+                assert_eq!(*name, batch[*i].name);
+                assert_eq!(*name, want.name);
+                assert_eq!(*viol, want.violation_pct.to_bits());
+                assert_eq!(*cost, want.cpu_hours.to_bits());
+                assert_eq!(*reps, want.reps);
+            }
+        }
     }
 
     #[test]

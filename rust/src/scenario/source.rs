@@ -1,18 +1,21 @@
-//! Trace sources and the process-wide trace cache.
+//! Trace sources and the two-level (process + disk) trace cache.
 //!
 //! A [`TraceSource`] names a workload declaratively (catalogue match,
-//! explicit [`MatchSpec`], or CSV dump) instead of holding a generated
-//! `Trace`. Loading goes through a process-wide cache keyed by everything
-//! that affects generation, so a match trace shared by many scenarios —
-//! the Spain trace alone backs Table I, Figs 2–4 and Figs 7–8 — is
-//! generated exactly once per process and shared as `Arc<Trace>` across
-//! scenario threads.
+//! explicit [`MatchSpec`], or CSV dump) — optionally with a non-default
+//! [`GeneratorConfig`], which makes workload *shape* (sentiment lead,
+//! swing, class mix) a first-class grid axis. Loading goes through a
+//! process-wide cache keyed by everything that affects generation — the
+//! spec fields *and* a content hash of every generator knob, so two
+//! sources differing only in generator config can never alias — and,
+//! when a cache directory is supplied, through the versioned on-disk
+//! store (`crate::workload::store`), so cross-process sweeps stop
+//! regenerating the Spain trace entirely.
 
 use crate::config::SimConfig;
-use crate::workload::{by_opponent, generate, GeneratorConfig, MatchSpec, Trace};
-use anyhow::{anyhow, Result};
+use crate::workload::{by_opponent, generate, store, GeneratorConfig, MatchSpec, Trace};
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// Volume scale factor used in fast mode.
@@ -41,9 +44,9 @@ pub fn scale_config(cfg: &SimConfig, fast: bool) -> SimConfig {
 #[derive(Debug, Clone)]
 pub enum TraceSource {
     /// A Table II match looked up by opponent name.
-    Match { opponent: String, fast: bool },
+    Match { opponent: String, fast: bool, gen: GeneratorConfig },
     /// An explicit match spec (fast-scaled on load when `fast`).
-    Spec { spec: MatchSpec, fast: bool },
+    Spec { spec: MatchSpec, fast: bool, gen: GeneratorConfig },
     /// A CSV trace written by `Trace::write_csv` (never cached — the file
     /// can change between loads).
     Csv { path: PathBuf },
@@ -51,59 +54,147 @@ pub enum TraceSource {
 
 impl TraceSource {
     pub fn opponent(name: impl Into<String>, fast: bool) -> Self {
-        Self::Match { opponent: name.into(), fast }
+        Self::Match { opponent: name.into(), fast, gen: GeneratorConfig::default() }
     }
 
     pub fn spec(spec: MatchSpec, fast: bool) -> Self {
-        Self::Spec { spec, fast }
+        Self::Spec { spec, fast, gen: GeneratorConfig::default() }
     }
 
     pub fn csv(path: impl Into<PathBuf>) -> Self {
         Self::Csv { path: path.into() }
     }
 
-    /// Short label for scenario names ("Spain", "trace.csv", ...).
-    pub fn label(&self) -> String {
+    /// Replace the generator config (the workload-shape axis). No-op for
+    /// CSV sources, whose tweets are already materialized.
+    pub fn with_generator(mut self, cfg: GeneratorConfig) -> Self {
+        match &mut self {
+            Self::Match { gen, .. } | Self::Spec { gen, .. } => *gen = cfg,
+            Self::Csv { .. } => {}
+        }
+        self
+    }
+
+    /// The generator config this source synthesizes with (None for CSV).
+    pub fn generator(&self) -> Option<&GeneratorConfig> {
         match self {
+            Self::Match { gen, .. } | Self::Spec { gen, .. } => Some(gen),
+            Self::Csv { .. } => None,
+        }
+    }
+
+    /// Short label for scenario names ("Spain", "trace.csv#1a2b3c4d", ...).
+    ///
+    /// Labels are collision-free for distinct workloads: non-catalogue
+    /// specs and CSV paths carry a short content hash (two CSVs named
+    /// `trace.csv` in different directories, or two ad-hoc specs sharing
+    /// an opponent name, would otherwise be indistinguishable in matrix
+    /// output), and a non-default generator config is appended after `~`.
+    /// The `fast` flag is deliberately *excluded*: every experiment names
+    /// its fast replica after the match it scales down ("Japan", not
+    /// "Japan@fast"), and grids never mix fast and full sources.
+    pub fn label(&self) -> String {
+        let base = match self {
             Self::Match { opponent, .. } => opponent.clone(),
-            Self::Spec { spec, .. } => spec.opponent.to_string(),
-            Self::Csv { path } => path
-                .file_name()
-                .map(|n| n.to_string_lossy().into_owned())
-                .unwrap_or_else(|| path.display().to_string()),
+            Self::Spec { spec, .. } => match by_opponent(spec.opponent) {
+                Some(cat) if cat == *spec => spec.opponent.to_string(),
+                _ => format!("{}#{:08x}", spec.opponent, short_hash(&spec_key(spec))),
+            },
+            Self::Csv { path } => {
+                let name = path
+                    .file_name()
+                    .map(|n| n.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| path.display().to_string());
+                match path.parent() {
+                    Some(p) if !p.as_os_str().is_empty() => {
+                        format!("{name}#{:08x}", short_hash(&path.display().to_string()))
+                    }
+                    _ => name,
+                }
+            }
+        };
+        match self.generator() {
+            Some(gen) if !gen.is_default() => format!("{base}~{}", gen.label()),
+            _ => base,
         }
     }
 
     /// The (possibly fast-scaled) spec this source generates from.
+    /// Degenerate specs — zero tweets (possibly after fast scaling) or a
+    /// zero-length monitoring window — are a clean error here rather than
+    /// an empty simulation downstream.
     fn resolve_spec(&self) -> Result<MatchSpec> {
-        match self {
-            Self::Match { opponent, fast } => {
+        let scaled = match self {
+            Self::Match { opponent, fast, .. } => {
                 let spec = by_opponent(opponent)
                     .ok_or_else(|| anyhow!("unknown opponent {opponent:?}"))?;
-                Ok(scale_spec(&spec, *fast))
+                scale_spec(&spec, *fast)
             }
-            Self::Spec { spec, fast } => Ok(scale_spec(spec, *fast)),
-            Self::Csv { path } => Err(anyhow!("{} is a CSV source", path.display())),
+            Self::Spec { spec, fast, .. } => scale_spec(spec, *fast),
+            Self::Csv { path } => bail!("{} is a CSV source", path.display()),
+        };
+        if scaled.total_tweets == 0 || !(scaled.length_hours > 0.0) {
+            bail!(
+                "degenerate match spec {:?}: total_tweets={} length_hours={}",
+                scaled.opponent,
+                scaled.total_tweets,
+                scaled.length_hours
+            );
         }
+        Ok(scaled)
     }
 
-    /// Load (or reuse) the trace. Generated sources are cached for the
-    /// process lifetime; see [`clear_trace_cache`].
+    /// Load (or reuse) the trace through the process cache only.
     pub fn load(&self) -> Result<Arc<Trace>> {
+        self.load_cached(None)
+    }
+
+    /// Load the trace through the process cache, and — for generated
+    /// sources, when `disk` names a cache directory — through the on-disk
+    /// store: a valid stored trace is read back bit-identically instead of
+    /// regenerated, and a generated trace is persisted (best-effort) for
+    /// the next process. Corrupt, truncated or version-mismatched store
+    /// files silently fall back to regeneration.
+    pub fn load_cached(&self, disk: Option<&Path>) -> Result<Arc<Trace>> {
         if let Self::Csv { path } = self {
             return Ok(Arc::new(Trace::read_csv(path)?));
         }
         let spec = self.resolve_spec()?;
-        let key = spec_key(&spec);
+        let gen = self.generator().expect("generated source has a config");
+        let key = cache_key(&spec, gen);
         // Two-level locking: the map lock is held only to fetch/insert the
         // per-key slot, so concurrent workers generating *different* traces
         // proceed in parallel while duplicates of the *same* key block on
         // the slot's one-time initialization.
         let slot = {
-            let mut map = cache().lock().expect("trace cache poisoned");
-            map.entry(key).or_default().clone()
+            let mut map = cache().lock().unwrap_or_else(|e| e.into_inner());
+            map.entry(key.clone()).or_default().clone()
         };
-        Ok(slot.get_or_init(|| Arc::new(generate(&spec, &GeneratorConfig::default()))).clone())
+        Ok(slot
+            .get_or_init(|| {
+                let path = disk.map(|dir| store_path(dir, &key));
+                if let Some(p) = &path {
+                    if let Ok(trace) = store::read_trace(p) {
+                        return Arc::new(trace);
+                    }
+                }
+                let trace = generate(&spec, gen);
+                if let Some(p) = &path {
+                    // Best-effort: a full disk or unwritable cache dir must
+                    // not fail the run itself.
+                    let _ = store::write_trace(p, &trace);
+                }
+                Arc::new(trace)
+            })
+            .clone())
+    }
+
+    /// Where [`Self::load_cached`] would store this source's trace under
+    /// `dir` (error for CSV sources and unknown opponents).
+    pub fn cache_file(&self, dir: &Path) -> Result<PathBuf> {
+        let spec = self.resolve_spec()?;
+        let gen = self.generator().expect("generated source has a config");
+        Ok(store_path(dir, &cache_key(&spec, gen)))
     }
 }
 
@@ -117,10 +208,10 @@ fn cache() -> &'static Mutex<HashMap<String, Slot>> {
 
 /// Drop every cached trace (long-lived processes sweeping many workloads).
 pub fn clear_trace_cache() {
-    cache().lock().expect("trace cache poisoned").clear();
+    cache().lock().unwrap_or_else(|e| e.into_inner()).clear();
 }
 
-/// Every field that influences generation, exactly rendered.
+/// Every spec field that influences generation, exactly rendered.
 fn spec_key(spec: &MatchSpec) -> String {
     use std::fmt::Write;
     let mut key = format!(
@@ -133,9 +224,39 @@ fn spec_key(spec: &MatchSpec) -> String {
     key
 }
 
+/// The full cache key: spec fields plus a content hash of *every*
+/// generator field. Before the generator axis existed, keys ignored the
+/// config — a latent aliasing bug that would have handed two
+/// differently-configured scenarios the same trace.
+fn cache_key(spec: &MatchSpec, gen: &GeneratorConfig) -> String {
+    format!("{}|gen:{:016x}", spec_key(spec), gen.fingerprint())
+}
+
+/// Deterministic store file name under a cache dir: a hash of the full
+/// cache key, so spec *and* generator config address distinct files.
+fn store_path(dir: &Path, key: &str) -> PathBuf {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    dir.join(format!("{h:016x}.trace"))
+}
+
+/// 32-bit label hash (folded FNV-1a) for collision-free short labels.
+fn short_hash(s: &str) -> u32 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    (h ^ (h >> 32)) as u32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::TempDir;
 
     fn tiny_spec(total: u64) -> MatchSpec {
         MatchSpec {
@@ -165,6 +286,26 @@ mod tests {
     }
 
     #[test]
+    fn generator_config_is_part_of_the_cache_key() {
+        // Regression: `spec_key` used to ignore the generator config, so
+        // two sources differing only in config aliased to one trace.
+        let base = TraceSource::spec(tiny_spec(3_000), false);
+        let tweaked = base
+            .clone()
+            .with_generator(GeneratorConfig { lead_min: 0.0, ..GeneratorConfig::default() });
+        let a = base.load().unwrap();
+        let b = tweaked.load().unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "distinct configs must not share a cache entry");
+
+        let reseeded = base
+            .clone()
+            .with_generator(GeneratorConfig { seed: 99, ..GeneratorConfig::default() });
+        let c = reseeded.load().unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_ne!(a.post_time(10), c.post_time(10), "different seed, different trace");
+    }
+
+    #[test]
     fn fast_flag_scales_catalogue_match() {
         let fast = TraceSource::opponent("England", true).load().unwrap();
         let spec = by_opponent("England").unwrap();
@@ -183,8 +324,23 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_specs_are_a_clean_error() {
+        let err = TraceSource::spec(tiny_spec(0), false).load().unwrap_err();
+        assert!(format!("{err}").contains("degenerate"), "{err}");
+
+        let mut zero_len = tiny_spec(500);
+        zero_len.length_hours = 0.0;
+        let err = TraceSource::spec(zero_len, false).load().unwrap_err();
+        assert!(format!("{err}").contains("degenerate"), "{err}");
+
+        // Fast scaling a tiny spec to zero tweets is caught too.
+        let err = TraceSource::spec(tiny_spec(FAST_FACTOR - 1), true).load().unwrap_err();
+        assert!(format!("{err}").contains("degenerate"), "{err}");
+    }
+
+    #[test]
     fn csv_roundtrip_is_uncached() {
-        let dir = crate::util::TempDir::new().unwrap();
+        let dir = TempDir::new().unwrap();
         let path = dir.join("t.csv");
         let trace = TraceSource::spec(tiny_spec(1_000), false).load().unwrap();
         trace.write_csv(&path).unwrap();
@@ -195,8 +351,71 @@ mod tests {
     }
 
     #[test]
-    fn labels_are_short() {
+    fn disk_cache_persists_bit_identically() {
+        let dir = TempDir::new().unwrap();
+        let spec = MatchSpec { opponent: "DiskRT", ..tiny_spec(2_500) };
+        let src = TraceSource::spec(spec, false);
+        let trace = src.load_cached(Some(dir.path())).unwrap();
+        let file = src.cache_file(dir.path()).unwrap();
+        assert!(file.exists(), "load_cached must persist the generated trace");
+        let stored = store::read_trace(&file).unwrap();
+        assert_eq!(stored.ids(), trace.ids());
+        for i in 0..trace.len() {
+            assert_eq!(stored.post_times()[i].to_bits(), trace.post_times()[i].to_bits());
+            assert_eq!(stored.classes()[i], trace.classes()[i]);
+            assert_eq!(stored.sentiments()[i].to_bits(), trace.sentiments()[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn disk_cache_is_read_in_preference_to_regeneration() {
+        // Plant a *different* valid trace under the key of a never-loaded
+        // source; load_cached must return the planted content, proving the
+        // disk path short-circuits generation.
+        let dir = TempDir::new().unwrap();
+        let spec = MatchSpec { opponent: "DiskPlant", ..tiny_spec(2_000) };
+        let src = TraceSource::spec(spec, false);
+        let other = MatchSpec { opponent: "DiskOther", ..tiny_spec(700) };
+        let planted = TraceSource::spec(other, false).load().unwrap();
+        store::write_trace(&src.cache_file(dir.path()).unwrap(), &planted).unwrap();
+        let got = src.load_cached(Some(dir.path())).unwrap();
+        assert_eq!(got.len(), planted.len(), "disk cache hit must win over regeneration");
+    }
+
+    #[test]
+    fn corrupt_disk_cache_falls_back_to_regeneration() {
+        let dir = TempDir::new().unwrap();
+        let spec = MatchSpec { opponent: "DiskCorrupt", ..tiny_spec(1_500) };
+        let src = TraceSource::spec(spec, false);
+        let file = src.cache_file(dir.path()).unwrap();
+        std::fs::write(&file, b"SLATRACE not actually a trace").unwrap();
+        let got = src.load_cached(Some(dir.path())).unwrap();
+        assert!(!got.is_empty(), "corrupt store must regenerate, not fail");
+        // and the store was healed for the next process
+        let healed = store::read_trace(&file).unwrap();
+        assert_eq!(healed.len(), got.len());
+    }
+
+    #[test]
+    fn labels_are_short_and_collision_free() {
         assert_eq!(TraceSource::opponent("Spain", true).label(), "Spain");
-        assert_eq!(TraceSource::csv("/tmp/x/trace.csv").label(), "trace.csv");
+        // catalogue spec keeps the plain name
+        let spain = by_opponent("Spain").unwrap();
+        assert_eq!(TraceSource::spec(spain, true).label(), "Spain");
+        // ad-hoc specs sharing an opponent name stay distinguishable
+        let a = TraceSource::spec(tiny_spec(4_000), false);
+        let b = TraceSource::spec(tiny_spec(2_000), false);
+        assert_ne!(a.label(), b.label());
+        assert!(a.label().starts_with("CacheTest#"), "{}", a.label());
+        // same-named CSVs in different directories stay distinguishable
+        let x = TraceSource::csv("/tmp/x/trace.csv");
+        let y = TraceSource::csv("/tmp/y/trace.csv");
+        assert_ne!(x.label(), y.label());
+        assert!(x.label().starts_with("trace.csv#"), "{}", x.label());
+        assert_eq!(TraceSource::csv("bare.csv").label(), "bare.csv");
+        // non-default generator configs are visible in the label
+        let tweaked = TraceSource::opponent("Spain", true)
+            .with_generator(GeneratorConfig { lead_min: 0.0, ..GeneratorConfig::default() });
+        assert_eq!(tweaked.label(), "Spain~lead=0.00m");
     }
 }

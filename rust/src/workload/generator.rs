@@ -20,7 +20,7 @@ use super::trace::{Trace, TweetClass};
 use crate::rng::Rng;
 
 /// Tunables for trace synthesis (defaults reproduce the paper's structure).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GeneratorConfig {
     pub seed: u64,
     /// Minutes by which sentiment leads volume (paper: "a minute or two").
@@ -55,6 +55,80 @@ impl Default for GeneratorConfig {
             interest_swing: 1.2,
             sentiment_interest: 0.22,
         }
+    }
+}
+
+impl GeneratorConfig {
+    /// True when every knob is at its paper-calibrated default.
+    pub fn is_default(&self) -> bool {
+        *self == Self::default()
+    }
+
+    /// Content hash over *every* field (exact bit patterns, not displayed
+    /// decimals) — the generator axis of trace-cache keys. Two configs
+    /// fingerprint equal iff `generate` would produce the same trace for a
+    /// given spec.
+    pub fn fingerprint(&self) -> u64 {
+        let fields = [
+            self.seed,
+            self.lead_min.to_bits(),
+            self.class_mix[0].to_bits(),
+            self.class_mix[1].to_bits(),
+            self.class_mix[2].to_bits(),
+            self.base_sentiment.to_bits(),
+            self.sentiment_swing.to_bits(),
+            self.tweet_noise.to_bits(),
+            self.minute_noise.to_bits(),
+            self.interest_swing.to_bits(),
+            self.sentiment_interest.to_bits(),
+        ];
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        for f in fields {
+            for b in f.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        }
+        h
+    }
+
+    /// Compact label of the fields that differ from the default
+    /// ("lead=0.00m,swing=0.10"); empty for the default config. Scenario
+    /// names use this for the workload-shape axis of a grid.
+    pub fn label(&self) -> String {
+        let d = Self::default();
+        let mut parts: Vec<String> = Vec::new();
+        if self.seed != d.seed {
+            parts.push(format!("gseed={}", self.seed));
+        }
+        if self.lead_min != d.lead_min {
+            parts.push(format!("lead={:.2}m", self.lead_min));
+        }
+        if self.class_mix != d.class_mix {
+            parts.push(format!(
+                "mix={:.2}/{:.2}/{:.2}",
+                self.class_mix[0], self.class_mix[1], self.class_mix[2]
+            ));
+        }
+        if self.base_sentiment != d.base_sentiment {
+            parts.push(format!("sbase={:.2}", self.base_sentiment));
+        }
+        if self.sentiment_swing != d.sentiment_swing {
+            parts.push(format!("swing={:.2}", self.sentiment_swing));
+        }
+        if self.tweet_noise != d.tweet_noise {
+            parts.push(format!("tnoise={:.3}", self.tweet_noise));
+        }
+        if self.minute_noise != d.minute_noise {
+            parts.push(format!("mnoise={:.3}", self.minute_noise));
+        }
+        if self.interest_swing != d.interest_swing {
+            parts.push(format!("iswing={:.2}", self.interest_swing));
+        }
+        if self.sentiment_interest != d.sentiment_interest {
+            parts.push(format!("sint={:.2}", self.sentiment_interest));
+        }
+        parts.join(",")
     }
 }
 
@@ -100,6 +174,13 @@ pub fn rate_profile(spec: &MatchSpec, cfg: &GeneratorConfig) -> Vec<f64> {
         shape.push(base * slow * rate_multiplier(&spec.events, t_min));
     }
     let integral: f64 = shape.iter().sum();
+    // Degenerate specs (no tweets, zero-length monitoring window) must not
+    // divide by a zero integral and poison the profile with NaN/inf: an
+    // all-zero profile generates the empty trace instead.
+    if spec.total_tweets == 0 || !(integral > 0.0) {
+        shape.iter_mut().for_each(|v| *v = 0.0);
+        return shape;
+    }
     let scale = spec.total_tweets as f64 / integral;
     shape.iter_mut().for_each(|v| *v *= scale);
     shape
@@ -305,6 +386,58 @@ mod tests {
                 assert!((0.0..=1.0).contains(&(s as f64)));
             }
         }
+    }
+
+    #[test]
+    fn zero_tweet_spec_yields_zero_rates_and_empty_trace() {
+        let mut spec = small_spec();
+        spec.total_tweets = 0;
+        let rates = rate_profile(&spec, &GeneratorConfig::default());
+        assert!(!rates.is_empty());
+        assert!(rates.iter().all(|&r| r == 0.0), "no NaN/inf rates for a zero-tweet spec");
+        assert!(generate(&spec, &GeneratorConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn zero_length_spec_yields_empty_trace() {
+        let mut spec = small_spec();
+        spec.length_hours = 0.0;
+        spec.events.clear();
+        assert!(rate_profile(&spec, &GeneratorConfig::default()).is_empty());
+        assert!(generate(&spec, &GeneratorConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn fingerprint_covers_every_field() {
+        let base = GeneratorConfig::default();
+        let variants = [
+            GeneratorConfig { seed: 7, ..base.clone() },
+            GeneratorConfig { lead_min: 0.0, ..base.clone() },
+            GeneratorConfig { class_mix: [0.4, 0.3, 0.3], ..base.clone() },
+            GeneratorConfig { base_sentiment: 0.5, ..base.clone() },
+            GeneratorConfig { sentiment_swing: 0.1, ..base.clone() },
+            GeneratorConfig { tweet_noise: 0.2, ..base.clone() },
+            GeneratorConfig { minute_noise: 0.02, ..base.clone() },
+            GeneratorConfig { interest_swing: 0.5, ..base.clone() },
+            GeneratorConfig { sentiment_interest: 0.1, ..base.clone() },
+        ];
+        for v in &variants {
+            assert_ne!(v.fingerprint(), base.fingerprint(), "{v:?}");
+            assert!(!v.is_default());
+        }
+        assert_eq!(base.fingerprint(), GeneratorConfig::default().fingerprint());
+        assert!(base.is_default());
+    }
+
+    #[test]
+    fn label_names_the_changed_fields_only() {
+        assert_eq!(GeneratorConfig::default().label(), "");
+        let cfg = GeneratorConfig {
+            lead_min: 0.0,
+            sentiment_swing: 0.10,
+            ..GeneratorConfig::default()
+        };
+        assert_eq!(cfg.label(), "lead=0.00m,swing=0.10");
     }
 
     #[test]

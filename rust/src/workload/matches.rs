@@ -28,7 +28,7 @@ impl BurstEvent {
 }
 
 /// Static description of one monitored match (one row of Table II).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MatchSpec {
     /// Opponent ("England", ... , "Spain").
     pub opponent: &'static str,

@@ -1,10 +1,12 @@
 //! Workload substrate: Table II match catalogue, burst-pulse math, the
-//! calibrated synthetic trace generator, the CSV trace model, and token
-//! text rendering for the live-serving path.
+//! calibrated synthetic trace generator, the CSV trace model, the
+//! versioned binary trace store backing the cross-process cache, and
+//! token text rendering for the live-serving path.
 
 pub mod burst;
 pub mod generator;
 pub mod matches;
+pub mod store;
 pub mod text;
 pub mod trace;
 

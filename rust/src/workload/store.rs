@@ -1,0 +1,261 @@
+//! Versioned on-disk trace store: the binary format behind the
+//! cross-process trace cache.
+//!
+//! Generating the Spain trace costs seconds; reading its columns back
+//! from disk costs milliseconds. The scenario engine keys stored traces
+//! by a content hash of (spec, generator config) — see
+//! `crate::scenario::TraceSource` — and this module owns the file format:
+//!
+//! ```text
+//! magic   8 B   b"SLATRACE"
+//! version 4 B   u32 LE (FORMAT_VERSION)
+//! count   8 B   u64 LE (number of tweets, n)
+//! ids     n×8 B u64 LE
+//! times   n×8 B f64 bit patterns, LE
+//! classes n×1 B TweetClass discriminants
+//! scores  n×4 B f32 bit patterns, LE
+//! hash    8 B   u64 LE, FNV-1a over the four column sections
+//! ```
+//!
+//! Floats are stored as exact bit patterns, so a round trip is
+//! bit-identical (including the NaN sentinel of non-analyzed tweets).
+//! Every failure mode — missing file, truncation, flipped bytes, a
+//! version bump — surfaces as an `Err`, and callers fall back to
+//! regeneration; a stored trace is never trusted without its hash.
+
+use super::trace::{Trace, TweetClass};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// File magic: identifies a trace store regardless of extension.
+pub const MAGIC: [u8; 8] = *b"SLATRACE";
+
+/// Bump on any layout change; readers reject other versions.
+pub const FORMAT_VERSION: u32 = 1;
+
+const HEADER_LEN: usize = 8 + 4 + 8;
+const BYTES_PER_TWEET: usize = 8 + 8 + 1 + 4;
+
+/// Serialize `trace` to `path` (parent directories are created). The
+/// write goes through a process-unique sibling file and a rename, so a
+/// crashed or concurrent writer can never leave a half-written file
+/// under the final name.
+pub fn write_trace(path: &Path, trace: &Trace) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating cache dir {}", parent.display()))?;
+        }
+    }
+    let n = trace.len();
+    let mut data = Vec::with_capacity(HEADER_LEN + n * BYTES_PER_TWEET + 8);
+    data.extend_from_slice(&MAGIC);
+    data.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    data.extend_from_slice(&(n as u64).to_le_bytes());
+    for &id in trace.ids() {
+        data.extend_from_slice(&id.to_le_bytes());
+    }
+    for &t in trace.post_times() {
+        data.extend_from_slice(&t.to_bits().to_le_bytes());
+    }
+    for &c in trace.classes() {
+        data.push(c as u8);
+    }
+    for &s in trace.sentiments() {
+        data.extend_from_slice(&s.to_bits().to_le_bytes());
+    }
+    let hash = fnv1a(&data[HEADER_LEN..]);
+    data.extend_from_slice(&hash.to_le_bytes());
+
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    std::fs::write(&tmp, &data).with_context(|| format!("writing {}", tmp.display()))?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e).with_context(|| format!("publishing {}", path.display()))
+        }
+    }
+}
+
+/// Deserialize a trace written by [`write_trace`]. Any mismatch —
+/// magic, version, length, content hash, class codes — is an error;
+/// callers treat that as a cache miss and regenerate.
+pub fn read_trace(path: &Path) -> Result<Trace> {
+    let data =
+        std::fs::read(path).with_context(|| format!("reading trace store {}", path.display()))?;
+    if data.len() < HEADER_LEN + 8 {
+        bail!("trace store {} truncated ({} bytes)", path.display(), data.len());
+    }
+    if data[..8] != MAGIC {
+        bail!("trace store {} has wrong magic", path.display());
+    }
+    let version = u32::from_le_bytes(data[8..12].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        bail!(
+            "trace store {} is format v{version}, expected v{FORMAT_VERSION}",
+            path.display()
+        );
+    }
+    let n = u64::from_le_bytes(data[12..HEADER_LEN].try_into().unwrap());
+    let payload_len = usize::try_from(n)
+        .ok()
+        .and_then(|n| n.checked_mul(BYTES_PER_TWEET))
+        .with_context(|| format!("trace store {} claims {n} tweets", path.display()))?;
+    if data.len() != HEADER_LEN + payload_len + 8 {
+        bail!(
+            "trace store {} truncated: {} bytes for {n} tweets",
+            path.display(),
+            data.len()
+        );
+    }
+    let payload = &data[HEADER_LEN..HEADER_LEN + payload_len];
+    let stored_hash = u64::from_le_bytes(data[HEADER_LEN + payload_len..].try_into().unwrap());
+    if fnv1a(payload) != stored_hash {
+        bail!("trace store {} failed its content hash", path.display());
+    }
+
+    let n = n as usize;
+    let (ids_b, rest) = payload.split_at(n * 8);
+    let (times_b, rest) = rest.split_at(n * 8);
+    let (classes_b, scores_b) = rest.split_at(n);
+    let ids: Vec<u64> =
+        ids_b.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect();
+    let post_times: Vec<f64> = times_b
+        .chunks_exact(8)
+        .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+        .collect();
+    let mut classes = Vec::with_capacity(n);
+    for &b in classes_b {
+        classes.push(
+            TweetClass::from_u8(b)
+                .with_context(|| format!("trace store {}: bad class {b}", path.display()))?,
+        );
+    }
+    let sentiments: Vec<f32> = scores_b
+        .chunks_exact(4)
+        .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+        .collect();
+    if !post_times.windows(2).all(|w| w[0] <= w[1]) {
+        bail!("trace store {} has unsorted post times", path.display());
+    }
+    Ok(Trace::from_sorted_columns(ids, post_times, classes, sentiments))
+}
+
+/// FNV-1a over a byte slice (matches the generator's string hashing).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+    use crate::workload::{generate, GeneratorConfig, MatchSpec};
+
+    fn sample_trace() -> Trace {
+        let spec = MatchSpec {
+            opponent: "StoreTest",
+            date: "—",
+            total_tweets: 3_000,
+            length_hours: 0.05,
+            events: vec![],
+        };
+        generate(&spec, &GeneratorConfig::default())
+    }
+
+    fn assert_bit_identical(a: &Trace, b: &Trace) {
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.ids(), b.ids());
+        for i in 0..a.len() {
+            assert_eq!(a.post_times()[i].to_bits(), b.post_times()[i].to_bits(), "tweet {i}");
+            assert_eq!(a.classes()[i], b.classes()[i], "tweet {i}");
+            assert_eq!(a.sentiments()[i].to_bits(), b.sentiments()[i].to_bits(), "tweet {i}");
+        }
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("t.trace");
+        let trace = sample_trace();
+        assert!(
+            trace.sentiments().iter().any(|s| s.is_nan()),
+            "sample must exercise the NaN sentinel"
+        );
+        write_trace(&path, &trace).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_bit_identical(&trace, &back);
+    }
+
+    #[test]
+    fn empty_trace_round_trips() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("empty.trace");
+        write_trace(&path, &Trace::default()).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn missing_parent_dirs_are_created() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("a").join("b").join("t.trace");
+        write_trace(&path, &sample_trace()).unwrap();
+        assert!(read_trace(&path).is_ok());
+    }
+
+    #[test]
+    fn truncated_file_is_rejected() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("t.trace");
+        write_trace(&path, &sample_trace()).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() / 2]).unwrap();
+        let err = read_trace(&path).unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn flipped_payload_byte_fails_the_hash() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("t.trace");
+        write_trace(&path, &sample_trace()).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        let mid = data.len() / 2;
+        data[mid] ^= 0xFF;
+        std::fs::write(&path, &data).unwrap();
+        let err = read_trace(&path).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("hash") || msg.contains("class"), "{msg}");
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_rejected() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("t.trace");
+        write_trace(&path, &sample_trace()).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        std::fs::write(&path, &bad_magic).unwrap();
+        assert!(format!("{}", read_trace(&path).unwrap_err()).contains("magic"));
+
+        let mut bad_version = good;
+        bad_version[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        std::fs::write(&path, &bad_version).unwrap();
+        assert!(format!("{}", read_trace(&path).unwrap_err()).contains("format v"));
+    }
+
+    #[test]
+    fn missing_file_is_an_error_not_a_panic() {
+        let dir = TempDir::new().unwrap();
+        assert!(read_trace(&dir.join("nope.trace")).is_err());
+    }
+}

@@ -184,6 +184,21 @@ impl Trace {
         &self.post_times
     }
 
+    /// The id column.
+    pub fn ids(&self) -> &[u64] {
+        &self.ids
+    }
+
+    /// The class column.
+    pub fn classes(&self) -> &[TweetClass] {
+        &self.classes
+    }
+
+    /// The sentiment column (NaN = not analyzed).
+    pub fn sentiments(&self) -> &[f32] {
+        &self.sentiments
+    }
+
     /// Materialize tweet `i` as an interchange row.
     pub fn tweet(&self, i: usize) -> Tweet {
         Tweet {

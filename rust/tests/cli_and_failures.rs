@@ -116,6 +116,65 @@ fn cli_matrix_runs_a_grid() {
 }
 
 #[test]
+fn cli_matrix_streams_and_reuses_the_disk_cache() {
+    let dir = TempDir::new().unwrap();
+    let cache = dir.join("traces");
+    let run = || {
+        bin()
+            .args([
+                "matrix",
+                "France",
+                "--algos",
+                "threshold-80%",
+                "--fast",
+                "--threads",
+                "2",
+                "--lead-min",
+                "0,3",
+                "--stream",
+                "--cache-dir",
+                cache.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap()
+    };
+    let streamed_rows = |stdout: &str| -> Vec<String> {
+        let mut rows: Vec<String> = stdout
+            .lines()
+            .filter(|l| l.contains(',') && l.contains("threshold-80%/"))
+            .map(String::from)
+            .collect();
+        rows.sort();
+        rows
+    };
+
+    let first = run();
+    assert!(first.status.success(), "{}", String::from_utf8_lossy(&first.stderr));
+    let text = String::from_utf8_lossy(&first.stdout).into_owned();
+    assert!(text.contains("scenario,violation_pct,cpu_hours,reps"), "{text}");
+    let rows = streamed_rows(&text);
+    assert_eq!(rows.len(), 2, "one streamed CSV line per scenario:\n{text}");
+    assert!(rows.iter().any(|r| r.contains("lead=0.00m")), "{text}");
+    assert!(rows.iter().any(|r| r.contains("lead=3.00m")), "{text}");
+    // the final batch table still prints after the stream
+    assert!(text.contains("scenario matrix — 2 scenarios"), "{text}");
+    // one versioned store file per workload shape
+    let stored = std::fs::read_dir(&cache)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().path().extension().map(|x| x == "trace").unwrap_or(false)
+        })
+        .count();
+    assert_eq!(stored, 2, "cache dir must hold one trace per shape");
+
+    // A second process streams identical content, fed from the disk cache.
+    let second = run();
+    assert!(second.status.success(), "{}", String::from_utf8_lossy(&second.stderr));
+    let rows2 = streamed_rows(&String::from_utf8_lossy(&second.stdout));
+    assert_eq!(rows, rows2, "cross-process runs must stream identical results");
+}
+
+#[test]
 fn cli_matrix_rejects_bad_algo_and_opponent() {
     let out = bin().args(["matrix", "France", "--algos", "magic-9000"]).output().unwrap();
     assert!(!out.status.success());

@@ -6,8 +6,8 @@ use sla_autoscale::autoscale::ScalerSpec;
 use sla_autoscale::config::SimConfig;
 use sla_autoscale::delay::DelayModel;
 use sla_autoscale::scenario::{run_replications, Overrides, ScenarioMatrix, TraceSource};
-use sla_autoscale::workload::MatchSpec;
-use std::sync::Arc;
+use sla_autoscale::workload::{GeneratorConfig, MatchSpec};
+use std::sync::{Arc, Mutex};
 
 fn small_source(total: u64) -> TraceSource {
     TraceSource::spec(
@@ -131,6 +131,72 @@ fn matrix_rows_share_cached_traces() {
     let x = sla_autoscale::experiments::common::trace_for(&spec, true);
     let y = TraceSource::opponent("Japan", true).load().unwrap();
     assert!(Arc::ptr_eq(&x, &y), "trace_for and TraceSource must share the cache");
+}
+
+/// The workload-shape axis end to end: a grid sweeping two generator
+/// configs over one spec gets two *distinct* traces (the cache key
+/// includes the generator fingerprint — regression for the aliasing
+/// bug), and streamed results carry exactly the batch content,
+/// independent of completion order.
+#[test]
+fn generator_axis_streams_batch_identical_results() {
+    let source = TraceSource::spec(
+        MatchSpec {
+            opponent: "GenAxisIT",
+            date: "—",
+            total_tweets: 15_000,
+            length_hours: 0.25,
+            events: vec![],
+        },
+        false,
+    );
+    let gens = [
+        GeneratorConfig::default(),
+        GeneratorConfig { lead_min: 0.0, ..GeneratorConfig::default() },
+    ];
+    let matrix = ScenarioMatrix::cross_gen(
+        &[source],
+        &gens,
+        &SimConfig::default(),
+        &[Overrides::default()],
+        &[ScalerSpec::load(0.99), ScalerSpec::load_plus_appdata(0.99999, 2)],
+        3,
+    );
+    assert_eq!(matrix.len(), 4);
+
+    // Distinct traces across the generator axis, shared within a shape.
+    let t0 = matrix.scenarios[0].source.load().unwrap();
+    let t1 = matrix.scenarios[1].source.load().unwrap();
+    let t2 = matrix.scenarios[2].source.load().unwrap();
+    assert!(Arc::ptr_eq(&t0, &t1), "same shape shares one trace");
+    assert!(!Arc::ptr_eq(&t0, &t2), "different generator configs must not alias");
+
+    let batch = matrix.run_serial().unwrap();
+    let streamed: Mutex<Vec<(usize, String, u64, u64, usize)>> = Mutex::new(Vec::new());
+    let parallel = matrix
+        .run_with(4, |i, r| {
+            streamed.lock().unwrap().push((
+                i,
+                r.name.clone(),
+                r.violation_pct.to_bits(),
+                r.cpu_hours.to_bits(),
+                r.reps,
+            ));
+        })
+        .unwrap();
+    let mut streamed = streamed.into_inner().unwrap();
+    streamed.sort_by_key(|(i, ..)| *i);
+    assert_eq!(streamed.len(), batch.len());
+    for (got, want) in streamed.iter().zip(&batch) {
+        assert_eq!(got.1, want.name);
+        assert_eq!(got.2, want.violation_pct.to_bits(), "{}", want.name);
+        assert_eq!(got.3, want.cpu_hours.to_bits(), "{}", want.name);
+        assert_eq!(got.4, want.reps, "{}", want.name);
+    }
+    for (p, want) in parallel.iter().zip(&batch) {
+        assert_eq!(p.name, want.name);
+        assert_eq!(p.violation_pct.to_bits(), want.violation_pct.to_bits());
+    }
 }
 
 /// Registry specs drive real simulations end to end (every family).
