@@ -2,7 +2,9 @@
 //! Algorithm 1 (paper spec vs optimized), scaler decisions, sentiment
 //! window queries, tokenizer vectorization. §Perf inputs for L3.
 
-use sla_autoscale::autoscale::{AppdataScaler, AutoScaler, LoadScaler, Observation, ThresholdScaler};
+use sla_autoscale::autoscale::{
+    AppdataScaler, AutoScaler, DepasScaler, LoadScaler, Observation, ThresholdScaler,
+};
 use sla_autoscale::delay::DelayModel;
 use sla_autoscale::rng::Rng;
 use sla_autoscale::sentiment::tokenizer;
@@ -43,6 +45,7 @@ fn main() {
             windows.push(t as f64, r2.next_f64() as f32);
         }
     }
+    let node_ids: Vec<u64> = (0..8).collect();
     let obs = Observation {
         now: 3600.0,
         cpus: 8,
@@ -50,6 +53,7 @@ fn main() {
         in_system: 25_000,
         cpu_usage: 0.83,
         sentiment: &windows,
+        nodes: &node_ids,
         cpu_hz: 2.0e9,
         sla_secs: 300.0,
     };
@@ -64,6 +68,10 @@ fn main() {
     let mut app = AppdataScaler::new(4);
     bench::run("scaler/appdata/decide(240s windows)", BUDGET, || {
         std::hint::black_box(app.decide(&obs));
+    });
+    let mut depas = DepasScaler::new(0.7, 0.1, 0.5);
+    bench::run("scaler/depas/decide(8 nodes)", BUDGET, || {
+        std::hint::black_box(depas.decide(&obs));
     });
 
     // Sentiment window bookkeeping (called once per completed tweet).

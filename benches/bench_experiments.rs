@@ -1,6 +1,6 @@
 //! One benchmark per paper table/figure: times the regeneration of every
-//! experiment in fast mode (the `exp all` path). This is the "regenerate
-//! the evaluation" harness the paper's tables map onto (DESIGN.md §6).
+//! experiment in fast mode (the `exp all` path) through the
+//! `experiments` registry the paper's tables map onto.
 
 use sla_autoscale::experiments;
 use sla_autoscale::util::bench;

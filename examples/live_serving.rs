@@ -8,7 +8,7 @@
 //!
 //! Reports throughput, batch-level latency quantiles, detected peaks, and
 //! cross-checks the model's windowed scores against the trace's latent
-//! sentiment. Recorded in EXPERIMENTS.md §End-to-end.
+//! sentiment.
 //!
 //! Run: `make artifacts && cargo run --release --example live_serving`
 

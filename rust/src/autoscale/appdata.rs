@@ -38,6 +38,8 @@ impl AppdataScaler {
     /// The paper's tuned comparison-window length (§V-B).
     pub const DEFAULT_WINDOW_SECS: f64 = 120.0;
 
+    /// Peak detector pre-provisioning `extra_cpus` per detected burst,
+    /// with the paper's tuned defaults for every other knob.
     pub fn new(extra_cpus: u32) -> Self {
         Self {
             jump_threshold: 0.5,
@@ -107,6 +109,7 @@ mod tests {
             in_system: 100,
             cpu_usage: 0.7,
             sentiment: w,
+            nodes: &[],
             cpu_hz: 2.0e9,
             sla_secs: 300.0,
         }

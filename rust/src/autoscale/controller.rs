@@ -1,9 +1,16 @@
 //! Adaptation controller: gates scaler evaluations to the configured
-//! adapt frequency and forwards decisions to the cluster.
+//! adapt frequency, logs the decisions taken, and actuates them on the
+//! cluster.
 //!
 //! §IV-B: "This is not done on every simulation step, but rather only
 //! every few minutes. This adaptation frequency is configurable just as
 //! the provisioning time."
+//!
+//! Evaluation ([`Controller::maybe_adapt`]) and actuation
+//! ([`Controller::apply`]) are split: an [`Observation`] may borrow
+//! cluster state — the per-node identities decentralized scalers key
+//! their local views on — so the decision is computed first and applied
+//! to the (then mutably borrowed) cluster afterwards.
 
 use super::{AutoScaler, Decision, Observation};
 use crate::sim::cluster::Cluster;
@@ -18,32 +25,46 @@ pub struct Controller {
 }
 
 impl Controller {
+    /// Schedule `scaler` for evaluation every `adapt_every_secs` seconds
+    /// (first adaptation point at `adapt_every_secs`, not at 0).
     pub fn new(scaler: Box<dyn AutoScaler>, adapt_every_secs: f64) -> Self {
         assert!(adapt_every_secs > 0.0);
         Self { scaler, adapt_every_secs, next_adapt: adapt_every_secs, decisions: Vec::new() }
     }
 
-    /// Evaluate if an adaptation point has been reached; apply to cluster.
-    pub fn maybe_adapt(&mut self, obs: &Observation<'_>, cluster: &mut Cluster) {
+    /// Evaluate the scaler if an adaptation point has been reached,
+    /// returning the decision taken — [`Decision::Hold`] between
+    /// adaptation points. The caller actuates it via
+    /// [`Controller::apply`] once the observation's borrows are released.
+    pub fn maybe_adapt(&mut self, obs: &Observation<'_>) -> Decision {
         if obs.now + 1e-9 < self.next_adapt {
-            return;
+            return Decision::Hold;
         }
         self.next_adapt += self.adapt_every_secs;
         let decision = self.scaler.decide(obs);
-        match decision {
-            Decision::Hold => {}
-            Decision::ScaleOut(n) => cluster.scale_out(obs.now, n),
-            Decision::ScaleIn(n) => cluster.scale_in(n),
-        }
         if decision != Decision::Hold {
             self.decisions.push((obs.now, decision));
         }
+        decision
     }
 
+    /// Actuate a decision on the cluster: scale-outs are requested at
+    /// `now` (and arrive after the provisioning delay), scale-ins are
+    /// immediate.
+    pub fn apply(decision: Decision, now: f64, cluster: &mut Cluster) {
+        match decision {
+            Decision::Hold => {}
+            Decision::ScaleOut(n) => cluster.scale_out(now, n),
+            Decision::ScaleIn(n) => cluster.scale_in(n),
+        }
+    }
+
+    /// The wrapped scaler's report name.
     pub fn name(&self) -> String {
         self.scaler.name()
     }
 
+    /// Every non-[`Decision::Hold`] decision taken so far, with its time.
     pub fn decisions(&self) -> &[(f64, Decision)] {
         &self.decisions
     }
@@ -83,6 +104,7 @@ mod tests {
             in_system: 0,
             cpu_usage: 0.5,
             sentiment: w,
+            nodes: &[],
             cpu_hz: 2.0e9,
             sla_secs: 300.0,
         }
@@ -96,9 +118,8 @@ mod tests {
             60.0,
         );
         let w = SentimentWindows::new();
-        let mut cluster = Cluster::new(1, 60.0);
         for t in 0..300 {
-            ctl.maybe_adapt(&obs(t as f64, &w), &mut cluster);
+            assert_eq!(ctl.maybe_adapt(&obs(t as f64, &w)), Decision::Hold);
         }
         // adaptation points at t=60,120,180,240 (and none at t<60)
         assert_eq!(calls.get(), 4);
@@ -113,7 +134,9 @@ mod tests {
         );
         let w = SentimentWindows::new();
         let mut cluster = Cluster::new(1, 0.0);
-        ctl.maybe_adapt(&obs(60.0, &w), &mut cluster);
+        let decision = ctl.maybe_adapt(&obs(60.0, &w));
+        assert_eq!(decision, Decision::ScaleOut(3));
+        Controller::apply(decision, 60.0, &mut cluster);
         assert_eq!(cluster.pending() + cluster.active(), 4);
         assert_eq!(ctl.decisions().len(), 1);
     }
@@ -127,7 +150,20 @@ mod tests {
         );
         let w = SentimentWindows::new();
         let mut cluster = Cluster::new(3, 0.0);
-        ctl.maybe_adapt(&obs(60.0, &w), &mut cluster);
+        let decision = ctl.maybe_adapt(&obs(60.0, &w));
+        Controller::apply(decision, 60.0, &mut cluster);
         assert_eq!(cluster.active(), 2);
+    }
+
+    #[test]
+    fn between_adaptation_points_no_decision_is_logged() {
+        let calls = std::rc::Rc::new(std::cell::Cell::new(0));
+        let mut ctl = Controller::new(
+            Box::new(CountingScaler { calls, decision: Decision::ScaleOut(1) }),
+            60.0,
+        );
+        let w = SentimentWindows::new();
+        assert_eq!(ctl.maybe_adapt(&obs(30.0, &w)), Decision::Hold);
+        assert!(ctl.decisions().is_empty());
     }
 }

@@ -1,0 +1,288 @@
+//! DEPAS-style decentralized probabilistic auto-scaling.
+//!
+//! Calcavecchia et al., "DEPAS: A Decentralized Probabilistic Algorithm
+//! for Auto-Scaling" (Computing 2012; see PAPERS.md): every node runs the
+//! same tiny control loop over its *local* view of the load and decides
+//! *independently* — with probability proportional to its distance from a
+//! target-load band — whether to spawn a new node or terminate itself.
+//! No coordinator ranks nodes or computes a global deficit; the fleet
+//! still converges because the *expected* aggregate matches the
+//! centralized correction. With `n` nodes all seeing load `l` above the
+//! band, each spawns with probability `γ·(l/T − 1)`, adding
+//! `n·γ·(l/T − 1)` nodes in expectation — exactly `γ` times the deficit
+//! `n·l/T − n` a centralized controller would provision in one step.
+//! Below the band the same argument applies to self-termination with
+//! probability `γ·(1 − l/T)`.
+//!
+//! The simulator is centralized, so decentralization is *simulated*: each
+//! active node — identified by its stable [`crate::sim::Cluster::nodes`]
+//! id — derives a local utilization view from the shared signal plus
+//! per-node jitter drawn from a seeded [`Rng`] stream keyed on
+//! `(parameters, adaptation time, node id)`. Decisions are therefore a
+//! pure function of the observation: deterministic, bit-identical across
+//! serial and threaded replication runs, and independent of call history.
+//! The per-node votes are tallied into one aggregate [`Decision`] applied
+//! through the ordinary [`Controller`](super::Controller), so SLA
+//! accounting, provisioning delay and the 1-CPU floor work exactly as for
+//! every centralized family. Terminations release the newest nodes (the
+//! cluster cannot address individual machines); DEPAS's self-termination
+//! is node-anonymous in aggregate cost, so this simplification does not
+//! affect violation or CPU-hour accounting.
+
+use super::{AutoScaler, Decision, Observation};
+use crate::rng::Rng;
+
+/// Decentralized probabilistic scaler: one simulated control loop per
+/// active node, aggregated into a single fleet decision.
+#[derive(Debug, Clone)]
+pub struct DepasScaler {
+    /// Target utilization `T` in (0, 1) every node steers toward.
+    pub target: f64,
+    /// Half-width `Δ` of the dead band around the target: a node whose
+    /// local view stays within `[T − Δ, T + Δ]` takes no action.
+    /// Constrained to `0 < Δ < min(T, 1 − T)` so both band edges stay
+    /// strictly inside the utilization range.
+    pub band: f64,
+    /// Damping factor `γ` in (0, 1]: the fraction of the centralized
+    /// correction the fleet applies per adaptation point in expectation
+    /// (1 = full correction, smaller = smoother convergence).
+    pub gamma: f64,
+    /// Root of the per-(adaptation, node) jitter/vote streams; derived
+    /// from the parameters so differently-tuned fleets decorrelate.
+    streams: Rng,
+}
+
+impl DepasScaler {
+    /// Fleet steering toward `target` utilization with dead-band
+    /// half-width `band` and damping `gamma` (see the field docs for the
+    /// exact constraints; all three are asserted here).
+    pub fn new(target: f64, band: f64, gamma: f64) -> Self {
+        assert!(target > 0.0 && target < 1.0, "target out of (0,1): {target}");
+        assert!(
+            band > 0.0 && band < target.min(1.0 - target),
+            "band out of (0, min(T, 1-T)): {band}"
+        );
+        assert!(gamma > 0.0 && gamma <= 1.0, "gamma out of (0,1]: {gamma}");
+        let streams = Rng::new(0xDE9A5)
+            .split(target.to_bits())
+            .split(band.to_bits())
+            .split(gamma.to_bits());
+        Self { target, band, gamma, streams }
+    }
+
+    /// The shared utilization signal every node's local view perturbs:
+    /// measured usage discounted by capacity already on its way —
+    /// machines in provisioning will absorb their share once they land,
+    /// so votes cast meanwhile must not re-request that capacity.
+    fn shared_load(obs: &Observation<'_>) -> f64 {
+        let effective = (obs.cpus + obs.pending_cpus).max(1);
+        obs.cpu_usage * f64::from(obs.cpus) / f64::from(effective)
+    }
+}
+
+impl AutoScaler for DepasScaler {
+    fn decide(&mut self, obs: &Observation<'_>) -> Decision {
+        let shared = Self::shared_load(obs);
+        // One stream per adaptation point, one sub-stream per node id:
+        // every vote is a pure function of (parameters, time, node id,
+        // shared signal), independent of thread scheduling and of how
+        // often the scaler has been consulted before.
+        let epoch = self.streams.split(obs.now.to_bits());
+        let mut spawn = 0u32;
+        let mut term = 0u32;
+        for i in 0..obs.cpus {
+            let id = obs.nodes.get(i as usize).copied().unwrap_or(u64::from(i));
+            let mut node_rng = epoch.split(id);
+            // Local view: shared signal ± uniform jitter of at most Δ/2 —
+            // the imperfect gossip of a real fleet. The jitter stays
+            // below Δ, so a fleet resting exactly on the target can
+            // never be pushed out of the dead band by noise alone.
+            let jitter = (node_rng.next_f64() - 0.5) * self.band;
+            let local = (shared + jitter).clamp(0.0, 1.0);
+            if local > self.target + self.band {
+                let p = (self.gamma * (local / self.target - 1.0)).min(1.0);
+                if node_rng.chance(p) {
+                    spawn += 1;
+                }
+            } else if obs.pending_cpus == 0 && local < self.target - self.band {
+                // No self-termination while machines are in flight: the
+                // pending capacity signals recent demand, and the
+                // discounted shared signal would otherwise read as idle.
+                let p = (self.gamma * (1.0 - local / self.target)).min(1.0);
+                if node_rng.chance(p) {
+                    term += 1;
+                }
+            }
+        }
+        if spawn > term {
+            Decision::ScaleOut(spawn - term)
+        } else if term > spawn && obs.cpus > 1 {
+            // Self-terminations, capped at the 1-CPU floor the cluster
+            // enforces anyway (keeps the decision log meaningful).
+            Decision::ScaleIn((term - spawn).min(obs.cpus - 1))
+        } else {
+            Decision::Hold
+        }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "depas-{}-{}-{}",
+            super::fmt_param(self.target),
+            super::fmt_param(self.band),
+            super::fmt_param(self.gamma)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::history::SentimentWindows;
+
+    fn ids(n: u64) -> Vec<u64> {
+        (0..n).collect()
+    }
+
+    fn obs<'a>(
+        now: f64,
+        usage: f64,
+        nodes: &'a [u64],
+        pending: u32,
+        w: &'a SentimentWindows,
+    ) -> Observation<'a> {
+        Observation {
+            now,
+            cpus: nodes.len() as u32,
+            pending_cpus: pending,
+            in_system: 0,
+            cpu_usage: usage,
+            sentiment: w,
+            nodes,
+            cpu_hz: 2.0e9,
+            sla_secs: 300.0,
+        }
+    }
+
+    #[test]
+    fn steady_load_inside_band_holds() {
+        // Jitter is bounded by Δ/2, so a fleet sitting on the target can
+        // never leave the dead band: no decision, ever.
+        let w = SentimentWindows::new();
+        let nodes = ids(50);
+        let mut s = DepasScaler::new(0.7, 0.1, 1.0);
+        for epoch in 0..200 {
+            let o = obs(epoch as f64 * 60.0, 0.7, &nodes, 0, &w);
+            assert_eq!(s.decide(&o), Decision::Hold, "epoch {epoch}");
+        }
+    }
+
+    #[test]
+    fn overload_spawns_the_expected_fraction() {
+        // l = 0.9, T = 0.7, γ = 1: every node sees local ∈ [0.85, 0.95],
+        // all above the 0.8 band edge, and spawns with p = l_i/T − 1.
+        // The clamp never engages and p is linear in the (symmetric)
+        // jitter, so E[spawns] = n·(0.9/0.7 − 1) ≈ 0.2857·n exactly.
+        let w = SentimentWindows::new();
+        let nodes = ids(200);
+        let mut s = DepasScaler::new(0.7, 0.1, 1.0);
+        let epochs = 300;
+        let mut total = 0u64;
+        for epoch in 0..epochs {
+            match s.decide(&obs(epoch as f64 * 60.0, 0.9, &nodes, 0, &w)) {
+                Decision::ScaleOut(n) => total += u64::from(n),
+                d => panic!("expected scale-out every epoch, got {d:?}"),
+            }
+        }
+        let mean = total as f64 / epochs as f64;
+        let expected = 200.0 * (0.9 / 0.7 - 1.0);
+        assert!(
+            (mean - expected).abs() / expected < 0.10,
+            "mean spawns {mean:.1} vs expected {expected:.1}"
+        );
+    }
+
+    #[test]
+    fn idle_fleet_decays_but_survives() {
+        // Near-zero load: each node self-terminates with p ≈ γ. The
+        // aggregate must shrink the fleet every epoch without ever
+        // voting it below one CPU.
+        let w = SentimentWindows::new();
+        let nodes = ids(100);
+        let mut s = DepasScaler::new(0.7, 0.1, 0.5);
+        match s.decide(&obs(60.0, 0.02, &nodes, 0, &w)) {
+            Decision::ScaleIn(n) => {
+                assert!((25..=75).contains(&n), "≈γ·n expected, got {n}");
+            }
+            d => panic!("expected scale-in under idle, got {d:?}"),
+        }
+        let one = ids(1);
+        assert_eq!(
+            s.decide(&obs(120.0, 0.02, &one, 0, &w)),
+            Decision::Hold,
+            "a single node never terminates itself"
+        );
+    }
+
+    #[test]
+    fn decisions_are_pure_in_the_observation() {
+        let w = SentimentWindows::new();
+        let nodes = ids(32);
+        let mut a = DepasScaler::new(0.7, 0.1, 0.5);
+        let mut b = DepasScaler::new(0.7, 0.1, 0.5);
+        for epoch in 0..50 {
+            let o = obs(epoch as f64 * 60.0, 0.93, &nodes, 0, &w);
+            let d = a.decide(&o);
+            assert_eq!(d, b.decide(&o), "fresh scaler, same observation");
+            assert_eq!(d, a.decide(&o), "same scaler, repeated observation");
+        }
+    }
+
+    #[test]
+    fn node_identity_keys_the_vote_streams() {
+        // Different id sets at the same epoch are different fleets: the
+        // votes must not be a function of position alone ...
+        let w = SentimentWindows::new();
+        let mut s = DepasScaler::new(0.7, 0.1, 0.5);
+        let low = ids(64);
+        let high: Vec<u64> = (1000..1064).collect();
+        let differs = (0..40).any(|e| {
+            let t = e as f64 * 60.0;
+            s.decide(&obs(t, 0.95, &low, 0, &w)) != s.decide(&obs(t, 0.95, &high, 0, &w))
+        });
+        assert!(differs, "node ids must decorrelate the vote streams");
+        // ... while an empty slice falls back to positional ids 0..cpus.
+        let mut fallback = obs(60.0, 0.95, &low, 0, &w);
+        fallback.nodes = &[];
+        fallback.cpus = 64;
+        assert_eq!(s.decide(&fallback), s.decide(&obs(60.0, 0.95, &low, 0, &w)));
+    }
+
+    #[test]
+    fn pending_capacity_suppresses_rerequest_and_termination() {
+        let w = SentimentWindows::new();
+        let nodes = ids(10);
+        let mut s = DepasScaler::new(0.7, 0.1, 1.0);
+        // 10 busy nodes + 10 in flight: the discounted signal (0.45)
+        // falls below the band, but termination is gated on pending.
+        assert_eq!(s.decide(&obs(60.0, 0.9, &nodes, 10, &w)), Decision::Hold);
+    }
+
+    #[test]
+    fn name_encodes_all_three_parameters() {
+        assert_eq!(DepasScaler::new(0.7, 0.1, 0.5).name(), "depas-0.7-0.1-0.5");
+        assert_eq!(DepasScaler::new(0.5, 0.25, 1.0).name(), "depas-0.5-0.25-1");
+    }
+
+    #[test]
+    #[should_panic(expected = "band out of")]
+    fn band_wider_than_headroom_rejected() {
+        DepasScaler::new(0.7, 0.4, 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "target out of")]
+    fn target_out_of_range_rejected() {
+        DepasScaler::new(1.2, 0.1, 0.5);
+    }
+}

@@ -28,6 +28,8 @@ pub struct LoadScaler {
 }
 
 impl LoadScaler {
+    /// Load scaler with a-priori knowledge: per-class cycle `model`,
+    /// pessimism `quantile`, and the training-data class mix.
     pub fn new(model: DelayModel, quantile: f64, class_mix: [f64; 3]) -> Self {
         assert!((0.0..1.0).contains(&quantile), "quantile out of [0,1): {quantile}");
         let cycles_per_tweet = TweetClass::ALL
@@ -51,6 +53,7 @@ impl LoadScaler {
         total_cycles / (cpus.max(1) as f64 * cpu_hz)
     }
 
+    /// The per-class cycle model this scaler assumes.
     pub fn model(&self) -> &DelayModel {
         &self.model
     }
@@ -101,6 +104,7 @@ mod tests {
             in_system,
             cpu_usage: 1.0,
             sentiment: w,
+            nodes: &[],
             cpu_hz: 2.0e9,
             sla_secs: 300.0,
         }

@@ -1,11 +1,14 @@
 //! Auto-scaling algorithms (§IV-C): the classic CPU-usage *threshold*
 //! rule, the a-priori *load* algorithm, the application-data *appdata*
 //! peak detector, and the load+appdata composite the paper evaluates —
-//! plus the [`ScalerSpec`] registry that builds any of them (and any
-//! composite combination) from a declarative name + parameters.
+//! plus the decentralized probabilistic *depas* family (every node votes
+//! on its own local view) and the [`ScalerSpec`] registry that builds
+//! any of them (and any composite combination) from a declarative
+//! name + parameters.
 
 pub mod appdata;
 pub mod controller;
+pub mod depas;
 pub mod load;
 pub mod predictive;
 pub mod spec;
@@ -14,6 +17,7 @@ pub mod vertical;
 
 pub use appdata::AppdataScaler;
 pub use controller::Controller;
+pub use depas::DepasScaler;
 pub use load::LoadScaler;
 pub use predictive::PredictiveScaler;
 pub use spec::ScalerSpec;
@@ -43,6 +47,12 @@ pub struct Observation<'a> {
     pub cpu_usage: f64,
     /// Application-produced sentiment, bucketed by post time.
     pub sentiment: &'a SentimentWindows,
+    /// Stable identities of the active nodes, one entry per active CPU
+    /// ([`crate::sim::Cluster::nodes`]), on surfaces that track them;
+    /// empty on surfaces that only know a count. Per-node scalers
+    /// ([`DepasScaler`]) fall back to positional identities `0..cpus`
+    /// when the slice is empty.
+    pub nodes: &'a [u64],
     /// CPU frequency in Hz.
     pub cpu_hz: f64,
     /// The SLA, seconds.
@@ -52,6 +62,7 @@ pub struct Observation<'a> {
 /// A scaling decision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Decision {
+    /// No change to the fleet.
     Hold,
     /// Request `n` additional CPUs.
     ScaleOut(u32),
@@ -115,11 +126,14 @@ impl AutoScaler for Box<dyn AutoScaler> {
 /// on top of whatever the load algorithm wanted, and any scale-in from
 /// the load side is suppressed (we are pre-provisioning for a burst).
 pub struct Composite<A: AutoScaler, B: AutoScaler> {
+    /// Handles ordinary traffic growth (and all scale-in).
     pub base: A,
+    /// Pre-provisions bursts; its scale-outs add to the base's.
     pub peaks: B,
 }
 
 impl<A: AutoScaler, B: AutoScaler> Composite<A, B> {
+    /// Combine a `base` scaler with a `peaks` pre-provisioner.
     pub fn new(base: A, peaks: B) -> Self {
         Self { base, peaks }
     }
@@ -165,6 +179,7 @@ mod tests {
             in_system: 0,
             cpu_usage: 0.0,
             sentiment: w,
+            nodes: &[],
             cpu_hz: 2.0e9,
             sla_secs: 300.0,
         }

@@ -28,6 +28,8 @@ pub struct PredictiveScaler {
 }
 
 impl PredictiveScaler {
+    /// Forecaster with the load algorithm's a-priori knowledge (`model`,
+    /// `quantile`, `class_mix`) and a `horizon_secs` extrapolation.
     pub fn new(model: DelayModel, quantile: f64, class_mix: [f64; 3], horizon_secs: f64) -> Self {
         let cycles_per_tweet = TweetClass::ALL
             .iter()
@@ -104,6 +106,7 @@ mod tests {
             in_system,
             cpu_usage: 0.8,
             sentiment: w,
+            nodes: &[],
             cpu_hz: 2.0e9,
             sla_secs: 300.0,
         }

@@ -17,12 +17,34 @@
 //! appdata+4@w60                 ... with a non-default 60 s window
 //! predictive-h120s              linear-trend forecast, 120 s horizon
 //! vertical-ladder               instance-type ladder (vertical scaling)
+//! depas-0.7-0.1-0.5             decentralized probabilistic fleet
+//!                               (target T, band half-width Δ, damping γ)
 //! load-q99.999%+appdata+4       composite: base "+" peak detector
+//! ```
+//!
+//! Every form round-trips: parsing a spec string and re-rendering it
+//! yields the same string, and the built scaler's `name()` matches too.
+//!
+//! ```
+//! use sla_autoscale::autoscale::ScalerSpec;
+//! for form in [
+//!     "threshold-60%",
+//!     "load-q99.999%",
+//!     "appdata+4",
+//!     "appdata+4@w60",
+//!     "predictive-h120s",
+//!     "vertical-ladder",
+//!     "depas-0.7-0.1-0.5",
+//!     "load-q99.999%+appdata+4",
+//!     "depas-0.7-0.1-0.5+appdata+2",
+//! ] {
+//!     assert_eq!(ScalerSpec::parse(form).unwrap().to_string(), form);
+//! }
 //! ```
 
 use super::{
-    AppdataScaler, AutoScaler, Composite as CompositeScaler, LoadScaler, PredictiveScaler,
-    ThresholdScaler, VerticalScaler,
+    AppdataScaler, AutoScaler, Composite as CompositeScaler, DepasScaler, LoadScaler,
+    PredictiveScaler, ThresholdScaler, VerticalScaler,
 };
 use crate::delay::DelayModel;
 use anyhow::{bail, Result};
@@ -45,6 +67,10 @@ pub enum ScalerSpec {
     Predictive { horizon_secs: f64 },
     /// Instance-type ladder (vertical scaling on the horizontal API).
     Vertical,
+    /// Decentralized probabilistic fleet (DEPAS): every node votes to
+    /// spawn/terminate on its own local view of the load. `target` in
+    /// (0, 1), `band` in (0, min(target, 1 − target)), `gamma` in (0, 1].
+    Depas { target: f64, band: f64, gamma: f64 },
     /// `base` handles ordinary traffic, `peaks` pre-provisions bursts.
     Composite { base: Box<ScalerSpec>, peaks: Box<ScalerSpec> },
 }
@@ -73,6 +99,13 @@ impl ScalerSpec {
     /// Predictive scaler with the given forecast horizon (seconds).
     pub fn predictive(horizon_secs: f64) -> Self {
         Self::Predictive { horizon_secs }
+    }
+
+    /// DEPAS fleet steering toward `target` utilization with dead-band
+    /// half-width `band` and damping `gamma` (see [`DepasScaler`] for
+    /// the decision rule and parameter constraints).
+    pub fn depas(target: f64, band: f64, gamma: f64) -> Self {
+        Self::Depas { target, band, gamma }
     }
 
     /// Composite of two specs (`base` + `peaks`).
@@ -104,6 +137,16 @@ impl ScalerSpec {
     /// Construct the scaler this spec describes. `model` and `mix` are the
     /// a-priori knowledge (per-class cycle distributions, class mix) the
     /// load-family algorithms assume.
+    ///
+    /// The built scaler's `name()` always equals the spec's string form:
+    ///
+    /// ```
+    /// use sla_autoscale::autoscale::{AutoScaler, ScalerSpec};
+    /// use sla_autoscale::delay::DelayModel;
+    /// let spec = ScalerSpec::parse("load-q99.999%+appdata+4").unwrap();
+    /// let scaler = spec.build(&DelayModel::default(), [0.3, 0.3, 0.4]);
+    /// assert_eq!(scaler.name(), spec.to_string());
+    /// ```
     pub fn build(&self, model: &DelayModel, mix: [f64; 3]) -> Box<dyn AutoScaler> {
         match self {
             Self::Threshold { upper_pct } => Box::new(ThresholdScaler::new(*upper_pct / 100.0)),
@@ -122,6 +165,9 @@ impl ScalerSpec {
             Self::Vertical => {
                 Box::new(VerticalScaler::new(model.clone(), REGISTRY_QUANTILE, mix))
             }
+            Self::Depas { target, band, gamma } => {
+                Box::new(DepasScaler::new(*target, *band, *gamma))
+            }
             Self::Composite { base, peaks } => Box::new(CompositeScaler::new(
                 base.build(model, mix),
                 peaks.build(model, mix),
@@ -131,6 +177,16 @@ impl ScalerSpec {
 
     /// Parse the string form (see module docs for the grammar). The
     /// composite form splits at the first `+` where both sides parse.
+    ///
+    /// ```
+    /// use sla_autoscale::autoscale::ScalerSpec;
+    /// let spec = ScalerSpec::parse("depas-0.7-0.1-0.5").unwrap();
+    /// assert_eq!(spec, ScalerSpec::depas(0.7, 0.1, 0.5));
+    /// assert_eq!(spec.to_string(), "depas-0.7-0.1-0.5");
+    /// // the band half-width must fit between the target and both ends
+    /// // of the utilization range
+    /// assert!(ScalerSpec::parse("depas-0.7-0.4-0.5").is_err());
+    /// ```
     pub fn parse(s: &str) -> Result<Self> {
         let s = s.trim();
         if let Some(atom) = Self::parse_atom(s) {
@@ -148,7 +204,8 @@ impl ScalerSpec {
         }
         bail!(
             "unknown algorithm {s:?} (expected threshold-<pct>% | load-q<pct>% | \
-             appdata+<n>[@w<secs>] | predictive-h<secs>s | vertical-ladder | <base>+<peaks>)"
+             appdata+<n>[@w<secs>] | predictive-h<secs>s | vertical-ladder | \
+             depas-<target>-<band>-<gamma> | <base>+<peaks>)"
         )
     }
 
@@ -199,6 +256,26 @@ impl ScalerSpec {
         if s == "vertical-ladder" || s == "vertical" {
             return Some(Self::Vertical);
         }
+        if let Some(rest) = s.strip_prefix("depas-") {
+            let mut parts = rest.split('-');
+            let (t, b, g) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(t), Some(b), Some(g), None) => (t, b, g),
+                _ => return None,
+            };
+            let target: f64 = t.parse().ok()?;
+            let band: f64 = b.parse().ok()?;
+            let gamma: f64 = g.parse().ok()?;
+            if target > 0.0
+                && target < 1.0
+                && band > 0.0
+                && band < target.min(1.0 - target)
+                && gamma > 0.0
+                && gamma <= 1.0
+            {
+                return Some(Self::depas(target, band, gamma));
+            }
+            return None;
+        }
         None
     }
 }
@@ -224,6 +301,13 @@ impl fmt::Display for ScalerSpec {
                 write!(f, "predictive-h{}s", super::fmt_param(*horizon_secs))
             }
             Self::Vertical => write!(f, "vertical-ladder"),
+            Self::Depas { target, band, gamma } => write!(
+                f,
+                "depas-{}-{}-{}",
+                super::fmt_param(*target),
+                super::fmt_param(*band),
+                super::fmt_param(*gamma)
+            ),
             Self::Composite { base, peaks } => write!(f, "{base}+{peaks}"),
         }
     }
@@ -261,6 +345,13 @@ mod tests {
         grid.push(ScalerSpec::composite(
             ScalerSpec::threshold(80.0),
             ScalerSpec::appdata_windowed(3, 240.0),
+        ));
+        grid.push(ScalerSpec::depas(0.7, 0.1, 0.5));
+        grid.push(ScalerSpec::depas(0.5, 0.25, 1.0));
+        grid.push(ScalerSpec::depas(0.8, 0.05, 0.25));
+        grid.push(ScalerSpec::composite(
+            ScalerSpec::depas(0.7, 0.1, 0.5),
+            ScalerSpec::appdata(2),
         ));
         grid
     }
@@ -312,7 +403,20 @@ mod tests {
 
     #[test]
     fn garbage_rejected_with_algorithm_error() {
-        for bad in ["magic-9000", "threshold-500%", "load-q0%", "appdata+0", "", "+", "load-"] {
+        for bad in [
+            "magic-9000",
+            "threshold-500%",
+            "load-q0%",
+            "appdata+0",
+            "",
+            "+",
+            "load-",
+            "depas-0.7-0.1",       // missing gamma
+            "depas-0.7-0.4-0.5",   // band ≥ min(T, 1−T)
+            "depas-1.5-0.1-0.5",   // target out of (0,1)
+            "depas-0.7-0.1-2",     // gamma out of (0,1]
+            "depas-0.7-0.1-0.5-9", // trailing component
+        ] {
             let err = ScalerSpec::parse(bad).unwrap_err();
             assert!(
                 format!("{err}").contains("unknown algorithm"),

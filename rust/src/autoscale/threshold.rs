@@ -15,6 +15,8 @@ pub struct ThresholdScaler {
 }
 
 impl ThresholdScaler {
+    /// Threshold rule with upper bound `upper` in [0, 1] (lower bound
+    /// fixed at the paper's 50%).
     pub fn new(upper: f64) -> Self {
         assert!((0.0..=1.0).contains(&upper), "threshold out of [0,1]: {upper}");
         Self { upper, lower: 0.5 }
@@ -56,6 +58,7 @@ mod tests {
             in_system: 100,
             cpu_usage: usage,
             sentiment: w,
+            nodes: &[],
             cpu_hz: 2.0e9,
             sla_secs: 300.0,
         }

@@ -29,6 +29,8 @@ pub struct VerticalScaler {
 }
 
 impl VerticalScaler {
+    /// Ladder scaler starting on the smallest instance type, with the
+    /// load algorithm's a-priori knowledge for demand estimates.
     pub fn new(model: DelayModel, quantile: f64, class_mix: [f64; 3]) -> Self {
         let cycles_per_tweet = TweetClass::ALL
             .iter()
@@ -37,6 +39,7 @@ impl VerticalScaler {
         Self { cycles_per_tweet, rung: 0 }
     }
 
+    /// The current rung's frequency multiplier.
     pub fn multiplier(&self) -> f64 {
         LADDER[self.rung]
     }
@@ -85,6 +88,7 @@ mod tests {
             in_system,
             cpu_usage: 0.9,
             sentiment: w,
+            nodes: &[],
             cpu_hz: 2.0e9,
             sla_secs: 300.0,
         }

@@ -157,6 +157,8 @@ impl<E: SentimentEngine> Coordinator<E> {
                     in_system: 0,
                     cpu_usage: metrics.mean_batch_fill(),
                     sentiment: &windows,
+                    // the virtual cluster tracks a count, not identities
+                    nodes: &[],
                     cpu_hz: 2.0e9,
                     sla_secs: 300.0,
                 };

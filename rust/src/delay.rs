@@ -6,7 +6,8 @@
 //! to CPU cycles distributions. That allows the extrapolation of the
 //! experiments to other machine configurations."
 //!
-//! Calibration (DESIGN.md §2): the testbed observation L = 15 875 tweets
+//! Calibration (from the paper's testbed numbers, §IV-A/Table I): the
+//! testbed observation L = 15 875 tweets
 //! sharing a 2.6 GHz CPU at λ = 82.65 tweets/s implies a mean cost of
 //! 2.6e9 / 82.65 ≈ 31.5e6 cycles per tweet. With the paper's class
 //! semantics (30% discarded at ~zero cost) we apportion:
@@ -40,7 +41,7 @@ impl Default for DelayModel {
 }
 
 impl DelayModel {
-    /// The DESIGN.md §2 calibration.
+    /// The testbed-derived calibration (see the module docs).
     pub fn paper_calibrated() -> Self {
         Self {
             off_topic: weibull_with_mean(1.4, 30.0e6),

@@ -1,0 +1,188 @@
+//! Decentralized scaling (beyond the paper): where does a
+//! coordinator-free fleet land relative to the centralized families?
+//!
+//! Every scaler the paper evaluates is a central controller that sees
+//! the whole system and computes one correction. The survey literature
+//! (Qu et al., PAPERS.md) identifies *decentralization* as its own
+//! design axis, and DEPAS (`autoscale::depas`) is its canonical
+//! probabilistic representative: each node votes independently on a
+//! noisy local view, and only the *expected* aggregate matches the
+//! centralized correction. Two consequences are worth measuring:
+//!
+//! * **Fleet size matters.** The expected correction is multiplicative
+//!   (`n` nodes add ≈ `n·γ·(l/T − 1)`), so a one-node fleet crawls out
+//!   of a burst one coin flip at a time while a 16-node fleet closes
+//!   the same relative deficit per adaptation period. The node-count
+//!   axis sweeps the starting fleet.
+//! * **The dead band trades noise immunity against drift.** A narrow
+//!   band reacts to jitter (oscillation); a wide band lets utilization
+//!   drift far from target before anyone acts. The band axis sweeps Δ.
+//!
+//! Both axes run on the Mexico trace — the one great abrupt peak of
+//! §V-A — against the centralized `load` scaler and the paper's best
+//! `load+appdata` composite, on identical replications. The pivot
+//! table shows where DEPAS converges to the centralized violation
+//! level and where it oscillates away from it.
+
+use super::common::scale_config;
+use super::report::{result_rows, table, RESULT_HEADERS};
+use super::Experiment;
+use crate::autoscale::ScalerSpec;
+use crate::config::SimConfig;
+use crate::scenario::{default_threads, Overrides, ScenarioMatrix, TraceSource};
+use crate::workload::by_opponent;
+use anyhow::Result;
+
+/// The decentralized-scaling experiment (ID `decentral`).
+pub struct Decentral;
+
+/// The swept match: Mexico's abrupt burst stresses convergence speed.
+pub const SWEEP_OPPONENT: &str = "Mexico";
+
+/// Target utilization every DEPAS fleet steers toward.
+pub const DEPAS_TARGET: f64 = 0.7;
+
+/// Damping factor: half the centralized correction per adaptation point.
+pub const DEPAS_GAMMA: f64 = 0.5;
+
+/// Starting fleet sizes (the node-count axis).
+pub fn node_grid(fast: bool) -> Vec<u32> {
+    if fast {
+        vec![1, 4]
+    } else {
+        vec![1, 4, 16]
+    }
+}
+
+/// Dead-band half-widths (the band axis).
+pub fn band_grid(fast: bool) -> Vec<f64> {
+    if fast {
+        vec![0.1]
+    } else {
+        vec![0.05, 0.1, 0.2]
+    }
+}
+
+/// The scaler axis: both centralized baselines, then one DEPAS spec per
+/// band — every node-count row runs all of them on the same trace.
+pub fn scaler_set(fast: bool) -> Vec<ScalerSpec> {
+    let mut set = vec![ScalerSpec::load(0.99999), ScalerSpec::load_plus_appdata(0.99999, 4)];
+    set.extend(
+        band_grid(fast).into_iter().map(|band| ScalerSpec::depas(DEPAS_TARGET, band, DEPAS_GAMMA)),
+    );
+    set
+}
+
+/// The full grid: node-count overrides × (baselines + DEPAS bands),
+/// node-count-major (the row order the pivot table assumes).
+pub fn build_matrix(fast: bool, max_reps: usize) -> ScenarioMatrix {
+    let spec = by_opponent(SWEEP_OPPONENT).expect("catalogue match");
+    let cfg = scale_config(&SimConfig::default(), fast);
+    let overrides: Vec<Overrides> = node_grid(fast)
+        .into_iter()
+        .map(|n| Overrides { starting_cpus: Some(n), ..Overrides::default() })
+        .collect();
+    ScenarioMatrix::cross(
+        &[TraceSource::spec(spec, fast)],
+        &cfg,
+        &overrides,
+        &scaler_set(fast),
+        max_reps,
+    )
+}
+
+impl Experiment for Decentral {
+    fn id(&self) -> &'static str {
+        "decentral"
+    }
+
+    fn description(&self) -> &'static str {
+        "decentralized probabilistic scaling (DEPAS): node-count x band sweep \
+         vs the centralized load / load+appdata families"
+    }
+
+    fn run(&self, fast: bool) -> Result<String> {
+        let max_reps = if fast { 3 } else { 10 };
+        let matrix = build_matrix(fast, max_reps);
+        let results = matrix.run(default_threads())?;
+        let mut out = table(
+            &format!("Decentral — BRA vs {SWEEP_OPPONENT}, DEPAS vs centralized"),
+            &RESULT_HEADERS,
+            &result_rows(&results),
+        );
+        out.push('\n');
+
+        let bands = band_grid(fast);
+        let nodes = node_grid(fast);
+        let per_row = 2 + bands.len();
+        let mut rows = Vec::with_capacity(nodes.len() * bands.len());
+        for (i, &n0) in nodes.iter().enumerate() {
+            let load = &results[i * per_row];
+            let appdata = &results[i * per_row + 1];
+            for (j, &band) in bands.iter().enumerate() {
+                let depas = &results[i * per_row + 2 + j];
+                rows.push(vec![
+                    n0.to_string(),
+                    format!("±{band:.2}"),
+                    format!("{:.2}%", depas.violation_pct),
+                    format!("{:.2}", depas.cpu_hours),
+                    format!("{:.2}%", load.violation_pct),
+                    format!("{:.2}%", appdata.violation_pct),
+                    format!("{:+.2}pp", depas.violation_pct - load.violation_pct),
+                ]);
+            }
+        }
+        out.push_str(&table(
+            &format!(
+                "DEPAS (T={DEPAS_TARGET}, gamma={DEPAS_GAMMA}) vs centralized, \
+                 node-count x band (violation-pct delta vs load)"
+            ),
+            &["cpus0", "band", "depas>SLA", "depas CPU-h", "load>SLA", "+appdata>SLA", "vs load"],
+            &rows,
+        ));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_node_count_major_with_baselines_first() {
+        let m = build_matrix(true, 3);
+        let nodes = node_grid(true);
+        let bands = band_grid(true);
+        let per_row = 2 + bands.len();
+        assert_eq!(m.len(), nodes.len() * per_row);
+        for (i, &n0) in nodes.iter().enumerate() {
+            let row = &m.scenarios[i * per_row];
+            assert!(row.name.starts_with("load-q99.999%/"), "{}", row.name);
+            assert!(row.name.contains(&format!("cpus0={n0}")), "{}", row.name);
+            assert_eq!(row.config.starting_cpus, n0);
+            let depas = &m.scenarios[i * per_row + 2];
+            assert!(depas.name.starts_with("depas-0.7-"), "{}", depas.name);
+        }
+    }
+
+    #[test]
+    fn every_cell_shares_the_one_mexico_trace() {
+        let m = build_matrix(true, 3);
+        let first = m.scenarios[0].source.load().unwrap();
+        for row in &m.scenarios[1..] {
+            let t = row.source.load().unwrap();
+            assert!(std::sync::Arc::ptr_eq(&first, &t), "{}", row.name);
+        }
+    }
+
+    #[test]
+    fn report_renders_matrix_and_pivot() {
+        let out = Decentral.run(true).unwrap();
+        assert!(out.contains("Decentral — BRA vs Mexico"), "{out}");
+        assert!(out.contains("depas-0.7-0.1-0.5"), "{out}");
+        assert!(out.contains("node-count x band"), "{out}");
+        // one pivot row per (node count, band) pair, each ending in "pp"
+        let pp_rows = out.lines().filter(|l| l.trim_end().ends_with("pp")).count();
+        assert_eq!(pp_rows, node_grid(true).len() * band_grid(true).len(), "{out}");
+    }
+}

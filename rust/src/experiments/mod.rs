@@ -1,9 +1,12 @@
 //! Experiment harness: one module per table/figure of the paper's
 //! evaluation, each regenerating the corresponding rows/series from our
-//! synthetic substrate (DESIGN.md §6 maps IDs to modules).
+//! synthetic substrate. IDs map one-to-one onto the modules below
+//! (`table1..3`, `fig2..8`, the ablations, `workload`, `decentral`);
+//! `sla-autoscale exp <id|all>` runs them from the CLI.
 
 pub mod ablations;
 pub mod common;
+pub mod decentral;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
@@ -46,6 +49,7 @@ pub fn all() -> Vec<Box<dyn Experiment>> {
         Box::new(ablations::AblationTiming),
         Box::new(ablations::AblationStrategies),
         Box::new(workload_axis::WorkloadAxis),
+        Box::new(decentral::Decentral),
     ]
 }
 
@@ -63,7 +67,7 @@ mod tests {
         let ids: Vec<&str> = all().iter().map(|e| e.id()).collect();
         for want in [
             "table1", "table2", "table3", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
-            "workload",
+            "workload", "decentral",
         ] {
             assert!(ids.contains(&want), "missing experiment {want}");
         }

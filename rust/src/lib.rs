@@ -18,14 +18,23 @@
 //! experiments declare (trace source × config overrides × scaler spec)
 //! matrices as plain data — the scaler axis is an
 //! [`autoscale::ScalerSpec`], a registry entry that round-trips through
-//! its string form (`load-q99.999%+appdata+4`) so the CLI `matrix`
-//! subcommand accepts arbitrary grids. The runner caches generated match
-//! traces behind `Arc<Trace>` (one generation per process) and executes
-//! CI replications on scoped threads, bit-identically to the serial path.
+//! its string form (`load-q99.999%+appdata+4`, `depas-0.7-0.1-0.5`) so
+//! the CLI `matrix` subcommand accepts arbitrary grids. The runner caches
+//! generated match traces behind `Arc<Trace>` (one generation per
+//! process) and executes CI replications on scoped threads,
+//! bit-identically to the serial path. Scaler families span both
+//! *centralized* controllers (threshold, load, appdata, predictive,
+//! vertical) and the *decentralized* probabilistic `depas` fleet, whose
+//! per-node votes key on the cluster's stable node identities.
 //!
 //! The Rust binary loads `artifacts/*.hlo.txt` through PJRT (`runtime`,
 //! behind the `pjrt` feature) — Python never runs on the request path.
+//!
+//! See the top-level `README.md` for a subsystem map and
+//! `docs/ARCHITECTURE.md` for the scenario-engine data flow and its
+//! determinism invariants.
 
+#[warn(missing_docs)]
 pub mod autoscale;
 pub mod config;
 pub mod coordinator;
@@ -33,6 +42,7 @@ pub mod delay;
 pub mod experiments;
 pub mod rng;
 pub mod runtime;
+#[warn(missing_docs)]
 pub mod scenario;
 pub mod sentiment;
 pub mod sim;

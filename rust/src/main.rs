@@ -33,13 +33,14 @@ USAGE:
       prints a CSV line per scenario as it converges.
   sla-autoscale exp <id|all> [--fast]
       Regenerate a paper table/figure (table1..3, fig2..8, ablations,
-      workload).
+      workload, decentral).
   sla-autoscale serve [opponent] [--count N] [--artifacts DIR]
       Serve the PJRT-compiled sentiment model on a generated live stream.
 
 Algorithm SPECs (the scaler registry's string forms; composable with '+'):
   threshold-<pct>%   load-q<pct>%   appdata+<n>[@w<secs>]
-  predictive-h<secs>s   vertical-ladder   e.g. load-q99.999%+appdata+4
+  predictive-h<secs>s   vertical-ladder   depas-<target>-<band>-<gamma>
+  e.g. load-q99.999%+appdata+4   or   depas-0.7-0.1-0.5
 ";
 
 /// Tiny argument cursor (offline stand-in for clap).

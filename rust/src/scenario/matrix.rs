@@ -22,14 +22,19 @@ use std::path::PathBuf;
 pub struct Scenario {
     /// Report label (defaults to the scaler spec's string form).
     pub name: String,
+    /// Where the workload comes from (shared through the trace cache).
     pub source: TraceSource,
+    /// The fully-resolved simulation knobs for this cell.
     pub config: SimConfig,
+    /// Which auto-scaler to build (fresh, per replication).
     pub scaler: ScalerSpec,
     /// Replication budget for the CI stopping rule.
     pub max_reps: usize,
 }
 
 impl Scenario {
+    /// A scenario named after its scaler spec (override with
+    /// [`Scenario::named`]).
     pub fn new(source: TraceSource, config: SimConfig, scaler: ScalerSpec, max_reps: usize) -> Self {
         let name = scaler.to_string();
         Self { name, source, config, scaler, max_reps }
@@ -46,18 +51,34 @@ impl Scenario {
 /// axis of a grid (each field mirrors a Table III knob).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Overrides {
+    /// CPU frequency in Hz.
     pub cpu_hz: Option<f64>,
+    /// Starting CPU count (the fleet-size axis of decentral sweeps).
     pub starting_cpus: Option<u32>,
+    /// Simulation step in seconds.
     pub step_secs: Option<f64>,
+    /// The SLA in seconds.
     pub sla_secs: Option<f64>,
+    /// Adaptation frequency in seconds.
     pub adapt_secs: Option<f64>,
+    /// Provisioning delay in seconds.
     pub provision_secs: Option<f64>,
+    /// Input-queue read limit, tweets/second.
     pub input_rate: Option<f64>,
+    /// Base RNG seed for the replication sequence.
     pub seed: Option<u64>,
 }
 
 impl Overrides {
     /// Base config with every set field replaced.
+    ///
+    /// ```
+    /// use sla_autoscale::config::SimConfig;
+    /// use sla_autoscale::scenario::Overrides;
+    /// let ov = Overrides { sla_secs: Some(120.0), ..Default::default() };
+    /// assert_eq!(ov.apply(&SimConfig::default()).sla_secs, 120.0);
+    /// assert_eq!(ov.label(), "sla=120s");
+    /// ```
     pub fn apply(&self, base: &SimConfig) -> SimConfig {
         let mut cfg = base.clone();
         if let Some(v) = self.cpu_hz {
@@ -87,6 +108,7 @@ impl Overrides {
         cfg
     }
 
+    /// True when no knob is overridden.
     pub fn is_empty(&self) -> bool {
         *self == Self::default()
     }
@@ -125,6 +147,7 @@ impl Overrides {
 /// An ordered scenario grid with shared a-priori knowledge.
 #[derive(Debug, Clone)]
 pub struct ScenarioMatrix {
+    /// The grid rows, in report order.
     pub scenarios: Vec<Scenario>,
     /// Per-class cycle distributions the load-family scalers assume.
     pub model: DelayModel,
@@ -142,10 +165,12 @@ impl Default for ScenarioMatrix {
 }
 
 impl ScenarioMatrix {
+    /// An empty grid with default a-priori knowledge.
     pub fn new() -> Self {
         Self::from_rows(Vec::new())
     }
 
+    /// A grid over explicit rows, with default a-priori knowledge.
     pub fn from_rows(scenarios: Vec<Scenario>) -> Self {
         Self {
             scenarios,
@@ -155,6 +180,7 @@ impl ScenarioMatrix {
         }
     }
 
+    /// Replace the delay model the load-family scalers assume.
     pub fn with_model(mut self, model: DelayModel) -> Self {
         self.model = model;
         self
@@ -167,6 +193,7 @@ impl ScenarioMatrix {
         self
     }
 
+    /// Append one row to the grid.
     pub fn push(&mut self, scenario: Scenario) -> &mut Self {
         self.scenarios.push(scenario);
         self
@@ -243,10 +270,12 @@ impl ScenarioMatrix {
         Self::from_rows(rows)
     }
 
+    /// Number of grid rows.
     pub fn len(&self) -> usize {
         self.scenarios.len()
     }
 
+    /// True when the grid has no rows.
     pub fn is_empty(&self) -> bool {
         self.scenarios.is_empty()
     }

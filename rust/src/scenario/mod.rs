@@ -16,11 +16,11 @@
 //! * [`Scenario`] / [`ScenarioMatrix`] declare grid rows as plain data —
 //!   the scaler axis is an [`crate::autoscale::ScalerSpec`], not a
 //!   factory closure.
-//! * [`run_matrix`](runner::run_matrix) executes rows on a scoped worker
-//!   pool and replications in deterministic waves; results are
-//!   bit-identical to the serial path (replications fold in seed order).
-//!   [`run_matrix_with`](runner::run_matrix_with) additionally streams
-//!   each result out as its scenario converges.
+//! * [`run_matrix`] executes rows on a scoped worker pool and
+//!   replications in deterministic waves; results are bit-identical to
+//!   the serial path (replications fold in seed order).
+//!   [`run_matrix_with`] additionally streams each result out as its
+//!   scenario converges.
 //!
 //! The whole simulation path (`Trace`, `SimConfig`, `DelayModel`,
 //! `ScalerSpec`, `Simulator`) is `Send + Sync`-clean, asserted below.

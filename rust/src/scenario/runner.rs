@@ -78,9 +78,13 @@ fn join_wave<T>(handles: Vec<std::thread::ScopedJoinHandle<'_, T>>) -> Vec<T> {
 /// Outcome of a CI-converged scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioResult {
+    /// The scenario's report label.
     pub name: String,
+    /// Mean percentage of tweets processed later than the SLA.
     pub violation_pct: f64,
+    /// Mean cost over the converged replications, in CPU-hours.
     pub cpu_hours: f64,
+    /// Replications the CI stopping rule consumed.
     pub reps: usize,
 }
 

@@ -53,14 +53,17 @@ pub enum TraceSource {
 }
 
 impl TraceSource {
+    /// A Table II catalogue match, by opponent name (resolved at load).
     pub fn opponent(name: impl Into<String>, fast: bool) -> Self {
         Self::Match { opponent: name.into(), fast, gen: GeneratorConfig::default() }
     }
 
+    /// An explicit match spec (fast-scaled on load when `fast`).
     pub fn spec(spec: MatchSpec, fast: bool) -> Self {
         Self::Spec { spec, fast, gen: GeneratorConfig::default() }
     }
 
+    /// A CSV trace file (re-read on every load, never cached).
     pub fn csv(path: impl Into<PathBuf>) -> Self {
         Self::Csv { path: path.into() }
     }

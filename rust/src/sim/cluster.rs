@@ -1,14 +1,25 @@
-//! CPU pool with provisioning delay and CPU-hour accounting.
+//! CPU pool with provisioning delay, CPU-hour accounting and stable
+//! per-node identities.
 //!
 //! §IV-B: "After requesting or releasing resources, another amount of time
 //! will pass before they are available" (Table III: 60 s allocation time).
 //! Releases are immediate (you stop paying when you give the VM back);
 //! allocations arrive `provision_secs` after the request.
+//!
+//! Every active CPU carries a **node id**: assigned from a monotone
+//! counter when the machine is commissioned and never reused. Counting
+//! scalers ignore the ids; decentralized ones (the *depas* family) key
+//! per-node local views on them, so a node keeps its identity — and its
+//! jitter stream — across unrelated scale events elsewhere in the fleet.
 
 /// Homogeneous CPU cluster as the simulator sees it.
 #[derive(Debug, Clone)]
 pub struct Cluster {
-    active: u32,
+    /// Identities of the active nodes, one per active CPU, in
+    /// commissioning order. Scale-in releases the newest nodes first.
+    nodes: Vec<u64>,
+    /// Next identity to hand out (monotone, never reused).
+    next_node_id: u64,
     /// Pending scale-outs: (available_at, count).
     pending: Vec<(f64, u32)>,
     provision_secs: f64,
@@ -19,10 +30,13 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// A cluster of `starting_cpus` machines (node ids `0..starting_cpus`)
+    /// whose later allocations take `provision_secs` to arrive.
     pub fn new(starting_cpus: u32, provision_secs: f64) -> Self {
         assert!(starting_cpus >= 1);
         Self {
-            active: starting_cpus,
+            nodes: (0..u64::from(starting_cpus)).collect(),
+            next_node_id: u64::from(starting_cpus),
             pending: Vec::new(),
             provision_secs,
             cpu_seconds: 0.0,
@@ -32,7 +46,15 @@ impl Cluster {
 
     /// CPUs currently serving work.
     pub fn active(&self) -> u32 {
-        self.active
+        self.nodes.len() as u32
+    }
+
+    /// Stable identities of the active nodes, one per active CPU, in
+    /// commissioning order. Ids come from a monotone counter and are
+    /// never reused, so a decentralized scaler can treat them as durable
+    /// per-node RNG stream keys.
+    pub fn nodes(&self) -> &[u64] {
+        &self.nodes
     }
 
     /// CPUs requested but not yet available.
@@ -49,7 +71,8 @@ impl Cluster {
 
     /// Release `n` CPUs immediately (never below the 1-CPU floor). Pending
     /// requests are cancelled first — releasing while a request is in
-    /// flight means we no longer want those machines.
+    /// flight means we no longer want those machines. Active releases
+    /// decommission the *newest* nodes (their ids retire with them).
     pub fn scale_in(&mut self, n: u32) {
         let mut left = n;
         while left > 0 {
@@ -64,13 +87,15 @@ impl Cluster {
                 break;
             }
         }
-        self.active = self.active.saturating_sub(left).max(self.min_cpus);
+        let keep = self.nodes.len().saturating_sub(left as usize).max(self.min_cpus as usize);
+        self.nodes.truncate(keep);
     }
 
-    /// Advance time by `dt` seconds: accrue cost, commission arrivals.
+    /// Advance time by `dt` seconds: accrue cost, commission arrivals
+    /// (each arrival is assigned the next fresh node id, in request order).
     pub fn tick(&mut self, now: f64, dt: f64) {
-        self.cpu_seconds += self.active as f64 * dt;
-        let mut arrived = 0;
+        self.cpu_seconds += self.nodes.len() as f64 * dt;
+        let mut arrived = 0u32;
         self.pending.retain(|&(at, n)| {
             if at <= now {
                 arrived += n;
@@ -79,7 +104,10 @@ impl Cluster {
                 true
             }
         });
-        self.active += arrived;
+        for _ in 0..arrived {
+            self.nodes.push(self.next_node_id);
+            self.next_node_id += 1;
+        }
     }
 
     /// Total cost so far, in CPU-hours (the Fig 7/8 cost axis).
@@ -150,5 +178,48 @@ mod tests {
         let mut c = Cluster::new(1, 60.0);
         c.scale_out(0.0, 0);
         assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn node_ids_start_dense_and_grow_monotone() {
+        let mut c = Cluster::new(3, 0.0);
+        assert_eq!(c.nodes(), &[0, 1, 2]);
+        c.scale_out(0.0, 2);
+        c.tick(1.0, 1.0);
+        assert_eq!(c.nodes(), &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scale_in_releases_newest_nodes_first() {
+        let mut c = Cluster::new(4, 0.0);
+        c.scale_in(2);
+        assert_eq!(c.nodes(), &[0, 1], "newest ids retire first");
+        // survivors keep their identity across later growth
+        c.scale_out(0.0, 1);
+        c.tick(1.0, 1.0);
+        assert_eq!(c.nodes(), &[0, 1, 4], "ids are never reused");
+    }
+
+    #[test]
+    fn node_ids_survive_unrelated_churn() {
+        let mut c = Cluster::new(2, 0.0);
+        for round in 0..5u32 {
+            c.scale_out(round as f64, 3);
+            c.tick(round as f64 + 1.0, 1.0);
+            c.scale_in(3);
+            assert_eq!(&c.nodes()[..2], &[0, 1], "round {round}");
+        }
+        assert_eq!(c.active(), 2);
+    }
+
+    #[test]
+    fn node_count_always_matches_active() {
+        let mut c = Cluster::new(1, 30.0);
+        c.scale_out(0.0, 4);
+        c.tick(30.0, 1.0);
+        c.scale_in(2);
+        c.scale_out(31.0, 1);
+        c.tick(61.0, 1.0);
+        assert_eq!(c.nodes().len(), c.active() as usize);
     }
 }

@@ -270,19 +270,25 @@ impl<'a> Simulator<'a> {
             steps += 1;
             cluster.tick(clock, cfg.step_secs);
 
-            // 4. adaptation point?
+            // 4. adaptation point? The observation borrows the cluster's
+            // per-node identities, so the decision is computed first and
+            // actuated on the cluster once the borrow is released.
             cpu_usage = if window_avail > 0.0 { window_used / window_avail } else { cpu_usage };
-            let obs = Observation {
-                now: clock,
-                cpus: cluster.active(),
-                pending_cpus: cluster.pending(),
-                in_system: queue.len() + schedule.len(),
-                cpu_usage,
-                sentiment: history.sentiment(),
-                cpu_hz: cfg.cpu_hz,
-                sla_secs: cfg.sla_secs,
+            let decision = {
+                let obs = Observation {
+                    now: clock,
+                    cpus: cluster.active(),
+                    pending_cpus: cluster.pending(),
+                    in_system: queue.len() + schedule.len(),
+                    cpu_usage,
+                    sentiment: history.sentiment(),
+                    nodes: cluster.nodes(),
+                    cpu_hz: cfg.cpu_hz,
+                    sla_secs: cfg.sla_secs,
+                };
+                controller.maybe_adapt(&obs)
             };
-            controller.maybe_adapt(&obs, &mut cluster);
+            Controller::apply(decision, clock, &mut cluster);
             // utilization window resets at every adaptation boundary
             if clock >= next_window_reset {
                 window_avail = 0.0;

@@ -1,7 +1,7 @@
 //! The seven Brazil matches of the paper's workload (Table II), plus the
 //! burst-event schedule each match's volume profile is built from.
 //!
-//! The real tweet dumps are IBM-internal; per DESIGN.md §2 we regenerate
+//! The real tweet dumps are IBM-internal, so we regenerate
 //! synthetic traces *calibrated to Table II* (total tweets, monitoring
 //! length) with burst schedules shaped after the paper's Fig 4 narrative:
 //! friendlies have small late peaks, group-phase matches have a few mid-

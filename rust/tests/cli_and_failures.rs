@@ -280,7 +280,7 @@ fn enormous_provisioning_delay_bounds_cost_but_hurts_quality() {
 
 #[test]
 fn scaler_names_stable_for_reports() {
-    // Experiment reports and EXPERIMENTS.md key off these exact names.
+    // Experiment reports key off these exact names.
     let model = DelayModel::default();
     assert_eq!(ThresholdScaler::new(0.6).name(), "threshold-60%");
     assert_eq!(

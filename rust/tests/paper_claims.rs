@@ -1,5 +1,6 @@
-//! Integration: the paper's qualitative claims ("shape" assertions from
-//! DESIGN.md §6) checked end-to-end on fast-mode statistical replicas.
+//! Integration: the paper's qualitative claims (the "shape" each
+//! table/figure must show) checked end-to-end on fast-mode statistical
+//! replicas.
 
 use sla_autoscale::autoscale::{AppdataScaler, Composite, LoadScaler, ThresholdScaler};
 use sla_autoscale::config::SimConfig;
@@ -72,7 +73,7 @@ fn load_saves_cpu_hours_on_finals() {
 /// Fig 8 / abstract headline: appdata cuts SLA violations by ~95% versus
 /// the threshold algorithm (paper: 95.24%), improves on load alone
 /// (paper: 92.81% there; our load baseline is stronger so the relative
-/// headroom is smaller — see EXPERIMENTS.md), and costs less than
+/// headroom is smaller), and costs less than
 /// threshold-60% while doing so.
 #[test]
 fn appdata_reduces_violations_substantially() {

@@ -329,6 +329,55 @@ fn prop_flatmeta_roundtrip() {
 }
 
 #[test]
+fn prop_depas_votes_respect_band_floor_and_expectation() {
+    use sla_autoscale::autoscale::{AutoScaler, Decision, DepasScaler, Observation};
+    use sla_autoscale::sim::history::SentimentWindows;
+    for_all(200, 0xDE9A, |rng, case| {
+        // random but valid fleet parameters
+        let target = 0.3 + rng.next_f64() * 0.5; // (0.3, 0.8)
+        let band = 0.02 + rng.next_f64() * 0.8 * (target.min(1.0 - target) - 0.02);
+        let gamma = 0.1 + rng.next_f64() * 0.9;
+        let n = rng.range(1, 64) as u32;
+        let nodes: Vec<u64> = (0..u64::from(n)).map(|_| rng.next_u64() >> 16).collect();
+        let usage = rng.next_f64();
+        let w = SentimentWindows::new();
+        let mut s = DepasScaler::new(target, band, gamma);
+        let obs = Observation {
+            now: rng.range(1, 500) as f64 * 60.0,
+            cpus: n,
+            pending_cpus: 0,
+            in_system: 0,
+            cpu_usage: usage,
+            sentiment: &w,
+            nodes: &nodes,
+            cpu_hz: 2.0e9,
+            sla_secs: 300.0,
+        };
+        let d = s.decide(&obs);
+        assert_eq!(d, s.decide(&obs), "case {case}: decisions must be pure");
+        match d {
+            // jitter is bounded by band/2, so inside the half-band the
+            // fleet must hold — and a vote can never exceed one per node
+            Decision::Hold => {}
+            Decision::ScaleOut(k) => {
+                assert!(k <= n, "case {case}: {k} spawns from {n} nodes");
+                assert!(
+                    usage > target + band / 2.0,
+                    "case {case}: spawned at usage {usage} target {target} band {band}"
+                );
+            }
+            Decision::ScaleIn(k) => {
+                assert!(n > 1 && k <= n - 1, "case {case}: {k} terminations from {n}");
+                assert!(
+                    usage < target - band / 2.0,
+                    "case {case}: terminated at usage {usage} target {target} band {band}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_batcher_covers_any_n() {
     use sla_autoscale::runtime::plan;
     for_all(300, 0xBA7C, |rng, case| {

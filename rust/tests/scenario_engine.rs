@@ -40,6 +40,7 @@ fn parallel_replications_bit_identical_to_serial() {
         ScalerSpec::load_plus_appdata(0.99999, 2),
         ScalerSpec::predictive(120.0),
         ScalerSpec::Vertical,
+        ScalerSpec::depas(0.7, 0.1, 0.5),
     ];
     for spec in &specs {
         let serial = run_replications(
@@ -212,6 +213,8 @@ fn registry_specs_simulate_end_to_end() {
         "predictive-h120s",
         "vertical-ladder",
         "threshold-90%+appdata+2@w60",
+        "depas-0.7-0.1-0.5",
+        "depas-0.7-0.1-0.5+appdata+2",
     ] {
         let spec = ScalerSpec::parse(spec_str).unwrap();
         let r = run_replications(
@@ -221,4 +224,43 @@ fn registry_specs_simulate_end_to_end() {
         assert!(r.cpu_hours > 0.0, "{spec_str}");
         assert!(r.reps >= 3, "{spec_str}");
     }
+}
+
+/// The first scaler family with *per-node* decision logic must honor the
+/// engine's headline guarantee: a threaded matrix run is bit-identical
+/// to the serial path, across a fleet-size (starting_cpus) axis — DEPAS
+/// votes are pure functions of (params, time, node ids), so no amount of
+/// thread scheduling may perturb them.
+#[test]
+fn depas_matrix_threaded_bit_identical_to_serial() {
+    let cfg = SimConfig::default();
+    let overrides = [
+        Overrides { starting_cpus: Some(1), ..Default::default() },
+        Overrides { starting_cpus: Some(4), ..Default::default() },
+    ];
+    let scalers = [
+        ScalerSpec::depas(0.7, 0.1, 0.5),
+        ScalerSpec::depas(0.7, 0.05, 1.0),
+        ScalerSpec::load(0.99999),
+    ];
+    let matrix = ScenarioMatrix::cross(
+        &[small_source(30_000)],
+        &cfg,
+        &overrides,
+        &scalers,
+        4,
+    );
+    let serial = matrix.run_serial().unwrap();
+    let threaded = matrix.run(8).unwrap();
+    assert_eq!(serial.len(), threaded.len());
+    for (s, p) in serial.iter().zip(&threaded) {
+        assert_eq!(s.name, p.name);
+        assert_eq!(s.reps, p.reps, "{}", s.name);
+        assert_eq!(s.violation_pct.to_bits(), p.violation_pct.to_bits(), "{}", s.name);
+        assert_eq!(s.cpu_hours.to_bits(), p.cpu_hours.to_bits(), "{}", s.name);
+    }
+    // the fleet axis is real: a larger starting fleet costs more CPU-hours
+    let one = serial.iter().find(|r| r.name == "depas-0.7-0.1-0.5/cpus0=1").unwrap();
+    let four = serial.iter().find(|r| r.name == "depas-0.7-0.1-0.5/cpus0=4").unwrap();
+    assert!(four.cpu_hours > one.cpu_hours, "{} !> {}", four.cpu_hours, one.cpu_hours);
 }
