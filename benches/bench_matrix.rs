@@ -7,7 +7,8 @@
 use sla_autoscale::autoscale::ScalerSpec;
 use sla_autoscale::config::SimConfig;
 use sla_autoscale::scenario::{
-    default_threads, scale_spec, Overrides, ScenarioMatrix, TraceSource,
+    default_threads, merge_records, read_journal, scale_spec, JournalSink, Overrides, ResultSink,
+    ScenarioMatrix, TraceSource,
 };
 use sla_autoscale::util::{bench, TempDir};
 use sla_autoscale::workload::{by_opponent, generate, store, GeneratorConfig};
@@ -124,6 +125,45 @@ fn main() {
             ("read_secs", read_secs),
             ("generate_secs", gen_secs),
             ("read_speedup_over_generate", gen_secs / read_secs.max(1e-9)),
+        ],
+    );
+
+    // Result journal: what appending a full grid's rows and folding them
+    // back costs (the per-row overhead of resumable/sharded runs).
+    let jpath = dir.join("grid.journal");
+    let plan = matrix.plan();
+    let (sink, prior) = JournalSink::open(&jpath).expect("journal open");
+    assert!(prior.is_empty());
+    let t = Instant::now();
+    for (job, res) in plan.jobs.iter().zip(&serial) {
+        sink.record(job, res).expect("journal append");
+    }
+    let append_secs = t.elapsed().as_secs_f64();
+    drop(sink);
+    let t = Instant::now();
+    let records = read_journal(&jpath).expect("journal read");
+    let merged = merge_records(records).expect("journal merge");
+    let merge_secs = t.elapsed().as_secs_f64();
+    assert_eq!(merged.len(), serial.len());
+    for (m, s) in merged.iter().zip(&serial) {
+        assert_eq!(m.result.name, s.name);
+        assert_eq!(m.result.violation_pct.to_bits(), s.violation_pct.to_bits(), "{}", s.name);
+        assert_eq!(m.result.cpu_hours.to_bits(), s.cpu_hours.to_bits(), "{}", s.name);
+        assert_eq!(m.result.reps, s.reps, "{}", s.name);
+    }
+    println!(
+        "result journal ({} rows): append {:.2} ms, read+merge {:.2} ms, bit-identical ✓",
+        merged.len(),
+        append_secs * 1e3,
+        merge_secs * 1e3
+    );
+    report.push_metrics(
+        "result_journal/roundtrip",
+        "current",
+        &[
+            ("rows", merged.len() as f64),
+            ("append_secs", append_secs),
+            ("merge_secs", merge_secs),
         ],
     );
 

@@ -16,7 +16,7 @@
 //! `crate::scenario` — the config axis uses `Overrides`, the scaler axis
 //! `ScalerSpec`.
 
-use super::common::scale_config;
+use super::common::{converge, scale_config};
 use super::report::{result_rows, table, RESULT_HEADERS};
 use crate::autoscale::ScalerSpec;
 use crate::config::SimConfig;
@@ -54,7 +54,7 @@ impl super::Experiment for AblationWindow {
                 .named(format!("appdata+4/w={window:.0}s"))
             })
             .collect();
-        let results = ScenarioMatrix::from_rows(grid).run(default_threads())?;
+        let results = converge(&ScenarioMatrix::from_rows(grid), default_threads())?;
         Ok(table(
             "Ablation — appdata window length (Brazil vs Spain)",
             &RESULT_HEADERS,
@@ -94,7 +94,7 @@ impl super::Experiment for AblationTiming {
             &scalers,
             if fast { 3 } else { 6 },
         );
-        let results = matrix.run(default_threads())?;
+        let results = converge(&matrix, default_threads())?;
         Ok(table(
             "Ablation — adaptation/provisioning timing (Brazil vs Spain)",
             &RESULT_HEADERS,
@@ -127,7 +127,7 @@ impl super::Experiment for AblationStrategies {
             row(ScalerSpec::Vertical, "vertical/ladder"),
             row(ScalerSpec::predictive(120.0), "predictive/h=120s"),
         ];
-        let results = ScenarioMatrix::from_rows(grid).run(default_threads())?;
+        let results = converge(&ScenarioMatrix::from_rows(grid), default_threads())?;
         Ok(table(
             "Ablation — scaling strategies (Brazil vs Uruguay)",
             &RESULT_HEADERS,

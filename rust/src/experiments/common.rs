@@ -2,12 +2,93 @@
 //! engine (`crate::scenario`): fast-mode scaling, the process-wide trace
 //! cache, and the CI-replication result type all live there and are
 //! re-exported here for the experiment modules and external callers.
+//!
+//! Every matrix-running experiment executes through [`converge`], which
+//! routes the grid through the plan/journal machinery when the
+//! `SLA_AUTOSCALE_JOURNAL` / `SLA_AUTOSCALE_SHARD` environment knobs are
+//! set — so all experiment modules gain crash-resume and cross-process
+//! sharding without knowing those layers exist.
 
-use crate::scenario::TraceSource;
+use crate::scenario::{
+    parse_shard, read_journal_dir, run_plan, JournalSink, ScenarioMatrix, TraceSource,
+};
 use crate::workload::{GeneratorConfig, MatchSpec, Trace};
+use anyhow::Result;
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 pub use crate::scenario::{scale_config, scale_spec, ScenarioResult, FAST_FACTOR};
+
+/// Environment knob: a directory of result journals shared by experiment
+/// runs. When set, [`converge`] appends every converged row to a journal
+/// keyed by job key and skips rows already journaled — an interrupted
+/// `exp` sweep resumes where it stopped instead of re-simulating.
+pub const ENV_JOURNAL: &str = "SLA_AUTOSCALE_JOURNAL";
+
+/// Environment knob: an `I/N` shard selector (e.g. `0/2`). Requires
+/// [`ENV_JOURNAL`]; each of `N` processes runs only its own rows and
+/// journals them, and a final run without the shard knob stitches the
+/// full table from the shared journal directory with zero simulation.
+pub const ENV_SHARD: &str = "SLA_AUTOSCALE_SHARD";
+
+/// Run an experiment matrix to CI convergence. Without the environment
+/// knobs above this is exactly `matrix.run(threads)`; with
+/// [`ENV_JOURNAL`] set it becomes resumable (journaled rows are loaded,
+/// not re-simulated), and with [`ENV_SHARD`] additionally sharded.
+///
+/// Always returns one result per matrix row, in row order. Rows owned by
+/// *other* shards and not yet journaled come back as placeholders with
+/// `reps == 0` and NaN metrics (rendered as `pending` by the report
+/// layer); re-running once every shard finished fills them from the
+/// journals, bit-identically to a single-process run.
+pub fn converge(matrix: &ScenarioMatrix, threads: usize) -> Result<Vec<ScenarioResult>> {
+    let Some(dir) = std::env::var_os(ENV_JOURNAL).map(PathBuf::from) else {
+        return matrix.run(threads);
+    };
+    let shard = match std::env::var(ENV_SHARD) {
+        Ok(s) => Some(parse_shard(&s)?),
+        Err(_) => None,
+    };
+    converge_journaled(matrix, threads, &dir, shard)
+}
+
+/// The explicit-arguments form of [`converge`]: journal under `dir`,
+/// optionally restricted to shard `(i, n)` of the plan.
+pub fn converge_journaled(
+    matrix: &ScenarioMatrix,
+    threads: usize,
+    dir: &Path,
+    shard: Option<(usize, usize)>,
+) -> Result<Vec<ScenarioResult>> {
+    let plan = matrix.plan();
+    let (i, n) = shard.unwrap_or((0, 1));
+    let file = dir.join(format!("plan-{:016x}-shard-{i}of{n}.journal", plan.fingerprint()));
+    let (journal, _prior) = JournalSink::open(&file)?;
+    // Converged rows from *every* journal in the directory count — other
+    // shards (and earlier interrupted runs) share the same key space.
+    let done: HashMap<u64, ScenarioResult> =
+        read_journal_dir(dir)?.into_iter().map(|r| (r.key, r.result)).collect();
+    let keys: HashSet<u64> = done.keys().copied().collect();
+    let mine = plan.shard(i, n)?;
+    let (todo, _hits) = mine.pending(&keys);
+    let fresh = run_plan(matrix, &todo.jobs, threads, &journal)?;
+    let mut by_index: HashMap<usize, ScenarioResult> =
+        todo.jobs.iter().map(|j| j.index).zip(fresh).collect();
+    Ok(plan
+        .jobs
+        .iter()
+        .map(|j| match by_index.remove(&j.index) {
+            Some(fresh) => fresh,
+            None => done.get(&j.key).cloned().unwrap_or_else(|| ScenarioResult {
+                name: j.name.clone(),
+                violation_pct: f64::NAN,
+                cpu_hours: f64::NAN,
+                reps: 0,
+            }),
+        })
+        .collect())
+}
 
 /// Generate (or reuse from the process cache) the trace for a possibly
 /// fast-scaled match. Shared `Arc` — the Spain trace backs half the
@@ -26,8 +107,78 @@ pub fn default_mix() -> [f64; 3] {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::autoscale::ScalerSpec;
     use crate::config::SimConfig;
+    use crate::scenario::{Overrides, Scenario};
+    use crate::util::TempDir;
     use crate::workload::by_opponent;
+
+    fn tiny_matrix() -> ScenarioMatrix {
+        let source = TraceSource::spec(
+            MatchSpec {
+                opponent: "ConvergeIT",
+                date: "—",
+                total_tweets: 12_000,
+                length_hours: 0.2,
+                events: vec![],
+            },
+            false,
+        );
+        let cfg = SimConfig::default();
+        ScenarioMatrix::cross(
+            &[source],
+            &cfg,
+            &[Overrides::default()],
+            &[ScalerSpec::threshold(70.0), ScalerSpec::load(0.99)],
+            3,
+        )
+    }
+
+    fn assert_same(a: &ScenarioResult, b: &ScenarioResult) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.violation_pct.to_bits(), b.violation_pct.to_bits(), "{}", a.name);
+        assert_eq!(a.cpu_hours.to_bits(), b.cpu_hours.to_bits(), "{}", a.name);
+        assert_eq!(a.reps, b.reps, "{}", a.name);
+    }
+
+    #[test]
+    fn converge_journaled_shards_resume_and_stitch() {
+        let dir = TempDir::new().unwrap();
+        let matrix = tiny_matrix();
+        let clean = matrix.run_serial().unwrap();
+
+        // Shard 0/2 simulates row 0; row 1 is a pending placeholder.
+        let first = converge_journaled(&matrix, 1, dir.path(), Some((0, 2))).unwrap();
+        assert_eq!(first.len(), clean.len());
+        assert_same(&first[0], &clean[0]);
+        assert_eq!(first[1].reps, 0, "other shard's row is pending");
+        assert!(first[1].violation_pct.is_nan());
+        assert_eq!(first[1].name, clean[1].name, "placeholders keep the row label");
+
+        // Shard 1/2 fills the gap and reads row 0 from shard 0's journal.
+        let second = converge_journaled(&matrix, 1, dir.path(), Some((1, 2))).unwrap();
+        assert_same(&second[0], &clean[0]);
+        assert_same(&second[1], &clean[1]);
+
+        // A final unsharded pass is pure journal replay (no simulation:
+        // two plain Scenario rows would take reps >= 3 to produce).
+        let third = converge_journaled(&matrix, 1, dir.path(), None).unwrap();
+        for (got, want) in third.iter().zip(&clean) {
+            assert_same(got, want);
+        }
+
+        // Editing a row invalidates only that row's journal hits.
+        let mut edited = matrix.clone();
+        edited.scenarios[1] = Scenario::new(
+            edited.scenarios[1].source.clone(),
+            SimConfig { sla_secs: 30.0, ..SimConfig::default() },
+            ScalerSpec::load(0.99),
+            3,
+        );
+        let fourth = converge_journaled(&edited, 1, dir.path(), None).unwrap();
+        assert_same(&fourth[0], &clean[0]);
+        assert!(fourth[1].reps >= 3, "edited row must re-simulate");
+    }
 
     #[test]
     fn fast_scaling_divides_both_sides() {

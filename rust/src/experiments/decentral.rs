@@ -24,7 +24,7 @@
 //! table shows where DEPAS converges to the centralized violation
 //! level and where it oscillates away from it.
 
-use super::common::scale_config;
+use super::common::{converge, scale_config};
 use super::report::{result_rows, table, RESULT_HEADERS};
 use super::Experiment;
 use crate::autoscale::ScalerSpec;
@@ -104,7 +104,7 @@ impl Experiment for Decentral {
     fn run(&self, fast: bool) -> Result<String> {
         let max_reps = if fast { 3 } else { 10 };
         let matrix = build_matrix(fast, max_reps);
-        let results = matrix.run(default_threads())?;
+        let results = converge(&matrix, default_threads())?;
         let mut out = table(
             &format!("Decentral — BRA vs {SWEEP_OPPONENT}, DEPAS vs centralized"),
             &RESULT_HEADERS,

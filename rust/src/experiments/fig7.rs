@@ -7,7 +7,7 @@
 //! threshold on quality too. England/France: both perfect (left out of
 //! the paper's figure, included with `--all` / `fast=false` runs here).
 
-use super::common::scale_config;
+use super::common::{converge, scale_config};
 use super::report::{result_rows, table, RESULT_HEADERS};
 use super::Experiment;
 use crate::autoscale::ScalerSpec;
@@ -36,9 +36,7 @@ pub fn run_match(spec: &MatchSpec, fast: bool, max_reps: usize) -> Vec<ScenarioR
         .into_iter()
         .map(|scaler| Scenario::new(source.clone(), cfg.clone(), scaler, max_reps))
         .collect();
-    ScenarioMatrix::from_rows(rows)
-        .run(default_threads())
-        .expect("fig7 matrix runs")
+    converge(&ScenarioMatrix::from_rows(rows), default_threads()).expect("fig7 matrix runs")
 }
 
 impl Experiment for Fig7 {

@@ -5,7 +5,7 @@
 //! CPU-h); at +10, 0.12% miss at 34.78 CPU-h — a 92.81% improvement over
 //! load alone and 95.24% over the best threshold at only 12.05% more cost.
 
-use super::common::scale_config;
+use super::common::{converge, scale_config};
 use super::report::{result_rows, table, RESULT_HEADERS};
 use super::Experiment;
 use crate::autoscale::ScalerSpec;
@@ -34,9 +34,7 @@ pub fn run_spain(fast: bool, max_reps: usize) -> Vec<ScenarioResult> {
             .map(|(i, scaler)| row(scaler).named(format!("appdata+{}", i + 1))),
     );
     rows.push(row(ScalerSpec::threshold(60.0)));
-    ScenarioMatrix::from_rows(rows)
-        .run(default_threads())
-        .expect("fig8 matrix runs")
+    converge(&ScenarioMatrix::from_rows(rows), default_threads()).expect("fig8 matrix runs")
 }
 
 impl Experiment for Fig8 {

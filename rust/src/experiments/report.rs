@@ -7,10 +7,16 @@ pub const RESULT_HEADERS: [&str; 4] = ["scenario", "tweets>SLA", "CPU-hours", "r
 
 /// Render scenario results as table rows (shared by every experiment
 /// that prints a scenario matrix, and by the CLI `matrix` subcommand).
+/// A `reps == 0` placeholder — a row owned by another shard, not yet
+/// journaled (see `crate::experiments::common::converge`) — renders as
+/// `pending` instead of meaningless numbers.
 pub fn result_rows(results: &[ScenarioResult]) -> Vec<Vec<String>> {
     results
         .iter()
         .map(|r| {
+            if r.reps == 0 {
+                return vec![r.name.clone(), "-".into(), "-".into(), "pending".into()];
+            }
             vec![
                 r.name.clone(),
                 format!("{:.2}%", r.violation_pct),
@@ -114,6 +120,21 @@ mod tests {
         // all data lines same length
         assert_eq!(lines[2].len(), lines[3].len().max(lines[2].len()) );
         assert!(out.contains("longer"));
+    }
+
+    #[test]
+    fn pending_rows_render_as_placeholders() {
+        let rows = result_rows(&[
+            ScenarioResult { name: "done".into(), violation_pct: 1.5, cpu_hours: 2.0, reps: 3 },
+            ScenarioResult {
+                name: "elsewhere".into(),
+                violation_pct: f64::NAN,
+                cpu_hours: f64::NAN,
+                reps: 0,
+            },
+        ]);
+        assert_eq!(rows[0], vec!["done", "1.50%", "2.00", "3"]);
+        assert_eq!(rows[1], vec!["elsewhere", "-", "-", "pending"]);
     }
 
     #[test]

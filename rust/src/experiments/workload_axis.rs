@@ -13,7 +13,7 @@
 //! with a small `sentiment_swing` the surge drowns in tweet noise; the
 //! advantage table shows both collapse modes directly.
 
-use super::common::scale_config;
+use super::common::{converge, scale_config};
 use super::report::{result_rows, table, RESULT_HEADERS};
 use super::Experiment;
 use crate::autoscale::ScalerSpec;
@@ -93,7 +93,7 @@ impl Experiment for WorkloadAxis {
     fn run(&self, fast: bool) -> Result<String> {
         let max_reps = if fast { 3 } else { 10 };
         let matrix = build_matrix(fast, max_reps);
-        let results = matrix.run(default_threads())?;
+        let results = converge(&matrix, default_threads())?;
         let mut out = table(
             &format!("Workload axis — BRA vs {SWEEP_OPPONENT}, generator sweep"),
             &RESULT_HEADERS,

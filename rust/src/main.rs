@@ -2,14 +2,16 @@
 //! workloads, run simulations, regenerate paper tables/figures, serve the
 //! PJRT sentiment model live.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use sla_autoscale::autoscale::{AutoScaler, ScalerSpec};
 use sla_autoscale::config::SimConfig;
 use sla_autoscale::delay::DelayModel;
 use sla_autoscale::experiments;
 use sla_autoscale::scenario::{self, Overrides, ScenarioMatrix, TraceSource};
 use sla_autoscale::sim::Simulator;
-use sla_autoscale::workload::{all_matches, by_opponent, generate, GeneratorConfig};
+use sla_autoscale::workload::{all_matches, by_opponent, generate, store, GeneratorConfig};
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
 
 const USAGE: &str = "\
 sla-autoscale — SLA-aware application-data auto-scaling (MASCOTS'15 reproduction)
@@ -24,16 +26,29 @@ USAGE:
   sla-autoscale matrix <opponents|all> [--algos SPEC[,SPEC...]] [--fast]
       [--threads N] [--serial] [--max-reps N] [--config FILE]
       [--sla S] [--adapt S] [--provision S] [--seed N]
-      [--lead-min M[,M...]] [--cache-dir DIR] [--stream]
+      [--lead-min M[,M...]] [--class-mix A,B,C[;A,B,C...]] [--noise X[,...]]
+      [--cache-dir DIR] [--cache-max-mb MB] [--stream]
+      [--journal DIR] [--shard I/N]
       Run an arbitrary scenario grid (opponents x algorithms) with
       CI-converged replications in parallel, and print the result table.
-      --lead-min sweeps the generator's sentiment lead (a workload-shape
-      axis: one scenario row per value); --cache-dir persists generated
-      traces to a versioned on-disk store reused across runs; --stream
-      prints a CSV line per scenario as it converges.
-  sla-autoscale exp <id|all> [--fast]
+      --lead-min / --class-mix / --noise sweep generator knobs (sentiment
+      lead, class mix, per-tweet noise; the axes cross — the load-family
+      scalers keep the default a-priori mix, so --class-mix also measures
+      stale-training-data mismatch); --cache-dir persists generated traces
+      to an on-disk store shared across processes, pruned LRU-by-mtime to
+      --cache-max-mb (default 1024) after the run; --stream prints a CSV
+      line per scenario as it converges; --journal DIR appends each
+      converged row to a crash-tolerant result journal and skips rows
+      already journaled (resume after an interrupt); --shard I/N runs only
+      every Nth grid row starting at I — one shard per process, sharing
+      one --cache-dir and --journal.
+  sla-autoscale matrix merge <DIR>
+      Fold the result journals under DIR back into the canonical table,
+      bit-identical to a single-process run of the full grid.
+  sla-autoscale exp <id|all> [--fast] [--journal DIR] [--shard I/N]
       Regenerate a paper table/figure (table1..3, fig2..8, ablations,
-      workload, decentral).
+      workload, decentral). --journal/--shard make the experiment's
+      matrices resumable/sharded exactly like the matrix subcommand.
   sla-autoscale serve [opponent] [--count N] [--artifacts DIR]
       Serve the PJRT-compiled sentiment model on a generated live stream.
 
@@ -72,16 +87,6 @@ impl Args {
             }
         }
         None
-    }
-}
-
-/// Quote a streamed CSV field when needed (scenario names with
-/// multi-field override labels contain commas).
-fn csv_field(s: &str) -> String {
-    if s.contains(',') || s.contains('"') {
-        format!("\"{}\"", s.replace('"', "\"\""))
-    } else {
-        s.to_string()
     }
 }
 
@@ -149,6 +154,30 @@ fn main() -> Result<()> {
             );
         }
         Some("matrix") => {
+            // `matrix merge DIR`: fold shard/resume journals back into the
+            // canonical table without simulating anything.
+            if args.positional(1) == Some("merge") {
+                let Some(dir) = args.positional(2) else {
+                    bail!("matrix merge: missing journal directory")
+                };
+                let records = scenario::read_journal_dir(Path::new(dir))?;
+                let merged = scenario::merge_records(records)?;
+                if merged.is_empty() {
+                    bail!("matrix merge: no journaled rows under {dir}");
+                }
+                let results: Vec<scenario::ScenarioResult> =
+                    merged.into_iter().map(|r| r.result).collect();
+                println!("merged {} journaled rows from {dir}", results.len());
+                print!(
+                    "{}",
+                    experiments::report::table(
+                        &format!("scenario matrix — {} scenarios", results.len()),
+                        &experiments::report::RESULT_HEADERS,
+                        &experiments::report::result_rows(&results),
+                    )
+                );
+                return Ok(());
+            }
             let Some(who) = args.positional(1) else {
                 bail!("matrix: missing opponents (comma-separated names or 'all')")
             };
@@ -199,21 +228,78 @@ fn main() -> Result<()> {
                     None => scenario::default_threads(),
                 }
             };
-            let gens: Vec<GeneratorConfig> = match args.opt("--lead-min") {
-                Some(list) => list
+            // Workload-shape axes: every flag is a comma list, and the
+            // axes cross (lead x mix x noise), each combination one
+            // GeneratorConfig of the grid.
+            let parse_axis = |flag: &str, list: &str| -> Result<Vec<f64>> {
+                let vals: Vec<f64> = list
                     .split(',')
-                    .filter(|s| !s.trim().is_empty())
-                    .map(|v| {
-                        Ok(GeneratorConfig {
-                            lead_min: v.trim().parse()?,
-                            ..GeneratorConfig::default()
-                        })
-                    })
-                    .collect::<Result<_>>()?,
-                None => vec![GeneratorConfig::default()],
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(|v| v.parse::<f64>().map_err(|_| anyhow!("{flag}: {v:?} is not a number")))
+                    .collect::<Result<_>>()?;
+                if vals.is_empty() {
+                    bail!("{flag}: no values given");
+                }
+                Ok(vals)
             };
-            if gens.is_empty() {
-                bail!("matrix: --lead-min given but no values parsed");
+            let default_gen = GeneratorConfig::default();
+            let leads = match args.opt("--lead-min") {
+                Some(list) => parse_axis("--lead-min", list)?,
+                None => vec![default_gen.lead_min],
+            };
+            let mixes: Vec<[f64; 3]> = match args.opt("--class-mix") {
+                Some(list) => {
+                    let mut mixes = Vec::new();
+                    for entry in list.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+                        let parts = parse_axis("--class-mix", entry)?;
+                        if parts.len() != 3 {
+                            bail!(
+                                "--class-mix: expected three comma-separated fractions \
+                                 (discarded,off-topic,analyzed), got {entry:?}"
+                            );
+                        }
+                        let mix = [parts[0], parts[1], parts[2]];
+                        let sum: f64 = mix.iter().sum();
+                        if mix.iter().any(|v| !v.is_finite() || *v < 0.0)
+                            || (sum - 1.0).abs() > 1e-6
+                        {
+                            bail!(
+                                "--class-mix: fractions must be >= 0 and sum to 1, \
+                                 got {entry:?} (sum {sum})"
+                            );
+                        }
+                        mixes.push(mix);
+                    }
+                    if mixes.is_empty() {
+                        bail!("--class-mix: no values given");
+                    }
+                    mixes
+                }
+                None => vec![default_gen.class_mix],
+            };
+            let noises = match args.opt("--noise") {
+                Some(list) => {
+                    let vals = parse_axis("--noise", list)?;
+                    if let Some(bad) = vals.iter().find(|v| !v.is_finite() || **v < 0.0) {
+                        bail!("--noise: tweet-noise std-dev must be >= 0, got {bad}");
+                    }
+                    vals
+                }
+                None => vec![default_gen.tweet_noise],
+            };
+            let mut gens = Vec::with_capacity(leads.len() * mixes.len() * noises.len());
+            for &lead_min in &leads {
+                for &class_mix in &mixes {
+                    for &tweet_noise in &noises {
+                        gens.push(GeneratorConfig {
+                            lead_min,
+                            class_mix,
+                            tweet_noise,
+                            ..GeneratorConfig::default()
+                        });
+                    }
+                }
             }
             let cfg = experiments::common::scale_config(&base, fast);
             let mut matrix = ScenarioMatrix::cross_gen(
@@ -227,21 +313,61 @@ fn main() -> Result<()> {
             if let Some(dir) = args.opt("--cache-dir") {
                 matrix = matrix.with_cache_dir(dir);
             }
+            // Validate before the (possibly hours-long) run: a bad budget
+            // must not surface only after every scenario converged.
+            let cache_max_mb: u64 = args
+                .opt("--cache-max-mb")
+                .unwrap_or("1024")
+                .parse()
+                .map_err(|_| anyhow!("--cache-max-mb: not a number"))?;
+            // Lower the grid into its deterministic plan, restrict to this
+            // process's shard, and skip rows the journal already holds.
+            let plan = matrix.plan();
+            let shard = args.opt("--shard").map(scenario::parse_shard).transpose()?;
+            let (si, sn) = shard.unwrap_or((0, 1));
+            let selected = plan.shard(si, sn)?;
+            let mut todo = selected.clone();
+            let mut journal = None;
+            let mut done: HashMap<u64, scenario::ScenarioResult> = HashMap::new();
+            let mut skipped = 0;
+            if let Some(dir) = args.opt("--journal").map(Path::new) {
+                let name = format!("plan-{:016x}-shard-{si}of{sn}.journal", plan.fingerprint());
+                let (sink, _prior) = scenario::JournalSink::open(&dir.join(name))?;
+                done = scenario::read_journal_dir(dir)?
+                    .into_iter()
+                    .map(|r| (r.key, r.result))
+                    .collect();
+                let keys: HashSet<u64> = done.keys().copied().collect();
+                let (pending, hits) = todo.pending(&keys);
+                todo = pending;
+                skipped = hits;
+                journal = Some(sink);
+            }
+            if skipped > 0 {
+                println!("skipped {skipped} already-converged rows (journal hits)");
+            }
+            let csv = scenario::CsvSink::stdout();
+            let mut sinks: Vec<&dyn scenario::ResultSink> = Vec::new();
+            if args.flag("--stream") {
+                csv.header()?;
+                sinks.push(&csv);
+            }
+            if let Some(j) = &journal {
+                sinks.push(j);
+            }
+            let fan = scenario::Fanout::new(sinks);
             let started = std::time::Instant::now();
-            let results = if args.flag("--stream") {
-                println!("scenario,violation_pct,cpu_hours,reps");
-                matrix.run_with(threads, |_, r| {
-                    println!(
-                        "{},{:.4},{:.4},{}",
-                        csv_field(&r.name),
-                        r.violation_pct,
-                        r.cpu_hours,
-                        r.reps
-                    );
-                })?
-            } else {
-                matrix.run(threads)?
-            };
+            let simulated = todo.jobs.len();
+            let fresh = scenario::run_plan(&matrix, &todo.jobs, threads, &fan)?;
+            // The table covers the whole selected shard: freshly-simulated
+            // rows plus the journaled rows a resume skipped.
+            let mut by_index: HashMap<usize, scenario::ScenarioResult> =
+                todo.jobs.iter().map(|j| j.index).zip(fresh).collect();
+            let results: Vec<scenario::ScenarioResult> = selected
+                .jobs
+                .iter()
+                .filter_map(|j| by_index.remove(&j.index).or_else(|| done.get(&j.key).cloned()))
+                .collect();
             print!(
                 "{}",
                 experiments::report::table(
@@ -251,15 +377,43 @@ fn main() -> Result<()> {
                 )
             );
             println!(
-                "ran {} scenarios on {} thread(s) in {:.2} s",
-                results.len(),
-                threads,
+                "ran {simulated} scenarios on {threads} thread(s) in {:.2} s",
                 started.elapsed().as_secs_f64()
             );
+            if let Some(j) = &journal {
+                println!(
+                    "journaled to {}; fold shards with `sla-autoscale matrix merge DIR`",
+                    j.path().display()
+                );
+            }
+            // Trace-store hygiene: without a bound the cache dir grows with
+            // every swept workload shape. LRU-prune it after the run.
+            if let Some(dir) = args.opt("--cache-dir") {
+                let budget = cache_max_mb.saturating_mul(1024 * 1024);
+                let (files, bytes) = store::prune(Path::new(dir), budget)?;
+                if files > 0 {
+                    println!(
+                        "pruned {files} cached trace(s) ({bytes} B) over the \
+                         {cache_max_mb} MiB budget"
+                    );
+                }
+            }
         }
         Some("exp") => {
             let Some(id) = args.positional(1) else { bail!("exp: missing id") };
             let fast = args.flag("--fast");
+            // Route the experiments' matrices through the journal/shard
+            // machinery (experiments::common::converge reads these knobs).
+            if let Some(dir) = args.opt("--journal") {
+                std::env::set_var(experiments::common::ENV_JOURNAL, dir);
+            }
+            if let Some(shard) = args.opt("--shard") {
+                if args.opt("--journal").is_none() {
+                    bail!("exp: --shard requires --journal (shards meet in the journal dir)");
+                }
+                scenario::parse_shard(shard)?;
+                std::env::set_var(experiments::common::ENV_SHARD, shard);
+            }
             if id.eq_ignore_ascii_case("all") {
                 for e in experiments::all() {
                     println!("{}", e.run(fast)?);

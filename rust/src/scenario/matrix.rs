@@ -7,6 +7,7 @@
 //! assume. Experiments declare their grids here and hand them to the
 //! runner; nothing in an experiment module builds a scaler by hand.
 
+use super::plan::JobPlan;
 use super::runner;
 use super::runner::ScenarioResult;
 use super::source::TraceSource;
@@ -300,6 +301,14 @@ impl ScenarioMatrix {
     /// The strictly sequential reference path (identical results).
     pub fn run_serial(&self) -> Result<Vec<ScenarioResult>> {
         runner::run_matrix(self, 1)
+    }
+
+    /// Lower the grid into its deterministic [`JobPlan`]: one job per
+    /// row, in row order, with stable content-derived keys — the
+    /// addressing scheme behind sharded and journal-resumed execution
+    /// (see `super::plan`).
+    pub fn plan(&self) -> JobPlan {
+        JobPlan::new(self)
     }
 }
 

@@ -21,16 +21,32 @@
 //!   the serial path (replications fold in seed order).
 //!   [`run_matrix_with`] additionally streams each result out as its
 //!   scenario converges.
+//! * A matrix lowers into a [`JobPlan`] — serializable jobs with stable
+//!   content-derived keys — which [`run_plan`] executes through pluggable
+//!   [`ResultSink`]s: collect in memory, stream CSV, or append to an
+//!   on-disk result [`JournalSink`]. Plans shard deterministically across
+//!   processes (`plan.shard(i, n)`), journaled rows are skipped on
+//!   re-runs (resume), and `merge` folds shard journals back into the
+//!   canonical table bit-identically to a single-process run.
 //!
 //! The whole simulation path (`Trace`, `SimConfig`, `DelayModel`,
 //! `ScalerSpec`, `Simulator`) is `Send + Sync`-clean, asserted below.
 
 pub mod matrix;
+pub mod plan;
 pub mod runner;
+pub mod sink;
 pub mod source;
 
 pub use matrix::{Overrides, Scenario, ScenarioMatrix};
-pub use runner::{default_threads, run_replications, run_matrix, run_matrix_with, ScenarioResult};
+pub use plan::{parse_shard, Job, JobPlan};
+pub use runner::{
+    default_threads, run_matrix, run_matrix_with, run_plan, run_replications, ScenarioResult,
+};
+pub use sink::{
+    csv_field, merge_records, read_journal, read_journal_dir, CollectSink, CsvSink, Fanout,
+    JournalRecord, JournalSink, ResultSink,
+};
 pub use source::{clear_trace_cache, scale_config, scale_spec, TraceSource, FAST_FACTOR};
 
 #[cfg(test)]
@@ -52,5 +68,10 @@ mod tests {
         assert_send_sync::<ScenarioResult>();
         assert_send_sync::<crate::sim::Cluster>();
         assert_send_sync::<crate::sim::History>();
+        // ... and the plan/sink layer the cross-process machinery shares.
+        assert_send_sync::<Job>();
+        assert_send_sync::<JobPlan>();
+        assert_send_sync::<CollectSink>();
+        assert_send_sync::<JournalSink>();
     }
 }

@@ -1,0 +1,276 @@
+//! Deterministic job plans: the serializable, shardable form of a grid.
+//!
+//! A [`ScenarioMatrix`] describes *what* to evaluate; [`JobPlan::new`]
+//! (or [`ScenarioMatrix::plan`]) fixes *how the grid is addressed*: one
+//! [`Job`] per row, in canonical row order, each carrying a stable
+//! content-derived key that covers every input able to change the row's
+//! converged result — the trace source (spec fields, `fast` flag,
+//! generator-config fingerprint), the fully-resolved `SimConfig`
+//! (overrides already applied), the scaler spec string, the replication
+//! budget, the report label, and the matrix-level a-priori knowledge
+//! (delay model, class mix).
+//!
+//! Keys and index-based sharding are what make cross-process execution
+//! safe:
+//!
+//! * [`JobPlan::shard`] partitions rows round-robin by *row index* — a
+//!   pure function of `(plan, i, n)`, independent of thread count,
+//!   scheduling, or timing — so `n` processes each run a disjoint slice
+//!   whose union is exactly the plan;
+//! * the result journal (`super::sink`) records converged rows *by job
+//!   key*, so [`JobPlan::pending`] can skip rows whose inputs are
+//!   provably unchanged on a resumed run, and can never replay a stale
+//!   result (any input drift changes the key).
+
+use super::matrix::{Scenario, ScenarioMatrix};
+use crate::delay::DelayModel;
+use crate::util::Fnv;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::HashSet;
+
+/// The stable key of one grid row: every input that can change the row's
+/// converged result, hashed over exact bit patterns (not displayed
+/// decimals).
+fn job_key(s: &Scenario, model: &DelayModel, mix: [f64; 3]) -> u64 {
+    let mut h = Fnv::new();
+    h.write_u64(s.source.fingerprint());
+    let c = &s.config;
+    h.write_u64(c.cpu_hz.to_bits());
+    h.write_u64(c.starting_cpus as u64);
+    h.write_u64(c.step_secs.to_bits());
+    h.write_u64(c.sla_secs.to_bits());
+    h.write_u64(c.adapt_secs.to_bits());
+    h.write_u64(c.provision_secs.to_bits());
+    h.write_u64(c.input_rate.is_some() as u64);
+    h.write_u64(c.input_rate.map_or(0, f64::to_bits));
+    h.write_u64(c.seed);
+    h.write_str(&s.scaler.to_string());
+    h.write_u64(s.max_reps as u64);
+    h.write_str(&s.name);
+    for w in [&model.off_topic, &model.analyzed] {
+        h.write_u64(w.shape.to_bits());
+        h.write_u64(w.scale.to_bits());
+    }
+    for m in mix {
+        h.write_u64(m.to_bits());
+    }
+    h.finish()
+}
+
+/// One addressable row of a plan (see the module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Job {
+    /// Canonical row index in the source matrix (plan/report order).
+    pub index: usize,
+    /// Stable content-derived key over every input of this row.
+    pub key: u64,
+    /// The row's report label, duplicated here so journals and merge
+    /// output can render without rebuilding the matrix.
+    pub name: String,
+}
+
+/// An ordered, shardable list of jobs lowered from a [`ScenarioMatrix`].
+#[derive(Debug, Clone, Default)]
+pub struct JobPlan {
+    /// Jobs in canonical (matrix row) order.
+    pub jobs: Vec<Job>,
+}
+
+impl JobPlan {
+    /// Lower a matrix into its deterministic plan.
+    pub fn new(matrix: &ScenarioMatrix) -> Self {
+        let jobs = matrix
+            .scenarios
+            .iter()
+            .enumerate()
+            .map(|(index, s)| Job {
+                index,
+                key: job_key(s, &matrix.model, matrix.mix),
+                name: s.name.clone(),
+            })
+            .collect();
+        Self { jobs }
+    }
+
+    /// Number of jobs in the plan.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// True when the plan has no jobs.
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Shard `i` of `n`: the jobs whose row index is congruent to `i`
+    /// modulo `n`, in plan order. Deterministic in `(plan, i, n)` alone,
+    /// so separate processes running `shard(0, n) .. shard(n-1, n)` cover
+    /// every row exactly once.
+    pub fn shard(&self, i: usize, n: usize) -> Result<JobPlan> {
+        ensure!(n > 0 && i < n, "shard {i}/{n}: need 0 <= I < N and N > 0");
+        Ok(JobPlan { jobs: self.jobs.iter().filter(|j| j.index % n == i).cloned().collect() })
+    }
+
+    /// Split the plan against a set of already-converged job keys:
+    /// returns the still-pending jobs (plan order) and the number of
+    /// journal hits (jobs skipped because their key is in `done`).
+    pub fn pending(&self, done: &HashSet<u64>) -> (JobPlan, usize) {
+        let mut jobs = Vec::with_capacity(self.jobs.len());
+        let mut hits = 0;
+        for j in &self.jobs {
+            if done.contains(&j.key) {
+                hits += 1;
+            } else {
+                jobs.push(j.clone());
+            }
+        }
+        (JobPlan { jobs }, hits)
+    }
+
+    /// Order-sensitive fingerprint over all job keys — stable across
+    /// processes, changed by any row edit. Journal file names embed it so
+    /// different grids sharing one journal directory never collide.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.write_u64(self.jobs.len() as u64);
+        for j in &self.jobs {
+            h.write_u64(j.key);
+        }
+        h.finish()
+    }
+}
+
+/// Parse an `I/N` shard selector (`"0/2"`, `"1/2"`), validating
+/// `0 <= I < N`.
+pub fn parse_shard(s: &str) -> Result<(usize, usize)> {
+    let (i, n) = s
+        .split_once('/')
+        .ok_or_else(|| anyhow!("--shard: expected I/N (e.g. 0/2), got {s:?}"))?;
+    let parse = |v: &str, what: &str| {
+        v.trim()
+            .parse::<usize>()
+            .map_err(|_| anyhow!("--shard: {what} {v:?} is not a non-negative integer"))
+    };
+    let (i, n) = (parse(i, "index")?, parse(n, "count")?);
+    ensure!(n > 0 && i < n, "--shard: need 0 <= I < N, got {i}/{n}");
+    Ok((i, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::matrix::Overrides;
+    use super::super::source::TraceSource;
+    use super::*;
+    use crate::autoscale::ScalerSpec;
+    use crate::config::SimConfig;
+    use crate::workload::GeneratorConfig;
+
+    fn grid() -> ScenarioMatrix {
+        ScenarioMatrix::cross(
+            &[TraceSource::opponent("Japan", true), TraceSource::opponent("Spain", true)],
+            &SimConfig::default(),
+            &[
+                Overrides::default(),
+                Overrides { sla_secs: Some(120.0), ..Default::default() },
+            ],
+            &[ScalerSpec::threshold(60.0), ScalerSpec::load(0.99999)],
+            3,
+        )
+    }
+
+    #[test]
+    fn plans_are_reproducible() {
+        let (a, b) = (grid().plan(), grid().plan());
+        assert_eq!(a.jobs, b.jobs);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.len(), 8);
+        for (i, j) in a.jobs.iter().enumerate() {
+            assert_eq!(j.index, i, "plan order is matrix row order");
+        }
+    }
+
+    #[test]
+    fn every_simulation_input_feeds_the_key() {
+        let base = grid();
+        let key0 = base.plan().jobs[0].key;
+
+        let mut edited = grid();
+        edited.scenarios[0].config.sla_secs += 1.0;
+        assert_ne!(edited.plan().jobs[0].key, key0, "config");
+
+        let mut edited = grid();
+        edited.scenarios[0].scaler = ScalerSpec::threshold(90.0);
+        assert_ne!(edited.plan().jobs[0].key, key0, "scaler");
+
+        let mut edited = grid();
+        edited.scenarios[0].name = "renamed".into();
+        assert_ne!(edited.plan().jobs[0].key, key0, "name");
+
+        let mut edited = grid();
+        edited.scenarios[0].max_reps = 7;
+        assert_ne!(edited.plan().jobs[0].key, key0, "max_reps");
+
+        let mut edited = grid();
+        edited.scenarios[0].source = edited.scenarios[0]
+            .source
+            .clone()
+            .with_generator(GeneratorConfig { lead_min: 0.0, ..GeneratorConfig::default() });
+        assert_ne!(edited.plan().jobs[0].key, key0, "generator config");
+
+        let mut edited = grid();
+        edited.scenarios[0].source = TraceSource::opponent("Japan", false);
+        assert_ne!(edited.plan().jobs[0].key, key0, "fast flag");
+
+        let mut edited = grid();
+        edited.mix = [0.2, 0.4, 0.4];
+        assert_ne!(edited.plan().jobs[0].key, key0, "a-priori mix");
+
+        // ... and an untouched row keeps its key through unrelated edits.
+        let mut edited = grid();
+        edited.scenarios[0].config.sla_secs += 1.0;
+        assert_eq!(edited.plan().jobs[1].key, base.plan().jobs[1].key);
+    }
+
+    #[test]
+    fn shards_partition_the_plan() {
+        let plan = grid().plan();
+        for n in [1, 2, 3, 5] {
+            let mut seen = Vec::new();
+            for i in 0..n {
+                let shard = plan.shard(i, n).unwrap();
+                for j in &shard.jobs {
+                    assert_eq!(j.index % n, i);
+                }
+                seen.extend(shard.jobs);
+            }
+            seen.sort_by_key(|j| j.index);
+            assert_eq!(seen, plan.jobs, "union of {n} shards is the plan");
+        }
+        assert!(plan.shard(2, 2).is_err());
+        assert!(plan.shard(0, 0).is_err());
+    }
+
+    #[test]
+    fn pending_counts_journal_hits() {
+        let plan = grid().plan();
+        let done: HashSet<u64> = plan.jobs.iter().take(3).map(|j| j.key).collect();
+        let (todo, hits) = plan.pending(&done);
+        assert_eq!(hits, 3);
+        assert_eq!(todo.len(), plan.len() - 3);
+        assert_eq!(todo.jobs[0].index, 3, "pending keeps plan order");
+        let (none, all) = plan.pending(&plan.jobs.iter().map(|j| j.key).collect());
+        assert!(none.is_empty());
+        assert_eq!(all, plan.len());
+    }
+
+    #[test]
+    fn shard_selectors_parse_and_validate() {
+        assert_eq!(parse_shard("0/2").unwrap(), (0, 2));
+        assert_eq!(parse_shard("1/2").unwrap(), (1, 2));
+        assert_eq!(parse_shard(" 2 / 5 ").unwrap(), (2, 5));
+        for bad in ["", "3", "2/2", "0/0", "a/2", "0/b", "-1/2"] {
+            let err = parse_shard(bad).unwrap_err();
+            assert!(format!("{err}").contains("--shard"), "{bad}: {err}");
+        }
+    }
+}

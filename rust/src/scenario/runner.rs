@@ -17,6 +17,8 @@
 //! the replication count all match (tested in `rust/tests/scenario_engine.rs`).
 
 use super::matrix::ScenarioMatrix;
+use super::plan::Job;
+use super::sink::ResultSink;
 use crate::autoscale::ScalerSpec;
 use crate::config::SimConfig;
 use crate::delay::DelayModel;
@@ -262,10 +264,56 @@ where
     Ok(results)
 }
 
+/// Run a plan slice — `jobs` addressing rows of `matrix` — `threads`-wide,
+/// reporting each converged result through `sink` as it lands (worker
+/// threads, completion order) and returning the results in job order.
+///
+/// This is [`run_matrix_with`] generalized to a *subset* of rows: shards
+/// and journal-resumed runs pass the pending jobs only, while a full plan
+/// reproduces `run_matrix` exactly. Each job's result is bit-identical to
+/// the same row in a full single-process serial run — rows are pure
+/// functions of their own inputs, so omitting neighbors changes nothing.
+/// The first sink error aborts the run's return value (simulation results
+/// are still computed for in-flight rows, but the error is surfaced).
+pub fn run_plan(
+    matrix: &ScenarioMatrix,
+    jobs: &[Job],
+    threads: usize,
+    sink: &dyn ResultSink,
+) -> Result<Vec<ScenarioResult>> {
+    for j in jobs {
+        if j.index >= matrix.scenarios.len() {
+            anyhow::bail!(
+                "job {:016x} ({:?}) addresses row {} of a {}-row matrix",
+                j.key,
+                j.name,
+                j.index,
+                matrix.scenarios.len()
+            );
+        }
+    }
+    let sub = ScenarioMatrix {
+        scenarios: jobs.iter().map(|j| matrix.scenarios[j.index].clone()).collect(),
+        model: matrix.model.clone(),
+        mix: matrix.mix,
+        cache_dir: matrix.cache_dir.clone(),
+    };
+    let sink_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let results = run_matrix_with(&sub, threads, |k, r| {
+        if let Err(e) = sink.record(&jobs[k], r) {
+            sink_err.lock().unwrap_or_else(|p| p.into_inner()).get_or_insert(e);
+        }
+    })?;
+    match sink_err.into_inner().unwrap_or_else(|p| p.into_inner()) {
+        Some(e) => Err(e),
+        None => Ok(results),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scenario::{Scenario, TraceSource};
+    use crate::scenario::{CollectSink, Scenario, TraceSource};
     use crate::workload::MatchSpec;
 
     fn tiny_source() -> TraceSource {
@@ -409,6 +457,58 @@ mod tests {
                 assert_eq!(*reps, want.reps);
             }
         }
+    }
+
+    #[test]
+    fn run_plan_over_the_full_plan_matches_run_matrix() {
+        let src = tiny_source();
+        let cfg = SimConfig::default();
+        let rows = vec![
+            Scenario::new(src.clone(), cfg.clone(), ScalerSpec::threshold(60.0), 3),
+            Scenario::new(src.clone(), cfg.clone(), ScalerSpec::load(0.99), 3),
+            Scenario::new(src, cfg, ScalerSpec::load(0.99999), 3),
+        ];
+        let matrix = ScenarioMatrix::from_rows(rows);
+        let want = matrix.run_serial().unwrap();
+        let plan = matrix.plan();
+        let sink = CollectSink::new();
+        let got = run_plan(&matrix, &plan.jobs, 2, &sink).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.name, w.name);
+            assert_eq!(g.violation_pct.to_bits(), w.violation_pct.to_bits(), "{}", g.name);
+            assert_eq!(g.cpu_hours.to_bits(), w.cpu_hours.to_bits(), "{}", g.name);
+            assert_eq!(g.reps, w.reps, "{}", g.name);
+        }
+        let collected = sink.into_results();
+        assert_eq!(collected.len(), want.len(), "sink sees every row exactly once");
+        for ((i, r), w) in collected.iter().zip(&want) {
+            assert_eq!(plan.jobs[*i].name, w.name);
+            assert_eq!(r.violation_pct.to_bits(), w.violation_pct.to_bits());
+        }
+    }
+
+    #[test]
+    fn run_plan_surfaces_sink_errors_and_bad_indices() {
+        struct FailSink;
+        impl ResultSink for FailSink {
+            fn record(&self, _: &Job, _: &ScenarioResult) -> Result<()> {
+                anyhow::bail!("sink exploded")
+            }
+        }
+        let matrix = ScenarioMatrix::from_rows(vec![Scenario::new(
+            tiny_source(),
+            SimConfig::default(),
+            ScalerSpec::threshold(70.0),
+            3,
+        )]);
+        let plan = matrix.plan();
+        let err = run_plan(&matrix, &plan.jobs, 1, &FailSink).unwrap_err();
+        assert!(format!("{err}").contains("sink exploded"), "{err}");
+
+        let stale = Job { index: 5, key: 1, name: "stale".into() };
+        let err = run_plan(&matrix, &[stale], 1, &CollectSink::new()).unwrap_err();
+        assert!(format!("{err}").contains("1-row matrix"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,534 @@
+//! Result sinks and the append-only on-disk result journal.
+//!
+//! The runner reports every converged [`ScenarioResult`] through a
+//! [`ResultSink`] (see `super::runner::run_plan`) instead of only
+//! returning a `Vec`:
+//!
+//! * [`CollectSink`] gathers `(row, result)` pairs in memory;
+//! * [`CsvSink`] streams one CSV line per converged row (the CLI's
+//!   `--stream`);
+//! * [`JournalSink`] appends each result to a crash-tolerant on-disk
+//!   journal keyed by job key — the substrate of resumable and
+//!   cross-process sharded matrix runs;
+//! * [`Fanout`] composes several sinks (e.g. stream *and* journal).
+//!
+//! ## Journal format
+//!
+//! ```text
+//! magic    8 B   b"SLAJRNL\0"
+//! version  4 B   u32 LE (JOURNAL_VERSION)
+//! record*:
+//!   len    4 B   u32 LE, payload bytes
+//!   payload      key u64 | row index u64 | reps u64 |
+//!                violation_pct f64 bits | cpu_hours f64 bits |
+//!                name_len u32 | name bytes          (all LE)
+//!   hash   8 B   u64 LE, FNV-1a over the payload
+//! ```
+//!
+//! Floats are stored as exact bit patterns, so journaled results merge
+//! back bit-identically. A fresh journal's header is published via a
+//! tmp+rename (like `crate::workload::store`); records are then
+//! appended and individually framed, so a crash mid-append costs at
+//! most the torn tail record: readers stop at the first record whose
+//! length, hash, or layout fails, and [`JournalSink::open`] truncates
+//! that garbage (again via tmp+rename) before appending after it. One
+//! process writes one journal file at a time — shards address distinct
+//! files inside a shared directory, and `merge` reads them all.
+
+use super::plan::Job;
+use super::runner::ScenarioResult;
+use crate::util::fnv1a;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// File magic: identifies a result journal regardless of extension.
+pub const JOURNAL_MAGIC: [u8; 8] = *b"SLAJRNL\0";
+
+/// Bump on any layout change; readers reject other versions.
+pub const JOURNAL_VERSION: u32 = 1;
+
+/// Bytes before the first record (magic + version).
+pub const JOURNAL_HEADER_LEN: usize = 8 + 4;
+
+/// Fixed payload bytes ahead of the variable-length name.
+const RECORD_FIXED_LEN: usize = 8 * 5 + 4;
+
+/// Where the runner reports each converged scenario. Implementations
+/// must be `Sync`: the parallel runner records from worker threads, in
+/// completion order.
+pub trait ResultSink: Sync {
+    /// Called exactly once per job as its scenario converges.
+    fn record(&self, job: &Job, result: &ScenarioResult) -> Result<()>;
+}
+
+/// In-memory sink: gathers `(row index, result)` pairs.
+#[derive(Debug, Default)]
+pub struct CollectSink {
+    rows: Mutex<Vec<(usize, ScenarioResult)>>,
+}
+
+impl CollectSink {
+    /// An empty collector.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The collected pairs, sorted back into plan (row) order.
+    pub fn into_results(self) -> Vec<(usize, ScenarioResult)> {
+        let mut rows = self.rows.into_inner().unwrap_or_else(|e| e.into_inner());
+        rows.sort_by_key(|(i, _)| *i);
+        rows
+    }
+}
+
+impl ResultSink for CollectSink {
+    fn record(&self, job: &Job, result: &ScenarioResult) -> Result<()> {
+        self.rows.lock().unwrap_or_else(|e| e.into_inner()).push((job.index, result.clone()));
+        Ok(())
+    }
+}
+
+/// Quote a CSV field when needed (scenario names with multi-field
+/// override labels contain commas).
+pub fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Streaming CSV sink: one `scenario,violation_pct,cpu_hours,reps` line
+/// per converged row, in completion order (row order serially).
+pub struct CsvSink<W: Write + Send> {
+    out: Mutex<W>,
+}
+
+impl<W: Write + Send> CsvSink<W> {
+    /// Wrap a writer; call [`CsvSink::header`] first for the column row.
+    pub fn new(out: W) -> Self {
+        Self { out: Mutex::new(out) }
+    }
+
+    /// Write the CSV header line.
+    pub fn header(&self) -> Result<()> {
+        let mut out = self.out.lock().unwrap_or_else(|e| e.into_inner());
+        writeln!(out, "scenario,violation_pct,cpu_hours,reps")?;
+        Ok(())
+    }
+
+    /// Recover the wrapped writer.
+    pub fn into_inner(self) -> W {
+        self.out.into_inner().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl CsvSink<std::io::Stdout> {
+    /// A sink streaming to the process stdout (the CLI's `--stream`).
+    pub fn stdout() -> Self {
+        Self::new(std::io::stdout())
+    }
+}
+
+impl<W: Write + Send> ResultSink for CsvSink<W> {
+    fn record(&self, _job: &Job, r: &ScenarioResult) -> Result<()> {
+        let mut out = self.out.lock().unwrap_or_else(|e| e.into_inner());
+        writeln!(
+            out,
+            "{},{:.4},{:.4},{}",
+            csv_field(&r.name),
+            r.violation_pct,
+            r.cpu_hours,
+            r.reps
+        )?;
+        Ok(())
+    }
+}
+
+/// Fan each result out to several sinks, in order (e.g. stream a CSV
+/// line *and* journal the row).
+pub struct Fanout<'a> {
+    sinks: Vec<&'a dyn ResultSink>,
+}
+
+impl<'a> Fanout<'a> {
+    /// A composite over `sinks`; an empty list is a no-op sink.
+    pub fn new(sinks: Vec<&'a dyn ResultSink>) -> Self {
+        Self { sinks }
+    }
+}
+
+impl ResultSink for Fanout<'_> {
+    fn record(&self, job: &Job, result: &ScenarioResult) -> Result<()> {
+        for s in &self.sinks {
+            s.record(job, result)?;
+        }
+        Ok(())
+    }
+}
+
+/// One journaled row: the job key it was converged under, its canonical
+/// row index, and the result itself (float bits exactly preserved).
+#[derive(Debug, Clone)]
+pub struct JournalRecord {
+    /// The job key the result was recorded under (see `super::plan`).
+    pub key: u64,
+    /// Canonical row index in the plan that produced the record.
+    pub index: usize,
+    /// The converged result, bit-identical to the in-process value.
+    pub result: ScenarioResult,
+}
+
+/// Append-only result journal: a [`ResultSink`] that makes matrix runs
+/// resumable (skip journaled keys) and shardable (merge journal files).
+pub struct JournalSink {
+    path: PathBuf,
+    file: Mutex<std::fs::File>,
+}
+
+impl JournalSink {
+    /// Open (or create) the journal at `path`, returning the records it
+    /// already holds. Parent directories are created; a torn tail left
+    /// by a crashed writer is truncated away (tmp+rename) before the
+    /// file is reopened for append. One process opens one journal file
+    /// at a time — concurrent shards must address distinct files.
+    pub fn open(path: &Path) -> Result<(Self, Vec<JournalRecord>)> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating journal dir {}", parent.display()))?;
+            }
+        }
+        let prior = match std::fs::read(path) {
+            Ok(data) => {
+                let (records, valid_end) = parse_journal(path, &data)?;
+                if valid_end < data.len() {
+                    publish(path, &data[..valid_end])
+                        .with_context(|| format!("healing journal {}", path.display()))?;
+                }
+                records
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                let mut header = Vec::with_capacity(JOURNAL_HEADER_LEN);
+                header.extend_from_slice(&JOURNAL_MAGIC);
+                header.extend_from_slice(&JOURNAL_VERSION.to_le_bytes());
+                publish(path, &header)
+                    .with_context(|| format!("publishing journal {}", path.display()))?;
+                Vec::new()
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading journal {}", path.display()))
+            }
+        };
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {} for append", path.display()))?;
+        Ok((Self { path: path.to_path_buf(), file: Mutex::new(file) }, prior))
+    }
+
+    /// The journal's file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl ResultSink for JournalSink {
+    fn record(&self, job: &Job, result: &ScenarioResult) -> Result<()> {
+        let bytes = encode_record(job.key, job.index as u64, result);
+        let mut file = self.file.lock().unwrap_or_else(|e| e.into_inner());
+        file.write_all(&bytes)
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+/// Write `data` to `path` through a process-unique sibling and a rename
+/// (the `workload::store` publish idiom: no half-written file can ever
+/// sit under the final name).
+fn publish(path: &Path, data: &[u8]) -> Result<()> {
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    std::fs::write(&tmp, data).with_context(|| format!("writing {}", tmp.display()))?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e).with_context(|| format!("publishing {}", path.display()))
+        }
+    }
+}
+
+fn encode_record(key: u64, index: u64, r: &ScenarioResult) -> Vec<u8> {
+    let name = r.name.as_bytes();
+    let mut payload = Vec::with_capacity(RECORD_FIXED_LEN + name.len());
+    payload.extend_from_slice(&key.to_le_bytes());
+    payload.extend_from_slice(&index.to_le_bytes());
+    payload.extend_from_slice(&(r.reps as u64).to_le_bytes());
+    payload.extend_from_slice(&r.violation_pct.to_bits().to_le_bytes());
+    payload.extend_from_slice(&r.cpu_hours.to_bits().to_le_bytes());
+    payload.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    payload.extend_from_slice(name);
+    let mut out = Vec::with_capacity(4 + payload.len() + 8);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+    out
+}
+
+fn decode_payload(p: &[u8]) -> Option<JournalRecord> {
+    if p.len() < RECORD_FIXED_LEN {
+        return None;
+    }
+    let u64_at = |i: usize| u64::from_le_bytes(p[i..i + 8].try_into().unwrap());
+    let name_len = u32::from_le_bytes(p[40..44].try_into().unwrap()) as usize;
+    if p.len() != RECORD_FIXED_LEN + name_len {
+        return None;
+    }
+    let name = std::str::from_utf8(&p[RECORD_FIXED_LEN..]).ok()?.to_string();
+    Some(JournalRecord {
+        key: u64_at(0),
+        index: usize::try_from(u64_at(8)).ok()?,
+        result: ScenarioResult {
+            name,
+            violation_pct: f64::from_bits(u64_at(24)),
+            cpu_hours: f64::from_bits(u64_at(32)),
+            reps: usize::try_from(u64_at(16)).ok()?,
+        },
+    })
+}
+
+/// Validate the header, then walk records until the first torn or
+/// corrupt one; returns the valid records and the byte offset where the
+/// valid prefix ends.
+fn parse_journal(path: &Path, data: &[u8]) -> Result<(Vec<JournalRecord>, usize)> {
+    if data.len() < JOURNAL_HEADER_LEN || data[..8] != JOURNAL_MAGIC {
+        bail!("{} is not a result journal", path.display());
+    }
+    let version = u32::from_le_bytes(data[8..JOURNAL_HEADER_LEN].try_into().unwrap());
+    if version != JOURNAL_VERSION {
+        bail!("journal {} is format v{version}, expected v{JOURNAL_VERSION}", path.display());
+    }
+    let mut records = Vec::new();
+    let mut off = JOURNAL_HEADER_LEN;
+    loop {
+        let Some(len_b) = data.get(off..off + 4) else { break };
+        let len = u32::from_le_bytes(len_b.try_into().unwrap()) as usize;
+        let Some(payload) = data.get(off + 4..off + 4 + len) else { break };
+        let Some(hash_b) = data.get(off + 4 + len..off + 12 + len) else { break };
+        if fnv1a(payload) != u64::from_le_bytes(hash_b.try_into().unwrap()) {
+            break;
+        }
+        let Some(rec) = decode_payload(payload) else { break };
+        records.push(rec);
+        off += 12 + len;
+    }
+    Ok((records, off))
+}
+
+/// Read a journal's valid records (torn tail records are ignored; a
+/// missing file or a non-journal file is an error).
+pub fn read_journal(path: &Path) -> Result<Vec<JournalRecord>> {
+    let data =
+        std::fs::read(path).with_context(|| format!("reading journal {}", path.display()))?;
+    Ok(parse_journal(path, &data)?.0)
+}
+
+/// Read every `*.journal` file under `dir`, concatenated in file-name
+/// order (deterministic across processes and platforms).
+pub fn read_journal_dir(dir: &Path) -> Result<Vec<JournalRecord>> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading journal dir {}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in entries {
+        let path = entry?.path();
+        if path.extension().map_or(false, |e| e == "journal") {
+            paths.push(path);
+        }
+    }
+    paths.sort();
+    let mut records = Vec::new();
+    for p in &paths {
+        records.extend(read_journal(p)?);
+    }
+    Ok(records)
+}
+
+/// Fold journal records back into canonical table order: sort by row
+/// index and keep the first record per row (duplicates from overlapping
+/// re-runs carry identical keys, hence identical inputs). Two records
+/// claiming one row under *different* keys mean journals from different
+/// grids were mixed in one directory — an error, never a silent pick.
+pub fn merge_records(mut records: Vec<JournalRecord>) -> Result<Vec<JournalRecord>> {
+    records.sort_by_key(|r| r.index);
+    let mut out: Vec<JournalRecord> = Vec::with_capacity(records.len());
+    for r in records {
+        match out.last() {
+            Some(last) if last.index == r.index => {
+                if last.key != r.key {
+                    bail!(
+                        "journal conflict at row {}: {:?} (key {:016x}) vs {:?} (key {:016x}) \
+                         — were journals from different grids mixed in one directory?",
+                        r.index,
+                        last.result.name,
+                        last.key,
+                        r.result.name,
+                        r.key
+                    );
+                }
+            }
+            _ => out.push(r),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn job(index: usize, key: u64, name: &str) -> Job {
+        Job { index, key, name: name.to_string() }
+    }
+
+    fn result(name: &str, violation: f64, cpu: f64, reps: usize) -> ScenarioResult {
+        ScenarioResult { name: name.into(), violation_pct: violation, cpu_hours: cpu, reps }
+    }
+
+    #[test]
+    fn journal_round_trips_bit_identically() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("t.journal");
+        let (sink, prior) = JournalSink::open(&path).unwrap();
+        assert!(prior.is_empty());
+        let rows = [
+            (job(0, 11, "a"), result("a", 1.25, 20.5, 3)),
+            (job(1, 22, "b,with commas"), result("b,with commas", f64::NAN, 0.1, 4)),
+            (job(2, 33, "c"), result("c", 0.0, 7.75, 5)),
+        ];
+        for (j, r) in &rows {
+            sink.record(j, r).unwrap();
+        }
+        drop(sink);
+        let back = read_journal(&path).unwrap();
+        assert_eq!(back.len(), rows.len());
+        for (rec, (j, r)) in back.iter().zip(&rows) {
+            assert_eq!(rec.key, j.key);
+            assert_eq!(rec.index, j.index);
+            assert_eq!(rec.result.name, r.name);
+            assert_eq!(rec.result.violation_pct.to_bits(), r.violation_pct.to_bits());
+            assert_eq!(rec.result.cpu_hours.to_bits(), r.cpu_hours.to_bits());
+            assert_eq!(rec.result.reps, r.reps);
+        }
+    }
+
+    #[test]
+    fn reopened_journal_resumes_after_a_torn_tail() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("t.journal");
+        let (sink, _) = JournalSink::open(&path).unwrap();
+        sink.record(&job(0, 1, "a"), &result("a", 1.0, 2.0, 3)).unwrap();
+        sink.record(&job(1, 2, "b"), &result("b", 3.0, 4.0, 3)).unwrap();
+        drop(sink);
+        // Simulate a crash mid-append: garbage tail bytes.
+        let mut data = std::fs::read(&path).unwrap();
+        let clean_len = data.len();
+        data.extend_from_slice(&[0x77; 9]);
+        std::fs::write(&path, &data).unwrap();
+        assert_eq!(read_journal(&path).unwrap().len(), 2, "torn tail is ignored");
+
+        let (sink, prior) = JournalSink::open(&path).unwrap();
+        assert_eq!(prior.len(), 2, "valid prefix survives reopening");
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            clean_len as u64,
+            "open must truncate the torn tail before appending"
+        );
+        sink.record(&job(2, 3, "c"), &result("c", 5.0, 6.0, 3)).unwrap();
+        drop(sink);
+        let back = read_journal(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[2].result.name, "c");
+    }
+
+    #[test]
+    fn non_journal_files_are_rejected() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("t.journal");
+        std::fs::write(&path, b"definitely not a journal").unwrap();
+        assert!(read_journal(&path).is_err());
+        assert!(JournalSink::open(&path).is_err(), "open must not clobber foreign files");
+        assert!(read_journal(&dir.join("missing.journal")).is_err());
+    }
+
+    #[test]
+    fn journal_dir_reads_in_file_name_order() {
+        let dir = TempDir::new().unwrap();
+        let (b, _) = JournalSink::open(&dir.join("b.journal")).unwrap();
+        b.record(&job(1, 2, "late"), &result("late", 1.0, 1.0, 3)).unwrap();
+        let (a, _) = JournalSink::open(&dir.join("a.journal")).unwrap();
+        a.record(&job(0, 1, "early"), &result("early", 2.0, 2.0, 3)).unwrap();
+        drop((a, b));
+        std::fs::write(dir.join("notes.txt"), b"ignored").unwrap();
+        let records = read_journal_dir(dir.path()).unwrap();
+        let names: Vec<&str> = records.iter().map(|r| r.result.name.as_str()).collect();
+        assert_eq!(names, ["early", "late"], "a.journal reads before b.journal");
+    }
+
+    #[test]
+    fn merge_orders_dedupes_and_rejects_conflicts() {
+        let rec = |index: usize, key: u64, name: &str| JournalRecord {
+            key,
+            index,
+            result: result(name, 1.0, 1.0, 3),
+        };
+        let merged =
+            merge_records(vec![rec(2, 22, "c"), rec(0, 10, "a"), rec(1, 11, "b")]).unwrap();
+        let names: Vec<&str> = merged.iter().map(|r| r.result.name.as_str()).collect();
+        assert_eq!(names, ["a", "b", "c"]);
+
+        // duplicate row, same key: first wins, no error
+        let merged = merge_records(vec![rec(0, 10, "a"), rec(0, 10, "a")]).unwrap();
+        assert_eq!(merged.len(), 1);
+
+        // duplicate row, different key: mixed grids, hard error
+        let err = merge_records(vec![rec(0, 10, "a"), rec(0, 99, "z")]).unwrap_err();
+        assert!(format!("{err}").contains("conflict"), "{err}");
+    }
+
+    #[test]
+    fn collect_sink_sorts_into_plan_order() {
+        let sink = CollectSink::new();
+        sink.record(&job(2, 3, "c"), &result("c", 3.0, 3.0, 3)).unwrap();
+        sink.record(&job(0, 1, "a"), &result("a", 1.0, 1.0, 3)).unwrap();
+        sink.record(&job(1, 2, "b"), &result("b", 2.0, 2.0, 3)).unwrap();
+        let rows = sink.into_results();
+        let got: Vec<(usize, &str)> = rows.iter().map(|(i, r)| (*i, r.name.as_str())).collect();
+        assert_eq!(got, [(0, "a"), (1, "b"), (2, "c")]);
+    }
+
+    #[test]
+    fn csv_sink_streams_quoted_lines() {
+        let sink = CsvSink::new(Vec::new());
+        sink.header().unwrap();
+        sink.record(&job(0, 1, "plain"), &result("plain", 1.5, 2.25, 3)).unwrap();
+        sink.record(&job(1, 2, "a,b"), &result("a,b", 0.0, 1.0, 4)).unwrap();
+        let text = String::from_utf8(sink.into_inner()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "scenario,violation_pct,cpu_hours,reps");
+        assert_eq!(lines[1], "plain,1.5000,2.2500,3");
+        assert_eq!(lines[2], "\"a,b\",0.0000,1.0000,4");
+    }
+
+    #[test]
+    fn fanout_reaches_every_sink() {
+        let a = CollectSink::new();
+        let b = CollectSink::new();
+        let fan = Fanout::new(vec![&a, &b]);
+        fan.record(&job(0, 1, "x"), &result("x", 1.0, 1.0, 3)).unwrap();
+        assert_eq!(a.into_results().len(), 1);
+        assert_eq!(b.into_results().len(), 1);
+    }
+}

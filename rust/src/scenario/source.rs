@@ -12,6 +12,7 @@
 //! regenerating the Spain trace entirely.
 
 use crate::config::SimConfig;
+use crate::util::{fnv1a, Fnv};
 use crate::workload::{by_opponent, generate, store, GeneratorConfig, MatchSpec, Trace};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -120,6 +121,35 @@ impl TraceSource {
             Some(gen) if !gen.is_default() => format!("{base}~{}", gen.label()),
             _ => base,
         }
+    }
+
+    /// Stable content fingerprint over everything that determines the
+    /// loaded trace: the variant, its identifying fields (opponent /
+    /// spec fields / CSV path *and contents*), the `fast` scaling flag,
+    /// and — for generated sources — the exact generator fingerprint.
+    /// Job plans (`crate::scenario::plan`) fold this into their per-row
+    /// keys, so a result journaled under one workload can never be
+    /// replayed for another. Unlike [`TraceSource::label`], this is
+    /// collision-free by construction over *all* fields, including
+    /// `fast`.
+    pub fn fingerprint(&self) -> u64 {
+        let tagged = match self {
+            Self::Match { opponent, fast, .. } => format!("match|{opponent}|{fast}"),
+            Self::Spec { spec, fast, .. } => format!("spec|{}|{fast}", spec_key(spec)),
+            Self::Csv { path } => {
+                // A CSV file can change between loads (which is why CSV
+                // sources are never cached) — fold the current bytes in,
+                // so a journaled result can never be replayed for edited
+                // contents. An unreadable file hashes as empty; loading
+                // it will surface the real error.
+                let content = std::fs::read(path).map(|d| fnv1a(&d)).unwrap_or(0);
+                format!("csv|{}|{content:016x}", path.display())
+            }
+        };
+        let mut h = Fnv::new();
+        h.write_str(&tagged);
+        h.write_u64(self.generator().map_or(0, GeneratorConfig::fingerprint));
+        h.finish()
     }
 
     /// The (possibly fast-scaled) spec this source generates from.
@@ -238,21 +268,12 @@ fn cache_key(spec: &MatchSpec, gen: &GeneratorConfig) -> String {
 /// Deterministic store file name under a cache dir: a hash of the full
 /// cache key, so spec *and* generator config address distinct files.
 fn store_path(dir: &Path, key: &str) -> PathBuf {
-    let mut h = 0xCBF2_9CE4_8422_2325u64;
-    for b in key.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01B3);
-    }
-    dir.join(format!("{h:016x}.trace"))
+    dir.join(format!("{:016x}.trace", fnv1a(key.as_bytes())))
 }
 
 /// 32-bit label hash (folded FNV-1a) for collision-free short labels.
 fn short_hash(s: &str) -> u32 {
-    let mut h = 0xCBF2_9CE4_8422_2325u64;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01B3);
-    }
+    let h = fnv1a(s.as_bytes());
     (h ^ (h >> 32)) as u32
 }
 
@@ -397,6 +418,34 @@ mod tests {
         // and the store was healed for the next process
         let healed = store::read_trace(&file).unwrap();
         assert_eq!(healed.len(), got.len());
+    }
+
+    #[test]
+    fn fingerprints_cover_every_identifying_field() {
+        let base = TraceSource::opponent("Spain", true);
+        assert_eq!(base.fingerprint(), base.clone().fingerprint(), "stable");
+        // the fast flag is excluded from labels but must feed fingerprints
+        assert_ne!(base.fingerprint(), TraceSource::opponent("Spain", false).fingerprint());
+        assert_ne!(base.fingerprint(), TraceSource::opponent("Japan", true).fingerprint());
+        let tweaked = base
+            .clone()
+            .with_generator(GeneratorConfig { lead_min: 0.0, ..GeneratorConfig::default() });
+        assert_ne!(base.fingerprint(), tweaked.fingerprint());
+        // distinct variants and paths stay distinct
+        assert_ne!(
+            TraceSource::csv("/tmp/a.csv").fingerprint(),
+            TraceSource::csv("/tmp/b.csv").fingerprint()
+        );
+        assert_ne!(base.fingerprint(), TraceSource::spec(tiny_spec(4_000), true).fingerprint());
+
+        // CSV contents feed the fingerprint: editing the file must change
+        // it (else a result journal would replay results for stale data).
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("t.csv");
+        TraceSource::spec(tiny_spec(1_000), false).load().unwrap().write_csv(&path).unwrap();
+        let before = TraceSource::csv(&path).fingerprint();
+        TraceSource::spec(tiny_spec(500), false).load().unwrap().write_csv(&path).unwrap();
+        assert_ne!(before, TraceSource::csv(&path).fingerprint(), "contents must feed the key");
     }
 
     #[test]

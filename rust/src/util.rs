@@ -1,6 +1,7 @@
 //! Small in-tree utilities that keep the crate offline-friendly:
-//! a scoped temporary directory (tests, trace dumps) and a flat
-//! `key=value` metadata format shared with the Python compile path.
+//! a scoped temporary directory (tests, trace dumps), a flat
+//! `key=value` metadata format shared with the Python compile path, and
+//! the crate-wide FNV-1a content hash.
 
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -8,6 +9,58 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Incremental FNV-1a 64-bit hasher — the single implementation behind
+/// every content hash in the crate (trace store files, trace-cache keys,
+/// job-plan keys, result-journal records). Keeping one copy is what
+/// keeps those key spaces in lockstep.
+#[derive(Debug, Clone)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv {
+    /// The FNV-1a offset basis.
+    pub fn new() -> Self {
+        Self(0xCBF2_9CE4_8422_2325)
+    }
+
+    /// Fold raw bytes into the hash.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    /// Fold a `u64` in as its little-endian bytes.
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Fold a string in, length-prefixed so adjacent variable-length
+    /// fields can never alias.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    /// The current hash value.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot FNV-1a over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.write(bytes);
+    h.finish()
+}
 
 /// A temporary directory removed on drop (in-tree `tempfile` stand-in).
 #[derive(Debug)]

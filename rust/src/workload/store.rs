@@ -24,6 +24,7 @@
 //! regeneration; a stored trace is never trusted without its hash.
 
 use super::trace::{Trace, TweetClass};
+use crate::util::fnv1a;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
@@ -142,14 +143,49 @@ pub fn read_trace(path: &Path) -> Result<Trace> {
     Ok(Trace::from_sorted_columns(ids, post_times, classes, sentiments))
 }
 
-/// FNV-1a over a byte slice (matches the generator's string hashing).
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xCBF2_9CE4_8422_2325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+/// Bound a trace-cache directory to `max_bytes` by deleting the
+/// least-recently-modified `*.trace` files first (LRU by mtime; ties
+/// break by path for determinism). Newest files are kept while they fit
+/// the budget, so the traces a sweep just touched survive. Non-trace
+/// files (result journals, notes) are never touched, and a missing
+/// directory is a clean no-op. Returns `(files_removed, bytes_removed)`.
+pub fn prune(dir: &Path, max_bytes: u64) -> Result<(usize, u64)> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((0, 0)),
+        Err(e) => {
+            return Err(e).with_context(|| format!("pruning trace cache {}", dir.display()))
+        }
+    };
+    let mut files: Vec<(std::time::SystemTime, u64, std::path::PathBuf)> = Vec::new();
+    for entry in entries {
+        let entry = entry?;
+        let path = entry.path();
+        if path.extension().map_or(true, |e| e != "trace") {
+            continue;
+        }
+        let Ok(meta) = entry.metadata() else { continue };
+        if !meta.is_file() {
+            continue;
+        }
+        let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        files.push((mtime, meta.len(), path));
     }
-    h
+    // Newest first; keep files while the running total fits the budget.
+    files.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.2.cmp(&b.2)));
+    let mut kept = 0u64;
+    let mut removed = 0usize;
+    let mut freed = 0u64;
+    for (_, len, path) in files {
+        if kept.saturating_add(len) <= max_bytes {
+            kept += len;
+        } else if std::fs::remove_file(&path).is_ok() {
+            // A concurrent process may have deleted it already — fine.
+            removed += 1;
+            freed += len;
+        }
+    }
+    Ok((removed, freed))
 }
 
 #[cfg(test)]
@@ -257,5 +293,39 @@ mod tests {
     fn missing_file_is_an_error_not_a_panic() {
         let dir = TempDir::new().unwrap();
         assert!(read_trace(&dir.join("nope.trace")).is_err());
+    }
+
+    #[test]
+    fn prune_evicts_oldest_traces_beyond_the_budget() {
+        let dir = TempDir::new().unwrap();
+        let trace = sample_trace();
+        let paths: Vec<_> = (0..3).map(|i| dir.join(&format!("t{i}.trace"))).collect();
+        for p in &paths {
+            write_trace(p, &trace).unwrap();
+            // distinct mtimes (nanosecond clocks, but be generous)
+            std::thread::sleep(std::time::Duration::from_millis(30));
+        }
+        let size = std::fs::metadata(&paths[0]).unwrap().len();
+        assert!(size > 0);
+
+        // Budget fits everything: no-op.
+        assert_eq!(prune(dir.path(), u64::MAX).unwrap(), (0, 0));
+        assert!(paths.iter().all(|p| p.exists()));
+
+        // Budget fits two: the *oldest* is evicted, the newest two stay.
+        let (removed, freed) = prune(dir.path(), 2 * size + size / 2).unwrap();
+        assert_eq!((removed, freed), (1, size));
+        assert!(!paths[0].exists(), "oldest trace must be pruned first");
+        assert!(paths[1].exists() && paths[2].exists());
+
+        // Non-trace files are never touched, even at budget zero.
+        let journal = dir.join("results.journal");
+        std::fs::write(&journal, b"not a trace").unwrap();
+        let (removed, _) = prune(dir.path(), 0).unwrap();
+        assert_eq!(removed, 2);
+        assert!(journal.exists(), "prune must only delete *.trace files");
+
+        // A missing cache dir is a clean no-op.
+        assert_eq!(prune(&dir.path().join("nope"), 10).unwrap(), (0, 0));
     }
 }

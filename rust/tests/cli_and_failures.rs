@@ -175,6 +175,85 @@ fn cli_matrix_streams_and_reuses_the_disk_cache() {
 }
 
 #[test]
+fn cli_matrix_shards_journal_and_merge_bit_identically() {
+    let dir = TempDir::new().unwrap();
+    let journal = dir.join("journal");
+    let cache = dir.join("traces");
+    let grid = |extra: &[&str]| {
+        let mut c = bin();
+        c.args([
+            "matrix",
+            "France,Japan",
+            "--algos",
+            "threshold-80%,load-q99%",
+            "--fast",
+            "--threads",
+            "2",
+            "--max-reps",
+            "3",
+            "--cache-dir",
+            cache.to_str().unwrap(),
+        ]);
+        c.args(extra);
+        c.output().unwrap()
+    };
+    for shard in ["0/2", "1/2"] {
+        let out = grid(&["--shard", shard, "--journal", journal.to_str().unwrap()]);
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    }
+    let merged = bin().args(["matrix", "merge", journal.to_str().unwrap()]).output().unwrap();
+    assert!(merged.status.success(), "{}", String::from_utf8_lossy(&merged.stderr));
+    let merged_text = String::from_utf8_lossy(&merged.stdout).into_owned();
+    let single = grid(&["--serial"]);
+    assert!(single.status.success(), "{}", String::from_utf8_lossy(&single.stderr));
+    let single_text = String::from_utf8_lossy(&single.stdout).into_owned();
+    // Compare the table blocks: the merged folded table must be
+    // bit-identical (rendered digits included) to the one-process run.
+    let table = |text: &str| -> Vec<String> {
+        text.lines()
+            .skip_while(|l| !l.starts_with("== scenario matrix"))
+            .take_while(|l| !l.starts_with("ran "))
+            .map(String::from)
+            .collect()
+    };
+    let (m, s) = (table(&merged_text), table(&single_text));
+    assert!(!m.is_empty(), "{merged_text}");
+    assert_eq!(m, s, "merged:\n{merged_text}\nsingle:\n{single_text}");
+
+    // Resume: re-running a shard skips all of its journaled rows.
+    let again = grid(&["--shard", "0/2", "--journal", journal.to_str().unwrap()]);
+    assert!(again.status.success(), "{}", String::from_utf8_lossy(&again.stderr));
+    let text = String::from_utf8_lossy(&again.stdout);
+    assert!(text.contains("skipped 2 already-converged rows"), "{text}");
+    // ... and the resumed table still shows the journaled rows.
+    assert!(text.contains("scenario matrix — 2 scenarios"), "{text}");
+    assert!(text.contains("ran 0 scenarios"), "{text}");
+}
+
+#[test]
+fn cli_matrix_rejects_bad_generator_axis_and_shard_values() {
+    let out = bin().args(["matrix", "France", "--class-mix", "0.5,0.5"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--class-mix"));
+
+    let out = bin().args(["matrix", "France", "--class-mix", "0.5,0.4,0.4"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("sum to 1"));
+
+    let out = bin().args(["matrix", "France", "--noise", "abc"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--noise"));
+
+    let out = bin().args(["matrix", "France", "--lead-min", "1.5,x"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--lead-min"));
+
+    let out = bin().args(["matrix", "France", "--shard", "3/2"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--shard"));
+}
+
+#[test]
 fn cli_matrix_rejects_bad_algo_and_opponent() {
     let out = bin().args(["matrix", "France", "--algos", "magic-9000"]).output().unwrap();
     assert!(!out.status.success());

@@ -1,0 +1,141 @@
+//! Cross-process execution integration tests: deterministic sharding
+//! (the union of `shard(i, n)` runs is bit-identical to the unsharded
+//! serial run), journal resume (a truncated journal re-runs only the
+//! lost rows), and shard-journal merge (the folded table equals the
+//! single-process one, row for row, bit for bit).
+
+use sla_autoscale::autoscale::ScalerSpec;
+use sla_autoscale::config::SimConfig;
+use sla_autoscale::scenario::sink::JOURNAL_HEADER_LEN;
+use sla_autoscale::scenario::{
+    merge_records, read_journal, read_journal_dir, run_plan, CollectSink, JournalSink, Overrides,
+    ScenarioMatrix, ScenarioResult, TraceSource,
+};
+use sla_autoscale::util::TempDir;
+use sla_autoscale::workload::MatchSpec;
+use std::collections::HashSet;
+
+fn small_matrix() -> ScenarioMatrix {
+    let source = TraceSource::spec(
+        MatchSpec {
+            opponent: "ShardIT",
+            date: "—",
+            total_tweets: 12_000,
+            length_hours: 0.25,
+            events: vec![],
+        },
+        false,
+    );
+    let overrides = [
+        Overrides::default(),
+        Overrides { sla_secs: Some(60.0), ..Default::default() },
+    ];
+    let scalers = [
+        ScalerSpec::threshold(70.0),
+        ScalerSpec::load(0.99),
+        ScalerSpec::load_plus_appdata(0.99999, 2),
+    ];
+    ScenarioMatrix::cross(&[source], &SimConfig::default(), &overrides, &scalers, 4)
+}
+
+fn assert_same(got: &ScenarioResult, want: &ScenarioResult) {
+    assert_eq!(got.name, want.name);
+    assert_eq!(got.reps, want.reps, "{}", got.name);
+    assert_eq!(got.violation_pct.to_bits(), want.violation_pct.to_bits(), "{}", got.name);
+    assert_eq!(got.cpu_hours.to_bits(), want.cpu_hours.to_bits(), "{}", got.name);
+}
+
+/// The headline sharding guarantee: for n in {2, 3}, serial or threaded,
+/// the union of all shards reproduces the unsharded serial run exactly —
+/// same `violation_pct`, `cpu_hours`, and replication counts per row.
+#[test]
+fn shard_union_is_bit_identical_to_the_unsharded_run() {
+    let matrix = small_matrix();
+    let full = matrix.run_serial().unwrap();
+    let plan = matrix.plan();
+    for n in [2, 3] {
+        for threads in [1, 4] {
+            let mut merged: Vec<Option<ScenarioResult>> = vec![None; plan.len()];
+            for i in 0..n {
+                let shard = plan.shard(i, n).unwrap();
+                let sink = CollectSink::new();
+                let results = run_plan(&matrix, &shard.jobs, threads, &sink).unwrap();
+                assert_eq!(results.len(), shard.jobs.len());
+                for (job, res) in shard.jobs.iter().zip(results) {
+                    assert!(merged[job.index].is_none(), "shards must be disjoint");
+                    merged[job.index] = Some(res);
+                }
+            }
+            for (slot, want) in merged.iter().zip(&full) {
+                let got = slot.as_ref().expect("shards must cover every row");
+                assert_same(got, want);
+            }
+        }
+    }
+}
+
+/// Kill a journaled run "mid-matrix" by truncating the journal after k
+/// records: the resumed run counts k job-key hits, re-simulates only the
+/// lost rows, and the merged table equals the clean run bit for bit.
+#[test]
+fn truncated_journal_resumes_without_resimulating() {
+    let matrix = small_matrix();
+    let plan = matrix.plan();
+    let clean = matrix.run_serial().unwrap();
+    let dir = TempDir::new().unwrap();
+    let path = dir.join("run.journal");
+
+    let (journal, prior) = JournalSink::open(&path).unwrap();
+    assert!(prior.is_empty());
+    run_plan(&matrix, &plan.jobs, 1, &journal).unwrap();
+    drop(journal);
+    assert_eq!(read_journal(&path).unwrap().len(), plan.len());
+
+    // "Crash" after k records: walk the framing and cut the file there.
+    let k = 2;
+    let data = std::fs::read(&path).unwrap();
+    let mut end = JOURNAL_HEADER_LEN;
+    for _ in 0..k {
+        let len = u32::from_le_bytes(data[end..end + 4].try_into().unwrap()) as usize;
+        end += 4 + len + 8;
+    }
+    assert!(end < data.len());
+    std::fs::write(&path, &data[..end]).unwrap();
+
+    let (journal, prior) = JournalSink::open(&path).unwrap();
+    assert_eq!(prior.len(), k, "surviving records load back");
+    let done: HashSet<u64> = prior.iter().map(|r| r.key).collect();
+    let (todo, hits) = plan.pending(&done);
+    assert_eq!(hits, k, "job-key hit counter must match the surviving records");
+    assert_eq!(todo.len(), plan.len() - k, "only lost rows are re-simulated");
+    let fresh = run_plan(&matrix, &todo.jobs, 2, &journal).unwrap();
+    assert_eq!(fresh.len(), plan.len() - k);
+    drop(journal);
+
+    let merged = merge_records(read_journal(&path).unwrap()).unwrap();
+    assert_eq!(merged.len(), clean.len());
+    for (rec, want) in merged.iter().zip(&clean) {
+        assert_same(&rec.result, want);
+    }
+}
+
+/// Two shard processes, two journal files, one directory: `merge` folds
+/// them back into the canonical single-process table.
+#[test]
+fn shard_journals_merge_into_the_canonical_table() {
+    let matrix = small_matrix();
+    let plan = matrix.plan();
+    let clean = matrix.run_serial().unwrap();
+    let dir = TempDir::new().unwrap();
+    for i in 0..2usize {
+        let file = dir.join(&format!("shard-{i}of2.journal"));
+        let (journal, _) = JournalSink::open(&file).unwrap();
+        let shard = plan.shard(i, 2).unwrap();
+        run_plan(&matrix, &shard.jobs, 2, &journal).unwrap();
+    }
+    let merged = merge_records(read_journal_dir(dir.path()).unwrap()).unwrap();
+    assert_eq!(merged.len(), clean.len());
+    for (rec, want) in merged.iter().zip(&clean) {
+        assert_same(&rec.result, want);
+    }
+}
