@@ -12,13 +12,15 @@
 //! Env: `BENCH_BUDGET_SECS` shrinks/extends the per-benchmark sampling
 //! budget (CI smoke uses 1).
 
-use sla_autoscale::autoscale::{AppdataScaler, Composite, LoadScaler, ThresholdScaler};
+use sla_autoscale::autoscale::{
+    AppdataScaler, AutoScaler, Composite, LoadScaler, ThresholdScaler,
+};
 use sla_autoscale::config::SimConfig;
 use sla_autoscale::delay::DelayModel;
 use sla_autoscale::experiments::common::{default_mix, scale_config, scale_spec, trace_for};
 use sla_autoscale::rng::Rng;
 use sla_autoscale::sim::cycles::{Distributor, PsSchedule};
-use sla_autoscale::sim::Simulator;
+use sla_autoscale::sim::{run_batch, SimScratch, Simulator};
 use sla_autoscale::util::bench;
 use sla_autoscale::workload::{by_opponent, generate, GeneratorConfig, TweetClass};
 use std::time::Duration;
@@ -144,6 +146,80 @@ fn main() {
         &[("after_over_before", vt_tps / legacy_tps.max(1e-12))],
     );
     println!("    => kernel speedup {:.2}x", vt_tps / legacy_tps.max(1e-12));
+
+    // Replication-batch kernel: R seed-replications of one scenario,
+    // serial loop vs the lockstep batch kernel. A rate-limited config
+    // disables the idle fast-forward on both paths, so the comparison
+    // isolates what the batch amortizes: per-step trace ingestion, CSR
+    // probes and input-queue dynamics, paid once per wave instead of
+    // once per replication.
+    const BATCH_REPS: usize = 8;
+    let batch_trace = trace_for(&by_opponent("Japan").unwrap(), true);
+    let batch_cfg = SimConfig { input_rate: Some(60.0), ..cfg.clone() };
+    let batch_seeds: Vec<u64> =
+        (0..BATCH_REPS as u64).map(|i| batch_cfg.seed.wrapping_add(i.wrapping_mul(7919))).collect();
+    let batch_scalers = || -> Vec<Box<dyn AutoScaler>> {
+        (0..BATCH_REPS)
+            .map(|_| Box::new(ThresholdScaler::new(0.6)) as Box<dyn AutoScaler>)
+            .collect()
+    };
+    let mut scratch = SimScratch::new();
+    // Lockstep invariant holds on this machine before anything is timed.
+    let lanes =
+        run_batch(&batch_trace, &batch_cfg, &model, batch_scalers(), &batch_seeds, &mut scratch);
+    for (lane, &seed) in lanes.iter().zip(&batch_seeds) {
+        let scfg = batch_cfg.with_seed(seed);
+        let res = Simulator::new(&scfg, &model)
+            .run_with_scratch(&batch_trace, Box::new(ThresholdScaler::new(0.6)), &mut scratch);
+        assert_eq!(
+            lane.violation_pct.to_bits(),
+            res.violation_pct().to_bits(),
+            "batch lane diverged from serial (seed {seed})"
+        );
+        assert_eq!(lane.cpu_hours.to_bits(), res.cpu_hours.to_bits(), "seed {seed}");
+    }
+    let batch_n = batch_trace.len() as f64 * BATCH_REPS as f64;
+    let s_serial = bench::run(
+        &format!("kernel/batch-replica/serial ({BATCH_REPS} reps)"),
+        dur,
+        || {
+            for &seed in &batch_seeds {
+                let scfg = batch_cfg.with_seed(seed);
+                let sim = Simulator::new(&scfg, &model);
+                std::hint::black_box(sim.run_with_scratch(
+                    &batch_trace,
+                    Box::new(ThresholdScaler::new(0.6)),
+                    &mut scratch,
+                ));
+            }
+        },
+    );
+    let serial_tps = batch_n * s_serial.per_sec();
+    println!("    -> {:.2}M simulated tweets/s across reps", serial_tps / 1e6);
+    report.push_sample("before", &s_serial, &[("simulated_tweets_per_sec", serial_tps)]);
+    let s_batched = bench::run(
+        &format!("kernel/batch-replica/batched ({BATCH_REPS} lanes)"),
+        dur,
+        || {
+            std::hint::black_box(run_batch(
+                &batch_trace,
+                &batch_cfg,
+                &model,
+                batch_scalers(),
+                &batch_seeds,
+                &mut scratch,
+            ));
+        },
+    );
+    let batched_tps = batch_n * s_batched.per_sec();
+    println!("    -> {:.2}M simulated tweets/s across lanes", batched_tps / 1e6);
+    report.push_sample("after", &s_batched, &[("simulated_tweets_per_sec", batched_tps)]);
+    report.push_metrics(
+        "kernel/batch-replica/speedup",
+        "current",
+        &[("batched_over_serial", batched_tps / serial_tps.max(1e-12))],
+    );
+    println!("    => batch-replica speedup {:.2}x", batched_tps / serial_tps.max(1e-12));
 
     // End-to-end simulations (the acceptance profile is
     // sim/Spain/load-q99.999%).

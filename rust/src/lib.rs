@@ -21,8 +21,10 @@
 //! its string form (`load-q99.999%+appdata+4`, `depas-0.7-0.1-0.5`) so
 //! the CLI `matrix` subcommand accepts arbitrary grids. The runner caches
 //! generated match traces behind `Arc<Trace>` (one generation per
-//! process) and executes CI replications on scoped threads,
-//! bit-identically to the serial path. Scaler families span both
+//! process), spends OS threads across matrix rows, and advances each
+//! row's CI replications through a lockstep batch kernel
+//! ([`sim::run_batch`]) — bit-identically to the serial path. Scaler
+//! families span both
 //! *centralized* controllers (threshold, load, appdata, predictive,
 //! vertical) and the *decentralized* probabilistic `depas` fleet, whose
 //! per-node votes key on the cluster's stable node identities.

@@ -51,6 +51,11 @@ USAGE:
       matrices resumable/sharded exactly like the matrix subcommand.
   sla-autoscale serve [opponent] [--count N] [--artifacts DIR]
       Serve the PJRT-compiled sentiment model on a generated live stream.
+  sla-autoscale bench-gate <baseline.json> <fresh.json> [--max-regression-pct P]
+      Compare a freshly produced BENCH_*.json against the committed
+      baseline; exit non-zero if any gated `after`/`current` metric
+      regressed by more than P percent (default 25). `pending`
+      bootstrap baselines gate nothing.
 
 Algorithm SPECs (the scaler registry's string forms; composable with '+'):
   threshold-<pct>%   load-q<pct>%   appdata+<n>[@w<secs>]
@@ -433,6 +438,43 @@ fn main() -> Result<()> {
             let count: u64 = args.opt("--count").unwrap_or("20000").parse()?;
             let artifacts = args.opt("--artifacts").unwrap_or("artifacts").to_string();
             serve(&opponent, count, &artifacts)?;
+        }
+        Some("bench-gate") => {
+            let Some(base_path) = args.positional(1) else {
+                bail!("bench-gate: missing baseline json path")
+            };
+            let Some(fresh_path) = args.positional(2) else {
+                bail!("bench-gate: missing fresh json path")
+            };
+            let tolerance: f64 = args.opt("--max-regression-pct").unwrap_or("25").parse()?;
+            let baseline = std::fs::read_to_string(base_path)
+                .map_err(|e| anyhow!("bench-gate: reading {base_path}: {e}"))?;
+            let fresh = std::fs::read_to_string(fresh_path)
+                .map_err(|e| anyhow!("bench-gate: reading {fresh_path}: {e}"))?;
+            let gate = sla_autoscale::util::bench::compare_reports(&baseline, &fresh, tolerance)
+                .map_err(|e| anyhow!("bench-gate: {e}"))?;
+            println!("bench-gate: {base_path} vs {fresh_path} (tolerance {tolerance}%)");
+            for line in &gate.skipped {
+                println!("  skip  {line}");
+            }
+            for line in &gate.checked {
+                println!("  ok    {line}");
+            }
+            for line in &gate.regressions {
+                println!("  FAIL  {line}");
+            }
+            println!(
+                "bench-gate: {} checked, {} skipped, {} regressed",
+                gate.checked.len(),
+                gate.skipped.len(),
+                gate.regressions.len()
+            );
+            if !gate.regressions.is_empty() {
+                bail!(
+                    "bench-gate: {} metric(s) regressed more than {tolerance}% vs {base_path}",
+                    gate.regressions.len()
+                );
+            }
         }
         _ => {
             print!("{USAGE}");

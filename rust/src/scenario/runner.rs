@@ -1,20 +1,27 @@
 //! Parallel scenario execution with CI-convergence semantics identical
 //! to the original serial loop.
 //!
-//! Two levels of parallelism, both on scoped threads (no runtime deps):
+//! Two levels of concurrency:
 //!
-//! * **across scenarios** — a worker pool pulls grid rows off an atomic
-//!   cursor; every row is independent (own trace Arc, own config, own
-//!   scaler built from its spec on the worker thread);
+//! * **across scenarios** — a worker pool on scoped threads (no runtime
+//!   deps) pulls grid rows off an atomic cursor; every row is independent
+//!   (own trace Arc, own config, own scaler built from its spec on the
+//!   worker thread). This is where the OS threads are spent.
 //! * **across replications** — inside one scenario, seeds are evaluated
-//!   in waves of `wave` concurrent simulations, then *pushed in seed
-//!   order* into the paper's CI stopping rule, checking convergence after
-//!   every push exactly like the serial loop did.
+//!   in waves through the lockstep batch kernel
+//!   ([`crate::sim::run_batch`]) on the worker's own thread — one
+//!   simulation pass advances the whole wave, amortizing trace
+//!   ingestion, queue dynamics and fast-forward detection across lanes
+//!   instead of paying a thread spawn/join per replication. Lane results
+//!   are *pushed in seed order* into the paper's CI stopping rule,
+//!   checking convergence after every push exactly like the serial loop
+//!   did.
 //!
 //! Because each replication is a pure function of `(trace, config(seed),
-//! model, spec)` and results are folded in seed order, the parallel path
+//! model, spec)` and results are folded in seed order, the batched path
 //! is bit-identical to the serial one — `violation_pct`, `cpu_hours` and
-//! the replication count all match (tested in `rust/tests/scenario_engine.rs`).
+//! the replication count all match (tested in `rust/tests/scenario_engine.rs`
+//! and `rust/tests/batch_kernel.rs`).
 
 use super::matrix::ScenarioMatrix;
 use super::plan::Job;
@@ -22,24 +29,54 @@ use super::sink::ResultSink;
 use crate::autoscale::ScalerSpec;
 use crate::config::SimConfig;
 use crate::delay::DelayModel;
-use crate::sim::{SimScratch, Simulator};
+use crate::sim::{run_batch, SimScratch, Simulator};
 use crate::stats::Replications;
 use crate::workload::Trace;
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
-/// Cap on pooled hot-loop scratches: a burst of wide waves must not pin
-/// unbounded buffer memory for the process lifetime.
-const SCRATCH_POOL_MAX: usize = 64;
+/// Cap on the pooled hot-loop scratches' *approximate retained bytes*.
+/// Entry counts are meaningless here: a batched wave's arena is roughly
+/// R× a single-rep scratch, so the pool tracks per-scratch byte sizes
+/// and drops returns that would push the total past this bound.
+const SCRATCH_POOL_MAX_BYTES: usize = 256 * 1024 * 1024;
+
+/// Byte-capped pool of [`SimScratch`] buffers: each entry is stored with
+/// the approximate byte size recorded at check-in.
+#[derive(Default)]
+struct ScratchPool {
+    items: Vec<(SimScratch, usize)>,
+    bytes: usize,
+}
+
+impl ScratchPool {
+    fn checkout(&mut self) -> SimScratch {
+        match self.items.pop() {
+            Some((scratch, bytes)) => {
+                self.bytes -= bytes;
+                scratch
+            }
+            None => SimScratch::new(),
+        }
+    }
+
+    fn checkin(&mut self, scratch: SimScratch) {
+        let bytes = scratch.approx_bytes();
+        if self.bytes + bytes <= SCRATCH_POOL_MAX_BYTES {
+            self.bytes += bytes;
+            self.items.push((scratch, bytes));
+        }
+    }
+}
 
 /// Process-wide pool of [`SimScratch`] buffers. Sharing across *all*
 /// scenarios (not per `run_replications` call) is what makes replication
 /// sweeps allocation-free: a matrix row's typical 3-replication wave
-/// reuses the buffers warmed by earlier rows instead of allocating its
-/// own and dropping them at convergence.
-fn scratch_pool() -> &'static Mutex<Vec<SimScratch>> {
-    static POOL: OnceLock<Mutex<Vec<SimScratch>>> = OnceLock::new();
+/// reuses the buffers (and batch arenas) warmed by earlier rows instead
+/// of allocating its own and dropping them at convergence.
+fn scratch_pool() -> &'static Mutex<ScratchPool> {
+    static POOL: OnceLock<Mutex<ScratchPool>> = OnceLock::new();
     POOL.get_or_init(Default::default)
 }
 
@@ -47,34 +84,13 @@ fn scratch_pool() -> &'static Mutex<Vec<SimScratch>> {
 /// replication used to poison the pool and every *unrelated* scenario
 /// then died with "scratch pool poisoned" instead of the original error.
 /// Recovery is safe *with the pooled scratches intact*: the lock is only
-/// ever held for a `Vec` push/pop, so pooled buffers are never
-/// mid-mutation when a panic strikes (the panicking replication's own
-/// scratch was checked out and is simply lost), and pooling keeps
-/// working after the poison. The panic itself is surfaced by
-/// [`join_wave`], not by cascading lock failures.
-fn lock_pool() -> std::sync::MutexGuard<'static, Vec<SimScratch>> {
+/// ever held for a push/pop, so pooled buffers are never mid-mutation
+/// when a panic strikes (the panicking run's own scratch was checked out
+/// and is simply lost), and pooling keeps working after the poison. The
+/// panic itself unwinds through the worker that hit it, not through
+/// cascading lock failures.
+fn lock_pool() -> std::sync::MutexGuard<'static, ScratchPool> {
     scratch_pool().lock().unwrap_or_else(|poisoned| poisoned.into_inner())
-}
-
-/// Join a wave of replication threads, collecting results in spawn
-/// (= seed) order. If any thread panicked, the *first* panic payload is
-/// re-raised after every handle is joined, so the original failure — not
-/// a downstream lock poisoning — reaches the caller.
-fn join_wave<T>(handles: Vec<std::thread::ScopedJoinHandle<'_, T>>) -> Vec<T> {
-    let mut out = Vec::with_capacity(handles.len());
-    let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
-    for h in handles {
-        match h.join() {
-            Ok(v) => out.push(v),
-            Err(payload) => {
-                first_panic.get_or_insert(payload);
-            }
-        }
-    }
-    if let Some(payload) = first_panic {
-        std::panic::resume_unwind(payload);
-    }
-    out
 }
 
 /// Outcome of a CI-converged scenario.
@@ -97,8 +113,9 @@ pub fn default_threads() -> usize {
 
 /// Run one scenario until the paper's CI rule converges on the violation
 /// percentage; costs are averaged over the same replications. `wave` is
-/// the number of replications evaluated concurrently per round (1 = the
-/// serial reference path; any value yields bit-identical results).
+/// the number of replications evaluated per lockstep batch-kernel round
+/// on the calling thread (1 = the serial reference path; any value
+/// yields bit-identical results).
 #[allow(clippy::too_many_arguments)]
 pub fn run_replications(
     trace: &Trace,
@@ -110,70 +127,78 @@ pub fn run_replications(
     max_reps: usize,
     wave: usize,
 ) -> ScenarioResult {
-    // One replication: deterministic in (seed, trace, config, spec).
-    // Hot-loop buffers circulate through the process-wide scratch pool,
-    // so steady-state sweeps allocate nothing per replication (results
-    // are unaffected — `SimScratch` reuse is invisible by construction).
-    let run_one = |rep: u64| -> (f64, f64) {
-        let mut scratch = lock_pool().pop().unwrap_or_default();
-        let cfg = base_cfg.with_seed(base_cfg.seed.wrapping_add(rep.wrapping_mul(7919)));
-        let sim = Simulator::new(&cfg, model);
-        let res = sim.run_with_scratch(trace, scaler.build(model, mix), &mut scratch);
-        let out = (res.violation_pct(), res.cpu_hours);
-        let mut pool = lock_pool();
-        if pool.len() < SCRATCH_POOL_MAX {
-            pool.push(scratch);
-        }
+    // Replication seeds: deterministic in (base seed, rep index).
+    let lane_seed = |rep: u64| base_cfg.seed.wrapping_add(rep.wrapping_mul(7919));
+    // One wave of `take` replications starting at `rep0`. Hot-loop
+    // buffers circulate through the process-wide scratch pool, so
+    // steady-state sweeps allocate nothing per wave (results are
+    // unaffected — `SimScratch` reuse is invisible by construction).
+    // A single-lane wave takes the serial `Simulator` path — it *is*
+    // the reference the batch kernel is tested against; wider waves run
+    // the lockstep batch kernel on this same thread.
+    let run_wave = |rep0: u64, take: usize| -> Vec<(f64, f64)> {
+        let mut scratch = lock_pool().checkout();
+        let out = if take == 1 {
+            let cfg = base_cfg.with_seed(lane_seed(rep0));
+            let sim = Simulator::new(&cfg, model);
+            let res = sim.run_with_scratch(trace, scaler.build(model, mix), &mut scratch);
+            vec![(res.violation_pct(), res.cpu_hours)]
+        } else {
+            let seeds: Vec<u64> = (0..take).map(|i| lane_seed(rep0 + i as u64)).collect();
+            let scalers = (0..take).map(|_| scaler.build(model, mix)).collect();
+            run_batch(trace, base_cfg, model, scalers, &seeds, &mut scratch)
+                .into_iter()
+                .map(|lane| (lane.violation_pct, lane.cpu_hours))
+                .collect()
+        };
+        lock_pool().checkin(scratch);
         out
     };
 
     let effective_max = max_reps.max(3);
     let mut viol = Replications::new(3, effective_max, 0.10);
     let mut cost = 0.0;
-    let mut rep = 0u64;
+    let mut folded = 0u64;
     let wave = wave.max(1);
     'converge: loop {
         // Never start replications past the hard rep cap — they could
         // never be folded (overshoot past the CI-convergence point is
         // unknowable in advance; overshoot past max_reps is not).
-        let take = wave.min(effective_max - rep as usize);
-        let batch: Vec<(f64, f64)> = if take == 1 {
-            vec![run_one(rep)]
-        } else {
-            std::thread::scope(|s| {
-                let handles: Vec<_> = (0..take)
-                    .map(|i| {
-                        let f = &run_one;
-                        let r = rep + i as u64;
-                        s.spawn(move || f(r))
-                    })
-                    .collect();
-                join_wave(handles)
-            })
-        };
+        let take = wave.min(effective_max - folded as usize);
+        let batch = run_wave(folded, take);
         // Fold in seed order; a wave overshooting the convergence point
         // discards the excess, reproducing the serial stopping rep.
+        // Discarded lanes contribute to *neither* the violation CI nor
+        // the cost numerator/denominator below.
         for (v, c) in batch {
             viol.push(v);
             cost += c;
-            rep += 1;
+            folded += 1;
             if viol.converged() {
                 break 'converge;
             }
         }
     }
+    // The cost mean must average exactly the replications the CI rule
+    // consumed — no overshoot lane may leak into either side.
+    assert_eq!(
+        folded as usize,
+        viol.count(),
+        "cost denominator out of sync with the CI stopping rule"
+    );
     ScenarioResult {
         name,
         violation_pct: viol.mean(),
-        cpu_hours: cost / rep as f64,
-        reps: rep as usize,
+        cpu_hours: cost / folded as f64,
+        reps: folded as usize,
     }
 }
 
 /// Run a whole matrix `threads`-wide; the result order matches the row
-/// order regardless of scheduling. With more rows than threads the
-/// parallelism is spent across scenarios (serial replications inside
-/// each); with fewer rows the spare threads parallelize replications.
+/// order regardless of scheduling. Threads are spent *across scenarios*;
+/// inside each row, replications advance in lockstep batch-kernel waves
+/// on the row's own worker thread (`threads == 1` keeps the fully serial
+/// reference path).
 pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> Result<Vec<ScenarioResult>> {
     run_matrix_with(matrix, threads, |_, _| {})
 }
@@ -198,7 +223,12 @@ where
     let disk = matrix.cache_dir.as_deref();
     let threads = threads.max(1);
     let workers = threads.min(n);
-    let wave = (threads / workers).max(1);
+    // Replication waves cost no threads (the batch kernel runs them in
+    // lockstep on the worker's own thread), so any parallel run batches
+    // at least the CI rule's 3-replication minimum per wave. A 1-thread
+    // run stays wave 1: that is the fully serial reference path the
+    // bit-identity suites compare everything against.
+    let wave = if threads == 1 { 1 } else { (threads / workers).max(3) };
     if workers == 1 && wave == 1 {
         let mut results = Vec::with_capacity(n);
         for (i, s) in matrix.scenarios.iter().enumerate() {
@@ -399,28 +429,24 @@ mod tests {
     }
 
     #[test]
-    fn wave_join_surfaces_the_first_panic_payload() {
-        let caught = std::panic::catch_unwind(|| {
-            std::thread::scope(|s| {
-                let handles = vec![
-                    s.spawn(|| 1u32),
-                    s.spawn(|| panic!("original replication failure")),
-                    s.spawn(|| 3u32),
-                ];
-                join_wave(handles)
-            })
-        });
-        let payload = caught.expect_err("a panicking wave must propagate");
-        let msg = payload
-            .downcast_ref::<&str>()
-            .copied()
-            .map(String::from)
-            .or_else(|| payload.downcast_ref::<String>().cloned())
-            .unwrap_or_default();
-        assert!(
-            msg.contains("original replication failure"),
-            "panic payload was {msg:?}, not the original failure"
-        );
+    fn scratch_pool_byte_cap_drops_oversized_returns() {
+        let mut pool = ScratchPool::default();
+        let bytes = SimScratch::new().approx_bytes();
+        assert!(bytes > 0, "an empty scratch still has a stack footprint");
+        // Fill to (at least) the cap with synthetic sizes, then verify a
+        // further check-in is dropped rather than growing the pool.
+        pool.bytes = SCRATCH_POOL_MAX_BYTES;
+        let before = pool.items.len();
+        pool.checkin(SimScratch::new());
+        assert_eq!(pool.items.len(), before, "over-cap check-in must be dropped");
+        // Under the cap, check-ins are kept and accounted.
+        pool.bytes = 0;
+        pool.checkin(SimScratch::new());
+        assert_eq!(pool.items.len(), before + 1);
+        assert!(pool.bytes >= bytes);
+        // Checkout returns the bytes to the budget.
+        let _scratch = pool.checkout();
+        assert_eq!(pool.bytes, 0);
     }
 
     #[test]

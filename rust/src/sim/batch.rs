@@ -1,0 +1,579 @@
+//! Batched replication kernel: R lanes of one scenario in a single
+//! lockstep simulation pass.
+//!
+//! Every replication of a scenario shares the trace, the CSR arrival
+//! ranges, the config skeleton and the adaptation/window boundaries —
+//! only the seed-derived RNG streams (and therefore the per-tweet cycle
+//! draws, the cluster sizes and the scaler decisions) diverge. The
+//! kernel exploits this by advancing all R lanes through the *same*
+//! step loop as [`Simulator::run_with_scratch`](super::Simulator), with
+//! the shared work computed once per step:
+//!
+//! * trace ingestion — one `lower_bound_from` CSR probe per step for the
+//!   whole wave, one column read per arriving tweet;
+//! * input-queue dynamics — queue contents and read credit are RNG-free,
+//!   hence identical across lanes, so one shared queue serves the wave;
+//! * adaptation scheduling — all live controllers share `next_adapt`, so
+//!   the due-check (and the idle fast-forward break tests) run once;
+//! * idle fast-forward detection — gate and break conditions evaluated
+//!   once, the bare accumulation loop advancing every lane together.
+//!
+//! Per-lane mutable state is laid out SoA in a [`BatchArena`]: the
+//! [`PsSchedule`] virtual-time lanes, payload slabs and free lists as
+//! parallel vectors, and the utilization accounting (`window_avail`,
+//! `window_used`, `cpu_usage`, `budgets`) as flat `f64` arrays whose
+//! inner sweeps are branch-light `for l in 0..r` loops the compiler can
+//! autovectorize. The arena lives inside [`SimScratch`], so a whole
+//! wave costs one scratch-pool checkout.
+//!
+//! **Lockstep invariant** (tested in `rust/tests/batch_kernel.rs` and
+//! the `scenario_engine.rs` suites): lane `l` of
+//! [`run_batch`] produces `f64::to_bits`-identical results to a serial
+//! [`Simulator`](super::Simulator) run with seed `seeds[l]` and scaler
+//! `scalers[l]`. The proof sketch mirrors the serial loop: queue state
+//! and clock are lane-invariant, lanes only retire when no arrivals or
+//! queued tweets remain (so admissions never reach a retired lane's
+//! RNG), and each lane performs exactly the serial sequence of RNG
+//! draws, schedule operations and history records per step.
+//!
+//! The kernel matches the simulator's `sample_every == 0` configuration
+//! (no state sampling) — the only configuration the scenario runner
+//! uses. Plot-oriented sampled runs keep the serial path.
+
+use super::cluster::Cluster;
+use super::cycles::PsSchedule;
+use super::engine::{InFlight, SimScratch};
+use super::history::{Completed, History};
+use crate::autoscale::{AutoScaler, Controller, Decision, Observation};
+use crate::config::SimConfig;
+use crate::delay::DelayModel;
+use crate::rng::Rng;
+use crate::workload::Trace;
+
+/// SoA per-lane state of a replication wave, pooled inside
+/// [`SimScratch`] so consecutive waves reuse every buffer.
+#[derive(Debug, Default)]
+pub struct BatchArena {
+    /// One virtual-time processor-sharing schedule per lane.
+    schedules: Vec<PsSchedule>,
+    /// One payload slab per lane (slots parallel the schedule entries;
+    /// slot ids feed the heap tie-break, so they cannot be shared).
+    slabs: Vec<Vec<InFlight>>,
+    /// One slot free-list per lane.
+    frees: Vec<Vec<u32>>,
+    /// Cycles available per lane over the current adaptation window.
+    window_avail: Vec<f64>,
+    /// Cycles consumed per lane over the current adaptation window.
+    window_used: Vec<f64>,
+    /// Last computed utilization per lane.
+    cpu_usage: Vec<f64>,
+    /// This step's cycle budget per lane (0 once a lane retires).
+    budgets: Vec<f64>,
+}
+
+impl BatchArena {
+    /// Prepare `lanes` cleared lanes, growing the arena if needed while
+    /// keeping every existing buffer's capacity.
+    fn ensure_lanes(&mut self, lanes: usize) {
+        while self.schedules.len() < lanes {
+            self.schedules.push(PsSchedule::new());
+            self.slabs.push(Vec::new());
+            self.frees.push(Vec::new());
+        }
+        for l in 0..lanes {
+            self.schedules[l].clear();
+            self.slabs[l].clear();
+            self.frees[l].clear();
+        }
+        fn refill(buf: &mut Vec<f64>, lanes: usize) {
+            buf.clear();
+            buf.resize(lanes, 0.0);
+        }
+        refill(&mut self.window_avail, lanes);
+        refill(&mut self.window_used, lanes);
+        refill(&mut self.cpu_usage, lanes);
+        refill(&mut self.budgets, lanes);
+    }
+
+    /// Approximate heap bytes retained across all lanes (scratch-pool
+    /// accounting).
+    pub fn approx_bytes(&self) -> usize {
+        let mut total = self.schedules.capacity() * std::mem::size_of::<PsSchedule>()
+            + self.slabs.capacity() * std::mem::size_of::<Vec<InFlight>>()
+            + self.frees.capacity() * std::mem::size_of::<Vec<u32>>();
+        for s in &self.schedules {
+            total += s.approx_bytes();
+        }
+        for s in &self.slabs {
+            total += s.capacity() * std::mem::size_of::<InFlight>();
+        }
+        for f in &self.frees {
+            total += f.capacity() * std::mem::size_of::<u32>();
+        }
+        for buf in [&self.window_avail, &self.window_used, &self.cpu_usage, &self.budgets] {
+            total += buf.capacity() * std::mem::size_of::<f64>();
+        }
+        total
+    }
+}
+
+/// Outcome of one lane of a [`run_batch`] wave — the per-replication
+/// fields of the serial `SimResult` the scenario runner consumes, plus
+/// enough detail for the bit-identity tests.
+#[derive(Debug, Clone)]
+pub struct LaneResult {
+    /// Percentage of tweets processed later than the SLA.
+    pub violation_pct: f64,
+    /// Accumulated cost, in CPU-hours.
+    pub cpu_hours: f64,
+    /// Tweets completed.
+    pub completed: u64,
+    /// Tweets completed later than the SLA.
+    pub violations: u64,
+    /// Scaling decisions taken (time, decision).
+    pub decisions: Vec<(f64, Decision)>,
+}
+
+/// Admit trace tweet `i` into every live lane, replicating the serial
+/// `admit_tweet` per lane: one cycle draw per non-zero-cost tweet from
+/// the lane's own RNG, the lane's own slab slot, the lane's own
+/// schedule insert. Tweet-outer / lane-inner order keeps each lane's
+/// RNG draw sequence identical to its serial run.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn admit_lanes(
+    trace: &Trace,
+    i: usize,
+    clock: f64,
+    step_end: f64,
+    model: &DelayModel,
+    active: &[bool],
+    rngs: &mut [Rng],
+    histories: &mut [History],
+    schedules: &mut [PsSchedule],
+    slabs: &mut [Vec<InFlight>],
+    frees: &mut [Vec<u32>],
+) {
+    let class = trace.class(i);
+    let post_time = trace.post_time(i);
+    let sentiment = trace.sentiment(i);
+    for l in 0..active.len() {
+        if !active[l] {
+            continue;
+        }
+        let cycles = model.sample_cycles(class, &mut rngs[l]);
+        if cycles <= 0.0 {
+            // zero-cost classes complete instantly at admission
+            histories[l].record(
+                Completed { post_time, finished_at: step_end.max(post_time), class, sentiment },
+                step_end - post_time,
+            );
+            continue;
+        }
+        let payload = InFlight { post_time, entered_at: clock, class, sentiment };
+        let slot = match frees[l].pop() {
+            Some(s) => {
+                slabs[l][s as usize] = payload;
+                s
+            }
+            None => {
+                slabs[l].push(payload);
+                (slabs[l].len() - 1) as u32
+            }
+        };
+        schedules[l].insert(cycles, slot);
+    }
+}
+
+/// Run `seeds.len()` replications of one scenario in lockstep, one lane
+/// per `(seed, scaler)` pair, all sharing `trace` and `cfg` (whose own
+/// `seed` field is ignored — each lane's RNG comes from `seeds`).
+///
+/// Returns one [`LaneResult`] per lane, in `seeds` order, each
+/// `f64::to_bits`-identical to the serial
+/// [`Simulator::run_with_scratch`] run of the same seed.
+///
+/// [`Simulator::run_with_scratch`]: super::Simulator::run_with_scratch
+pub fn run_batch(
+    trace: &Trace,
+    cfg: &SimConfig,
+    model: &DelayModel,
+    scalers: Vec<Box<dyn AutoScaler>>,
+    seeds: &[u64],
+    scratch: &mut SimScratch,
+) -> Vec<LaneResult> {
+    let r = seeds.len();
+    assert_eq!(scalers.len(), r, "one scaler per seed lane");
+    if r == 0 {
+        return Vec::new();
+    }
+    let unlimited = cfg.input_rate.is_none();
+    let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
+    let mut clusters: Vec<Cluster> =
+        (0..r).map(|_| Cluster::new(cfg.starting_cpus, cfg.provision_secs)).collect();
+    let mut controllers: Vec<Controller> =
+        scalers.into_iter().map(|s| Controller::new(s, cfg.adapt_secs)).collect();
+    // Pre-size the sentiment buckets exactly like the serial path.
+    let horizon = trace.horizon();
+    let presize = horizon.is_finite()
+        && (horizon as usize) <= trace.len().saturating_mul(4).saturating_add(1024);
+    let mut histories: Vec<History> = (0..r)
+        .map(|_| {
+            let h = History::new(cfg.sla_secs);
+            if presize {
+                h.with_sentiment_horizon(horizon)
+            } else {
+                h
+            }
+        })
+        .collect();
+
+    scratch.queue.reset(cfg.input_rate);
+    scratch.admitted.clear();
+    scratch.batch.ensure_lanes(r);
+    let queue = &mut scratch.queue;
+    let admitted = &mut scratch.admitted;
+    let BatchArena { schedules, slabs, frees, window_avail, window_used, cpu_usage, budgets } =
+        &mut scratch.batch;
+
+    // Shared (lane-invariant) clock state, mirroring the serial loop.
+    let n_tweets = trace.len();
+    let start = if n_tweets == 0 { 0.0 } else { trace.post_time(0).floor() };
+    let mut clock = start;
+    let mut next_tweet = 0usize;
+    let mut next_window_reset = start + cfg.adapt_secs;
+    let cycles_per_step = cfg.cycles_per_cpu_step();
+
+    let mut active = vec![true; r];
+    let mut live = r;
+    let mut out: Vec<Option<LaneResult>> = (0..r).map(|_| None).collect();
+
+    loop {
+        let step_end = clock + cfg.step_secs;
+
+        // 1. tweets posted during this window: one CSR probe for the
+        // whole wave, then tweet-outer / lane-inner admission.
+        let arrived = trace.lower_bound_from(next_tweet, step_end);
+        if unlimited {
+            for i in next_tweet..arrived {
+                admit_lanes(
+                    trace,
+                    i,
+                    clock,
+                    step_end,
+                    model,
+                    &active,
+                    &mut rngs,
+                    &mut histories,
+                    schedules,
+                    slabs,
+                    frees,
+                );
+            }
+        } else {
+            for i in next_tweet..arrived {
+                queue.push(i as u32);
+            }
+            queue.drain_step_into(cfg.step_secs, admitted);
+            for k in 0..admitted.len() {
+                admit_lanes(
+                    trace,
+                    admitted[k] as usize,
+                    clock,
+                    step_end,
+                    model,
+                    &active,
+                    &mut rngs,
+                    &mut histories,
+                    schedules,
+                    slabs,
+                    frees,
+                );
+            }
+        }
+        next_tweet = arrived;
+
+        // 2.+3. distribute this step's cycles per lane, then finished
+        // tweets -> history (retired lanes keep budget 0, so the flat
+        // accumulation sweeps below stay branch-free).
+        for l in 0..r {
+            if active[l] {
+                budgets[l] = clusters[l].active() as f64 * cycles_per_step;
+            }
+        }
+        for l in 0..r {
+            if !active[l] || schedules[l].is_empty() {
+                continue;
+            }
+            window_used[l] += schedules[l].step(budgets[l]);
+            for k in 0..schedules[l].completed().len() {
+                let slot = schedules[l].completed()[k];
+                let t = slabs[l][slot as usize];
+                frees[l].push(slot);
+                histories[l].record(
+                    Completed {
+                        post_time: t.post_time,
+                        finished_at: step_end,
+                        class: t.class,
+                        sentiment: t.sentiment,
+                    },
+                    t.entered_at - t.post_time,
+                );
+            }
+        }
+        for l in 0..r {
+            window_avail[l] += budgets[l];
+        }
+
+        // cluster time passes in every live lane
+        clock = step_end;
+        for l in 0..r {
+            if active[l] {
+                clusters[l].tick(clock, cfg.step_secs);
+            }
+        }
+
+        // 4. adaptation point? The due-check is shared: every live
+        // controller's `next_adapt` advances in lockstep, so testing one
+        // of them covers the wave, and between adaptation points the
+        // serial path's `maybe_adapt` is an observable no-op.
+        for l in 0..r {
+            if window_avail[l] > 0.0 {
+                cpu_usage[l] = window_used[l] / window_avail[l];
+            }
+        }
+        let next_adapt = first_live_next_adapt(&controllers, &active);
+        if clock + 1e-9 >= next_adapt {
+            for l in 0..r {
+                if !active[l] {
+                    continue;
+                }
+                let decision = {
+                    let obs = Observation {
+                        now: clock,
+                        cpus: clusters[l].active(),
+                        pending_cpus: clusters[l].pending(),
+                        in_system: queue.len() + schedules[l].len(),
+                        cpu_usage: cpu_usage[l],
+                        sentiment: histories[l].sentiment(),
+                        nodes: clusters[l].nodes(),
+                        cpu_hz: cfg.cpu_hz,
+                        sla_secs: cfg.sla_secs,
+                    };
+                    controllers[l].maybe_adapt(&obs)
+                };
+                Controller::apply(decision, clock, &mut clusters[l]);
+            }
+        }
+        // utilization windows reset at every adaptation boundary
+        if clock >= next_window_reset {
+            for l in 0..r {
+                window_avail[l] = 0.0;
+                window_used[l] = 0.0;
+            }
+            next_window_reset += cfg.adapt_secs;
+        }
+
+        // stop: a lane retires once every tweet has been ingested and
+        // its own schedule drained. Arrivals and queued tweets are gone
+        // for *all* lanes at that point, so a retired lane's RNG can
+        // never be consulted again — later steps leave it untouched.
+        if next_tweet >= n_tweets && queue.is_empty() {
+            for l in 0..r {
+                if active[l] && schedules[l].is_empty() {
+                    active[l] = false;
+                    budgets[l] = 0.0;
+                    live -= 1;
+                    out[l] = Some(LaneResult {
+                        violation_pct: histories[l].violation_pct(),
+                        cpu_hours: clusters[l].cpu_hours(),
+                        completed: histories[l].completed(),
+                        violations: histories[l].violations(),
+                        decisions: controllers[l].decisions().to_vec(),
+                    });
+                }
+            }
+            if live == 0 {
+                break;
+            }
+        }
+
+        // Idle fast-forward, batched: arrivals remain (so every lane is
+        // still live) and every lane is drained with no CPUs in
+        // provisioning. The break conditions are lane-invariant, the
+        // body is the serial bare loop fanned across lanes — each lane
+        // sees exactly the accumulations its serial run would.
+        if unlimited && next_tweet < n_tweets {
+            let mut all_idle = true;
+            for l in 0..r {
+                if active[l] && (!schedules[l].is_empty() || clusters[l].pending() != 0) {
+                    all_idle = false;
+                    break;
+                }
+            }
+            if all_idle {
+                let next_post = trace.post_time(next_tweet);
+                let next_adapt = first_live_next_adapt(&controllers, &active);
+                for l in 0..r {
+                    if active[l] {
+                        budgets[l] = clusters[l].active() as f64 * cycles_per_step;
+                    }
+                }
+                loop {
+                    let end = clock + cfg.step_secs;
+                    if next_post < end {
+                        break; // the next step ingests an arrival
+                    }
+                    if end + 1e-9 >= next_adapt {
+                        break; // adaptation due: run it through the full body
+                    }
+                    if end >= next_window_reset {
+                        break; // window reset due
+                    }
+                    for l in 0..r {
+                        window_avail[l] += budgets[l];
+                    }
+                    clock = end;
+                    for l in 0..r {
+                        if active[l] {
+                            clusters[l].tick(clock, cfg.step_secs);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    out.into_iter().map(|lane| lane.expect("every lane retired")).collect()
+}
+
+/// Shared `next_adapt` of the wave, read from the first live lane (all
+/// live controllers advance in lockstep; retired ones freeze).
+fn first_live_next_adapt(controllers: &[Controller], active: &[bool]) -> f64 {
+    controllers
+        .iter()
+        .zip(active)
+        .find(|&(_, &a)| a)
+        .map(|(c, _)| c.next_adapt())
+        .expect("at least one live lane")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscale::{LoadScaler, ThresholdScaler};
+    use crate::sim::Simulator;
+    use crate::workload::{generate, GeneratorConfig, MatchSpec};
+
+    fn trace(total: u64, hours: f64) -> Trace {
+        let spec = MatchSpec {
+            opponent: "Batch",
+            date: "—",
+            total_tweets: total,
+            length_hours: hours,
+            events: vec![],
+        };
+        generate(&spec, &GeneratorConfig::default())
+    }
+
+    fn mix() -> [f64; 3] {
+        [0.30, 0.30, 0.40]
+    }
+
+    fn serial_lane(tr: &Trace, cfg: &SimConfig, model: &DelayModel, seed: u64) -> LaneResult {
+        let cfg = cfg.with_seed(seed);
+        let res = Simulator::new(&cfg, model)
+            .run(tr, Box::new(LoadScaler::new(model.clone(), 0.99, mix())));
+        LaneResult {
+            violation_pct: res.violation_pct(),
+            cpu_hours: res.cpu_hours,
+            completed: res.history.completed(),
+            violations: res.history.violations(),
+            decisions: res.decisions,
+        }
+    }
+
+    #[test]
+    fn lanes_match_serial_bit_for_bit() {
+        let tr = trace(20_000, 0.25);
+        let cfg = SimConfig::default();
+        let model = DelayModel::default();
+        let seeds: Vec<u64> = (0..4).map(|i| 42u64.wrapping_add(i * 7919)).collect();
+        let scalers: Vec<Box<dyn AutoScaler>> = seeds
+            .iter()
+            .map(|_| Box::new(LoadScaler::new(model.clone(), 0.99, mix())) as Box<dyn AutoScaler>)
+            .collect();
+        let mut scratch = SimScratch::new();
+        let lanes = run_batch(&tr, &cfg, &model, scalers, &seeds, &mut scratch);
+        for (lane, &seed) in lanes.iter().zip(&seeds) {
+            let want = serial_lane(&tr, &cfg, &model, seed);
+            assert_eq!(lane.violation_pct.to_bits(), want.violation_pct.to_bits(), "seed {seed}");
+            assert_eq!(lane.cpu_hours.to_bits(), want.cpu_hours.to_bits(), "seed {seed}");
+            assert_eq!(lane.completed, want.completed);
+            assert_eq!(lane.violations, want.violations);
+            assert_eq!(lane.decisions, want.decisions, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn rate_limited_lanes_match_serial() {
+        let tr = trace(15_000, 0.2);
+        let cfg = SimConfig { input_rate: Some(40.0), ..Default::default() };
+        let model = DelayModel::default();
+        let seeds = [7u64, 7 + 7919];
+        let scalers: Vec<Box<dyn AutoScaler>> = vec![
+            Box::new(ThresholdScaler::new(0.7)),
+            Box::new(ThresholdScaler::new(0.7)),
+        ];
+        let mut scratch = SimScratch::new();
+        let lanes = run_batch(&tr, &cfg, &model, scalers, &seeds, &mut scratch);
+        for (lane, &seed) in lanes.iter().zip(&seeds) {
+            let scfg = cfg.with_seed(seed);
+            let want = Simulator::new(&scfg, &model).run(&tr, Box::new(ThresholdScaler::new(0.7)));
+            assert_eq!(lane.violation_pct.to_bits(), want.violation_pct().to_bits());
+            assert_eq!(lane.cpu_hours.to_bits(), want.cpu_hours.to_bits());
+            assert_eq!(lane.decisions, want.decisions);
+        }
+    }
+
+    #[test]
+    fn empty_wave_is_a_noop() {
+        let tr = trace(100, 0.01);
+        let mut scratch = SimScratch::new();
+        let lanes = run_batch(
+            &tr,
+            &SimConfig::default(),
+            &DelayModel::default(),
+            Vec::new(),
+            &[],
+            &mut scratch,
+        );
+        assert!(lanes.is_empty());
+    }
+
+    #[test]
+    fn arena_reuse_is_invisible() {
+        let tr = trace(10_000, 0.2);
+        let cfg = SimConfig::default();
+        let model = DelayModel::default();
+        let mut scratch = SimScratch::new();
+        let run = |scratch: &mut SimScratch| {
+            let seeds = [1u64, 2, 3];
+            let scalers: Vec<Box<dyn AutoScaler>> = seeds
+                .iter()
+                .map(|_| Box::new(ThresholdScaler::new(0.6)) as Box<dyn AutoScaler>)
+                .collect();
+            run_batch(&tr, &cfg, &model, scalers, &seeds, scratch)
+        };
+        let first = run(&mut scratch);
+        for _ in 0..2 {
+            let again = run(&mut scratch);
+            for (a, b) in first.iter().zip(&again) {
+                assert_eq!(a.violation_pct.to_bits(), b.violation_pct.to_bits());
+                assert_eq!(a.cpu_hours.to_bits(), b.cpu_hours.to_bits());
+                assert_eq!(a.decisions, b.decisions);
+            }
+        }
+        assert!(scratch.approx_bytes() > std::mem::size_of::<SimScratch>());
+    }
+}

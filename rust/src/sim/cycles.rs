@@ -249,6 +249,13 @@ impl PsSchedule {
         &self.completed
     }
 
+    /// Approximate heap bytes retained by this schedule's buffers (used
+    /// for the scenario runner's byte-capped scratch pool).
+    pub fn approx_bytes(&self) -> usize {
+        self.heap.capacity() * std::mem::size_of::<std::cmp::Reverse<PsEntry>>()
+            + self.completed.capacity() * std::mem::size_of::<u32>()
+    }
+
     /// Forget all jobs and rewind virtual time (scratch reuse).
     pub fn clear(&mut self) {
         self.heap.clear();

@@ -31,24 +31,27 @@ use crate::workload::Trace;
 /// Payload of a tweet resident in the processing structure, stored in the
 /// slot slab parallel to its [`PsSchedule`] entry.
 #[derive(Debug, Clone, Copy)]
-struct InFlight {
-    post_time: f64,
-    entered_at: f64,
-    class: crate::workload::TweetClass,
-    sentiment: f32,
+pub(crate) struct InFlight {
+    pub(crate) post_time: f64,
+    pub(crate) entered_at: f64,
+    pub(crate) class: crate::workload::TweetClass,
+    pub(crate) sentiment: f32,
 }
 
 /// Reusable hot-loop buffers. One `SimScratch` per worker thread lets the
 /// scenario runner's replication waves run allocation-free: the schedule
 /// heap, the payload slab, its free list, the admission buffer and the
-/// input queue all keep their capacity across runs.
+/// input queue all keep their capacity across runs. The batch arena holds
+/// the per-lane buffers of `sim::batch::run_batch` waves, so one scratch
+/// checkout serves a whole lockstep wave.
 #[derive(Debug, Default)]
 pub struct SimScratch {
     schedule: PsSchedule,
     slab: Vec<InFlight>,
     free: Vec<u32>,
-    queue: InputQueue<u32>,
-    admitted: Vec<u32>,
+    pub(crate) queue: InputQueue<u32>,
+    pub(crate) admitted: Vec<u32>,
+    pub(crate) batch: super::batch::BatchArena,
 }
 
 impl SimScratch {
@@ -62,6 +65,20 @@ impl SimScratch {
         self.free.clear();
         self.queue.reset(input_rate);
         self.admitted.clear();
+    }
+
+    /// Approximate heap bytes retained by this scratch's buffers. The
+    /// scenario runner's pool is capped by bytes, not entries: a batched
+    /// wave's arena is roughly R× the size of a single-rep scratch, so an
+    /// entry count says nothing about steady-state memory.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.schedule.approx_bytes()
+            + self.slab.capacity() * std::mem::size_of::<InFlight>()
+            + self.free.capacity() * std::mem::size_of::<u32>()
+            + self.queue.capacity() * std::mem::size_of::<u32>()
+            + self.admitted.capacity() * std::mem::size_of::<u32>()
+            + self.batch.approx_bytes()
     }
 }
 
@@ -180,7 +197,7 @@ impl<'a> Simulator<'a> {
         }
         scratch.reset(cfg.input_rate);
         let unlimited = cfg.input_rate.is_none();
-        let SimScratch { schedule, slab, free, queue, admitted } = scratch;
+        let SimScratch { schedule, slab, free, queue, admitted, .. } = scratch;
         let mut samples = Vec::new();
 
         // The clock starts at the first tweet's post time (§IV-B).

@@ -56,6 +56,11 @@ impl<T> InputQueue<T> {
         self.queue.is_empty()
     }
 
+    /// Ring-buffer capacity currently retained (scratch-pool accounting).
+    pub fn capacity(&self) -> usize {
+        self.queue.capacity()
+    }
+
     /// Release the tweets readable during a step of `dt` seconds, FIFO.
     pub fn drain_step(&mut self, dt: f64) -> Vec<T> {
         let mut out = Vec::new();

@@ -1,13 +1,16 @@
 //! Discrete-time cluster simulator (§IV): Algorithm 1 cycle distribution,
 //! rate-limited input queue, CPU pool with provisioning delay, history log
-//! with SLA accounting, and the main loop.
+//! with SLA accounting, the main loop, and the lockstep replication-batch
+//! kernel.
 
+pub mod batch;
 pub mod cluster;
 pub mod cycles;
 pub mod engine;
 pub mod history;
 pub mod input_queue;
 
+pub use batch::{run_batch, BatchArena, LaneResult};
 pub use cluster::Cluster;
 pub use cycles::PsSchedule;
 pub use engine::{SimResult, SimScratch, Simulator, StateSample};

@@ -367,6 +367,253 @@ pub mod bench {
         println!("{}", sample.report());
         sample
     }
+
+    /// One parsed entry of a `BENCH_*.json` report: id, role, the
+    /// bootstrap `pending` flag, and every numeric field.
+    #[derive(Debug, Clone, PartialEq)]
+    pub struct GateEntry {
+        pub id: String,
+        pub role: String,
+        pub pending: bool,
+        pub metrics: Vec<(String, f64)>,
+    }
+
+    /// Outcome of a [`compare_reports`] run: human-readable lines for
+    /// the metrics that passed, were skipped, or regressed past the
+    /// tolerance. The gate fails iff `regressions` is non-empty.
+    #[derive(Debug, Default)]
+    pub struct GateReport {
+        pub checked: Vec<String>,
+        pub skipped: Vec<String>,
+        pub regressions: Vec<String>,
+    }
+
+    /// Which way a metric improves; gate-exempt keys return `None`.
+    enum Direction {
+        LowerIsBetter,
+        HigherIsBetter,
+    }
+
+    /// Classify a metric key. Count-like and noise-prone bookkeeping
+    /// keys (`iters`, `min_ns`, `std_dev_ns`, `threads`, `tweets`,
+    /// `rows`) are exempt; `mean_ns` and `*secs` are lower-is-better;
+    /// throughputs and ratios (`*per_sec*`, `*over*`, `*speedup*`) are
+    /// higher-is-better. Unknown keys are not gated.
+    fn metric_direction(key: &str) -> Option<Direction> {
+        match key {
+            "iters" | "min_ns" | "std_dev_ns" | "threads" | "tweets" | "rows" => None,
+            "mean_ns" => Some(Direction::LowerIsBetter),
+            _ if key.contains("per_sec") || key.contains("over") || key.contains("speedup") => {
+                Some(Direction::HigherIsBetter)
+            }
+            _ if key.ends_with("secs") => Some(Direction::LowerIsBetter),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON string literal starting at the opening quote
+    /// `s[at]`; returns the unescaped text and the index just past the
+    /// closing quote. Understands the escapes [`JsonReport`] emits.
+    fn parse_json_string(s: &str, at: usize) -> Result<(String, usize), String> {
+        let bytes = s.as_bytes();
+        debug_assert_eq!(bytes[at], b'"');
+        let mut out = String::new();
+        let mut chars = s[at + 1..].char_indices();
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '"' => return Ok((out, at + 1 + i + 1)),
+                '\\' => match chars.next() {
+                    Some((_, '"')) => out.push('"'),
+                    Some((_, '\\')) => out.push('\\'),
+                    Some((_, 'u')) => {
+                        let hex: String =
+                            (0..4).filter_map(|_| chars.next().map(|(_, h)| h)).collect();
+                        let code = u32::from_str_radix(&hex, 16)
+                            .map_err(|_| format!("bad \\u escape {hex:?}"))?;
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    }
+                    other => return Err(format!("unsupported escape {other:?}")),
+                },
+                c => out.push(c),
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    /// Index of the `}` closing the object opened at `s[at]`,
+    /// string-aware.
+    fn object_end(s: &str, at: usize) -> Result<usize, String> {
+        let bytes = s.as_bytes();
+        debug_assert_eq!(bytes[at], b'{');
+        let mut depth = 0usize;
+        let mut i = at;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'"' => {
+                    let (_, after) = parse_json_string(s, i)?;
+                    i = after;
+                    continue;
+                }
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(i);
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        Err("unterminated object".into())
+    }
+
+    /// Parse one single-line entry object of the [`JsonReport`] schema.
+    fn parse_entry(obj: &str) -> Result<GateEntry, String> {
+        let mut e = GateEntry {
+            id: String::new(),
+            role: String::new(),
+            pending: false,
+            metrics: Vec::new(),
+        };
+        let bytes = obj.as_bytes();
+        let mut i = 1; // past '{'
+        loop {
+            while i < bytes.len() && bytes[i] != b'"' && bytes[i] != b'}' {
+                i += 1;
+            }
+            if i >= bytes.len() || bytes[i] == b'}' {
+                break;
+            }
+            let (key, after_key) = parse_json_string(obj, i)?;
+            let mut j = after_key;
+            while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j >= bytes.len() || bytes[j] != b':' {
+                return Err(format!("missing ':' after key {key:?}"));
+            }
+            j += 1;
+            while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j < bytes.len() && bytes[j] == b'"' {
+                let (val, after) = parse_json_string(obj, j)?;
+                match key.as_str() {
+                    "id" => e.id = val,
+                    "role" => e.role = val,
+                    _ => {}
+                }
+                i = after;
+            } else {
+                let mut k = j;
+                while k < bytes.len() && bytes[k] != b',' && bytes[k] != b'}' {
+                    k += 1;
+                }
+                match obj[j..k].trim() {
+                    "true" => {
+                        if key == "pending" {
+                            e.pending = true;
+                        }
+                    }
+                    "false" | "null" => {}
+                    lit => {
+                        let v: f64 = lit
+                            .parse()
+                            .map_err(|_| format!("bad value {lit:?} for key {key:?}"))?;
+                        e.metrics.push((key, v));
+                    }
+                }
+                i = k;
+            }
+        }
+        if e.id.is_empty() {
+            return Err(format!("entry without id: {obj}"));
+        }
+        Ok(e)
+    }
+
+    /// Parse the entries of a `BENCH_*.json` file produced by
+    /// [`JsonReport::render`] (or the hand-written bootstrap files —
+    /// same single-line-object schema).
+    pub fn parse_report(text: &str) -> Result<Vec<GateEntry>, String> {
+        let key = text.find("\"entries\"").ok_or("no \"entries\" key")?;
+        let open = key + text[key..].find('[').ok_or("no entries array")?;
+        let bytes = text.as_bytes();
+        let mut entries = Vec::new();
+        let mut i = open + 1;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' => {
+                    let end = object_end(text, i)?;
+                    entries.push(parse_entry(&text[i..=end])?);
+                    i = end + 1;
+                }
+                b']' => return Ok(entries),
+                _ => i += 1,
+            }
+        }
+        Err("unterminated entries array".into())
+    }
+
+    /// The bench regression gate: compare a freshly produced report
+    /// against the committed baseline, flagging every gated metric of a
+    /// non-`pending` `after`/`current` baseline entry that regressed by
+    /// more than `max_regression_pct` percent (direction-aware — see
+    /// `metric_direction` above). Baseline entries missing from the fresh
+    /// report count as regressions; `pending` bootstrap baselines and
+    /// `before` reference entries are skipped.
+    pub fn compare_reports(
+        baseline: &str,
+        fresh: &str,
+        max_regression_pct: f64,
+    ) -> Result<GateReport, String> {
+        let base = parse_report(baseline)?;
+        let new = parse_report(fresh)?;
+        let mut report = GateReport::default();
+        for b in &base {
+            let tag = format!("{} [{}]", b.id, b.role);
+            if b.role != "after" && b.role != "current" {
+                report.skipped.push(format!("{tag}: reference role, not gated"));
+                continue;
+            }
+            if b.pending {
+                report.skipped.push(format!("{tag}: pending bootstrap baseline, not gated"));
+                continue;
+            }
+            let Some(f) = new.iter().find(|f| f.id == b.id && f.role == b.role) else {
+                report.regressions.push(format!("{tag}: entry missing from fresh report"));
+                continue;
+            };
+            for (key, base_v) in &b.metrics {
+                let Some(dir) = metric_direction(key) else {
+                    continue;
+                };
+                if !base_v.is_finite() || *base_v <= 0.0 {
+                    report.skipped.push(format!("{tag} {key}: non-positive baseline, not gated"));
+                    continue;
+                }
+                let Some((_, fresh_v)) = f.metrics.iter().find(|(k, _)| k == key) else {
+                    report
+                        .regressions
+                        .push(format!("{tag} {key}: metric missing from fresh report"));
+                    continue;
+                };
+                let loss_pct = match dir {
+                    Direction::LowerIsBetter => (fresh_v - base_v) / base_v * 100.0,
+                    Direction::HigherIsBetter => (base_v - fresh_v) / base_v * 100.0,
+                };
+                let line =
+                    format!("{tag} {key}: {base_v:.6} -> {fresh_v:.6} ({loss_pct:+.1}% loss)");
+                if loss_pct > max_regression_pct {
+                    report.regressions.push(line);
+                } else {
+                    report.checked.push(line);
+                }
+            }
+        }
+        Ok(report)
+    }
 }
 
 #[cfg(test)]
@@ -403,6 +650,93 @@ mod tests {
         let path = dir.join("BENCH_test.json");
         r.write(path.to_str().unwrap()).unwrap();
         assert_eq!(std::fs::read_to_string(&path).unwrap(), out);
+    }
+
+    fn gate_report(entries: &str) -> String {
+        format!(
+            "{{\n  \"bench\": \"t\",\n  \"schema\": 1,\n  \"note\": \"n\",\n  \"entries\": [\n    {entries}\n  ]\n}}\n"
+        )
+    }
+
+    #[test]
+    fn bench_gate_parses_rendered_and_bootstrap_reports() {
+        let mut r = bench::JsonReport::new("t");
+        let s = bench::run("kernel/x (10 tweets)", std::time::Duration::from_millis(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        r.push_sample("after", &s, &[("simulated_tweets_per_sec", 1.5e6)]);
+        r.push_metrics("kernel/speedup", "current", &[("after_over_before", 3.0)]);
+        let parsed = bench::parse_report(&r.render()).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].id, "kernel/x (10 tweets)");
+        assert_eq!(parsed[0].role, "after");
+        assert!(!parsed[0].pending);
+        let tps = parsed[0].metrics.iter().find(|(k, _)| k == "simulated_tweets_per_sec");
+        assert_eq!(tps.map(|(_, v)| *v), Some(1.5e6));
+        assert_eq!(parsed[1].metrics, vec![("after_over_before".to_string(), 3.0)]);
+
+        let boot = gate_report(r#"{"id":"a","role":"after","pending":true}"#);
+        let parsed = bench::parse_report(&boot).unwrap();
+        assert!(parsed[0].pending);
+        assert!(bench::parse_report("{}").is_err());
+    }
+
+    #[test]
+    fn bench_gate_flags_regressions_direction_aware() {
+        let base = gate_report(
+            r#"{"id":"sim/x","role":"after","mean_ns":1000,"simulated_tweets_per_sec":2000000},
+    {"id":"m/serial","role":"current","secs":10.0},
+    {"id":"m/speedup","role":"current","parallel_over_serial":4.0},
+    {"id":"old","role":"before","mean_ns":99},
+    {"id":"boot","role":"after","pending":true}"#,
+        );
+        // Within tolerance everywhere: throughput -10%, secs +10%.
+        let ok = gate_report(
+            r#"{"id":"sim/x","role":"after","mean_ns":1100,"simulated_tweets_per_sec":1800000},
+    {"id":"m/serial","role":"current","secs":11.0},
+    {"id":"m/speedup","role":"current","parallel_over_serial":3.6}"#,
+        );
+        let gate = bench::compare_reports(&base, &ok, 25.0).unwrap();
+        assert!(gate.regressions.is_empty(), "{:?}", gate.regressions);
+        assert_eq!(gate.checked.len(), 4, "{:?}", gate.checked);
+        assert!(gate.skipped.iter().any(|l| l.contains("pending")));
+        assert!(gate.skipped.iter().any(|l| l.contains("reference role")));
+
+        // Throughput halved (lower is worse for per_sec) -> regression;
+        // secs halved (lower is better) -> fine.
+        let bad = gate_report(
+            r#"{"id":"sim/x","role":"after","mean_ns":1000,"simulated_tweets_per_sec":1000000},
+    {"id":"m/serial","role":"current","secs":5.0},
+    {"id":"m/speedup","role":"current","parallel_over_serial":4.0}"#,
+        );
+        let gate = bench::compare_reports(&base, &bad, 25.0).unwrap();
+        assert_eq!(gate.regressions.len(), 1, "{:?}", gate.regressions);
+        assert!(gate.regressions[0].contains("simulated_tweets_per_sec"));
+
+        // A vanished entry or metric is a regression, not a silent pass.
+        let missing = gate_report(r#"{"id":"sim/x","role":"after","mean_ns":1000}"#);
+        let gate = bench::compare_reports(&base, &missing, 25.0).unwrap();
+        assert!(gate.regressions.iter().any(|l| l.contains("entry missing")));
+        assert!(gate.regressions.iter().any(|l| l.contains("metric missing")));
+    }
+
+    #[test]
+    fn bench_gate_handles_committed_bootstrap_files() {
+        // The committed all-pending bootstrap gates nothing against itself.
+        for path in ["BENCH_simulator.json", "BENCH_matrix.json"] {
+            let text = match std::fs::read_to_string(
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(path),
+            ) {
+                Ok(t) => t,
+                Err(_) => continue, // packaged without baselines
+            };
+            let gate = bench::compare_reports(&text, &text, 25.0).unwrap();
+            assert!(
+                gate.regressions.is_empty(),
+                "{path} self-comparison regressed: {:?}",
+                gate.regressions
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! Integration tests for the lockstep replication-batch kernel
+//! (`sim::run_batch`): the bit-identity property against the serial
+//! engine across scaler families, seeds and queue regimes, the
+//! degenerate one-lane wave, and the CPU-hours denominator contract of
+//! the scenario runner built on top of it.
+
+use sla_autoscale::autoscale::ScalerSpec;
+use sla_autoscale::config::SimConfig;
+use sla_autoscale::delay::DelayModel;
+use sla_autoscale::scenario::{run_replications, TraceSource};
+use sla_autoscale::sim::{run_batch, LaneResult, SimResult, SimScratch, Simulator};
+use sla_autoscale::workload::MatchSpec;
+
+fn source(total: u64) -> TraceSource {
+    TraceSource::spec(
+        MatchSpec {
+            opponent: "BatchIT",
+            date: "—",
+            total_tweets: total,
+            length_hours: 0.25,
+            events: vec![],
+        },
+        false,
+    )
+}
+
+fn mix() -> [f64; 3] {
+    [0.30, 0.30, 0.40]
+}
+
+/// The scenario runner's lane-seed schedule.
+fn lane_seeds(base: u64, r: usize) -> Vec<u64> {
+    (0..r as u64).map(|i| base.wrapping_add(i.wrapping_mul(7919))).collect()
+}
+
+fn assert_lane_matches(lane: &LaneResult, want: &SimResult, tag: &str) {
+    assert_eq!(lane.violation_pct.to_bits(), want.violation_pct().to_bits(), "{tag}");
+    assert_eq!(lane.cpu_hours.to_bits(), want.cpu_hours.to_bits(), "{tag}");
+    assert_eq!(lane.completed, want.history.completed(), "{tag}");
+    assert_eq!(lane.violations, want.history.violations(), "{tag}");
+    assert_eq!(lane.decisions, want.decisions, "{tag}");
+}
+
+/// Lockstep property: every lane of a batched wave is
+/// `f64::to_bits`-identical to the serial engine run of the same seed —
+/// across scaler families, on both the unlimited and the rate-limited
+/// queue path, down to the scaling-decision trajectory.
+#[test]
+fn batched_lanes_bit_identical_to_serial() {
+    let trace = source(30_000).load().unwrap();
+    let model = DelayModel::default();
+    let configs = [
+        SimConfig { sla_secs: 60.0, ..Default::default() },
+        SimConfig { input_rate: Some(50.0), adapt_secs: 30.0, ..Default::default() },
+    ];
+    let specs = [
+        ScalerSpec::threshold(70.0),
+        ScalerSpec::load(0.99),
+        ScalerSpec::load_plus_appdata(0.99999, 2),
+        ScalerSpec::predictive(120.0),
+        ScalerSpec::Vertical,
+        ScalerSpec::depas(0.7, 0.1, 0.5),
+    ];
+    let mut scratch = SimScratch::new();
+    for cfg in &configs {
+        for spec in &specs {
+            let seeds = lane_seeds(cfg.seed, 5);
+            let scalers: Vec<_> = seeds.iter().map(|_| spec.build(&model, mix())).collect();
+            let lanes = run_batch(&trace, cfg, &model, scalers, &seeds, &mut scratch);
+            assert_eq!(lanes.len(), seeds.len());
+            for (lane, &seed) in lanes.iter().zip(&seeds) {
+                let scfg = cfg.with_seed(seed);
+                let want = Simulator::new(&scfg, &model).run(&trace, spec.build(&model, mix()));
+                let tag = format!("{spec} rate={:?} seed={seed}", cfg.input_rate);
+                assert_lane_matches(lane, &want, &tag);
+            }
+        }
+    }
+}
+
+/// Degenerate wave: R = 1 goes through the batch kernel unchanged.
+#[test]
+fn single_lane_wave_matches_serial() {
+    let trace = source(12_000).load().unwrap();
+    let cfg = SimConfig::default();
+    let model = DelayModel::default();
+    let spec = ScalerSpec::load(0.99999);
+    let mut scratch = SimScratch::new();
+    let scalers = vec![spec.build(&model, mix())];
+    let lanes = run_batch(&trace, &cfg, &model, scalers, &[cfg.seed], &mut scratch);
+    assert_eq!(lanes.len(), 1);
+    let want = Simulator::new(&cfg, &model).run(&trace, spec.build(&model, mix()));
+    assert_lane_matches(&lanes[0], &want, "R=1");
+}
+
+/// Wave overshoot keeps the CI stopping rule's fold: a wide wave that
+/// overshoots the stopping point discards the excess lanes, so both the
+/// violation fold and the CPU-hours mean see exactly the serial rep
+/// set — bit-identical results, same rep count.
+#[test]
+fn overshoot_waves_fold_like_serial() {
+    let trace = source(25_000).load().unwrap();
+    let model = DelayModel::default();
+    let cfg = SimConfig { sla_secs: 45.0, ..Default::default() };
+    let spec = ScalerSpec::threshold(75.0);
+    let serial = run_replications(&trace, &cfg, &model, &spec, mix(), spec.to_string(), 5, 1);
+    for wave in [3, 4, 8] {
+        let wide = run_replications(
+            &trace, &cfg, &model, &spec, mix(), spec.to_string(), 5, wave,
+        );
+        assert_eq!(serial.reps, wide.reps, "wave={wave}");
+        assert_eq!(serial.violation_pct.to_bits(), wide.violation_pct.to_bits(), "wave={wave}");
+        assert_eq!(serial.cpu_hours.to_bits(), wide.cpu_hours.to_bits(), "wave={wave}");
+    }
+}
+
+/// `ScenarioResult::cpu_hours` averages over exactly the folded reps —
+/// discarded overshoot lanes feed neither the numerator nor the
+/// denominator. Recomputed from the kernel's own per-lane results, the
+/// mean must match bit for bit.
+#[test]
+fn cpu_hours_denominator_counts_only_folded_reps() {
+    let trace = source(18_000).load().unwrap();
+    let model = DelayModel::default();
+    let cfg = SimConfig::default();
+    let spec = ScalerSpec::load(0.99);
+    let r = run_replications(&trace, &cfg, &model, &spec, mix(), spec.to_string(), 4, 3);
+    let seeds = lane_seeds(cfg.seed, r.reps);
+    let scalers: Vec<_> = seeds.iter().map(|_| spec.build(&model, mix())).collect();
+    let mut scratch = SimScratch::new();
+    let lanes = run_batch(&trace, &cfg, &model, scalers, &seeds, &mut scratch);
+    let mean = lanes.iter().map(|l| l.cpu_hours).sum::<f64>() / r.reps as f64;
+    assert_eq!(r.cpu_hours.to_bits(), mean.to_bits(), "{} vs {mean}", r.cpu_hours);
+}

@@ -69,6 +69,29 @@ fn parallel_replications_bit_identical_to_serial() {
     }
 }
 
+/// The rate-limited queue regime (`input_rate` caps admissions per step)
+/// disables the idle fast-forward and exercises the shared input queue,
+/// so it gets its own bit-identity check through the batched wave path.
+#[test]
+fn rate_limited_replications_bit_identical_to_serial() {
+    let trace = small_source(20_000).load().unwrap();
+    let cfg = SimConfig { input_rate: Some(60.0), sla_secs: 90.0, ..Default::default() };
+    let model = DelayModel::default();
+    for spec in [ScalerSpec::threshold(70.0), ScalerSpec::load(0.99)] {
+        let serial = run_replications(
+            &trace, &cfg, &model, &spec, mix(), spec.to_string(), 5, 1,
+        );
+        for wave in [2, 5] {
+            let par = run_replications(
+                &trace, &cfg, &model, &spec, mix(), spec.to_string(), 5, wave,
+            );
+            assert_eq!(serial.reps, par.reps, "{spec} wave={wave}");
+            assert_eq!(serial.violation_pct.to_bits(), par.violation_pct.to_bits(), "{spec}");
+            assert_eq!(serial.cpu_hours.to_bits(), par.cpu_hours.to_bits(), "{spec}");
+        }
+    }
+}
+
 /// Whole-matrix determinism: threaded execution returns the same rows in
 /// the same order as the serial path.
 #[test]
