@@ -7,12 +7,13 @@
 use sla_autoscale::autoscale::ScalerSpec;
 use sla_autoscale::config::SimConfig;
 use sla_autoscale::scenario::{
-    default_threads, merge_records, read_journal, scale_spec, JournalSink, Overrides, ResultSink,
-    ScenarioMatrix, TraceSource,
+    default_threads, merge_records, merged_results, read_journal, run_plan, run_stealing,
+    scale_spec, CollectSink, JournalSink, Overrides, ResultSink, ScenarioMatrix, StealConfig,
+    TraceSource,
 };
 use sla_autoscale::util::{bench, TempDir};
 use sla_autoscale::workload::{by_opponent, generate, store, GeneratorConfig};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() {
     println!("== bench_matrix (fast 20x replicas) ==");
@@ -165,6 +166,69 @@ fn main() {
             ("append_secs", append_secs),
             ("merge_secs", merge_secs),
         ],
+    );
+
+    // Fleet scheduler: the same grid drained by 3 static shards vs 3
+    // work-stealing workers, both fleets running their workers
+    // concurrently (one thread each). Static makespan is set by the
+    // slowest shard; stealing rebalances the tail, so its makespan
+    // should sit at or below the static one.
+    let workers = 3usize;
+    let t = Instant::now();
+    let shard_secs: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|i| {
+                let (plan, matrix) = (&plan, &matrix);
+                s.spawn(move || {
+                    let shard = plan.shard(i, workers).expect("shard split");
+                    let sink = CollectSink::new();
+                    let t = Instant::now();
+                    run_plan(matrix, &shard.jobs, 1, &sink).expect("shard run");
+                    t.elapsed().as_secs_f64()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shard worker")).collect()
+    });
+    let static_makespan = t.elapsed().as_secs_f64();
+    let slowest_shard = shard_secs.iter().fold(0.0f64, |a, &b| a.max(b));
+
+    let steal_dir = TempDir::new().expect("steal dir");
+    let steal_cfg = StealConfig::with_expiry(Duration::from_secs(30));
+    let t = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let (matrix, steal_cfg, dir) = (&matrix, &steal_cfg, steal_dir.path());
+            s.spawn(move || run_stealing(matrix, 1, dir, None, steal_cfg).expect("steal worker"));
+        }
+    });
+    let steal_makespan = t.elapsed().as_secs_f64();
+    let stolen = merged_results(&matrix, steal_dir.path()).expect("fleet drained");
+
+    // Dynamic scheduling must also be free: merged bits equal serial.
+    assert_eq!(stolen.len(), serial.len());
+    for (s, p) in serial.iter().zip(&stolen) {
+        assert_eq!(s.name, p.name);
+        assert_eq!(s.reps, p.reps, "{}", s.name);
+        assert_eq!(s.violation_pct.to_bits(), p.violation_pct.to_bits(), "{}", s.name);
+        assert_eq!(s.cpu_hours.to_bits(), p.cpu_hours.to_bits(), "{}", s.name);
+    }
+    println!(
+        "fleet ({workers} workers): static shards {static_makespan:.2} s (slowest shard \
+         {slowest_shard:.2} s), work-stealing {steal_makespan:.2} s \
+         ({:.2}x), merged bits identical ✓",
+        static_makespan / steal_makespan.max(1e-9)
+    );
+    report.push_metrics(
+        "scheduler/static-shards",
+        "current",
+        &[("makespan_secs", static_makespan), ("slowest_shard_secs", slowest_shard)],
+    );
+    report.push_metrics("scheduler/steal", "current", &[("makespan_secs", steal_makespan)]);
+    report.push_metrics(
+        "scheduler/steal-vs-static",
+        "current",
+        &[("static_over_steal_speedup", static_makespan / steal_makespan.max(1e-9))],
     );
 
     report.write("BENCH_matrix.json").expect("writing BENCH_matrix.json");

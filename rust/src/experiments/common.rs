@@ -10,13 +10,15 @@
 //! sharding without knowing those layers exist.
 
 use crate::scenario::{
-    parse_shard, read_journal_dir, run_plan, JournalSink, ScenarioMatrix, TraceSource,
+    merged_results, parse_shard, read_journal_dir, run_plan, run_stealing, JournalSink,
+    ScenarioMatrix, StealConfig, TraceSource,
 };
 use crate::workload::{GeneratorConfig, MatchSpec, Trace};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 pub use crate::scenario::{scale_config, scale_spec, ScenarioResult, FAST_FACTOR};
 
@@ -32,6 +34,20 @@ pub const ENV_JOURNAL: &str = "SLA_AUTOSCALE_JOURNAL";
 /// full table from the shared journal directory with zero simulation.
 pub const ENV_SHARD: &str = "SLA_AUTOSCALE_SHARD";
 
+/// Environment knob: any value except empty or `0` switches [`converge`]
+/// from static sharding to the work-stealing fleet scheduler
+/// (`crate::scenario::steal`): every process drains the same plan by
+/// claiming cost-ordered job leases in the [`ENV_JOURNAL`] directory, so
+/// any number of `exp` processes started with the same knobs cooperate
+/// elastically instead of owning fixed shards. Requires [`ENV_JOURNAL`];
+/// ignores [`ENV_SHARD`].
+pub const ENV_STEAL: &str = "SLA_AUTOSCALE_STEAL";
+
+/// Environment knob: lease expiry for the stealing path, in (possibly
+/// fractional) seconds — default 30. CI smokes shrink it so a killed
+/// worker's jobs are re-stolen within the test budget.
+pub const ENV_LEASE: &str = "SLA_AUTOSCALE_LEASE_SECS";
+
 /// Run an experiment matrix to CI convergence. Without the environment
 /// knobs above this is exactly `matrix.run(threads)`; with
 /// [`ENV_JOURNAL`] set it becomes resumable (journaled rows are loaded,
@@ -46,6 +62,9 @@ pub fn converge(matrix: &ScenarioMatrix, threads: usize) -> Result<Vec<ScenarioR
     let Some(dir) = std::env::var_os(ENV_JOURNAL).map(PathBuf::from) else {
         return matrix.run(threads);
     };
+    if std::env::var_os(ENV_STEAL).is_some_and(|v| !v.is_empty() && v != "0") {
+        return converge_stealing(matrix, threads, &dir);
+    }
     let shard = match std::env::var(ENV_SHARD) {
         Ok(s) => Some(parse_shard(&s)?),
         Err(_) => None,
@@ -85,9 +104,39 @@ pub fn converge_journaled(
                 violation_pct: f64::NAN,
                 cpu_hours: f64::NAN,
                 reps: 0,
+                wall_secs: 0.0,
             }),
         })
         .collect())
+}
+
+/// The work-stealing form of [`converge`]: drain the matrix's plan
+/// cooperatively with every other process sharing `dir` (cost-ordered
+/// lease claims, stale-lease stealing — see `crate::scenario::steal`),
+/// then read the full merged table back from the journals. Unlike the
+/// sharded path there are never `pending` placeholder rows: the drain
+/// loop only returns once every plan key is journaled, so every caller
+/// prints the complete table, bit-identical to a serial run. The lease
+/// expiry honors [`ENV_LEASE`].
+pub fn converge_stealing(
+    matrix: &ScenarioMatrix,
+    threads: usize,
+    dir: &Path,
+) -> Result<Vec<ScenarioResult>> {
+    let expiry = match std::env::var(ENV_LEASE) {
+        Ok(v) => {
+            let secs: f64 = v
+                .parse()
+                .map_err(|_| anyhow!("{ENV_LEASE}: {v:?} is not a number of seconds"))?;
+            if !secs.is_finite() || secs <= 0.0 {
+                return Err(anyhow!("{ENV_LEASE}: expiry must be positive, got {v:?}"));
+            }
+            Duration::from_secs_f64(secs)
+        }
+        Err(_) => Duration::from_secs(30),
+    };
+    run_stealing(matrix, threads, dir, None, &StealConfig::with_expiry(expiry))?;
+    merged_results(matrix, dir)
 }
 
 /// Generate (or reuse from the process cache) the trace for a possibly
@@ -178,6 +227,31 @@ mod tests {
         let fourth = converge_journaled(&edited, 1, dir.path(), None).unwrap();
         assert_same(&fourth[0], &clean[0]);
         assert!(fourth[1].reps >= 3, "edited row must re-simulate");
+    }
+
+    #[test]
+    fn converge_stealing_drains_and_matches_serial() {
+        let dir = TempDir::new().unwrap();
+        let matrix = tiny_matrix();
+        let clean = matrix.run_serial().unwrap();
+        let first = converge_stealing(&matrix, 1, dir.path()).unwrap();
+        assert_eq!(first.len(), clean.len());
+        for (got, want) in first.iter().zip(&clean) {
+            assert_same(got, want);
+        }
+        // A second call finds the plan already drained: pure journal
+        // replay, still the full table, still the same bits.
+        let second = converge_stealing(&matrix, 2, dir.path()).unwrap();
+        for (got, want) in second.iter().zip(&clean) {
+            assert_same(got, want);
+        }
+        // No lease litter survives a clean drain.
+        let leases: Vec<String> = std::fs::read_dir(dir.path())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".lease"))
+            .collect();
+        assert!(leases.is_empty(), "{leases:?}");
     }
 
     #[test]

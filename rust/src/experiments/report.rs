@@ -125,12 +125,19 @@ mod tests {
     #[test]
     fn pending_rows_render_as_placeholders() {
         let rows = result_rows(&[
-            ScenarioResult { name: "done".into(), violation_pct: 1.5, cpu_hours: 2.0, reps: 3 },
+            ScenarioResult {
+                name: "done".into(),
+                violation_pct: 1.5,
+                cpu_hours: 2.0,
+                reps: 3,
+                wall_secs: 0.5,
+            },
             ScenarioResult {
                 name: "elsewhere".into(),
                 violation_pct: f64::NAN,
                 cpu_hours: f64::NAN,
                 reps: 0,
+                wall_secs: 0.0,
             },
         ]);
         assert_eq!(rows[0], vec!["done", "1.50%", "2.00", "3"]);

@@ -28,7 +28,7 @@ USAGE:
       [--sla S] [--adapt S] [--provision S] [--seed N]
       [--lead-min M[,M...]] [--class-mix A,B,C[;A,B,C...]] [--noise X[,...]]
       [--cache-dir DIR] [--cache-max-mb MB] [--stream]
-      [--journal DIR] [--shard I/N]
+      [--journal DIR] [--shard I/N] [--steal] [--lease-expiry SECS]
       Run an arbitrary scenario grid (opponents x algorithms) with
       CI-converged replications in parallel, and print the result table.
       --lead-min / --class-mix / --noise sweep generator knobs (sentiment
@@ -41,14 +41,26 @@ USAGE:
       converged row to a crash-tolerant result journal and skips rows
       already journaled (resume after an interrupt); --shard I/N runs only
       every Nth grid row starting at I — one shard per process, sharing
-      one --cache-dir and --journal.
+      one --cache-dir and --journal; --steal replaces fixed shards with
+      work-stealing — each process claims the most expensive pending jobs
+      through <key>.lease files in the --journal dir (LPT order under a
+      journal-calibrated cost model) until the grid drains, stealing
+      leases idle for --lease-expiry SECS (default 30) from crashed
+      workers. Start N identical `matrix ... --steal --journal DIR`
+      processes and they cooperate; any interleaving merges
+      bit-identically to --serial.
   sla-autoscale matrix merge <DIR>
       Fold the result journals under DIR back into the canonical table,
       bit-identical to a single-process run of the full grid.
   sla-autoscale exp <id|all> [--fast] [--journal DIR] [--shard I/N]
+      [--fleet N] [--lease-expiry SECS]
       Regenerate a paper table/figure (table1..3, fig2..8, ablations,
       workload, decentral). --journal/--shard make the experiment's
-      matrices resumable/sharded exactly like the matrix subcommand.
+      matrices resumable/sharded exactly like the matrix subcommand;
+      --fleet N drives every experiment's plan across N cooperating
+      local worker processes (work-stealing over the --journal dir,
+      continuous merge — the orchestrating process prints the full
+      tables).
   sla-autoscale serve [opponent] [--count N] [--artifacts DIR]
       Serve the PJRT-compiled sentiment model on a generated live stream.
   sla-autoscale bench-gate <baseline.json> <fresh.json> [--max-regression-pct P]
@@ -328,6 +340,69 @@ fn main() -> Result<()> {
             // Lower the grid into its deterministic plan, restrict to this
             // process's shard, and skip rows the journal already holds.
             let plan = matrix.plan();
+            // Work-stealing mode: no fixed shard — claim cost-ordered job
+            // leases from the shared journal dir until the plan drains,
+            // then print the merged table (identical in every worker).
+            if args.flag("--steal") {
+                let Some(dir) = args.opt("--journal").map(Path::new) else {
+                    bail!("matrix: --steal requires --journal DIR (workers meet there)");
+                };
+                if args.opt("--shard").is_some() {
+                    bail!("matrix: --steal and --shard are mutually exclusive");
+                }
+                let expiry: f64 = args
+                    .opt("--lease-expiry")
+                    .unwrap_or("30")
+                    .parse()
+                    .map_err(|_| anyhow!("--lease-expiry: not a number of seconds"))?;
+                if !expiry.is_finite() || expiry <= 0.0 {
+                    bail!("--lease-expiry: expiry must be positive seconds, got {expiry}");
+                }
+                let steal_cfg = scenario::StealConfig::with_expiry(
+                    std::time::Duration::from_secs_f64(expiry),
+                );
+                let csv = scenario::CsvSink::stdout();
+                let extra: Option<&dyn scenario::ResultSink> = if args.flag("--stream") {
+                    csv.header()?;
+                    Some(&csv)
+                } else {
+                    None
+                };
+                let started = std::time::Instant::now();
+                let outcome = scenario::run_stealing(&matrix, threads, dir, extra, &steal_cfg)?;
+                let results = scenario::merged_results(&matrix, dir)?;
+                print!(
+                    "{}",
+                    experiments::report::table(
+                        &format!("scenario matrix — {} scenarios", results.len()),
+                        &experiments::report::RESULT_HEADERS,
+                        &experiments::report::result_rows(&results),
+                    )
+                );
+                println!(
+                    "fleet worker ran {} of {} scenarios ({} stale lease(s) stolen) \
+                     on {threads} thread(s) in {:.2} s",
+                    outcome.ran,
+                    plan.len(),
+                    outcome.stolen,
+                    started.elapsed().as_secs_f64()
+                );
+                println!(
+                    "journaled under {}; every cooperating worker prints this same table",
+                    dir.display()
+                );
+                if let Some(cache) = args.opt("--cache-dir") {
+                    let budget = cache_max_mb.saturating_mul(1024 * 1024);
+                    let (files, bytes) = store::prune(Path::new(cache), budget)?;
+                    if files > 0 {
+                        println!(
+                            "pruned {files} cached trace(s) ({bytes} B) over the \
+                             {cache_max_mb} MiB budget"
+                        );
+                    }
+                }
+                return Ok(());
+            }
             let shard = args.opt("--shard").map(scenario::parse_shard).transpose()?;
             let (si, sn) = shard.unwrap_or((0, 1));
             let selected = plan.shard(si, sn)?;
@@ -419,6 +494,49 @@ fn main() -> Result<()> {
                 scenario::parse_shard(shard)?;
                 std::env::set_var(experiments::common::ENV_SHARD, shard);
             }
+            // `--fleet N`: this process becomes the orchestrator of N
+            // cooperating work-stealing workers. Every worker (the N-1
+            // spawned children plus this process) runs the same experiment
+            // sequence with SLA_AUTOSCALE_STEAL set, so each matrix drains
+            // through job leases in the shared journal dir; the merged
+            // tables are identical everywhere, and only this process
+            // prints them.
+            let mut fleet_children = Vec::new();
+            if let Some(n) = args.opt("--fleet") {
+                let n: usize = n.parse().map_err(|_| anyhow!("--fleet: not a worker count"))?;
+                if n == 0 {
+                    bail!("--fleet: need at least one worker");
+                }
+                if args.opt("--journal").is_none() {
+                    bail!("exp: --fleet requires --journal (workers meet in the journal dir)");
+                }
+                if args.opt("--shard").is_some() {
+                    bail!("exp: --fleet and --shard are mutually exclusive");
+                }
+                std::env::set_var(experiments::common::ENV_STEAL, "1");
+                if let Some(secs) = args.opt("--lease-expiry") {
+                    let expiry: f64 = secs
+                        .parse()
+                        .map_err(|_| anyhow!("--lease-expiry: not a number of seconds"))?;
+                    if !expiry.is_finite() || expiry <= 0.0 {
+                        bail!("--lease-expiry: expiry must be positive seconds, got {expiry}");
+                    }
+                    std::env::set_var(experiments::common::ENV_LEASE, secs);
+                }
+                let exe = std::env::current_exe()?;
+                for _ in 1..n {
+                    let mut cmd = std::process::Command::new(&exe);
+                    cmd.arg("exp").arg(id);
+                    if fast {
+                        cmd.arg("--fast");
+                    }
+                    // Children inherit ENV_JOURNAL/ENV_STEAL/ENV_LEASE from
+                    // this process's environment; their tables are the same
+                    // merged tables, so silence them.
+                    cmd.stdout(std::process::Stdio::null());
+                    fleet_children.push(cmd.spawn()?);
+                }
+            }
             if id.eq_ignore_ascii_case("all") {
                 for e in experiments::all() {
                     println!("{}", e.run(fast)?);
@@ -431,6 +549,16 @@ fn main() -> Result<()> {
                     )
                 };
                 println!("{}", e.run(fast)?);
+            }
+            for mut child in fleet_children {
+                let status = child.wait()?;
+                if !status.success() {
+                    eprintln!(
+                        "warning: fleet worker (pid {}) exited with {status}; \
+                         its unfinished leases were stolen by the survivors",
+                        child.id()
+                    );
+                }
             }
         }
         Some("serve") => {

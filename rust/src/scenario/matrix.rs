@@ -288,9 +288,9 @@ impl ScenarioMatrix {
 
     /// [`Self::run`] with a streaming callback: `on_result(row, result)`
     /// fires as each scenario converges (completion order under
-    /// parallelism; row order serially), while the returned vector stays
-    /// in row order. Long sweeps report progress instead of going silent
-    /// until the whole grid finishes.
+    /// parallelism; descending predicted-cost order serially), while the
+    /// returned vector stays in row order. Long sweeps report progress
+    /// instead of going silent until the whole grid finishes.
     pub fn run_with<F>(&self, threads: usize, on_result: F) -> Result<Vec<ScenarioResult>>
     where
         F: Fn(usize, &ScenarioResult) + Sync,

@@ -28,6 +28,12 @@
 //!   processes (`plan.shard(i, n)`), journaled rows are skipped on
 //!   re-runs (resume), and `merge` folds shard journals back into the
 //!   canonical table bit-identically to a single-process run.
+//! * [`run_stealing`] replaces static shards with dynamic scheduling:
+//!   workers claim pending jobs through atomic `<key>.lease` files in
+//!   the shared journal dir, in descending predicted-cost order under a
+//!   journal-calibrated [`CostModel`] (LPT), stealing stale leases from
+//!   crashed peers — any interleaving merges bit-identically (see
+//!   `steal`).
 //!
 //! The whole simulation path (`Trace`, `SimConfig`, `DelayModel`,
 //! `ScalerSpec`, `Simulator`) is `Send + Sync`-clean, asserted below.
@@ -37,9 +43,10 @@ pub mod plan;
 pub mod runner;
 pub mod sink;
 pub mod source;
+pub mod steal;
 
 pub use matrix::{Overrides, Scenario, ScenarioMatrix};
-pub use plan::{parse_shard, Job, JobPlan};
+pub use plan::{parse_shard, CostModel, Job, JobPlan};
 pub use runner::{
     default_threads, run_matrix, run_matrix_with, run_plan, run_replications, ScenarioResult,
 };
@@ -48,6 +55,7 @@ pub use sink::{
     JournalRecord, JournalSink, ResultSink,
 };
 pub use source::{clear_trace_cache, scale_config, scale_spec, TraceSource, FAST_FACTOR};
+pub use steal::{merged_results, run_stealing, StealConfig, StealOutcome};
 
 #[cfg(test)]
 mod tests {

@@ -21,12 +21,23 @@
 //!   key*, so [`JobPlan::pending`] can skip rows whose inputs are
 //!   provably unchanged on a resumed run, and can never replay a stale
 //!   result (any input drift changes the key).
+//!
+//! Static shards balance *row counts*, not *work*: convergence reps and
+//! trace lengths vary wildly per row, so the slowest shard sets the wall
+//! clock. The [`CostModel`] predicts per-job cost — a trace-volume proxy
+//! times expected replications, calibrated against observed reps and
+//! wall-times from journal history when one exists — and
+//! [`JobPlan::lpt`] orders jobs by descending predicted cost (Longest
+//! Processing Time first), the classic greedy bound on makespan. Cost
+//! predictions only *order* execution; they can never change a result
+//! (jobs stay pure functions of their keys).
 
 use super::matrix::{Scenario, ScenarioMatrix};
+use super::sink::JournalRecord;
 use crate::delay::DelayModel;
 use crate::util::Fnv;
 use anyhow::{anyhow, ensure, Result};
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
 /// The stable key of one grid row: every input that can change the row's
 /// converged result, hashed over exact bit patterns (not displayed
@@ -58,7 +69,7 @@ fn job_key(s: &Scenario, model: &DelayModel, mix: [f64; 3]) -> u64 {
 }
 
 /// One addressable row of a plan (see the module docs).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Job {
     /// Canonical row index in the source matrix (plan/report order).
     pub index: usize,
@@ -67,6 +78,93 @@ pub struct Job {
     /// The row's report label, duplicated here so journals and merge
     /// output can render without rebuilding the matrix.
     pub name: String,
+    /// Trace-volume work proxy ([`super::source::TraceSource::cost_proxy`]):
+    /// scheduling metadata only — excluded from [`Job::key`], so cost-model
+    /// refinements never invalidate journaled results.
+    pub proxy: f64,
+    /// The row's replication budget (the other cost-model input).
+    pub max_reps: usize,
+}
+
+impl Job {
+    /// Predicted cost of this job under `model` (see [`CostModel::predict`]).
+    pub fn predicted_cost(&self, model: &CostModel) -> f64 {
+        model.predict(self.proxy, self.max_reps)
+    }
+}
+
+/// Per-job cost predictor: `proxy × expected_reps × secs_per_unit`.
+///
+/// Uncalibrated (no journal history), expected reps default to the row's
+/// full `max_reps` budget and the rate to `1.0` — predictions are then in
+/// proxy units, which is all LPT *ordering* needs. With history
+/// ([`CostModel::calibrate`]), expected reps become the observed mean
+/// replication count (clamped to the CI rule's `[3, max_reps]` range) and
+/// the rate becomes mean observed `wall_secs / (proxy × reps)` over
+/// history records matching the plan — predictions become approximate
+/// seconds, letting fresh workers size claims against real machines.
+#[derive(Debug, Clone, Default)]
+pub struct CostModel {
+    mean_reps: Option<f64>,
+    secs_per_unit: Option<f64>,
+}
+
+impl CostModel {
+    /// The history-free model (budget-sized reps, unit rate).
+    pub fn uncalibrated() -> Self {
+        Self::default()
+    }
+
+    /// Fit the model to journal history: mean observed replication count
+    /// over all converged records, and mean observed per-proxy-unit
+    /// wall-time over records whose key matches a job of `plan` (only
+    /// matching jobs expose a proxy to divide by). Records with zero
+    /// reps, non-finite or non-positive wall-times contribute nothing;
+    /// with no usable history this is [`CostModel::uncalibrated`].
+    pub fn calibrate(plan: &JobPlan, history: &[JournalRecord]) -> Self {
+        let proxy_by_key: HashMap<u64, f64> =
+            plan.jobs.iter().map(|j| (j.key, j.proxy)).collect();
+        let (mut reps_sum, mut reps_n) = (0.0, 0u64);
+        let (mut rate_sum, mut rate_n) = (0.0, 0u64);
+        for r in history {
+            if r.result.reps == 0 {
+                continue;
+            }
+            reps_sum += r.result.reps as f64;
+            reps_n += 1;
+            if let Some(&proxy) = proxy_by_key.get(&r.key) {
+                let units = proxy * r.result.reps as f64;
+                let wall = r.result.wall_secs;
+                if units > 0.0 && wall.is_finite() && wall > 0.0 {
+                    rate_sum += wall / units;
+                    rate_n += 1;
+                }
+            }
+        }
+        Self {
+            mean_reps: (reps_n > 0).then(|| reps_sum / reps_n as f64),
+            secs_per_unit: (rate_n > 0).then(|| rate_sum / rate_n as f64),
+        }
+    }
+
+    /// Replications a job is expected to consume under its `max_reps`
+    /// budget: the calibrated mean clamped to the CI stopping rule's
+    /// feasible `[3, max(max_reps, 3)]` range, or the full budget when
+    /// uncalibrated.
+    pub fn expected_reps(&self, max_reps: usize) -> f64 {
+        let cap = max_reps.max(3) as f64;
+        match self.mean_reps {
+            Some(mean) => mean.clamp(3.0, cap),
+            None => cap,
+        }
+    }
+
+    /// Predicted cost of a `(proxy, max_reps)` job — approximate seconds
+    /// when calibrated, proxy units otherwise (either way a valid LPT
+    /// ordering key).
+    pub fn predict(&self, proxy: f64, max_reps: usize) -> f64 {
+        proxy * self.expected_reps(max_reps) * self.secs_per_unit.unwrap_or(1.0)
+    }
 }
 
 /// An ordered, shardable list of jobs lowered from a [`ScenarioMatrix`].
@@ -87,6 +185,8 @@ impl JobPlan {
                 index,
                 key: job_key(s, &matrix.model, matrix.mix),
                 name: s.name.clone(),
+                proxy: s.source.cost_proxy(),
+                max_reps: s.max_reps,
             })
             .collect();
         Self { jobs }
@@ -127,6 +227,22 @@ impl JobPlan {
         (JobPlan { jobs }, hits)
     }
 
+    /// The plan reordered for execution: descending predicted cost under
+    /// `model` (LPT — run the long poles first so no short job ever sits
+    /// behind one at the makespan tail), row index breaking ties for a
+    /// total, deterministic order. Scheduling only: results are reported
+    /// under their row indices regardless of execution order, so any
+    /// ordering merges bit-identically.
+    pub fn lpt(&self, model: &CostModel) -> JobPlan {
+        let mut jobs = self.jobs.clone();
+        jobs.sort_by(|a, b| {
+            b.predicted_cost(model)
+                .total_cmp(&a.predicted_cost(model))
+                .then(a.index.cmp(&b.index))
+        });
+        JobPlan { jobs }
+    }
+
     /// Order-sensitive fingerprint over all job keys — stable across
     /// processes, changed by any row edit. Journal file names embed it so
     /// different grids sharing one journal directory never collide.
@@ -163,7 +279,7 @@ mod tests {
     use super::*;
     use crate::autoscale::ScalerSpec;
     use crate::config::SimConfig;
-    use crate::workload::GeneratorConfig;
+    use crate::workload::{GeneratorConfig, MatchSpec};
 
     fn grid() -> ScenarioMatrix {
         ScenarioMatrix::cross(
@@ -261,6 +377,95 @@ mod tests {
         let (none, all) = plan.pending(&plan.jobs.iter().map(|j| j.key).collect());
         assert!(none.is_empty());
         assert_eq!(all, plan.len());
+    }
+
+    #[test]
+    fn lpt_orders_by_predicted_cost_with_index_tiebreak() {
+        use crate::scenario::Scenario;
+        let spec = |total: u64| MatchSpec {
+            opponent: "LptTest",
+            date: "—",
+            total_tweets: total,
+            length_hours: 0.2,
+            events: vec![],
+        };
+        let cfg = SimConfig::default();
+        // Deliberately uneven: small budget on the big trace, big budget
+        // on the middle one, tied tiny rows at the tail.
+        let row = |total: u64, pct: f64, reps: usize| {
+            Scenario::new(
+                TraceSource::spec(spec(total), false),
+                cfg.clone(),
+                ScalerSpec::threshold(pct),
+                reps,
+            )
+        };
+        let rows = vec![
+            row(2_000, 60.0, 3),
+            row(40_000, 60.0, 3),
+            row(10_000, 60.0, 8),
+            row(2_000, 90.0, 3),
+        ];
+        let plan = ScenarioMatrix::from_rows(rows).plan();
+        let model = CostModel::uncalibrated();
+        let lpt = plan.lpt(&model);
+        let costs: Vec<f64> = lpt.jobs.iter().map(|j| j.predicted_cost(&model)).collect();
+        for pair in costs.windows(2) {
+            assert!(pair[0] >= pair[1], "LPT must be non-increasing: {costs:?}");
+        }
+        assert_eq!(lpt.jobs[0].index, 1, "biggest trace first");
+        // Equal-cost rows 0 and 3 keep row order.
+        let (a, b) = (
+            lpt.jobs.iter().position(|j| j.index == 0).unwrap(),
+            lpt.jobs.iter().position(|j| j.index == 3).unwrap(),
+        );
+        assert!(a < b, "ties break by row index");
+        // Reordering is a permutation, never an edit.
+        let mut sorted = lpt.jobs.clone();
+        sorted.sort_by_key(|j| j.index);
+        assert_eq!(sorted, plan.jobs);
+    }
+
+    #[test]
+    fn cost_model_calibrates_reps_and_rate_from_history() {
+        use crate::scenario::{JournalRecord, ScenarioResult};
+        let plan = grid().plan();
+        let job = &plan.jobs[0];
+        assert!(job.proxy > 0.0, "generated sources expose a volume proxy");
+
+        let un = CostModel::uncalibrated();
+        assert_eq!(un.expected_reps(7), 7.0, "no history: budget-sized reps");
+        assert_eq!(un.predict(job.proxy, job.max_reps), job.proxy * 3.0);
+
+        // History: this job converged in 5 reps at 2.0 s per proxy unit.
+        let record = |key: u64, reps: usize, wall_secs: f64| JournalRecord {
+            key,
+            index: 0,
+            result: ScenarioResult {
+                name: "h".into(),
+                violation_pct: 1.0,
+                cpu_hours: 1.0,
+                reps,
+                wall_secs,
+            },
+        };
+        let history = vec![record(job.key, 5, job.proxy * 5.0 * 2.0)];
+        let m = CostModel::calibrate(&plan, &history);
+        assert_eq!(m.expected_reps(10), 5.0);
+        assert_eq!(m.expected_reps(4), 4.0, "clamped to the budget");
+        let predicted = m.predict(job.proxy, 10);
+        let want = job.proxy * 5.0 * 2.0;
+        assert!((predicted / want - 1.0).abs() < 1e-12, "{predicted} vs {want}");
+
+        // Unusable history degrades to the uncalibrated model: zero-rep
+        // placeholders and non-matching keys teach it nothing.
+        let m = CostModel::calibrate(&plan, &[record(job.key, 0, 1.0)]);
+        assert_eq!(m.expected_reps(7), 7.0);
+        // Foreign keys calibrate reps but not the rate (no proxy known);
+        // sub-minimum observed reps clamp up to the CI floor of 3.
+        let m = CostModel::calibrate(&plan, &[record(0xdead, 1, 5.0)]);
+        assert_eq!(m.expected_reps(10), 3.0);
+        assert_eq!(m.predict(2.0, 10), 2.0 * 3.0, "rate stays 1.0");
     }
 
     #[test]

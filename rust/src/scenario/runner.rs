@@ -24,7 +24,7 @@
 //! and `rust/tests/batch_kernel.rs`).
 
 use super::matrix::ScenarioMatrix;
-use super::plan::Job;
+use super::plan::{CostModel, Job};
 use super::sink::ResultSink;
 use crate::autoscale::ScalerSpec;
 use crate::config::SimConfig;
@@ -104,6 +104,13 @@ pub struct ScenarioResult {
     pub cpu_hours: f64,
     /// Replications the CI stopping rule consumed.
     pub reps: usize,
+    /// Wall-clock seconds this row took to converge in the process that
+    /// ran it — a *measurement*, not a simulation output, and therefore
+    /// nondeterministic. It is excluded from every bit-identity
+    /// comparison, table rendering and CSV stream; it rides along in the
+    /// result journal so the scheduler's [`CostModel`] can calibrate
+    /// predicted costs against observed wall-times.
+    pub wall_secs: f64,
 }
 
 /// Worker threads to use by default: one per hardware thread.
@@ -127,6 +134,7 @@ pub fn run_replications(
     max_reps: usize,
     wave: usize,
 ) -> ScenarioResult {
+    let started = std::time::Instant::now();
     // Replication seeds: deterministic in (base seed, rep index).
     let lane_seed = |rep: u64| base_cfg.seed.wrapping_add(rep.wrapping_mul(7919));
     // One wave of `take` replications starting at `rep0`. Hot-loop
@@ -191,6 +199,7 @@ pub fn run_replications(
         violation_pct: viol.mean(),
         cpu_hours: cost / folded as f64,
         reps: folded as usize,
+        wall_secs: started.elapsed().as_secs_f64(),
     }
 }
 
@@ -204,10 +213,11 @@ pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> Result<Vec<Scenari
 }
 
 /// [`run_matrix`] with a streaming callback: `on_result(row, result)` is
-/// invoked once per scenario as it converges — row order on the serial
-/// path, completion order under parallelism (the callback runs on worker
-/// threads; each row fires exactly once). The returned vector is always
-/// in row order, so streamed and batch output carry identical content.
+/// invoked once per scenario as it converges — descending predicted-cost
+/// (LPT) order on the serial path, completion order under parallelism
+/// (the callback runs on worker threads; each row fires exactly once).
+/// The returned vector is always in row order, so streamed and batch
+/// output carry identical content.
 pub fn run_matrix_with<F>(
     matrix: &ScenarioMatrix,
     threads: usize,
@@ -229,9 +239,23 @@ where
     // run stays wave 1: that is the fully serial reference path the
     // bit-identity suites compare everything against.
     let wave = if threads == 1 { 1 } else { (threads / workers).max(3) };
+    // Rows are claimed in descending predicted-cost order (LPT): the long
+    // poles start first, so no short row ever queues behind one at the
+    // makespan tail. Pure scheduling — every result lands in its
+    // row-indexed slot, so the returned order and every bit of every
+    // result are unchanged by the claim order.
+    let model = CostModel::uncalibrated();
+    let cost: Vec<f64> = matrix
+        .scenarios
+        .iter()
+        .map(|s| model.predict(s.source.cost_proxy(), s.max_reps))
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| cost[b].total_cmp(&cost[a]).then(a.cmp(&b)));
     if workers == 1 && wave == 1 {
-        let mut results = Vec::with_capacity(n);
-        for (i, s) in matrix.scenarios.iter().enumerate() {
+        let mut slots: Vec<Option<ScenarioResult>> = vec![None; n];
+        for &i in &order {
+            let s = &matrix.scenarios[i];
             let trace = s.source.load_cached(disk)?;
             let res = run_replications(
                 &trace,
@@ -244,25 +268,27 @@ where
                 1,
             );
             on_result(i, &res);
-            results.push(res);
+            slots[i] = Some(res);
         }
-        return Ok(results);
+        return Ok(slots.into_iter().map(|r| r.expect("every row ran")).collect());
     }
 
     // Traces load lazily *inside* the workers: the source cache's per-key
     // slots let workers generating different traces proceed in parallel
     // while duplicates of the same trace block on one generation.
     let cursor = AtomicUsize::new(0);
+    let order = &order;
     let slots: Vec<Mutex<Option<Result<ScenarioResult>>>> =
         (0..n).map(|_| Mutex::new(None)).collect();
     let on_result = &on_result;
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
+                let claimed = cursor.fetch_add(1, Ordering::Relaxed);
+                if claimed >= n {
                     break;
                 }
+                let i = order[claimed];
                 let row = &matrix.scenarios[i];
                 let outcome = row.source.load_cached(disk).map(|trace| {
                     run_replications(
@@ -532,7 +558,7 @@ mod tests {
         let err = run_plan(&matrix, &plan.jobs, 1, &FailSink).unwrap_err();
         assert!(format!("{err}").contains("sink exploded"), "{err}");
 
-        let stale = Job { index: 5, key: 1, name: "stale".into() };
+        let stale = Job { index: 5, key: 1, name: "stale".into(), proxy: 1.0, max_reps: 3 };
         let err = run_plan(&matrix, &[stale], 1, &CollectSink::new()).unwrap_err();
         assert!(format!("{err}").contains("1-row matrix"), "{err}");
     }

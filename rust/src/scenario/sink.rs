@@ -21,12 +21,17 @@
 //!   len    4 B   u32 LE, payload bytes
 //!   payload      key u64 | row index u64 | reps u64 |
 //!                violation_pct f64 bits | cpu_hours f64 bits |
+//!                wall_secs f64 bits |
 //!                name_len u32 | name bytes          (all LE)
 //!   hash   8 B   u64 LE, FNV-1a over the payload
 //! ```
 //!
 //! Floats are stored as exact bit patterns, so journaled results merge
-//! back bit-identically. A fresh journal's header is published via a
+//! back bit-identically. `wall_secs` (format v2) is the one deliberate
+//! exception to determinism: it records how long the row took *in the
+//! process that ran it* so the work-stealing cost model
+//! (`super::plan::CostModel`) can calibrate against history — it is
+//! never rendered, streamed, or compared. A fresh journal's header is published via a
 //! tmp+rename (like `crate::workload::store`); records are then
 //! appended and individually framed, so a crash mid-append costs at
 //! most the torn tail record: readers stop at the first record whose
@@ -46,14 +51,15 @@ use std::sync::Mutex;
 /// File magic: identifies a result journal regardless of extension.
 pub const JOURNAL_MAGIC: [u8; 8] = *b"SLAJRNL\0";
 
-/// Bump on any layout change; readers reject other versions.
-pub const JOURNAL_VERSION: u32 = 1;
+/// Bump on any layout change; readers reject other versions (v2 added
+/// the `wall_secs` calibration field).
+pub const JOURNAL_VERSION: u32 = 2;
 
 /// Bytes before the first record (magic + version).
 pub const JOURNAL_HEADER_LEN: usize = 8 + 4;
 
 /// Fixed payload bytes ahead of the variable-length name.
-const RECORD_FIXED_LEN: usize = 8 * 5 + 4;
+const RECORD_FIXED_LEN: usize = 8 * 6 + 4;
 
 /// Where the runner reports each converged scenario. Implementations
 /// must be `Sync`: the parallel runner records from worker threads, in
@@ -101,7 +107,10 @@ pub fn csv_field(s: &str) -> String {
 }
 
 /// Streaming CSV sink: one `scenario,violation_pct,cpu_hours,reps` line
-/// per converged row, in completion order (row order serially).
+/// per converged row, in completion order (descending predicted-cost
+/// order serially — the runner claims rows LPT-first). The
+/// nondeterministic `wall_secs` measurement is deliberately not a
+/// column: CSV streams stay comparable across runs and processes.
 pub struct CsvSink<W: Write + Send> {
     out: Mutex<W>,
 }
@@ -268,6 +277,7 @@ fn encode_record(key: u64, index: u64, r: &ScenarioResult) -> Vec<u8> {
     payload.extend_from_slice(&(r.reps as u64).to_le_bytes());
     payload.extend_from_slice(&r.violation_pct.to_bits().to_le_bytes());
     payload.extend_from_slice(&r.cpu_hours.to_bits().to_le_bytes());
+    payload.extend_from_slice(&r.wall_secs.to_bits().to_le_bytes());
     payload.extend_from_slice(&(name.len() as u32).to_le_bytes());
     payload.extend_from_slice(name);
     let mut out = Vec::with_capacity(4 + payload.len() + 8);
@@ -282,7 +292,7 @@ fn decode_payload(p: &[u8]) -> Option<JournalRecord> {
         return None;
     }
     let u64_at = |i: usize| u64::from_le_bytes(p[i..i + 8].try_into().unwrap());
-    let name_len = u32::from_le_bytes(p[40..44].try_into().unwrap()) as usize;
+    let name_len = u32::from_le_bytes(p[48..52].try_into().unwrap()) as usize;
     if p.len() != RECORD_FIXED_LEN + name_len {
         return None;
     }
@@ -295,6 +305,7 @@ fn decode_payload(p: &[u8]) -> Option<JournalRecord> {
             violation_pct: f64::from_bits(u64_at(24)),
             cpu_hours: f64::from_bits(u64_at(32)),
             reps: usize::try_from(u64_at(16)).ok()?,
+            wall_secs: f64::from_bits(u64_at(40)),
         },
     })
 }
@@ -390,11 +401,17 @@ mod tests {
     use crate::util::TempDir;
 
     fn job(index: usize, key: u64, name: &str) -> Job {
-        Job { index, key, name: name.to_string() }
+        Job { index, key, name: name.to_string(), proxy: 1.0, max_reps: 3 }
     }
 
     fn result(name: &str, violation: f64, cpu: f64, reps: usize) -> ScenarioResult {
-        ScenarioResult { name: name.into(), violation_pct: violation, cpu_hours: cpu, reps }
+        ScenarioResult {
+            name: name.into(),
+            violation_pct: violation,
+            cpu_hours: cpu,
+            reps,
+            wall_secs: 0.125 + cpu,
+        }
     }
 
     #[test]
@@ -421,6 +438,7 @@ mod tests {
             assert_eq!(rec.result.violation_pct.to_bits(), r.violation_pct.to_bits());
             assert_eq!(rec.result.cpu_hours.to_bits(), r.cpu_hours.to_bits());
             assert_eq!(rec.result.reps, r.reps);
+            assert_eq!(rec.result.wall_secs.to_bits(), r.wall_secs.to_bits());
         }
     }
 

@@ -152,6 +152,26 @@ impl TraceSource {
         h.finish()
     }
 
+    /// Work proxy for the cost model (`crate::scenario::plan`): expected
+    /// simulation work is driven by *tweet volume over match length*, so
+    /// the proxy is `total_tweets × length_hours` of the resolved
+    /// (fast-scaled) spec. For CSV sources — whose tweet count is not
+    /// known without reading the file — the byte length stands in (a
+    /// fixed-width line per tweet makes bytes proportional to tweets).
+    /// The proxy only *orders* jobs (LPT scheduling); its absolute scale
+    /// is calibrated away against journal history, so unknown opponents
+    /// or unreadable CSVs degrade to a neutral `1.0` instead of erroring
+    /// — loading the trace will surface the real problem.
+    pub fn cost_proxy(&self) -> f64 {
+        match self {
+            Self::Csv { path } => std::fs::metadata(path).map_or(1.0, |m| m.len().max(1) as f64),
+            _ => match self.resolve_spec() {
+                Ok(spec) => (spec.total_tweets.max(1) as f64) * spec.length_hours.max(1e-9),
+                Err(_) => 1.0,
+            },
+        }
+    }
+
     /// The (possibly fast-scaled) spec this source generates from.
     /// Degenerate specs — zero tweets (possibly after fast scaling) or a
     /// zero-length monitoring window — are a clean error here rather than
@@ -446,6 +466,26 @@ mod tests {
         let before = TraceSource::csv(&path).fingerprint();
         TraceSource::spec(tiny_spec(500), false).load().unwrap().write_csv(&path).unwrap();
         assert_ne!(before, TraceSource::csv(&path).fingerprint(), "contents must feed the key");
+    }
+
+    #[test]
+    fn cost_proxy_tracks_volume_and_never_errors() {
+        // Bigger matches cost more, fast scaling costs less.
+        let big = TraceSource::spec(tiny_spec(40_000), false).cost_proxy();
+        let small = TraceSource::spec(tiny_spec(4_000), false).cost_proxy();
+        assert!(big > small, "{big} vs {small}");
+        let full = TraceSource::opponent("Spain", false).cost_proxy();
+        let fast = TraceSource::opponent("Spain", true).cost_proxy();
+        assert!(full > fast, "{full} vs {fast}");
+        // Degenerate inputs order neutrally instead of failing.
+        assert_eq!(TraceSource::opponent("Germany", true).cost_proxy(), 1.0);
+        assert_eq!(TraceSource::csv("/no/such/file.csv").cost_proxy(), 1.0);
+        // CSV proxy follows file size.
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("t.csv");
+        TraceSource::spec(tiny_spec(1_000), false).load().unwrap().write_csv(&path).unwrap();
+        let proxy = TraceSource::csv(&path).cost_proxy();
+        assert_eq!(proxy, std::fs::metadata(&path).unwrap().len() as f64);
     }
 
     #[test]

@@ -1,0 +1,429 @@
+//! Work-stealing fleet execution: cost-model job leases over a shared
+//! journal directory.
+//!
+//! Static sharding (`JobPlan::shard`) balances *row counts*; convergence
+//! reps and trace lengths vary wildly per row, so the slowest shard sets
+//! the fleet's wall clock while every other process idles. This module
+//! replaces fixed ownership with dynamic claims: every worker sees the
+//! whole plan and repeatedly claims the most expensive still-pending
+//! jobs (LPT order under the calibrated [`CostModel`]), runs them, and
+//! journals the results — until the plan drains. Workers coordinate
+//! through the filesystem alone, so "fleet" means any mix of threads,
+//! processes, or hosts sharing one directory.
+//!
+//! ## Lease protocol
+//!
+//! * **Claim** — a worker claims job `k` by creating `<key>.lease` in
+//!   the journal dir with O_EXCL semantics: the owner token is written
+//!   to a worker-unique temp file which is then `hard_link`ed to the
+//!   lease name. Exactly one linker can win; the loser sees
+//!   `AlreadyExists`. (A plain tmp+`rename` is *not* exclusive on POSIX
+//!   — rename clobbers — which is why the link does the claiming.)
+//! * **Heartbeat** — while running its claims, the worker rewrites each
+//!   lease file every [`StealConfig::heartbeat`], bumping its mtime.
+//! * **Steal** — a lease whose mtime is older than
+//!   [`StealConfig::lease_expiry`] belonged to a crashed (or wedged)
+//!   worker. A stealer expires it by *renaming it to a unique tomb name*
+//!   — rename is atomic, so when several workers race to expire one
+//!   stale lease exactly one rename succeeds — and then claims afresh.
+//! * **Release** — after journaling a job's result, the worker deletes
+//!   its lease.
+//!
+//! ## Why any interleaving merges bit-identically
+//!
+//! Lease exclusivity is a *performance* property, never a safety one.
+//! Jobs are pure functions of their content-derived keys, so a job run
+//! twice (a stolen-but-alive lease, or a claim racing a just-finished
+//! worker) journals byte-identical results under the same key, and
+//! [`merge_records`]' key-checked dedupe keeps exactly one. The merged
+//! table is therefore bit-identical to `run_serial` for *every*
+//! interleaving of claims, crashes, steals and re-runs — the property
+//! `rust/tests/fleet_steal.rs` exercises.
+
+use super::matrix::ScenarioMatrix;
+use super::plan::{CostModel, Job};
+use super::runner::{run_plan, ScenarioResult};
+use super::sink::{merge_records, read_journal_dir, Fanout, JournalRecord, JournalSink, ResultSink};
+use anyhow::{anyhow, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::io::ErrorKind;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Tuning knobs of the lease protocol. All of them trade latency against
+/// filesystem traffic; none of them can affect result bits.
+#[derive(Debug, Clone)]
+pub struct StealConfig {
+    /// A lease whose mtime is older than this is considered abandoned
+    /// and may be stolen. Must comfortably exceed `heartbeat`.
+    pub lease_expiry: Duration,
+    /// How often a live worker touches its claimed leases.
+    pub heartbeat: Duration,
+    /// How long a worker with nothing claimable (every pending job
+    /// leased by a live peer) waits before re-scanning.
+    pub poll: Duration,
+    /// Jobs claimed per scan; `0` claims one per worker thread, keeping
+    /// claims small so late-joining workers find work to steal.
+    pub claim_batch: usize,
+    /// Test hook simulating a worker killed mid-job: after running this
+    /// many jobs, claim one more lease and exit *without running,
+    /// journaling or releasing it*. `None` (the default) never crashes.
+    pub crash_after: Option<usize>,
+}
+
+impl StealConfig {
+    /// A config scaled around `expiry`: heartbeats at a sixth of it
+    /// (floored at 25 ms), polls at a tenth (clamped to [25 ms, 500 ms]).
+    pub fn with_expiry(expiry: Duration) -> Self {
+        Self {
+            lease_expiry: expiry,
+            heartbeat: (expiry / 6).max(Duration::from_millis(25)),
+            poll: (expiry / 10).clamp(Duration::from_millis(25), Duration::from_millis(500)),
+            claim_batch: 0,
+            crash_after: None,
+        }
+    }
+}
+
+impl Default for StealConfig {
+    fn default() -> Self {
+        Self::with_expiry(Duration::from_secs(30))
+    }
+}
+
+/// What one worker did over a [`run_stealing`] drain.
+#[derive(Debug, Default)]
+pub struct StealOutcome {
+    /// Jobs this worker ran to convergence and journaled.
+    pub ran: usize,
+    /// Stale leases this worker expired (crashed peers' jobs re-stolen).
+    pub stolen: usize,
+    /// True when the [`StealConfig::crash_after`] hook fired: the worker
+    /// exited holding an unreleased lease, simulating a mid-job kill.
+    pub crashed: bool,
+    /// `(row index, result)` for the rows this worker ran, in the order
+    /// it ran them.
+    pub results: Vec<(usize, ScenarioResult)>,
+}
+
+/// Drain `matrix`'s plan cooperatively with any number of peer workers
+/// sharing `dir`: loop {snapshot journals → claim the most expensive
+/// pending jobs (LPT under the journal-calibrated cost model) → run them
+/// `threads`-wide → journal and release} until every plan key is
+/// journaled. Each converged result is also fanned to `extra` (the CLI's
+/// `--stream`). Returns what *this* worker did; the merged table is read
+/// back with [`merged_results`].
+///
+/// Restartable and elastic by construction: workers may join a running
+/// drain at any time, die at any time (their leases expire and are
+/// stolen), and re-run each other's jobs without harm — see the module
+/// docs for why every interleaving merges bit-identically.
+pub fn run_stealing(
+    matrix: &ScenarioMatrix,
+    threads: usize,
+    dir: &Path,
+    extra: Option<&dyn ResultSink>,
+    cfg: &StealConfig,
+) -> Result<StealOutcome> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating journal dir {}", dir.display()))?;
+    let plan = matrix.plan();
+    let mut outcome = StealOutcome::default();
+    if plan.is_empty() {
+        return Ok(outcome);
+    }
+    let owner = owner_token();
+    // One journal file per worker: appends never interleave, and a
+    // crashed worker costs at most its own torn tail record.
+    let journal_path = dir.join(format!("plan-{:016x}-{owner}.journal", plan.fingerprint()));
+    let (journal, _prior) = JournalSink::open(&journal_path)?;
+    loop {
+        // Snapshot the shared state: journaled keys tell us what is left,
+        // and the full history calibrates the cost model (observed reps
+        // and wall-times beat the static trace-volume guess).
+        let history = read_journal_dir(dir)?;
+        let done: HashSet<u64> = history.iter().map(|r| r.key).collect();
+        let (pending, _hits) = plan.pending(&done);
+        if pending.is_empty() {
+            break;
+        }
+        let model = CostModel::calibrate(&plan, &history);
+        let ordered = pending.lpt(&model);
+        if outcome.should_crash(cfg) {
+            // Simulated kill: grab one more lease, then vanish without
+            // running or releasing it (the test hook for steal recovery).
+            for job in &ordered.jobs {
+                if try_claim(dir, job.key, &owner)?.is_some() {
+                    outcome.crashed = true;
+                    return Ok(outcome);
+                }
+            }
+            outcome.crashed = true;
+            return Ok(outcome);
+        }
+        let cap = if cfg.claim_batch == 0 { threads.max(1) } else { cfg.claim_batch };
+        let mut claimed: Vec<Job> = Vec::new();
+        for job in ordered.jobs {
+            if claimed.len() >= cap {
+                break;
+            }
+            if try_claim(dir, job.key, &owner)?.is_some() {
+                claimed.push(job);
+            } else if expire_if_stale(dir, job.key, cfg.lease_expiry, &owner)? {
+                outcome.stolen += 1;
+                if try_claim(dir, job.key, &owner)?.is_some() {
+                    claimed.push(job);
+                }
+            }
+        }
+        if claimed.is_empty() {
+            // Everything pending is leased by live peers: wait for them
+            // to finish (or for their leases to go stale) and re-scan.
+            std::thread::sleep(cfg.poll);
+            continue;
+        }
+        // Claims race completions: a peer may have journaled a job
+        // between our snapshot and our claim. Re-check and release such
+        // claims instead of re-running them (re-running would be merely
+        // wasteful, never wrong — identical bits dedupe on merge).
+        let done_now: HashSet<u64> = read_journal_dir(dir)?.iter().map(|r| r.key).collect();
+        let (fresh, already): (Vec<Job>, Vec<Job>) =
+            claimed.into_iter().partition(|j| !done_now.contains(&j.key));
+        for job in &already {
+            release(dir, job.key);
+        }
+        if fresh.is_empty() {
+            continue;
+        }
+        let run = run_leased(matrix, &fresh, threads, &journal, extra, cfg, dir, &owner);
+        for job in &fresh {
+            release(dir, job.key);
+        }
+        let results = run?;
+        outcome.ran += fresh.len();
+        outcome.results.extend(fresh.iter().map(|j| j.index).zip(results));
+    }
+    Ok(outcome)
+}
+
+impl StealOutcome {
+    /// True when the configured crash threshold has been reached.
+    fn should_crash(&self, cfg: &StealConfig) -> bool {
+        cfg.crash_after.is_some_and(|k| self.ran >= k)
+    }
+}
+
+/// Run claimed jobs while a heartbeat thread keeps their leases fresh.
+#[allow(clippy::too_many_arguments)]
+fn run_leased(
+    matrix: &ScenarioMatrix,
+    jobs: &[Job],
+    threads: usize,
+    journal: &JournalSink,
+    extra: Option<&dyn ResultSink>,
+    cfg: &StealConfig,
+    dir: &Path,
+    owner: &str,
+) -> Result<Vec<ScenarioResult>> {
+    let leases: Vec<PathBuf> = jobs.iter().map(|j| lease_path(dir, j.key)).collect();
+    let stop = AtomicBool::new(false);
+    let slice = cfg.heartbeat.min(Duration::from_millis(10));
+    std::thread::scope(|s| {
+        let beat = s.spawn(|| {
+            let mut last = Instant::now();
+            while !stop.load(Ordering::Relaxed) {
+                if last.elapsed() >= cfg.heartbeat {
+                    for lease in &leases {
+                        // Rewriting the owner token bumps the mtime. If a
+                        // peer stole this lease meanwhile, the rewrite
+                        // recreates it — harmless: drain progress is
+                        // decided by journaled keys, never lease files.
+                        let _ = std::fs::write(lease, owner);
+                    }
+                    last = Instant::now();
+                }
+                std::thread::sleep(slice);
+            }
+        });
+        let mut sinks: Vec<&dyn ResultSink> = vec![journal];
+        if let Some(x) = extra {
+            sinks.push(x);
+        }
+        let fan = Fanout::new(sinks);
+        let out = run_plan(matrix, jobs, threads, &fan);
+        stop.store(true, Ordering::Relaxed);
+        let _ = beat.join();
+        out
+    })
+}
+
+/// Read the fleet's merged table for `matrix` back from `dir`: every
+/// journal record matching a plan key, deduped by key, in canonical row
+/// order — bit-identical to a single-process serial run once the plan
+/// has drained. Records from *other* grids sharing the directory are
+/// ignored (the plan's keys are the filter), and a still-missing row is
+/// an error naming it.
+pub fn merged_results(matrix: &ScenarioMatrix, dir: &Path) -> Result<Vec<ScenarioResult>> {
+    let plan = matrix.plan();
+    let keys: HashSet<u64> = plan.jobs.iter().map(|j| j.key).collect();
+    let records: Vec<JournalRecord> =
+        read_journal_dir(dir)?.into_iter().filter(|r| keys.contains(&r.key)).collect();
+    let by_key: HashMap<u64, ScenarioResult> =
+        merge_records(records)?.into_iter().map(|r| (r.key, r.result)).collect();
+    plan.jobs
+        .iter()
+        .map(|j| {
+            by_key.get(&j.key).cloned().ok_or_else(|| {
+                anyhow!(
+                    "row {} ({:?}) is not journaled under {} — fleet still draining?",
+                    j.index,
+                    j.name,
+                    dir.display()
+                )
+            })
+        })
+        .collect()
+}
+
+/// The lease file guarding job `key` under `dir`.
+fn lease_path(dir: &Path, key: u64) -> PathBuf {
+    dir.join(format!("{key:016x}.lease"))
+}
+
+/// Worker-unique owner token: pid + process-wide counter + wall-clock
+/// nanos, so concurrent workers in one process (tests drive several per
+/// process) and across processes never share temp names or journals.
+fn owner_token() -> String {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let nanos =
+        SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.subsec_nanos()).unwrap_or(0);
+    format!("w{}-{}-{nanos:08x}", std::process::id(), COUNTER.fetch_add(1, Ordering::Relaxed))
+}
+
+/// Atomically claim job `key`: returns the lease path on success, `None`
+/// when some other worker holds it.
+fn try_claim(dir: &Path, key: u64, owner: &str) -> Result<Option<PathBuf>> {
+    let lease = lease_path(dir, key);
+    let tmp = dir.join(format!("{key:016x}.claim-{owner}"));
+    std::fs::write(&tmp, owner).with_context(|| format!("writing claim {}", tmp.display()))?;
+    // hard_link is the atomic O_EXCL primitive here: it fails (instead of
+    // clobbering, as rename would) when the lease name already exists.
+    let linked = std::fs::hard_link(&tmp, &lease);
+    let _ = std::fs::remove_file(&tmp);
+    match linked {
+        Ok(()) => Ok(Some(lease)),
+        Err(e) if e.kind() == ErrorKind::AlreadyExists => Ok(None),
+        Err(e) => Err(e).with_context(|| format!("claiming lease {}", lease.display())),
+    }
+}
+
+/// Expire job `key`'s lease if its mtime heartbeat is older than
+/// `expiry`. Returns true when *this* worker won the expiry (the
+/// rename-to-tomb serializes racing stealers: exactly one succeeds).
+fn expire_if_stale(dir: &Path, key: u64, expiry: Duration, owner: &str) -> Result<bool> {
+    let lease = lease_path(dir, key);
+    let modified = match std::fs::metadata(&lease) {
+        Ok(meta) => meta
+            .modified()
+            .with_context(|| format!("lease mtime of {}", lease.display()))?,
+        Err(e) if e.kind() == ErrorKind::NotFound => return Ok(false),
+        Err(e) => return Err(e).with_context(|| format!("inspecting lease {}", lease.display())),
+    };
+    let age = SystemTime::now().duration_since(modified).unwrap_or(Duration::ZERO);
+    if age < expiry {
+        return Ok(false);
+    }
+    let tomb = dir.join(format!("{key:016x}.tomb-{owner}"));
+    match std::fs::rename(&lease, &tomb) {
+        Ok(()) => {
+            let _ = std::fs::remove_file(&tomb);
+            Ok(true)
+        }
+        Err(e) if e.kind() == ErrorKind::NotFound => Ok(false), // a peer won the race
+        Err(e) => Err(e).with_context(|| format!("expiring lease {}", lease.display())),
+    }
+}
+
+/// Delete job `key`'s lease (after journaling, or when the claim proved
+/// redundant). Best-effort: a vanished lease means a peer stole it —
+/// which can at worst cause a harmless duplicate run.
+fn release(dir: &Path, key: u64) {
+    let _ = std::fs::remove_file(lease_path(dir, key));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn claims_are_exclusive_until_released() {
+        let dir = TempDir::new().unwrap();
+        let a = try_claim(dir.path(), 0x42, "worker-a").unwrap();
+        assert!(a.is_some(), "first claim wins");
+        assert!(try_claim(dir.path(), 0x42, "worker-b").unwrap().is_none(), "second loses");
+        assert!(try_claim(dir.path(), 0x43, "worker-b").unwrap().is_some(), "other key free");
+        release(dir.path(), 0x42);
+        assert!(try_claim(dir.path(), 0x42, "worker-b").unwrap().is_some(), "free after release");
+        // No stray claim temp files survive.
+        let strays: Vec<String> = std::fs::read_dir(dir.path())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains("claim"))
+            .collect();
+        assert!(strays.is_empty(), "{strays:?}");
+    }
+
+    #[test]
+    fn stale_leases_expire_exactly_once() {
+        let dir = TempDir::new().unwrap();
+        let expiry = Duration::from_millis(60);
+        try_claim(dir.path(), 0x7, "crashed-worker").unwrap().unwrap();
+        // Fresh lease: not stealable yet.
+        assert!(!expire_if_stale(dir.path(), 0x7, expiry, "w-a").unwrap());
+        std::thread::sleep(expiry * 2);
+        // Stale now: the first expirer wins, the second finds no lease.
+        assert!(expire_if_stale(dir.path(), 0x7, expiry, "w-a").unwrap());
+        assert!(!expire_if_stale(dir.path(), 0x7, expiry, "w-b").unwrap());
+        // The job is claimable again, and no tomb litter remains.
+        assert!(try_claim(dir.path(), 0x7, "w-a").unwrap().is_some());
+        let tombs: Vec<String> = std::fs::read_dir(dir.path())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains("tomb"))
+            .collect();
+        assert!(tombs.is_empty(), "{tombs:?}");
+    }
+
+    #[test]
+    fn missing_leases_are_not_stale() {
+        let dir = TempDir::new().unwrap();
+        assert!(!expire_if_stale(dir.path(), 0x99, Duration::ZERO, "w").unwrap());
+    }
+
+    #[test]
+    fn owner_tokens_are_unique_and_path_safe() {
+        let a = owner_token();
+        let b = owner_token();
+        assert_ne!(a, b);
+        for t in [&a, &b] {
+            assert!(
+                t.chars().all(|c| c.is_ascii_alphanumeric() || c == '-'),
+                "token {t:?} must stay a safe file-name fragment"
+            );
+        }
+    }
+
+    #[test]
+    fn steal_config_scales_with_expiry() {
+        let cfg = StealConfig::with_expiry(Duration::from_millis(300));
+        assert_eq!(cfg.lease_expiry, Duration::from_millis(300));
+        assert!(cfg.heartbeat < cfg.lease_expiry);
+        assert!(cfg.heartbeat >= Duration::from_millis(25));
+        assert!(cfg.poll >= Duration::from_millis(25));
+        let default = StealConfig::default();
+        assert_eq!(default.lease_expiry, Duration::from_secs(30));
+        assert!(default.crash_after.is_none());
+    }
+}

@@ -1,0 +1,154 @@
+//! Work-stealing fleet integration tests: the property the scheduler
+//! stakes everything on is that *any* interleaving of claims, crashes,
+//! steals and re-runs merges bit-identically to the unsharded serial
+//! run, with each plan key exactly once in the merged table. The grid is
+//! deliberately uneven (trace volumes and replication budgets differ per
+//! row) so the LPT cost ordering actually reorders execution.
+
+use sla_autoscale::autoscale::ScalerSpec;
+use sla_autoscale::config::SimConfig;
+use sla_autoscale::scenario::{
+    merge_records, merged_results, read_journal_dir, run_stealing, Overrides, ScenarioMatrix,
+    ScenarioResult, StealConfig, TraceSource,
+};
+use sla_autoscale::util::TempDir;
+use sla_autoscale::workload::MatchSpec;
+use std::time::Duration;
+
+/// A grid with wildly uneven rows: three trace volumes (9k / 3k / 1.5k
+/// tweets) crossed with two scalers, and a bumped replication budget on
+/// the biggest trace's rows so predicted costs spread by ~12x.
+fn uneven_matrix() -> ScenarioMatrix {
+    let spec = |opponent: &'static str, total_tweets: u64| MatchSpec {
+        opponent,
+        date: "—",
+        total_tweets,
+        length_hours: 0.2,
+        events: vec![],
+    };
+    let sources = [
+        TraceSource::spec(spec("FleetBig", 9_000), false),
+        TraceSource::spec(spec("FleetMid", 3_000), false),
+        TraceSource::spec(spec("FleetSmall", 1_500), false),
+    ];
+    let scalers = [ScalerSpec::threshold(70.0), ScalerSpec::load(0.99)];
+    let mut matrix = ScenarioMatrix::cross(
+        &sources,
+        &SimConfig::default(),
+        &[Overrides::default()],
+        &scalers,
+        3,
+    );
+    // Uneven replication budgets: the big trace's rows get twice the
+    // budget, stretching the cost spread the LPT order sorts by.
+    for s in &mut matrix.scenarios {
+        if s.source.label().contains("FleetBig") {
+            s.max_reps = 6;
+        }
+    }
+    matrix
+}
+
+fn assert_same(got: &ScenarioResult, want: &ScenarioResult) {
+    assert_eq!(got.name, want.name);
+    assert_eq!(got.reps, want.reps, "{}", got.name);
+    assert_eq!(got.violation_pct.to_bits(), want.violation_pct.to_bits(), "{}", got.name);
+    assert_eq!(got.cpu_hours.to_bits(), want.cpu_hours.to_bits(), "{}", got.name);
+}
+
+/// Three concurrent workers race claims over one journal dir; the merged
+/// table is bit-identical to the serial run and holds each plan key
+/// exactly once, no matter which worker won which row.
+#[test]
+fn stealing_fleet_matches_serial_bits() {
+    let matrix = uneven_matrix();
+    let serial = matrix.run_serial().unwrap();
+    let plan = matrix.plan();
+    let dir = TempDir::new().unwrap();
+    let cfg = StealConfig::with_expiry(Duration::from_secs(30));
+    let outcomes = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..3)
+            .map(|_| s.spawn(|| run_stealing(&matrix, 1, dir.path(), None, &cfg).unwrap()))
+            .collect();
+        workers.into_iter().map(|w| w.join().unwrap()).collect::<Vec<_>>()
+    });
+    // Every row ran somewhere; with a 30 s expiry nothing looked stale.
+    let total_ran: usize = outcomes.iter().map(|o| o.ran).sum();
+    assert!(total_ran >= plan.len(), "fleet ran {total_ran} of {} rows", plan.len());
+    assert!(outcomes.iter().all(|o| !o.crashed));
+    // Exactly-once in the *merged* table (duplicates dedupe by key).
+    let keys: std::collections::HashSet<u64> = plan.jobs.iter().map(|j| j.key).collect();
+    let records: Vec<_> = read_journal_dir(dir.path())
+        .unwrap()
+        .into_iter()
+        .filter(|r| keys.contains(&r.key))
+        .collect();
+    let merged = merge_records(records).unwrap();
+    assert_eq!(merged.len(), plan.len(), "each key exactly once after the merge");
+    let results = merged_results(&matrix, dir.path()).unwrap();
+    assert_eq!(results.len(), serial.len());
+    for (got, want) in results.iter().zip(&serial) {
+        assert_same(got, want);
+    }
+    // No lease files survive a drained plan.
+    let leases: Vec<String> = std::fs::read_dir(dir.path())
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".lease"))
+        .collect();
+    assert!(leases.is_empty(), "{leases:?}");
+}
+
+/// Crash-recovery property, swept over the crash point: worker A dies
+/// after k jobs while holding one more unreleased lease; worker B steals
+/// the stale lease and drains the rest. For every k the merged table is
+/// bit-identical to the serial run.
+#[test]
+fn crashed_workers_leases_are_stolen_and_the_merge_still_matches_serial() {
+    let matrix = uneven_matrix();
+    let serial = matrix.run_serial().unwrap();
+    let plan = matrix.plan();
+    for k in [0usize, 1, 2] {
+        let dir = TempDir::new().unwrap();
+        let mut crash_cfg = StealConfig::with_expiry(Duration::from_millis(150));
+        crash_cfg.crash_after = Some(k);
+        let a = run_stealing(&matrix, 1, dir.path(), None, &crash_cfg).unwrap();
+        assert!(a.crashed, "crash hook must fire (k = {k})");
+        assert_eq!(a.ran, k, "the crashing worker runs exactly k jobs first");
+        let abandoned: Vec<String> = std::fs::read_dir(dir.path())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".lease"))
+            .collect();
+        assert_eq!(abandoned.len(), 1, "the kill leaves one unreleased lease: {abandoned:?}");
+        // Let the abandoned lease's heartbeat go stale, then recover.
+        std::thread::sleep(Duration::from_millis(300));
+        let b = run_stealing(
+            &matrix,
+            2,
+            dir.path(),
+            None,
+            &StealConfig::with_expiry(Duration::from_millis(150)),
+        )
+        .unwrap();
+        assert!(b.stolen >= 1, "worker B must steal the abandoned lease (k = {k})");
+        assert_eq!(a.ran + b.ran, plan.len(), "A and B cover the plan between them (k = {k})");
+        let results = merged_results(&matrix, dir.path()).unwrap();
+        for (got, want) in results.iter().zip(&serial) {
+            assert_same(got, want);
+        }
+    }
+}
+
+/// The LPT-ordered in-process paths (serial streaming and the shared
+/// claim cursor) still produce row-ordered, bit-identical tables.
+#[test]
+fn lpt_ordered_matrix_run_is_bit_identical_to_serial() {
+    let matrix = uneven_matrix();
+    let serial = matrix.run_serial().unwrap();
+    let threaded = matrix.run(2).unwrap();
+    assert_eq!(serial.len(), threaded.len());
+    for (got, want) in threaded.iter().zip(&serial) {
+        assert_same(got, want);
+    }
+}
