@@ -1,0 +1,367 @@
+//! Lexical preprocessing for the determinism lint.
+//!
+//! The linter is token-level by design: the offline build image vendors
+//! no `syn`/`proc-macro2`, so rules match over a *stripped* view of each
+//! source line instead of an AST. The lexer produces that view — string,
+//! raw-string, byte-string and char literal *contents* blanked (their
+//! delimiters remain), comments removed from code but their text kept
+//! per line (suppression pragmas live in comments) — plus two pieces of
+//! per-line context the rules need: the enclosing in-file module path
+//! (so `util::bench` can be allowlisted without allowlisting all of
+//! `util.rs`) and whether the line sits inside a `#[cfg(test)] mod`
+//! region (tests deliberately sleep, race workers and read clocks; the
+//! invariants guard shipped code).
+//!
+//! The subset of Rust handled here — `//` and nested `/* */` comments,
+//! `"…"` with escapes, `r#"…"#` raw strings with any hash count, `b"…"`
+//! and `b'…'` byte literals, and the char-vs-lifetime ambiguity of `'` —
+//! is exactly what is needed so rule patterns never match inside
+//! literals or prose.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One source line after lexical stripping (see the module docs).
+#[derive(Debug, Clone, Default)]
+pub struct SrcLine {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code with comments removed and literal contents blanked: `"x"`
+    /// becomes `""`, `'x'` becomes `''`, `r#"x"#` becomes `""`.
+    pub code: String,
+    /// Concatenated comment text of the line (pragmas are parsed here).
+    pub comment: String,
+    /// In-file module path enclosing this line (`"bench"`, `"a::b"`,
+    /// empty at file scope).
+    pub module: String,
+    /// True inside a `#[cfg(test)] mod … { … }` region.
+    pub in_test: bool,
+}
+
+/// Lexer state carried across characters (and, for block comments and
+/// multi-line strings, across lines).
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+/// Read and scan one file.
+pub fn scan_file(path: &Path) -> Result<Vec<SrcLine>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("lint: reading {}", path.display()))?;
+    Ok(scan_text(&text))
+}
+
+/// Scan source text into stripped, annotated lines.
+pub fn scan_text(text: &str) -> Vec<SrcLine> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines: Vec<SrcLine> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Code;
+            }
+            lines.push(SrcLine {
+                number: lines.len() + 1,
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                ..Default::default()
+            });
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                    continue;
+                }
+                let prev_ident =
+                    code.chars().last().is_some_and(|p| p.is_alphanumeric() || p == '_');
+                if !prev_ident && (c == 'r' || c == 'b') {
+                    // b'…' byte char and b"…" byte string
+                    if c == 'b' && next == Some('\'') {
+                        code.push_str("b'");
+                        mode = Mode::Char;
+                        i += 2;
+                        continue;
+                    }
+                    if c == 'b' && next == Some('"') {
+                        code.push_str("b\"");
+                        mode = Mode::Str;
+                        i += 2;
+                        continue;
+                    }
+                    // r"…", r#"…"#, br"…" raw strings (any hash count)
+                    let prefix = if c == 'r' {
+                        1
+                    } else if next == Some('r') {
+                        2
+                    } else {
+                        0
+                    };
+                    if prefix > 0 {
+                        let mut j = i + prefix;
+                        let mut hashes = 0u32;
+                        while chars.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if chars.get(j) == Some(&'"') {
+                            code.push('"');
+                            mode = Mode::RawStr(hashes);
+                            i = j + 1;
+                            continue;
+                        }
+                        // not a raw string (raw ident `r#foo`): plain char
+                    }
+                }
+                if c == '\'' {
+                    // char literal vs lifetime: `'\…'` and `'x'` are
+                    // chars, everything else (`'a`, `'static`) a lifetime
+                    let is_char = match chars.get(i + 1) {
+                        Some('\\') => true,
+                        Some(&n) => n != '\'' && chars.get(i + 2) == Some(&'\''),
+                        None => false,
+                    };
+                    code.push('\'');
+                    i += 1;
+                    if is_char {
+                        mode = Mode::Char;
+                    }
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+            }
+            Mode::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    mode = if depth == 1 {
+                        Mode::Code
+                    } else {
+                        Mode::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // skip the escaped char, but never swallow a newline
+                    // (string line-continuations must keep line numbers)
+                    if chars.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1; // content blanked
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#')) {
+                    code.push('"');
+                    mode = Mode::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Char => {
+                if c == '\\' && chars.get(i + 1) != Some(&'\n') {
+                    i += 2;
+                } else if c == '\'' {
+                    code.push('\'');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(SrcLine {
+            number: lines.len() + 1,
+            code,
+            comment,
+            ..Default::default()
+        });
+    }
+    annotate(&mut lines);
+    lines
+}
+
+/// The identifier following a word-bounded `mod` keyword, if this line
+/// declares a module.
+fn mod_decl(code: &str) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("mod") {
+        let at = from + pos;
+        from = at + 3;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = !bytes.get(at + 3).is_some_and(|&b| is_ident_byte(b));
+        if !before_ok || !after_ok {
+            continue;
+        }
+        let rest = code[at + 3..].trim_start();
+        let name: String =
+            rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+        if !name.is_empty() {
+            return Some(name);
+        }
+    }
+    None
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Second pass: annotate each line with its enclosing in-file module
+/// path and `#[cfg(test)]` membership, by tracking brace depth over the
+/// stripped code (string/char braces are already gone, so depth is
+/// exact up to macro bodies, which nest symmetrically anyway).
+fn annotate(lines: &mut [SrcLine]) {
+    let mut depth = 0i64;
+    // (module name, depth of its body, declared under #[cfg(test)])
+    let mut stack: Vec<(String, i64, bool)> = Vec::new();
+    let mut pending_mod: Option<String> = None;
+    let mut pending_test = false;
+    for line in lines.iter_mut() {
+        line.module = stack.iter().map(|(n, _, _)| n.as_str()).collect::<Vec<_>>().join("::");
+        line.in_test = stack.iter().any(|(_, _, t)| *t);
+        let trimmed = line.code.trim().to_string();
+        if trimmed.contains("#[cfg(test)]") {
+            pending_test = true;
+        }
+        let declares = mod_decl(&trimmed);
+        if let Some(name) = &declares {
+            pending_mod = Some(name.clone());
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if let Some(name) = pending_mod.take() {
+                        stack.push((name, depth, pending_test));
+                        pending_test = false;
+                    }
+                }
+                '}' => {
+                    if stack.last().is_some_and(|(_, d, _)| *d == depth) {
+                        stack.pop();
+                    }
+                    depth -= 1;
+                }
+                ';' => pending_mod = None,
+                _ => {}
+            }
+        }
+        // A plain code line (not an attribute, not a mod declaration)
+        // drops a stale `#[cfg(test)]`: the attribute bound to that item,
+        // not to some later module.
+        if !trimmed.is_empty()
+            && !trimmed.starts_with("#[")
+            && declares.is_none()
+            && pending_mod.is_none()
+        {
+            pending_test = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        scan_text(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let got = code_of("let x = \"Instant::now\"; // Instant::now\nlet y = 2;\n");
+        assert_eq!(got, vec!["let x = \"\"; ", "let y = 2;"]);
+        let lines = scan_text("a(); // det:allow(DET-001, reason = \"x\")\n");
+        assert_eq!(lines[0].comment, " det:allow(DET-001, reason = \"x\")");
+    }
+
+    #[test]
+    fn raw_byte_and_char_literals_are_blanked() {
+        let got = code_of("let m = *b\"SLAJRNL\\0\";\nlet q = b'\"';\nlet r = r#\"x \"y\" z\"#;\n");
+        assert_eq!(got, vec!["let m = *b\"\";", "let q = b'';", "let r = \"\";"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let got = code_of("fn f<'a>(x: &'a str) -> &'static str { x }\nlet c = 'x';\n");
+        assert_eq!(got[0], "fn f<'a>(x: &'a str) -> &'static str { x }");
+        assert_eq!(got[1], "let c = '';");
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let src = "a();\n/* one /* two */ still */\nb(); /* inline */ c();\n";
+        let got = code_of(src);
+        assert_eq!(got[0], "a();");
+        assert_eq!(got[1], "");
+        assert_eq!(got[2], "b();  c();");
+    }
+
+    #[test]
+    fn module_paths_and_test_regions_annotate() {
+        let src = "pub mod bench {\n    fn run() {}\n}\nfn top() {}\n\
+                   #[cfg(test)]\nmod tests {\n    fn t() {}\n}\n";
+        let lines = scan_text(src);
+        assert_eq!(lines[1].module, "bench");
+        assert!(!lines[1].in_test);
+        assert_eq!(lines[3].module, "");
+        assert!(lines[6].in_test, "inside #[cfg(test)] mod tests");
+        assert!(!lines[4].in_test, "the attribute line itself is outside");
+    }
+
+    #[test]
+    fn cfg_test_on_non_module_items_does_not_leak() {
+        let src = "#[cfg(test)]\nfn helper() {}\nmod real {\n    fn r() {}\n}\n";
+        let lines = scan_text(src);
+        assert!(!lines[3].in_test, "mod real is not a test module");
+    }
+}

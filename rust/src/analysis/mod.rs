@@ -1,0 +1,209 @@
+//! Determinism lint engine: enforce the bit-identity invariants
+//! statically.
+//!
+//! Every subsystem in this crate rests on one contract — scenario
+//! results are pure functions of content-derived job keys, so shards,
+//! fleet workers and the serial path merge bit-identically. Runtime
+//! suites (`shard_journal`, `fleet_steal`, `batch_kernel`) verify the
+//! contract after the fact; this module checks it *before* it ships, by
+//! walking `rust/src` and flagging the constructs that break it: stray
+//! wall-clock reads (DET-001), hash-order iteration in result paths
+//! (DET-002), unseeded randomness (DET-003), threads spawned outside
+//! the sanctioned runners (DET-004), float accumulation in hash order
+//! (DET-005) and unversioned record layouts (DET-006). See
+//! `docs/LINTS.md` for the catalogue and [`rules`] for the
+//! implementations.
+//!
+//! The pass is dependency-free by construction: the offline build image
+//! vendors no `syn`, so [`lexer`] strips comments/literals lexically
+//! and rules match over that view. Suppression is per-line via
+//! `det:allow` pragmas ([`pragma`]) with mandatory reasons, which the
+//! reports surface ([`report`]). The `sla-autoscale lint` subcommand
+//! drives [`lint_paths`] and exits nonzero on any unsuppressed finding,
+//! which is what the CI `lint` job gates on.
+
+pub mod lexer;
+pub mod pragma;
+pub mod report;
+pub mod rules;
+
+pub use report::{
+    parse_json, render_human, render_json, Allowed, Finding, LintReport, JSON_SCHEMA_VERSION,
+};
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Invariant text attached to DET-000 (pragma hygiene) findings, which
+/// the driver emits from pragma parse errors rather than a rule pass.
+const DET000_INVARIANT: &str = "suppressions are reviewable artifacts: every det:allow names \
+                                a known rule and carries a non-empty reason";
+
+/// Lint files and/or directories (directories are walked recursively
+/// for `.rs` files, in sorted order). Findings and suppressions come
+/// back sorted by (file, line, rule) so output is stable across
+/// filesystems.
+pub fn lint_paths(paths: &[PathBuf]) -> Result<LintReport> {
+    let mut files = Vec::new();
+    for path in paths {
+        collect_rust_files(path, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut report = LintReport { files_scanned: files.len(), ..Default::default() };
+    for file in &files {
+        lint_file(file, &mut report)?;
+    }
+    report.findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+    report.allowed.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+    Ok(report)
+}
+
+/// Collect `.rs` files under `path` (a file given explicitly is taken
+/// as-is). Directory entries are visited in name order so the scan is
+/// deterministic regardless of readdir order.
+pub fn collect_rust_files(path: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let meta = std::fs::metadata(path)
+        .with_context(|| format!("lint: stat {}", path.display()))?;
+    if meta.is_file() {
+        out.push(path.to_path_buf());
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(path)
+        .with_context(|| format!("lint: reading dir {}", path.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for entry in entries {
+        if entry.is_dir() {
+            collect_rust_files(&entry, out)?;
+        } else if entry.extension().is_some_and(|e| e == "rs") {
+            out.push(entry);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule over one file, routing hits through the suppression
+/// table and pragma parse errors into DET-000 findings.
+fn lint_file(path: &Path, report: &mut LintReport) -> Result<()> {
+    let rel = path.to_string_lossy().replace('\\', "/");
+    let lines = lexer::scan_file(path)?;
+    let (pragmas, errors) = pragma::parse(&lines);
+    for err in errors {
+        report.findings.push(Finding {
+            file: rel.clone(),
+            line: err.line,
+            rule: "DET-000".to_string(),
+            message: err.message,
+            invariant: DET000_INVARIANT.to_string(),
+        });
+    }
+    let ctx = rules::FileCtx { rel: &rel, lines: &lines };
+    for rule in &rules::RULES {
+        for raw in (rule.check)(&ctx) {
+            let hit = pragmas.iter().find(|p| p.rule == rule.id && p.applies_to == raw.line);
+            match hit {
+                Some(p) => report.allowed.push(Allowed {
+                    file: rel.clone(),
+                    line: raw.line,
+                    rule: rule.id.to_string(),
+                    reason: p.reason.clone(),
+                }),
+                None => report.findings.push(Finding {
+                    file: rel.clone(),
+                    line: raw.line,
+                    rule: rule.id.to_string(),
+                    message: raw.message,
+                    invariant: rule.invariant.to_string(),
+                }),
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn write(dir: &TempDir, rel: &str, src: &str) -> PathBuf {
+        let path = dir.path().join(rel);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, src).unwrap();
+        path
+    }
+
+    #[test]
+    fn walker_finds_violations_and_sorts_output() {
+        let dir = TempDir::new().unwrap();
+        write(&dir, "b/late.rs", "fn f() { let t = std::time::Instant::now(); }\n");
+        write(&dir, "a/early.rs", "std::thread::spawn(work);\n");
+        write(&dir, "a/readme.txt", "Instant::now everywhere\n");
+        let report = lint_paths(&[dir.path().to_path_buf()]).unwrap();
+        assert_eq!(report.files_scanned, 2, "non-.rs files are skipped");
+        assert_eq!(report.findings.len(), 2);
+        assert!(report.findings[0].file.ends_with("a/early.rs"));
+        assert_eq!(report.findings[0].rule, "DET-004");
+        assert!(report.findings[1].file.ends_with("b/late.rs"));
+        assert_eq!(report.findings[1].rule, "DET-001");
+    }
+
+    #[test]
+    fn pragmas_suppress_and_surface_reasons() {
+        let dir = TempDir::new().unwrap();
+        write(
+            &dir,
+            "x.rs",
+            "// det:allow(DET-001, reason = \"status line, never journaled\")\n\
+             let t = std::time::Instant::now();\n",
+        );
+        let report = lint_paths(&[dir.path().to_path_buf()]).unwrap();
+        assert!(report.is_clean(), "findings: {:?}", report.findings);
+        assert_eq!(report.allowed.len(), 1);
+        assert_eq!(report.allowed[0].rule, "DET-001");
+        assert_eq!(report.allowed[0].reason, "status line, never journaled");
+        assert_eq!(report.allowed[0].line, 2, "records the suppressed line, not the pragma");
+    }
+
+    #[test]
+    fn wrong_rule_pragma_does_not_suppress() {
+        let dir = TempDir::new().unwrap();
+        write(
+            &dir,
+            "x.rs",
+            "let t = std::time::Instant::now(); // det:allow(DET-004, reason = \"wrong rule\")\n",
+        );
+        let report = lint_paths(&[dir.path().to_path_buf()]).unwrap();
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].rule, "DET-001");
+    }
+
+    #[test]
+    fn bad_pragmas_become_det000() {
+        let dir = TempDir::new().unwrap();
+        write(&dir, "x.rs", "// det:allow(DET-001)\nlet y = 1;\n");
+        let report = lint_paths(&[dir.path().to_path_buf()]).unwrap();
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].rule, "DET-000");
+        assert_eq!(report.findings[0].line, 1);
+    }
+
+    #[test]
+    fn explicit_file_arguments_are_linted_directly() {
+        let dir = TempDir::new().unwrap();
+        let file = write(&dir, "one.rs", "let r = rand::thread_rng();\n");
+        let report = lint_paths(&[file]).unwrap();
+        assert_eq!(report.files_scanned, 1);
+        assert_eq!(report.findings[0].rule, "DET-003");
+    }
+}

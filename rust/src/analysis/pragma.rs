@@ -1,0 +1,170 @@
+//! Suppression pragmas for the determinism lint.
+//!
+//! A pragma is a comment of the form
+//!
+//! ```text
+//! // det:allow(DET-001, reason = "CLI status line, never journaled")
+//! ```
+//!
+//! and suppresses findings of that rule on the line it annotates: the
+//! same line when it trails code, otherwise the next line that carries
+//! code. The reason is mandatory and is surfaced in both the human and
+//! JSON reports — a suppression without a defensible sentence is a
+//! finding in its own right (DET-000). Pragmas are recognized only at
+//! the *start* of a comment (after doc-comment sigils), so prose that
+//! merely mentions the syntax does not register.
+//!
+//! Reasons are plain `"…"` strings without escape handling; keep them
+//! to one simple sentence.
+
+use crate::analysis::lexer::SrcLine;
+
+/// Rule ids a pragma may name. DET-000 (pragma hygiene) is deliberately
+/// absent: a malformed suppression cannot suppress itself.
+pub const ALLOWED_RULES: [&str; 6] =
+    ["DET-001", "DET-002", "DET-003", "DET-004", "DET-005", "DET-006"];
+
+/// A well-formed suppression.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pragma {
+    /// Line the pragma comment sits on (1-based).
+    pub line: usize,
+    /// Rule id it suppresses, e.g. `DET-001`.
+    pub rule: String,
+    /// Mandatory justification, surfaced in reports.
+    pub reason: String,
+    /// Line whose findings it suppresses (0 when the pragma dangles at
+    /// end of file with no code after it).
+    pub applies_to: usize,
+}
+
+/// A comment that started like a pragma but failed to parse. Reported
+/// as DET-000.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PragmaError {
+    pub line: usize,
+    pub message: String,
+}
+
+/// Extract pragmas (and malformed attempts) from scanned lines.
+pub fn parse(lines: &[SrcLine]) -> (Vec<Pragma>, Vec<PragmaError>) {
+    let mut pragmas = Vec::new();
+    let mut errors = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let text = line.comment.trim_start_matches(['/', '!', '*', ' ', '\t']);
+        if !text.starts_with("det:allow") {
+            continue;
+        }
+        match parse_one(text) {
+            Ok((rule, reason)) => {
+                let applies_to = if line.code.trim().is_empty() {
+                    lines[idx + 1..]
+                        .iter()
+                        .find(|l| !l.code.trim().is_empty())
+                        .map_or(0, |l| l.number)
+                } else {
+                    line.number
+                };
+                pragmas.push(Pragma { line: line.number, rule, reason, applies_to });
+            }
+            Err(message) => errors.push(PragmaError { line: line.number, message }),
+        }
+    }
+    (pragmas, errors)
+}
+
+/// Parse `det:allow(DET-00X, reason = "…")` from the start of a
+/// comment; returns (rule, reason).
+fn parse_one(text: &str) -> Result<(String, String), String> {
+    let rest = text
+        .strip_prefix("det:allow")
+        .and_then(|r| r.trim_start().strip_prefix('('))
+        .ok_or_else(|| "det:allow must be followed by (RULE, reason = \"…\")".to_string())?;
+    let comma = rest
+        .find(',')
+        .ok_or_else(|| "det:allow needs a reason: det:allow(RULE, reason = \"…\")".to_string())?;
+    let rule = rest[..comma].trim().to_string();
+    if !ALLOWED_RULES.contains(&rule.as_str()) {
+        return Err(format!("unknown rule id `{rule}` in det:allow"));
+    }
+    let tail = rest[comma + 1..].trim_start();
+    let tail = tail
+        .strip_prefix("reason")
+        .map(|t| t.trim_start())
+        .and_then(|t| t.strip_prefix('='))
+        .map(|t| t.trim_start())
+        .ok_or_else(|| "det:allow reason must be written `reason = \"…\"`".to_string())?;
+    let tail = tail
+        .strip_prefix('"')
+        .ok_or_else(|| "det:allow reason must be a \"quoted\" string".to_string())?;
+    let close = tail
+        .find('"')
+        .ok_or_else(|| "det:allow reason string is not closed".to_string())?;
+    let reason = tail[..close].trim().to_string();
+    if reason.is_empty() {
+        return Err("det:allow reason must not be empty".to_string());
+    }
+    if !tail[close + 1..].trim_start().starts_with(')') {
+        return Err("det:allow is missing the closing `)`".to_string());
+    }
+    Ok((rule, reason))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::scan_text;
+
+    #[test]
+    fn trailing_pragma_applies_to_its_own_line() {
+        let lines = scan_text("let t = now(); // det:allow(DET-001, reason = \"display only\")\n");
+        let (pragmas, errors) = parse(&lines);
+        assert!(errors.is_empty());
+        assert_eq!(pragmas.len(), 1);
+        assert_eq!(pragmas[0].rule, "DET-001");
+        assert_eq!(pragmas[0].reason, "display only");
+        assert_eq!(pragmas[0].applies_to, 1);
+    }
+
+    #[test]
+    fn standalone_pragma_applies_to_next_code_line() {
+        let src = "// det:allow(DET-004, reason = \"serve loop owns this worker\")\n\
+                   \n\
+                   std::thread::spawn(work);\n";
+        let (pragmas, errors) = parse(&scan_text(src));
+        assert!(errors.is_empty());
+        assert_eq!(pragmas[0].line, 1);
+        assert_eq!(pragmas[0].applies_to, 3);
+    }
+
+    #[test]
+    fn missing_reason_unknown_rule_and_unclosed_string_are_errors() {
+        for bad in [
+            "// det:allow(DET-001)\n",
+            "// det:allow(DET-999, reason = \"x\")\n",
+            "// det:allow(DET-001, reason = \"\")\n",
+            "// det:allow(DET-001, reason = \"open\n",
+            "// det:allow(DET-001, because = \"x\")\n",
+        ] {
+            let (pragmas, errors) = parse(&scan_text(bad));
+            assert!(pragmas.is_empty(), "accepted: {bad}");
+            assert_eq!(errors.len(), 1, "not rejected: {bad}");
+        }
+    }
+
+    #[test]
+    fn prose_mentioning_the_syntax_is_ignored() {
+        let src = "// Suppress with det:allow(DET-001, reason = \"…\") pragmas.\nlet x = 1;\n";
+        let (pragmas, errors) = parse(&scan_text(src));
+        assert!(pragmas.is_empty());
+        assert!(errors.is_empty());
+    }
+
+    #[test]
+    fn doc_comment_pragmas_parse_past_the_sigils() {
+        let src = "/// det:allow(DET-003, reason = \"fixture rng\")\nfn f() {}\n";
+        let (pragmas, _) = parse(&scan_text(src));
+        assert_eq!(pragmas.len(), 1);
+        assert_eq!(pragmas[0].applies_to, 2);
+    }
+}

@@ -1,0 +1,393 @@
+//! Reporting for the determinism lint: finding/suppression records, the
+//! human renderer, and a hand-rolled JSON renderer + parser (the crate
+//! is deliberately serde-free; same idiom as `util::bench`'s report
+//! files). The JSON schema is versioned via [`JSON_SCHEMA_VERSION`] and
+//! round-trips through [`parse_json`], which the lint tests assert.
+
+use anyhow::{bail, Context, Result};
+
+/// Version stamped into the `"schema"` field of the JSON report.
+pub const JSON_SCHEMA_VERSION: u64 = 1;
+
+/// One unsuppressed rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Display path, `/`-separated.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule id (`DET-000` … `DET-006`).
+    pub rule: String,
+    /// What matched, with the offending pattern or binding named.
+    pub message: String,
+    /// The invariant the rule enforces, copied onto every finding.
+    pub invariant: String,
+}
+
+/// One suppressed finding: a `det:allow` pragma that fired. Surfaced in
+/// every report so suppressions stay visible and reviewable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allowed {
+    pub file: String,
+    /// Line of the suppressed finding (not of the pragma).
+    pub line: usize,
+    pub rule: String,
+    /// The pragma's mandatory justification.
+    pub reason: String,
+}
+
+/// A full lint run over a set of files.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub allowed: Vec<Allowed>,
+}
+
+impl LintReport {
+    /// True when the tree is clean (suppressed findings do not count).
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Render the report for terminals: one block per finding, one line per
+/// surfaced suppression, then a summary line.
+pub fn render_human(report: &LintReport) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!("{}:{}: {} {}\n", f.file, f.line, f.rule, f.message));
+        out.push_str(&format!("    invariant: {}\n", f.invariant));
+    }
+    for a in &report.allowed {
+        out.push_str(&format!("allowed {}:{}: {} — {}\n", a.file, a.line, a.rule, a.reason));
+    }
+    out.push_str(&format!(
+        "lint: {} finding(s), {} allowed suppression(s), {} file(s) scanned\n",
+        report.findings.len(),
+        report.allowed.len(),
+        report.files_scanned
+    ));
+    out
+}
+
+/// Render the report as JSON (schema v1, stable field order).
+pub fn render_json(report: &LintReport) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"schema\": {JSON_SCHEMA_VERSION},\n"));
+    out.push_str(&format!("  \"files_scanned\": {},\n", report.files_scanned));
+    out.push_str("  \"findings\": [\n");
+    for (i, f) in report.findings.iter().enumerate() {
+        let sep = if i + 1 < report.findings.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"message\": {}, \
+             \"invariant\": {}}}{sep}\n",
+            json_str(&f.file),
+            f.line,
+            json_str(&f.rule),
+            json_str(&f.message),
+            json_str(&f.invariant)
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"allowed\": [\n");
+    for (i, a) in report.allowed.iter().enumerate() {
+        let sep = if i + 1 < report.allowed.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"reason\": {}}}{sep}\n",
+            json_str(&a.file),
+            a.line,
+            json_str(&a.rule),
+            json_str(&a.reason)
+        ));
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Parse a schema-v1 JSON report back into a [`LintReport`]. Exists so
+/// CI consumers and the round-trip test don't re-implement the schema;
+/// handles exactly the subset [`render_json`] emits.
+pub fn parse_json(text: &str) -> Result<LintReport> {
+    let mut cur = Cursor { bytes: text.as_bytes(), at: 0 };
+    cur.expect(b'{')?;
+    let mut report = LintReport::default();
+    let mut schema: Option<u64> = None;
+    loop {
+        let key = cur.string().context("report key")?;
+        cur.expect(b':')?;
+        match key.as_str() {
+            "schema" => schema = Some(cur.number()?),
+            "files_scanned" => report.files_scanned = cur.number()? as usize,
+            "findings" => {
+                for obj in cur.objects()? {
+                    report.findings.push(Finding {
+                        file: field_str(&obj, "file")?,
+                        line: field_num(&obj, "line")? as usize,
+                        rule: field_str(&obj, "rule")?,
+                        message: field_str(&obj, "message")?,
+                        invariant: field_str(&obj, "invariant")?,
+                    });
+                }
+            }
+            "allowed" => {
+                for obj in cur.objects()? {
+                    report.allowed.push(Allowed {
+                        file: field_str(&obj, "file")?,
+                        line: field_num(&obj, "line")? as usize,
+                        rule: field_str(&obj, "rule")?,
+                        reason: field_str(&obj, "reason")?,
+                    });
+                }
+            }
+            other => bail!("unknown report key `{other}`"),
+        }
+        if !cur.comma_or_close(b'}')? {
+            break;
+        }
+    }
+    match schema {
+        Some(JSON_SCHEMA_VERSION) => Ok(report),
+        Some(v) => bail!("unsupported lint report schema {v}"),
+        None => bail!("lint report has no schema field"),
+    }
+}
+
+/// A parsed flat-object field value.
+enum Val {
+    Str(String),
+    Num(u64),
+}
+
+fn field_str(obj: &[(String, Val)], key: &str) -> Result<String> {
+    match obj.iter().find(|(k, _)| k == key) {
+        Some((_, Val::Str(s))) => Ok(s.clone()),
+        _ => bail!("missing string field `{key}` in lint report"),
+    }
+}
+
+fn field_num(obj: &[(String, Val)], key: &str) -> Result<u64> {
+    match obj.iter().find(|(k, _)| k == key) {
+        Some((_, Val::Num(n))) => Ok(*n),
+        _ => bail!("missing numeric field `{key}` in lint report"),
+    }
+}
+
+/// Byte cursor over the JSON subset `render_json` emits: objects with
+/// string/number values, arrays of such objects, no nesting beyond that.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl Cursor<'_> {
+    fn skip_ws(&mut self) {
+        while self.bytes.get(self.at).is_some_and(|b| b.is_ascii_whitespace()) {
+            self.at += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        self.skip_ws();
+        if self.bytes.get(self.at) != Some(&b) {
+            bail!("lint report: expected `{}` at byte {}", b as char, self.at);
+        }
+        self.at += 1;
+        Ok(())
+    }
+
+    /// After a value: consume `,` (returns true) or `close` (false).
+    fn comma_or_close(&mut self, close: u8) -> Result<bool> {
+        self.skip_ws();
+        match self.bytes.get(self.at) {
+            Some(b',') => {
+                self.at += 1;
+                Ok(true)
+            }
+            Some(&b) if b == close => {
+                self.at += 1;
+                Ok(false)
+            }
+            _ => bail!("lint report: expected `,` or `{}` at byte {}", close as char, self.at),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bytes.get(self.at) {
+                Some(b'"') => {
+                    self.at += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    let esc = self.bytes.get(self.at + 1).copied();
+                    self.at += 2;
+                    match esc {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'u') => {
+                            let hex = self
+                                .bytes
+                                .get(self.at..self.at + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .and_then(char::from_u32);
+                            match hex {
+                                Some(c) => {
+                                    out.push(c);
+                                    self.at += 4;
+                                }
+                                None => bail!("lint report: bad \\u escape at byte {}", self.at),
+                            }
+                        }
+                        _ => bail!("lint report: bad escape at byte {}", self.at),
+                    }
+                }
+                Some(_) => {
+                    // strings are UTF-8; copy the full scalar value
+                    let rest = std::str::from_utf8(&self.bytes[self.at..])
+                        .context("lint report: invalid UTF-8")?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.at += c.len_utf8();
+                }
+                None => bail!("lint report: unterminated string"),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<u64> {
+        self.skip_ws();
+        let start = self.at;
+        while self.bytes.get(self.at).is_some_and(u8::is_ascii_digit) {
+            self.at += 1;
+        }
+        if self.at == start {
+            bail!("lint report: expected a number at byte {start}");
+        }
+        std::str::from_utf8(&self.bytes[start..self.at])
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("lint report: bad number at byte {start}"))
+    }
+
+    /// Parse `[ {…}, {…} ]` into flat key/value lists.
+    fn objects(&mut self) -> Result<Vec<Vec<(String, Val)>>> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.bytes.get(self.at) == Some(&b']') {
+            self.at += 1;
+            return Ok(out);
+        }
+        loop {
+            self.expect(b'{')?;
+            let mut obj = Vec::new();
+            loop {
+                let key = self.string()?;
+                self.expect(b':')?;
+                self.skip_ws();
+                let val = if self.bytes.get(self.at) == Some(&b'"') {
+                    Val::Str(self.string()?)
+                } else {
+                    Val::Num(self.number()?)
+                };
+                obj.push((key, val));
+                if !self.comma_or_close(b'}')? {
+                    break;
+                }
+            }
+            out.push(obj);
+            if !self.comma_or_close(b']')? {
+                break;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LintReport {
+        LintReport {
+            files_scanned: 31,
+            findings: vec![Finding {
+                file: "rust/src/sim/engine.rs".to_string(),
+                line: 42,
+                rule: "DET-001".to_string(),
+                message: "wall-clock read `Instant::now` outside the allowlist".to_string(),
+                invariant: "results are pure functions of job keys".to_string(),
+            }],
+            allowed: vec![Allowed {
+                file: "rust/src/main.rs".to_string(),
+                line: 371,
+                rule: "DET-001".to_string(),
+                reason: "CLI status line, never journaled".to_string(),
+            }],
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let report = sample();
+        let parsed = parse_json(&render_json(&report)).unwrap();
+        assert_eq!(parsed, report);
+    }
+
+    #[test]
+    fn json_round_trips_empty() {
+        let report = LintReport { files_scanned: 7, ..Default::default() };
+        let parsed = parse_json(&render_json(&report)).unwrap();
+        assert_eq!(parsed, report);
+    }
+
+    #[test]
+    fn json_escapes_round_trip() {
+        let mut report = sample();
+        report.findings[0].message = "quote \" slash \\ tab \t end".to_string();
+        let parsed = parse_json(&render_json(&report)).unwrap();
+        assert_eq!(parsed, report);
+    }
+
+    #[test]
+    fn wrong_schema_is_rejected() {
+        let text = render_json(&sample()).replace("\"schema\": 1", "\"schema\": 99");
+        assert!(parse_json(&text).is_err());
+    }
+
+    #[test]
+    fn human_report_names_rule_file_and_reason() {
+        let text = render_human(&sample());
+        assert!(text.contains("rust/src/sim/engine.rs:42: DET-001"));
+        assert!(text.contains("invariant:"));
+        assert!(text.contains("allowed rust/src/main.rs:371"));
+        assert!(text.contains("1 finding(s), 1 allowed suppression(s), 31 file(s) scanned"));
+    }
+}

@@ -1,0 +1,541 @@
+//! The determinism rules (DET-001 … DET-006).
+//!
+//! Each rule is a pure function over one file's stripped lines (see
+//! [`crate::analysis::lexer`]) plus its repo-relative path. Rules never
+//! see comments or literal contents, so pattern strings below cannot
+//! match themselves, doc prose, or journal magic bytes. Lines inside
+//! `#[cfg(test)] mod` regions are exempt everywhere: the invariants
+//! guard shipped result paths, and tests legitimately race workers and
+//! read clocks.
+//!
+//! The rules are lexical approximations, deliberately biased toward
+//! false positives in result paths — a spurious finding costs one
+//! `det:allow` pragma with a reviewable reason, while a missed
+//! wall-clock read or hash-order iteration silently breaks the
+//! bit-identity contract every merge path relies on.
+
+use crate::analysis::lexer::SrcLine;
+
+/// One file as the rules see it.
+pub struct FileCtx<'a> {
+    /// Display path, `/`-separated (may be absolute; rules only inspect
+    /// trailing components).
+    pub rel: &'a str,
+    pub lines: &'a [SrcLine],
+}
+
+/// A rule hit before it is joined with file/rule metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RawFinding {
+    pub line: usize,
+    pub message: String,
+}
+
+/// A named determinism rule.
+pub struct Rule {
+    pub id: &'static str,
+    pub title: &'static str,
+    /// The invariant sentence attached to every finding.
+    pub invariant: &'static str,
+    pub check: fn(&FileCtx) -> Vec<RawFinding>,
+}
+
+/// Modules whose outputs land in result tables, journals, or stores.
+/// DET-002/005/006 apply only here; elsewhere hash iteration cannot
+/// leak into merged artifacts.
+const RESULT_MODULES: [&str; 5] = ["sim", "scenario", "autoscale", "sentiment", "workload"];
+
+/// Every rule, in id order. DET-000 (pragma hygiene) is emitted by the
+/// driver from pragma parse errors, not listed here.
+pub const RULES: [Rule; 6] = [
+    Rule {
+        id: "DET-001",
+        title: "no wall-clock reads outside the calibration allowlist",
+        invariant: "results are pure functions of job keys; wall-clock enters only via \
+                    cost-model calibration (scenario/plan.rs), lease heartbeats \
+                    (scenario/steal.rs) and util::bench timing",
+        check: det001,
+    },
+    Rule {
+        id: "DET-002",
+        title: "no HashMap/HashSet iteration in result-bearing modules",
+        invariant: "iteration order over unordered containers varies per process; result \
+                    paths must use BTreeMap/BTreeSet or sort explicitly before emitting",
+        check: det002,
+    },
+    Rule {
+        id: "DET-003",
+        title: "no unseeded randomness outside rng.rs",
+        invariant: "all randomness flows from the seeded splitmix generator in rng.rs so \
+                    every replication is replayable from its scenario key",
+        check: det003,
+    },
+    Rule {
+        id: "DET-004",
+        title: "no thread spawning outside the sanctioned runners",
+        invariant: "scenario/runner.rs and scenario/steal.rs own all scheduling; results \
+                    must merge bit-identically for every interleaving they produce",
+        check: det004,
+    },
+    Rule {
+        id: "DET-005",
+        title: "no float accumulation over unordered iterators in result paths",
+        invariant: "float addition is non-associative; summing or folding in hash order \
+                    makes the result depend on the process, not the scenario",
+        check: det005,
+    },
+    Rule {
+        id: "DET-006",
+        title: "record serializers pin a format version in the same file",
+        invariant: "journal/store layouts must carry a *VERSION const next to the code \
+                    that writes them, so readers can reject foreign layouts instead of \
+                    merging garbage",
+        check: det006,
+    },
+];
+
+/// Look up a rule by id.
+pub fn rule_by_id(id: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+// ---------------------------------------------------------------------------
+// DET-001 · wall clock
+
+fn det001(ctx: &FileCtx) -> Vec<RawFinding> {
+    if path_ends_with(ctx.rel, "scenario/plan.rs") || path_ends_with(ctx.rel, "scenario/steal.rs")
+    {
+        return Vec::new();
+    }
+    let in_util = path_ends_with(ctx.rel, "util.rs");
+    let mut out = Vec::new();
+    for line in live(ctx) {
+        if in_util && (line.module == "bench" || line.module.starts_with("bench::")) {
+            continue;
+        }
+        for pat in ["Instant::now", "SystemTime::now"] {
+            if line.code.contains(pat) {
+                out.push(RawFinding {
+                    line: line.number,
+                    message: format!("wall-clock read `{pat}` outside the calibration allowlist"),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// DET-002 · hash iteration
+
+/// Methods that iterate a container in storage order.
+const ITER_METHODS: [&str; 7] = [
+    ".iter()",
+    ".keys()",
+    ".values()",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".drain(",
+];
+
+fn det002(ctx: &FileCtx) -> Vec<RawFinding> {
+    if !is_result_bearing(ctx.rel) {
+        return Vec::new();
+    }
+    let bindings = hash_bindings(ctx.lines);
+    if bindings.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for line in live(ctx) {
+        if let Some(ident) = iteration_hit(&line.code, &bindings) {
+            out.push(RawFinding {
+                line: line.number,
+                message: format!(
+                    "iteration over unordered HashMap/HashSet binding `{ident}` in a \
+                     result-bearing module"
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// DET-003 · unseeded randomness
+
+fn det003(ctx: &FileCtx) -> Vec<RawFinding> {
+    if path_ends_with(ctx.rel, "rng.rs") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for line in live(ctx) {
+        for pat in ["thread_rng", "from_entropy", "rand::random", "OsRng", "getrandom"] {
+            if line.code.contains(pat) {
+                out.push(RawFinding {
+                    line: line.number,
+                    message: format!("unseeded randomness `{pat}` outside rng.rs"),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// DET-004 · thread spawning
+
+fn det004(ctx: &FileCtx) -> Vec<RawFinding> {
+    if path_ends_with(ctx.rel, "scenario/runner.rs")
+        || path_ends_with(ctx.rel, "scenario/steal.rs")
+    {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for line in live(ctx) {
+        for pat in ["thread::spawn", "thread::scope"] {
+            if line.code.contains(pat) {
+                out.push(RawFinding {
+                    line: line.number,
+                    message: format!(
+                        "`{pat}` outside the sanctioned runners (scenario/runner.rs, \
+                         scenario/steal.rs)"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// DET-005 · float accumulation in hash order
+
+const ACCUM_MARKERS: [&str; 3] = [".fold(", ".sum::<f64>()", ".sum::<f32>()"];
+
+fn det005(ctx: &FileCtx) -> Vec<RawFinding> {
+    if !is_result_bearing(ctx.rel) {
+        return Vec::new();
+    }
+    let bindings = hash_bindings(ctx.lines);
+    if bindings.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (start, end) in statements(ctx.lines) {
+        if ctx.lines[start].in_test {
+            continue;
+        }
+        let joined: String = ctx.lines[start..=end]
+            .iter()
+            .map(|l| l.code.as_str())
+            .collect::<Vec<_>>()
+            .join(" ");
+        let marker = ACCUM_MARKERS.iter().find(|m| joined.contains(**m));
+        let (Some(marker), Some(ident)) = (marker, iteration_hit(&joined, &bindings)) else {
+            continue;
+        };
+        let at = ctx.lines[start..=end]
+            .iter()
+            .find(|l| l.code.contains(marker))
+            .map_or(ctx.lines[start].number, |l| l.number);
+        out.push(RawFinding {
+            line: at,
+            message: format!(
+                "float accumulation `{marker}` over unordered binding `{ident}` — the sum \
+                 depends on hash order"
+            ),
+        });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// DET-006 · pinned format versions
+
+fn det006(ctx: &FileCtx) -> Vec<RawFinding> {
+    if !is_result_bearing(ctx.rel) {
+        return Vec::new();
+    }
+    let mut magic_line = 0usize;
+    let mut le_bytes_line = 0usize;
+    let mut writes = false;
+    let mut has_version = false;
+    for line in live(ctx) {
+        let code = &line.code;
+        if code.contains("const") && code.contains("MAGIC") && magic_line == 0 {
+            magic_line = line.number;
+        }
+        if code.contains("to_le_bytes") && le_bytes_line == 0 {
+            le_bytes_line = line.number;
+        }
+        if code.contains("write_all") || code.contains("fs::write") {
+            writes = true;
+        }
+        if code.contains("const") && code.contains("VERSION") {
+            has_version = true;
+        }
+    }
+    let trigger = if magic_line > 0 {
+        magic_line
+    } else if writes && le_bytes_line > 0 {
+        le_bytes_line
+    } else {
+        0
+    };
+    if trigger > 0 && !has_version {
+        return vec![RawFinding {
+            line: trigger,
+            message: "record serializer without a pinned *VERSION const in this file"
+                .to_string(),
+        }];
+    }
+    Vec::new()
+}
+
+// ---------------------------------------------------------------------------
+// shared helpers
+
+/// Non-test lines of a file.
+fn live<'a>(ctx: &FileCtx<'a>) -> impl Iterator<Item = &'a SrcLine> + 'a {
+    ctx.lines.iter().filter(|l| !l.in_test)
+}
+
+/// True when any path component names a result-bearing module (the file
+/// stem counts, so both `src/scenario/plan.rs` and a fixture under
+/// `lint_fixtures/scenario/` classify).
+fn is_result_bearing(rel: &str) -> bool {
+    rel.split(['/', '\\'])
+        .map(|c| c.strip_suffix(".rs").unwrap_or(c))
+        .any(|c| RESULT_MODULES.contains(&c))
+}
+
+/// Component-wise path suffix match: `util.rs` matches `…/util.rs` but
+/// never `…/myutil.rs`.
+fn path_ends_with(rel: &str, suffix: &str) -> bool {
+    let r: Vec<&str> = rel.split(['/', '\\']).collect();
+    let s: Vec<&str> = suffix.split('/').collect();
+    r.len() >= s.len() && r[r.len() - s.len()..] == s[..]
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Word-bounded occurrences of `ident` in `code`.
+fn ident_positions(code: &str, ident: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(ident) {
+        let at = from + pos;
+        from = at + ident.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = !bytes.get(at + ident.len()).is_some_and(|&b| is_ident_byte(b));
+        if before_ok && after_ok {
+            out.push(at);
+        }
+    }
+    out
+}
+
+/// Identifiers bound to a `HashMap`/`HashSet` anywhere in the file:
+/// type-annotated bindings, parameters and fields (`name: &mut
+/// HashMap<…>`) plus constructor bindings (`let m = HashMap::new()`).
+/// Wrapped types (`Mutex<HashMap<…>>`) bind no identifier and are
+/// skipped — their access sites go through lock guards the lexical
+/// pass cannot track.
+fn hash_bindings(lines: &[SrcLine]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for line in lines.iter().filter(|l| !l.in_test) {
+        let code = &line.code;
+        for ty in ["HashMap", "HashSet"] {
+            for at in ident_positions(code, ty) {
+                let rest = &code[at + ty.len()..];
+                let bound = if rest.starts_with('<') {
+                    binding_before_type(&code[..at])
+                } else if rest.starts_with("::") {
+                    binding_before_ctor(&code[..at])
+                } else {
+                    None
+                };
+                if let Some(id) = bound {
+                    out.push(id);
+                }
+            }
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// For `IDENT: [&][mut] [std::collections::]HashMap<`, the identifier.
+fn binding_before_type(prefix: &str) -> Option<String> {
+    let mut p = prefix.trim_end();
+    loop {
+        let before = p;
+        for suf in ["std::collections::", "collections::", "&", "mut"] {
+            if let Some(stripped) = p.strip_suffix(suf) {
+                p = stripped;
+            }
+        }
+        p = p.trim_end();
+        if p == before {
+            break;
+        }
+    }
+    // exactly one `:` — `foo::HashMap` is a path, not a binding
+    let q = p.strip_suffix(':')?;
+    if q.ends_with(':') {
+        return None;
+    }
+    trailing_ident(q.trim_end())
+}
+
+/// For `IDENT = HashMap::…`, the identifier.
+fn binding_before_ctor(prefix: &str) -> Option<String> {
+    let p = prefix.trim_end().strip_suffix('=')?;
+    trailing_ident(p.trim_end())
+}
+
+fn trailing_ident(s: &str) -> Option<String> {
+    let tail: String = s
+        .chars()
+        .rev()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect::<String>()
+        .chars()
+        .rev()
+        .collect();
+    let first = tail.chars().next()?;
+    if first.is_ascii_digit() {
+        return None;
+    }
+    Some(tail)
+}
+
+/// The bound identifier this code iterates, if any: either
+/// `ident.<iter method>` or a `for … in` expression mentioning it.
+fn iteration_hit(code: &str, bindings: &[String]) -> Option<String> {
+    for b in bindings {
+        for at in ident_positions(code, b) {
+            let rest = &code[at + b.len()..];
+            if ITER_METHODS.iter().any(|m| rest.starts_with(m)) {
+                return Some(b.clone());
+            }
+        }
+    }
+    if let Some(expr) = for_in_expr(code) {
+        for b in bindings {
+            if !ident_positions(expr, b).is_empty() {
+                return Some(b.clone());
+            }
+        }
+    }
+    None
+}
+
+/// The iterated expression of a `for … in EXPR {` on this line.
+fn for_in_expr(code: &str) -> Option<&str> {
+    for at in ident_positions(code, "for") {
+        let rest = &code[at + 3..];
+        if let Some(inpos) = rest.find(" in ") {
+            let expr = &rest[inpos + 4..];
+            let end = expr.find('{').unwrap_or(expr.len());
+            return Some(&expr[..end]);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::scan_text;
+
+    fn run(rule_id: &str, rel: &str, src: &str) -> Vec<RawFinding> {
+        let lines = scan_text(src);
+        let ctx = FileCtx { rel, lines: &lines };
+        (rule_by_id(rule_id).unwrap().check)(&ctx)
+    }
+
+    #[test]
+    fn det001_fires_outside_allowlist_only() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(run("DET-001", "rust/src/sim/engine.rs", src).len(), 1);
+        assert!(run("DET-001", "rust/src/scenario/steal.rs", src).is_empty());
+        assert!(run("DET-001", "rust/src/scenario/plan.rs", src).is_empty());
+    }
+
+    #[test]
+    fn det001_allows_util_bench_module_but_not_util_toplevel() {
+        let in_bench = "pub mod bench {\n    fn t() { let x = Instant::now(); }\n}\n";
+        assert!(run("DET-001", "rust/src/util.rs", in_bench).is_empty());
+        let at_top = "fn t() { let x = Instant::now(); }\n";
+        assert_eq!(run("DET-001", "rust/src/util.rs", at_top).len(), 1);
+    }
+
+    #[test]
+    fn det002_catches_for_loops_and_iter_methods() {
+        let src = "use std::collections::HashMap;\n\
+                   pub fn t(rows: &HashMap<u64, f64>) {\n\
+                   \x20   for (k, v) in rows.iter() { use_it(k, v); }\n\
+                   }\n";
+        let hits = run("DET-002", "rust/src/scenario/table.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 3);
+        assert!(run("DET-002", "rust/src/experiments/table.rs", src).is_empty());
+    }
+
+    #[test]
+    fn det002_ignores_lookups_and_btreemaps() {
+        let src = "use std::collections::HashMap;\n\
+                   pub fn t(rows: &HashMap<u64, f64>) -> Option<f64> {\n\
+                   \x20   rows.get(&7).copied()\n\
+                   }\n";
+        assert!(run("DET-002", "rust/src/scenario/table.rs", src).is_empty());
+        let b = "pub fn t(rows: &std::collections::BTreeMap<u64, f64>) {\n\
+                 \x20   for (k, v) in rows.iter() { use_it(k, v); }\n\
+                 }\n";
+        assert!(run("DET-002", "rust/src/scenario/table.rs", b).is_empty());
+    }
+
+    #[test]
+    fn det003_and_det004_scope_by_file() {
+        let rng = "let r = rand::thread_rng();\n";
+        assert_eq!(run("DET-003", "rust/src/sim/engine.rs", rng).len(), 1);
+        assert!(run("DET-003", "rust/src/rng.rs", rng).is_empty());
+        let sp = "std::thread::spawn(work);\n";
+        assert_eq!(run("DET-004", "rust/src/coordinator/mod.rs", sp).len(), 1);
+        assert!(run("DET-004", "rust/src/scenario/runner.rs", sp).is_empty());
+    }
+
+    #[test]
+    fn det005_flags_multiline_hash_sums() {
+        let src = "use std::collections::HashMap;\n\
+                   pub fn total(m: &HashMap<u64, f64>) -> f64 {\n\
+                   \x20   m.values()\n\
+                   \x20       .sum::<f64>()\n\
+                   }\n";
+        let hits = run("DET-005", "rust/src/scenario/table.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 4);
+    }
+
+    #[test]
+    fn det006_requires_version_next_to_magic() {
+        let bad = "pub const MAGIC: [u8; 8] = *b\"FIXTURE0\";\nfn w() { emit(&MAGIC); }\n";
+        assert_eq!(run("DET-006", "rust/src/workload/store.rs", bad).len(), 1);
+        let good = "pub const MAGIC: [u8; 8] = *b\"FIXTURE0\";\n\
+                    pub const FORMAT_VERSION: u32 = 1;\n";
+        assert!(run("DET-006", "rust/src/workload/store.rs", good).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { let x = Instant::now(); }\n}\n";
+        assert!(run("DET-001", "rust/src/sim/engine.rs", src).is_empty());
+    }
+}

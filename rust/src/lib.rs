@@ -37,6 +37,8 @@
 //! determinism invariants.
 
 #[warn(missing_docs)]
+pub mod analysis;
+#[warn(missing_docs)]
 pub mod autoscale;
 pub mod config;
 pub mod coordinator;

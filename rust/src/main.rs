@@ -68,6 +68,15 @@ USAGE:
       baseline; exit non-zero if any gated `after`/`current` metric
       regressed by more than P percent (default 25). `pending`
       bootstrap baselines gate nothing.
+  sla-autoscale lint [--format json] [PATHS...]
+      Statically enforce the determinism invariants over rust/src (or
+      the given files/directories): DET-001 wall clock, DET-002 hash
+      iteration, DET-003 unseeded randomness, DET-004 stray threads,
+      DET-005 hash-order float accumulation, DET-006 unversioned record
+      layouts (catalogue: docs/LINTS.md). Suppress a finding with a
+      `det:allow(DET-00X, reason = ...)` comment pragma; reasons are
+      mandatory and surfaced in the report. Exits non-zero on any
+      unsuppressed finding, so CI gates on it.
 
 Algorithm SPECs (the scaler registry's string forms; composable with '+'):
   threshold-<pct>%   load-q<pct>%   appdata+<n>[@w<secs>]
@@ -368,6 +377,7 @@ fn main() -> Result<()> {
                 } else {
                     None
                 };
+                // det:allow(DET-001, reason = "CLI status line; elapsed secs never reach tables")
                 let started = std::time::Instant::now();
                 let outcome = scenario::run_stealing(&matrix, threads, dir, extra, &steal_cfg)?;
                 let results = scenario::merged_results(&matrix, dir)?;
@@ -436,6 +446,7 @@ fn main() -> Result<()> {
                 sinks.push(j);
             }
             let fan = scenario::Fanout::new(sinks);
+            // det:allow(DET-001, reason = "CLI status line; elapsed secs never reach tables")
             let started = std::time::Instant::now();
             let simulated = todo.jobs.len();
             let fresh = scenario::run_plan(&matrix, &todo.jobs, threads, &fan)?;
@@ -604,6 +615,38 @@ fn main() -> Result<()> {
                 );
             }
         }
+        Some("lint") => {
+            use sla_autoscale::analysis;
+            let format = args.opt("--format").unwrap_or("human");
+            if format != "human" && format != "json" {
+                bail!("lint: unknown --format {format:?} (expected `human` or `json`)");
+            }
+            // Collect path operands by hand: Args::positional would also
+            // pick up the value of --format.
+            let mut paths: Vec<std::path::PathBuf> = Vec::new();
+            let mut it = args.argv.iter().skip(1);
+            while let Some(a) = it.next() {
+                if a == "--format" {
+                    it.next();
+                } else if !a.starts_with("--") {
+                    paths.push(std::path::PathBuf::from(a));
+                }
+            }
+            if paths.is_empty() {
+                paths.push(std::path::PathBuf::from("rust/src"));
+            }
+            let report = analysis::lint_paths(&paths)?;
+            if format == "json" {
+                print!("{}", analysis::render_json(&report));
+            } else {
+                print!("{}", analysis::render_human(&report));
+            }
+            if !report.is_clean() {
+                // Non-zero exit gates CI; the report itself already
+                // printed, so skip anyhow's error banner.
+                std::process::exit(1);
+            }
+        }
         _ => {
             print!("{USAGE}");
         }
@@ -628,6 +671,7 @@ fn serve(opponent: &str, count: u64, artifacts: &str) -> Result<()> {
     let (tx, handle) = spawn_with(move || ModelEngine::load(&dir), ServeConfig::default());
     println!("serving BRA vs {opponent} through the PJRT sentiment model");
     let mut rng = Rng::new(42);
+    // det:allow(DET-001, reason = "live serving throughput summary; display only")
     let started = std::time::Instant::now();
     for (i, tw) in trace.iter().take(n).enumerate() {
         let intensity = tw.sentiment_opt().unwrap_or(0.2) as f64;

@@ -134,6 +134,7 @@ pub fn run_replications(
     max_reps: usize,
     wave: usize,
 ) -> ScenarioResult {
+    // det:allow(DET-001, reason = "feeds wall_secs, the journal's calibration-only field")
     let started = std::time::Instant::now();
     // Replication seeds: deterministic in (base seed, rep index).
     let lane_seed = |rep: u64| base_cfg.seed.wrapping_add(rep.wrapping_mul(7919));

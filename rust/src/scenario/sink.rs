@@ -354,7 +354,7 @@ pub fn read_journal_dir(dir: &Path) -> Result<Vec<JournalRecord>> {
     let mut paths: Vec<PathBuf> = Vec::new();
     for entry in entries {
         let path = entry?.path();
-        if path.extension().map_or(false, |e| e == "journal") {
+        if path.extension().is_some_and(|e| e == "journal") {
             paths.push(path);
         }
     }

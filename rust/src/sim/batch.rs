@@ -140,6 +140,10 @@ pub struct LaneResult {
 /// schedule insert. Tweet-outer / lane-inner order keeps each lane's
 /// RNG draw sequence identical to its serial run.
 #[allow(clippy::too_many_arguments)]
+// Index loops are the point here: every sweep walks several parallel SoA
+// lanes of the arena at once, which iterator zips would re-borrow-check
+// and de-vectorize.
+#[allow(clippy::needless_range_loop)]
 #[inline]
 fn admit_lanes(
     trace: &Trace,
@@ -194,6 +198,11 @@ fn admit_lanes(
 /// [`Simulator::run_with_scratch`] run of the same seed.
 ///
 /// [`Simulator::run_with_scratch`]: super::Simulator::run_with_scratch
+// The lockstep `for l in 0..r` lane sweeps index disjoint SoA arrays of
+// the arena in parallel; clippy's iterator rewrite would either zip
+// borrows the checker rejects or hide the lane index the RNG seeding
+// depends on.
+#[allow(clippy::needless_range_loop)]
 pub fn run_batch(
     trace: &Trace,
     cfg: &SimConfig,

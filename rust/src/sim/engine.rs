@@ -175,6 +175,10 @@ impl<'a> Simulator<'a> {
     /// Run `trace` under `scaler`, reusing `scratch`'s buffers. Results
     /// are identical to [`Simulator::run`]; replication sweeps that hand
     /// the same scratch to consecutive runs skip all hot-loop allocation.
+    // The step loop indexes `admitted`/`completed` while the scratch
+    // fields they live in stay mutably borrowed elsewhere in the body;
+    // clippy's iterator rewrite does not pass the borrow checker.
+    #[allow(clippy::needless_range_loop)]
     pub fn run_with_scratch(
         &self,
         trace: &Trace,

@@ -90,7 +90,7 @@ fn replay_on(
         }
 
         if in_flight.is_empty() {
-            if backlog.len() == 0 {
+            if backlog.is_empty() {
                 break;
             }
             continue;

@@ -161,7 +161,7 @@ pub fn prune(dir: &Path, max_bytes: u64) -> Result<(usize, u64)> {
     for entry in entries {
         let entry = entry?;
         let path = entry.path();
-        if path.extension().map_or(true, |e| e != "trace") {
+        if !path.extension().is_some_and(|e| e == "trace") {
             continue;
         }
         let Ok(meta) = entry.metadata() else { continue };

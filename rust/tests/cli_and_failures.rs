@@ -264,6 +264,38 @@ fn cli_matrix_rejects_bad_algo_and_opponent() {
     assert!(String::from_utf8_lossy(&out.stderr).contains("unknown opponent"));
 }
 
+#[test]
+fn cli_lint_flags_violations_and_exits_nonzero() {
+    let fixture = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/lint_fixtures/det001_violation.rs"
+    );
+    let out = bin().args(["lint", fixture]).output().unwrap();
+    assert!(!out.status.success(), "violating fixture must fail the lint");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("DET-001"), "{text}");
+    assert!(text.contains("invariant:"), "{text}");
+}
+
+#[test]
+fn cli_lint_clean_file_exits_zero_and_json_parses() {
+    let fixture =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/lint_fixtures/det001_ok.rs");
+    let out = bin().args(["lint", "--format", "json", fixture]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+    let report =
+        sla_autoscale::analysis::parse_json(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert!(report.is_clean());
+    assert_eq!(report.files_scanned, 1);
+}
+
+#[test]
+fn cli_lint_rejects_unknown_format() {
+    let out = bin().args(["lint", "--format", "yaml"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("format"));
+}
+
 // ---------- failure injection ----------
 
 #[test]

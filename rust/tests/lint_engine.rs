@@ -1,0 +1,117 @@
+//! Determinism-lint engine integration tests, driven by the fixture
+//! corpus under `rust/tests/lint_fixtures/`. Fixtures are plain data —
+//! test targets are explicit in Cargo.toml, so nothing here compiles
+//! them — and each one either violates exactly one rule, passes the
+//! near-miss variant of the same construct, or exercises suppression
+//! and pragma-hygiene paths.
+
+use sla_autoscale::analysis::{lint_paths, parse_json, render_human, render_json, LintReport};
+use std::path::PathBuf;
+
+fn fixture(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/lint_fixtures").join(rel)
+}
+
+fn lint_fixture(rel: &str) -> LintReport {
+    lint_paths(&[fixture(rel)]).unwrap_or_else(|e| panic!("linting {rel}: {e}"))
+}
+
+fn rules_of(report: &LintReport) -> Vec<&str> {
+    report.findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+#[test]
+fn violating_fixtures_fire_their_rule() {
+    for (rel, rule, line) in [
+        ("det001_violation.rs", "DET-001", 6),
+        ("det003_violation.rs", "DET-003", 4),
+        ("det004_violation.rs", "DET-004", 5),
+        ("scenario/det002_violation.rs", "DET-002", 8),
+        ("scenario/det006_violation.rs", "DET-006", 4),
+    ] {
+        let report = lint_fixture(rel);
+        assert_eq!(rules_of(&report), vec![rule], "{rel}");
+        assert_eq!(report.findings[0].line, line, "{rel}");
+        assert!(!report.findings[0].invariant.is_empty(), "{rel} carries invariant text");
+    }
+}
+
+#[test]
+fn passing_fixtures_are_clean() {
+    for rel in [
+        "det001_ok.rs",
+        "det003_ok.rs",
+        "det004_ok.rs",
+        "scenario/det002_ok.rs",
+        "scenario/det005_ok.rs",
+        "scenario/det006_ok.rs",
+    ] {
+        let report = lint_fixture(rel);
+        assert!(report.is_clean(), "{rel}: {:?}", report.findings);
+        assert!(report.allowed.is_empty(), "{rel} needs no suppressions");
+    }
+}
+
+#[test]
+fn hash_order_float_sum_fires_both_rules() {
+    let report = lint_fixture("scenario/det005_violation.rs");
+    let rules = rules_of(&report);
+    assert!(rules.contains(&"DET-005"), "rules: {rules:?}");
+    assert!(rules.contains(&"DET-002"), "the iteration itself is also flagged: {rules:?}");
+    for f in &report.findings {
+        assert_eq!(f.line, 7, "both anchor on the accumulation line");
+    }
+}
+
+#[test]
+fn suppressions_silence_findings_and_surface_reasons() {
+    let report = lint_fixture("suppressed_ok.rs");
+    assert!(report.is_clean(), "findings: {:?}", report.findings);
+    assert_eq!(report.allowed.len(), 2, "trailing and standalone pragma forms both apply");
+    assert_eq!(report.allowed[0].line, 6);
+    assert_eq!(report.allowed[1].line, 11);
+    for a in &report.allowed {
+        assert_eq!(a.rule, "DET-001");
+        assert!(a.reason.starts_with("fixture:"), "reason surfaced verbatim: {:?}", a.reason);
+    }
+}
+
+#[test]
+fn malformed_pragmas_become_det000_and_do_not_suppress() {
+    let report = lint_fixture("bad_pragma.rs");
+    assert_eq!(rules_of(&report), vec!["DET-000", "DET-001", "DET-000"]);
+    assert_eq!(report.findings[0].line, 4, "missing reason");
+    assert_eq!(report.findings[1].line, 6, "the broken pragma suppressed nothing");
+    assert_eq!(report.findings[2].line, 9, "unknown rule id");
+    assert!(report.allowed.is_empty());
+}
+
+#[test]
+fn corpus_walk_is_deterministic_and_json_round_trips() {
+    let root = fixture("");
+    let report = lint_paths(&[root.clone()]).unwrap();
+    assert_eq!(report.files_scanned, 14);
+    assert_eq!(report.findings.len(), 10);
+    assert_eq!(report.allowed.len(), 2);
+    let sorted = report
+        .findings
+        .windows(2)
+        .all(|w| (&w[0].file, w[0].line, &w[0].rule) <= (&w[1].file, w[1].line, &w[1].rule));
+    assert!(sorted, "findings sorted by (file, line, rule)");
+
+    let again = lint_paths(&[root]).unwrap();
+    assert_eq!(render_json(&report), render_json(&again), "byte-identical across runs");
+
+    let parsed = parse_json(&render_json(&report)).unwrap();
+    assert_eq!(parsed, report, "JSON round-trip preserves every field");
+}
+
+#[test]
+fn human_report_names_rule_file_line_and_invariant() {
+    let report = lint_fixture("det001_violation.rs");
+    let text = render_human(&report);
+    assert!(text.contains("DET-001"), "{text}");
+    assert!(text.contains("det001_violation.rs:6"), "{text}");
+    assert!(text.contains("invariant:"), "{text}");
+    assert!(text.contains("1 finding(s)"), "{text}");
+}

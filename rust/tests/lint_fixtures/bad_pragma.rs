@@ -1,0 +1,10 @@
+//! Pragma-hygiene fixture: each malformed suppression below must become
+//! a DET-000 finding (and must not suppress the violation it precedes).
+
+// det:allow(DET-001)
+pub fn missing_reason() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+// det:allow(DET-999, reason = "no such rule")
+pub fn unknown_rule() {}

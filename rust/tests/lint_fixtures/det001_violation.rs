@@ -1,0 +1,11 @@
+//! DET-001 violating fixture: a wall-clock read outside the allowlist.
+//! Plain data for `lint_engine.rs` — never compiled (test targets are
+//! explicit in Cargo.toml).
+
+pub fn stamp_secs() -> f64 {
+    let started = std::time::Instant::now();
+    busy_work();
+    started.elapsed().as_secs_f64()
+}
+
+fn busy_work() {}

@@ -1,0 +1,7 @@
+//! DET-003 passing fixture: randomness derived from a scenario-keyed
+//! seed through the crate's own generator.
+
+pub fn jitter(seed: u64) -> u64 {
+    let mut r = crate::rng::Rng::new(seed);
+    r.below(1000)
+}

@@ -1,0 +1,6 @@
+//! DET-003 violating fixture: ambient randomness outside rng.rs.
+
+pub fn jitter() -> u64 {
+    let mut r = rand::thread_rng();
+    r.gen()
+}

@@ -1,0 +1,10 @@
+//! DET-004 passing fixture: the work stays on the calling thread; only
+//! scenario/runner.rs and scenario/steal.rs may schedule.
+
+pub fn fan_out(jobs: &[u64]) -> u64 {
+    let mut acc = 0u64;
+    for j in jobs {
+        acc = acc.wrapping_add(*j);
+    }
+    acc
+}

@@ -1,0 +1,6 @@
+//! DET-004 violating fixture: a thread spawned outside the sanctioned
+//! runners.
+
+pub fn fan_out() -> std::thread::JoinHandle<u64> {
+    std::thread::spawn(|| 42)
+}

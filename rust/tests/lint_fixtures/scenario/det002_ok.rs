@@ -1,0 +1,17 @@
+//! DET-002 passing fixture: ordered container, deterministic iteration.
+//! Hash lookups (`get`/`contains`) stay fine — only iteration order is
+//! the hazard.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub fn table(rows: &BTreeMap<u64, f64>) -> Vec<(u64, f64)> {
+    let mut out = Vec::new();
+    for (k, v) in rows.iter() {
+        out.push((*k, *v));
+    }
+    out
+}
+
+pub fn lookup(cache: &HashMap<u64, f64>, key: u64) -> Option<f64> {
+    cache.get(&key).copied()
+}

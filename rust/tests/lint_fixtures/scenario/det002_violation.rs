@@ -1,0 +1,12 @@
+//! DET-002 violating fixture: hash-order iteration in a result-bearing
+//! module (this file lives under a `scenario/` path component).
+
+use std::collections::HashMap;
+
+pub fn table(rows: &HashMap<u64, f64>) -> Vec<(u64, f64)> {
+    let mut out = Vec::new();
+    for (k, v) in rows.iter() {
+        out.push((*k, *v));
+    }
+    out
+}

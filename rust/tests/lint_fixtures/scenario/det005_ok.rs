@@ -1,0 +1,8 @@
+//! DET-005 passing fixture: accumulate over an ordered container so the
+//! non-associative float sum is a function of the data, not the process.
+
+use std::collections::BTreeMap;
+
+pub fn total_violation_pct(per_scenario: &BTreeMap<u64, f64>) -> f64 {
+    per_scenario.values().sum::<f64>()
+}

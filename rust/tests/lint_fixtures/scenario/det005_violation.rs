@@ -1,0 +1,8 @@
+//! DET-005 violating fixture: float accumulation over an unordered
+//! iterator in a result path. Also trips DET-002 (the iteration itself).
+
+use std::collections::HashMap;
+
+pub fn total_violation_pct(per_scenario: &HashMap<u64, f64>) -> f64 {
+    per_scenario.values().sum::<f64>()
+}

@@ -1,0 +1,13 @@
+//! DET-006 passing fixture: the serializer pins its format version next
+//! to the magic, so readers can reject foreign layouts.
+
+pub const MAGIC: [u8; 8] = *b"FIXTURE\0";
+pub const FORMAT_VERSION: u32 = 1;
+
+pub fn header(n: u64) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&n.to_le_bytes());
+    out
+}

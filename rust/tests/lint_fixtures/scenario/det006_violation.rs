@@ -1,0 +1,11 @@
+//! DET-006 violating fixture: a record layout with magic bytes but no
+//! pinned format version in the file that serializes it.
+
+pub const MAGIC: [u8; 8] = *b"FIXTURE\0";
+
+pub fn header(n: u64) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&n.to_le_bytes());
+    out
+}

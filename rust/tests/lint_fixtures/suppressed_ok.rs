@@ -1,0 +1,12 @@
+//! Suppression fixture: both pragma placements — trailing the violating
+//! line, and on the line above it — must suppress, and both reasons must
+//! surface in the report's `allowed` list.
+
+pub fn stamp_trailing() -> std::time::Instant {
+    std::time::Instant::now() // det:allow(DET-001, reason = "fixture: timing is display-only")
+}
+
+pub fn stamp_above() -> std::time::Instant {
+    // det:allow(DET-001, reason = "fixture: standalone pragma form")
+    std::time::Instant::now()
+}

@@ -1,0 +1,48 @@
+//! Meta-test: the shipped tree must pass its own determinism lint.
+//!
+//! This is the static counterpart of `shard_journal`/`fleet_steal`: those
+//! prove bit-identity at runtime for the interleavings they happen to
+//! produce, this proves nobody has introduced a construct that could
+//! break it on an interleaving they didn't. Runs the real engine over
+//! `rust/src` — any unsuppressed finding fails the build, and every
+//! suppression must carry its reviewable reason.
+
+use sla_autoscale::analysis::lint_paths;
+use std::path::PathBuf;
+
+fn src_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/src")
+}
+
+#[test]
+fn shipped_tree_has_no_unsuppressed_findings() {
+    let report = lint_paths(&[src_root()]).unwrap();
+    assert!(report.files_scanned > 20, "walked the real tree, not a stub");
+    let listing: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}: {} {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(
+        report.is_clean(),
+        "determinism lint found violations in rust/src — fix them or add a \
+         det:allow pragma with a reviewable reason:\n{}",
+        listing.join("\n")
+    );
+}
+
+#[test]
+fn every_suppression_in_the_tree_is_justified() {
+    let report = lint_paths(&[src_root()]).unwrap();
+    assert!(!report.allowed.is_empty(), "the serve/CLI wall-clock pragmas should surface here");
+    for a in &report.allowed {
+        assert!(
+            !a.reason.trim().is_empty(),
+            "{}:{} suppresses {} without a reason",
+            a.file,
+            a.line,
+            a.rule
+        );
+        assert!(a.rule.starts_with("DET-0"), "{}:{} names unknown rule {}", a.file, a.line, a.rule);
+    }
+}
