@@ -1,0 +1,226 @@
+//! Hybrid reactive+proactive auto-scaler with an accuracy-gated switch.
+//!
+//! The survey's hybrid family (PAPERS.md): run a reactive rule and a
+//! proactive forecaster side by side and let *observed prediction
+//! accuracy* arbitrate. Here the reactive side is the classic CPU-usage
+//! [`ThresholdScaler`] and the proactive side the trend-extrapolating
+//! [`PredictiveScaler`]; every adaptation point both are consulted (so
+//! whichever is dormant keeps its state warm), the forecaster's past
+//! predictions are scored against the realized in-system counts, and an
+//! EMA of the relative prediction error selects whose decision is
+//! applied.
+//!
+//! The switch is *hysteretic*: control hands over to the forecaster only
+//! once the error EMA drops below [`HybridScaler::TRUST`], and falls
+//! back to the reactive rule only once it climbs above
+//! [`HybridScaler::DISTRUST`] — the gap between the two bounds means a
+//! workload sitting near the boundary cannot make the scaler oscillate
+//! (pinned by a property test: on a constant trace the mode changes at
+//! most once).
+//!
+//! All state (EMA, outstanding predictions, child state) evolves purely
+//! from the observation sequence, so serial, batch-kernel and threaded
+//! runs stay bit-identical.
+
+use super::{AutoScaler, Decision, Observation, PredictiveScaler, ThresholdScaler};
+use crate::delay::DelayModel;
+use std::collections::VecDeque;
+
+/// Reactive+proactive switcher arbitrated by observed forecast error.
+#[derive(Debug, Clone)]
+pub struct HybridScaler {
+    /// Reactive side: the CPU-usage threshold rule.
+    reactive: ThresholdScaler,
+    /// Proactive side: the linear-trend forecaster.
+    proactive: PredictiveScaler,
+    /// EMA of the relative prediction error (starts pessimistic, so the
+    /// scaler boots reactive until the forecaster earns trust).
+    err_ema: f64,
+    /// Forecasts not yet due: (target time, predicted in-system count).
+    outstanding: VecDeque<(f64, f64)>,
+    /// Whether the proactive side currently holds control.
+    proactive_active: bool,
+    /// Mode changes so far (observability for the hysteresis tests).
+    switches: u32,
+}
+
+impl HybridScaler {
+    /// Error EMA below which control hands over to the forecaster.
+    pub const TRUST: f64 = 0.20;
+
+    /// Error EMA above which control falls back to the reactive rule.
+    pub const DISTRUST: f64 = 0.35;
+
+    /// EMA smoothing weight given to each new error sample.
+    pub const EMA_ALPHA: f64 = 0.30;
+
+    /// Hybrid of `threshold-<upper>` (reactive) and
+    /// `predictive-h<horizon>s` (proactive); `upper` in (0, 1],
+    /// `horizon_secs` > 0. `model`/`quantile`/`class_mix` are the
+    /// forecaster's a-priori knowledge.
+    pub fn new(
+        model: DelayModel,
+        quantile: f64,
+        class_mix: [f64; 3],
+        upper: f64,
+        horizon_secs: f64,
+    ) -> Self {
+        assert!(upper > 0.0 && upper <= 1.0, "upper out of (0,1]: {upper}");
+        assert!(horizon_secs > 0.0, "horizon out of (0,inf): {horizon_secs}");
+        Self {
+            reactive: ThresholdScaler::new(upper),
+            proactive: PredictiveScaler::new(model, quantile, class_mix, horizon_secs),
+            err_ema: 1.0,
+            outstanding: VecDeque::new(),
+            proactive_active: false,
+            switches: 0,
+        }
+    }
+
+    /// Whether the forecaster currently holds control.
+    pub fn proactive_active(&self) -> bool {
+        self.proactive_active
+    }
+
+    /// Current prediction-error EMA.
+    pub fn prediction_error(&self) -> f64 {
+        self.err_ema
+    }
+
+    /// Mode changes since construction.
+    pub fn switches(&self) -> u32 {
+        self.switches
+    }
+
+    /// Score every outstanding forecast that has come due.
+    fn score_due(&mut self, now: f64, realized: f64) {
+        while let Some(&(due, predicted)) = self.outstanding.front() {
+            if due > now + 1e-9 {
+                break;
+            }
+            self.outstanding.pop_front();
+            let rel = (predicted - realized).abs() / realized.max(1.0);
+            self.err_ema = (1.0 - Self::EMA_ALPHA) * self.err_ema + Self::EMA_ALPHA * rel;
+        }
+    }
+}
+
+impl AutoScaler for HybridScaler {
+    fn decide(&mut self, obs: &Observation<'_>) -> Decision {
+        self.score_due(obs.now, obs.in_system as f64);
+        // Both sides observe every epoch so a handover is seamless.
+        let reactive = self.reactive.decide(obs);
+        let proactive = self.proactive.decide(obs);
+        self.outstanding
+            .push_back((obs.now + self.proactive.horizon_secs, self.proactive.forecast(obs.now)));
+        if self.proactive_active && self.err_ema > Self::DISTRUST {
+            self.proactive_active = false;
+            self.switches += 1;
+        } else if !self.proactive_active && self.err_ema < Self::TRUST {
+            self.proactive_active = true;
+            self.switches += 1;
+        }
+        if self.proactive_active { proactive } else { reactive }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "hybrid-{}-{}",
+            super::fmt_param(self.reactive.upper * 100.0),
+            super::fmt_param(self.proactive.horizon_secs)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::history::SentimentWindows;
+
+    fn scaler(upper: f64, horizon: f64) -> HybridScaler {
+        HybridScaler::new(DelayModel::default(), 0.99999, [0.3, 0.3, 0.4], upper, horizon)
+    }
+
+    fn obs(now: f64, in_system: usize, usage: f64, w: &SentimentWindows) -> Observation<'_> {
+        Observation {
+            now,
+            cpus: 4,
+            pending_cpus: 0,
+            in_system,
+            cpu_usage: usage,
+            sentiment: w,
+            nodes: &[],
+            cpu_hz: 2.0e9,
+            sla_secs: 300.0,
+        }
+    }
+
+    #[test]
+    fn boots_reactive() {
+        let w = SentimentWindows::new();
+        let mut s = scaler(0.8, 60.0);
+        // First epoch: no prediction has been scored, error EMA is
+        // pessimistic, so the threshold rule decides.
+        assert_eq!(s.decide(&obs(0.0, 100, 0.85, &w)), Decision::ScaleOut(1));
+        assert!(!s.proactive_active());
+    }
+
+    #[test]
+    fn accurate_forecasts_hand_control_to_the_proactive_side() {
+        let w = SentimentWindows::new();
+        let mut s = scaler(0.8, 60.0);
+        // Constant in-system count: the trend forecast is exact, the
+        // error EMA decays to 0, and control switches exactly once.
+        for t in 0..40 {
+            s.decide(&obs(t as f64 * 60.0, 5_000, 0.6, &w));
+        }
+        assert!(s.proactive_active(), "exact forecasts must earn trust");
+        assert_eq!(s.switches(), 1, "hysteresis: no oscillation on a constant trace");
+        assert!(s.prediction_error() < HybridScaler::TRUST);
+    }
+
+    #[test]
+    fn wild_forecast_errors_fall_back_to_reactive() {
+        let w = SentimentWindows::new();
+        let mut s = scaler(0.8, 60.0);
+        // Earn trust on a constant stretch first ...
+        for t in 0..40 {
+            s.decide(&obs(t as f64 * 60.0, 5_000, 0.6, &w));
+        }
+        assert!(s.proactive_active());
+        // ... then make the realized counts whipsaw so every due
+        // forecast is badly wrong.
+        for t in 40..80 {
+            let n = if t % 2 == 0 { 200_000 } else { 10 };
+            s.decide(&obs(t as f64 * 60.0, n, 0.6, &w));
+        }
+        assert!(!s.proactive_active(), "whipsaw must revoke trust");
+        assert!(s.prediction_error() > HybridScaler::DISTRUST);
+    }
+
+    #[test]
+    fn trust_band_is_hysteretic() {
+        assert!(
+            HybridScaler::TRUST < HybridScaler::DISTRUST,
+            "the trust/distrust gap is what prevents mode oscillation"
+        );
+    }
+
+    #[test]
+    fn name_encodes_threshold_and_horizon() {
+        assert_eq!(scaler(0.8, 120.0).name(), "hybrid-80-120");
+        assert_eq!(scaler(0.625, 90.5).name(), "hybrid-62.5-90.5");
+    }
+
+    #[test]
+    #[should_panic(expected = "upper out of")]
+    fn upper_out_of_range_rejected() {
+        scaler(1.5, 60.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "horizon out of")]
+    fn non_positive_horizon_rejected() {
+        scaler(0.8, 0.0);
+    }
+}

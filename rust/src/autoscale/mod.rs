@@ -2,15 +2,21 @@
 //! rule, the a-priori *load* algorithm, the application-data *appdata*
 //! peak detector, and the load+appdata composite the paper evaluates —
 //! plus the decentralized probabilistic *depas* family (every node votes
-//! on its own local view) and the [`ScalerSpec`] registry that builds
-//! any of them (and any composite combination) from a declarative
-//! name + parameters.
+//! on its own local view), the gauntlet families from the
+//! Qu/Calheiros/Buyya taxonomy — *queueing* (Little's-law target
+//! sizing), *pid* (control-theoretic loop on the delay error) and
+//! *hybrid* (reactive+proactive switcher) — and the [`ScalerSpec`]
+//! registry that builds any of them (and any composite combination)
+//! from a declarative name + parameters.
 
 pub mod appdata;
 pub mod controller;
 pub mod depas;
+pub mod hybrid;
 pub mod load;
+pub mod pid;
 pub mod predictive;
+pub mod queueing;
 pub mod spec;
 pub mod threshold;
 pub mod vertical;
@@ -18,8 +24,11 @@ pub mod vertical;
 pub use appdata::AppdataScaler;
 pub use controller::Controller;
 pub use depas::DepasScaler;
+pub use hybrid::HybridScaler;
 pub use load::LoadScaler;
+pub use pid::PidScaler;
 pub use predictive::PredictiveScaler;
+pub use queueing::QueueingScaler;
 pub use spec::ScalerSpec;
 pub use threshold::ThresholdScaler;
 pub use vertical::VerticalScaler;

@@ -1,0 +1,290 @@
+//! Control-theoretic PID auto-scaler on the delay error.
+//!
+//! The survey's control-theoretic family (PAPERS.md): treat the cluster
+//! as a plant whose output is the time-in-system, and drive it to a
+//! setpoint with a proportional–integral–derivative loop. The measured
+//! signal is the *implied drain time* — outstanding service demand
+//! `in_system · E[S]` spread over the effective capacity — against a
+//! setpoint of half the SLA, normalized by the SLA so the gains are
+//! unitless and portable across configurations.
+//!
+//! Two classical refinements, both pinned by property tests:
+//!
+//! * **Anti-windup.** The integrator is clamped so its contribution
+//!   alone can never exceed the actuation clamp [`PidScaler::MAX_STEP`];
+//!   together with the output clamp, no error sequence — step, ramp or
+//!   adversarial — can make one decision move the fleet by more than
+//!   `MAX_STEP` CPUs.
+//! * **Gain scheduling.** The proportional/derivative gains scale with
+//!   the error regime: ×2 once the implied delay blows past the SLA,
+//!   ×1.5 in the warning band, ×1 near the setpoint; inside a ±5% dead
+//!   band the controller holds entirely.
+//!
+//! State (integral, previous error) evolves only from the observation
+//! sequence, which is identical across the serial engine, the lockstep
+//! batch kernel and the threaded runner — so decisions stay
+//! bit-identical everywhere, and repeated calls at the same timestamp
+//! (dt = 0) are idempotent.
+
+use super::{AutoScaler, Decision, Observation};
+use crate::delay::DelayModel;
+use crate::workload::TweetClass;
+
+/// PID controller on the normalized delay error.
+#[derive(Debug, Clone)]
+pub struct PidScaler {
+    /// Pessimistic per-tweet cycle estimate (same role as in `LoadScaler`).
+    cycles_per_tweet: f64,
+    /// Proportional gain, > 0.
+    pub kp: f64,
+    /// Integral gain, ≥ 0 (0 disables the integrator).
+    pub ki: f64,
+    /// Derivative gain, ≥ 0.
+    pub kd: f64,
+    /// Accumulated error·dt, clamped for anti-windup.
+    integral: f64,
+    /// Previous (time, error) sample for the derivative term.
+    prev: Option<(f64, f64)>,
+}
+
+impl PidScaler {
+    /// Hard actuation clamp: one decision never moves the fleet by more
+    /// than this many CPUs, regardless of the error history.
+    pub const MAX_STEP: f64 = 8.0;
+
+    /// Dead band on the normalized error: within ±5% of the setpoint the
+    /// controller holds.
+    pub const DEAD_BAND: f64 = 0.05;
+
+    /// PID on the delay error with the load family's a-priori knowledge
+    /// (`model`, `quantile`, `class_mix`) and gains `kp` (> 0),
+    /// `ki`/`kd` (≥ 0).
+    pub fn new(
+        model: DelayModel,
+        quantile: f64,
+        class_mix: [f64; 3],
+        kp: f64,
+        ki: f64,
+        kd: f64,
+    ) -> Self {
+        assert!(kp > 0.0 && kp.is_finite(), "kp out of (0,inf): {kp}");
+        assert!(ki >= 0.0 && ki.is_finite(), "ki out of [0,inf): {ki}");
+        assert!(kd >= 0.0 && kd.is_finite(), "kd out of [0,inf): {kd}");
+        let cycles_per_tweet = TweetClass::ALL
+            .iter()
+            .map(|&c| class_mix[c as usize] * model.quantile_cycles(c, quantile))
+            .sum();
+        Self { cycles_per_tweet, kp, ki, kd, integral: 0.0, prev: None }
+    }
+
+    /// Normalized delay error for an observation: implied drain time vs
+    /// a setpoint of half the SLA, in SLA units.
+    pub fn error(&self, obs: &Observation<'_>) -> f64 {
+        let s = self.cycles_per_tweet / obs.cpu_hz;
+        let effective = f64::from((obs.cpus + obs.pending_cpus).max(1));
+        let drain_secs = obs.in_system as f64 * s / effective;
+        (drain_secs - 0.5 * obs.sla_secs) / obs.sla_secs
+    }
+
+    /// The integrator's current contribution to the output (`ki · ∫e`);
+    /// anti-windup keeps `|integral_term| ≤ MAX_STEP` at all times.
+    pub fn integral_term(&self) -> f64 {
+        self.ki * self.integral
+    }
+
+    /// Gain schedule: amplify P/D as the error leaves the comfort zone.
+    fn schedule(e_abs: f64) -> f64 {
+        if e_abs >= 1.0 {
+            2.0
+        } else if e_abs >= 0.5 {
+            1.5
+        } else {
+            1.0
+        }
+    }
+}
+
+impl AutoScaler for PidScaler {
+    fn decide(&mut self, obs: &Observation<'_>) -> Decision {
+        let e = self.error(obs);
+        let dt = self.prev.map_or(0.0, |(t, _)| obs.now - t);
+        let de = match self.prev {
+            Some((_, pe)) if dt > 1e-9 => (e - pe) / dt,
+            _ => 0.0,
+        };
+        if dt > 1e-9 && self.ki > 0.0 {
+            // Clamping anti-windup: the integrated error can never push
+            // the output further than the actuation clamp on its own.
+            let cap = Self::MAX_STEP / self.ki;
+            self.integral = (self.integral + e * dt).clamp(-cap, cap);
+        }
+        if dt > 1e-9 || self.prev.is_none() {
+            self.prev = Some((obs.now, e));
+        }
+        if e.abs() < Self::DEAD_BAND {
+            return Decision::Hold;
+        }
+        let g = Self::schedule(e.abs());
+        let u = (g * (self.kp * e + self.kd * de) + self.integral_term())
+            .clamp(-Self::MAX_STEP, Self::MAX_STEP);
+        let n = u.round();
+        if n >= 1.0 {
+            Decision::ScaleOut(n as u32)
+        } else if n <= -1.0 && obs.cpus > 1 {
+            Decision::ScaleIn((-n as u32).min(obs.cpus - 1))
+        } else {
+            Decision::Hold
+        }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "pid-{}-{}-{}",
+            super::fmt_param(self.kp),
+            super::fmt_param(self.ki),
+            super::fmt_param(self.kd)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::history::SentimentWindows;
+
+    fn scaler(kp: f64, ki: f64, kd: f64) -> PidScaler {
+        PidScaler::new(DelayModel::default(), 0.99999, [0.3, 0.3, 0.4], kp, ki, kd)
+    }
+
+    fn obs(now: f64, in_system: usize, cpus: u32, w: &SentimentWindows) -> Observation<'_> {
+        Observation {
+            now,
+            cpus,
+            pending_cpus: 0,
+            in_system,
+            cpu_usage: 0.8,
+            sentiment: w,
+            nodes: &[],
+            cpu_hz: 2.0e9,
+            sla_secs: 300.0,
+        }
+    }
+
+    /// In-system count whose implied drain time sits exactly at the
+    /// setpoint for one CPU (error 0).
+    fn setpoint_load(s: &PidScaler) -> usize {
+        let w = SentimentWindows::new();
+        let mut lo = 0usize;
+        let mut hi = 10_000_000;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if s.error(&obs(0.0, mid, 1, &w)) < 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    #[test]
+    fn at_setpoint_holds() {
+        let w = SentimentWindows::new();
+        let mut s = scaler(2.0, 0.01, 0.0);
+        let load = setpoint_load(&s);
+        for t in 0..10 {
+            assert_eq!(s.decide(&obs(t as f64 * 60.0, load, 1, &w)), Decision::Hold);
+        }
+    }
+
+    #[test]
+    fn sustained_overload_scales_out_up_to_the_clamp() {
+        let w = SentimentWindows::new();
+        let mut s = scaler(4.0, 0.05, 0.0);
+        let mut saw_clamp = false;
+        for t in 0..50 {
+            match s.decide(&obs(t as f64 * 60.0, 50_000_000, 1, &w)) {
+                Decision::ScaleOut(n) => {
+                    assert!(f64::from(n) <= PidScaler::MAX_STEP, "step {n} over clamp");
+                    saw_clamp |= f64::from(n) == PidScaler::MAX_STEP;
+                }
+                d => panic!("expected scale-out under overload, got {d:?}"),
+            }
+        }
+        assert!(saw_clamp, "integral should drive the output to the clamp");
+    }
+
+    #[test]
+    fn idle_fleet_scales_in_and_survives_at_one() {
+        let w = SentimentWindows::new();
+        let mut s = scaler(4.0, 0.0, 0.0);
+        s.decide(&obs(0.0, 0, 8, &w));
+        match s.decide(&obs(60.0, 0, 8, &w)) {
+            Decision::ScaleIn(n) => assert!(n >= 1 && n <= 7),
+            d => panic!("expected scale-in when idle, got {d:?}"),
+        }
+        assert_eq!(s.decide(&obs(120.0, 0, 1, &w)), Decision::Hold);
+    }
+
+    #[test]
+    fn integral_term_is_windup_bounded() {
+        let w = SentimentWindows::new();
+        let mut s = scaler(1.0, 0.5, 0.0);
+        for t in 0..10_000 {
+            s.decide(&obs(t as f64 * 60.0, 100_000_000, 1, &w));
+            assert!(s.integral_term().abs() <= PidScaler::MAX_STEP + 1e-12);
+        }
+    }
+
+    #[test]
+    fn repeated_observation_at_same_time_is_idempotent() {
+        let w = SentimentWindows::new();
+        let mut s = scaler(2.0, 0.1, 0.5);
+        let o = obs(60.0, 1_000_000, 2, &w);
+        s.decide(&obs(0.0, 900_000, 2, &w));
+        let first = s.decide(&o);
+        for _ in 0..5 {
+            assert_eq!(s.decide(&o), first, "dt = 0 must not mutate state");
+        }
+    }
+
+    #[test]
+    fn derivative_reacts_to_a_rising_ramp() {
+        let w = SentimentWindows::new();
+        // Pure-D controller: flat load decides Hold, ramping load acts.
+        let mut flat = scaler(0.001, 0.0, 2000.0);
+        let mut ramp = scaler(0.001, 0.0, 2000.0);
+        let base = 10_000_000usize;
+        let mut ramp_acted = false;
+        for t in 1..8 {
+            assert_eq!(
+                flat.decide(&obs(t as f64 * 60.0, base, 4, &w)),
+                Decision::Hold,
+                "flat load, negligible P"
+            );
+            let rising = base + t as usize * 4_000_000;
+            if let Decision::ScaleOut(_) = ramp.decide(&obs(t as f64 * 60.0, rising, 4, &w)) {
+                ramp_acted = true;
+            }
+        }
+        assert!(ramp_acted, "derivative term must anticipate the ramp");
+    }
+
+    #[test]
+    fn name_encodes_all_three_gains() {
+        assert_eq!(scaler(2.0, 0.5, 0.25).name(), "pid-2-0.5-0.25");
+        assert_eq!(scaler(1.5, 0.0, 0.0).name(), "pid-1.5-0-0");
+    }
+
+    #[test]
+    #[should_panic(expected = "kp out of")]
+    fn non_positive_kp_rejected() {
+        scaler(0.0, 0.1, 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "ki out of")]
+    fn negative_ki_rejected() {
+        scaler(1.0, -0.1, 0.1);
+    }
+}

@@ -19,6 +19,11 @@
 //! vertical-ladder               instance-type ladder (vertical scaling)
 //! depas-0.7-0.1-0.5             decentralized probabilistic fleet
 //!                               (target T, band half-width Δ, damping γ)
+//! queueing-0.7-0.5              Little's-law sizing (utilization ρ,
+//!                               wait target as a fraction of the SLA)
+//! pid-2-0.5-0.25                PID on the delay error (kp, ki, kd)
+//! hybrid-80-120                 reactive threshold % + predictive
+//!                               horizon s, switched on forecast error
 //! load-q99.999%+appdata+4       composite: base "+" peak detector
 //! ```
 //!
@@ -35,16 +40,20 @@
 //!     "predictive-h120s",
 //!     "vertical-ladder",
 //!     "depas-0.7-0.1-0.5",
+//!     "queueing-0.7-0.5",
+//!     "pid-2-0.5-0.25",
+//!     "hybrid-80-120",
 //!     "load-q99.999%+appdata+4",
 //!     "depas-0.7-0.1-0.5+appdata+2",
+//!     "queueing-0.7-0.5+appdata+2",
 //! ] {
 //!     assert_eq!(ScalerSpec::parse(form).unwrap().to_string(), form);
 //! }
 //! ```
 
 use super::{
-    AppdataScaler, AutoScaler, Composite as CompositeScaler, DepasScaler, LoadScaler,
-    PredictiveScaler, ThresholdScaler, VerticalScaler,
+    AppdataScaler, AutoScaler, Composite as CompositeScaler, DepasScaler, HybridScaler,
+    LoadScaler, PidScaler, PredictiveScaler, QueueingScaler, ThresholdScaler, VerticalScaler,
 };
 use crate::delay::DelayModel;
 use anyhow::{bail, Result};
@@ -71,6 +80,13 @@ pub enum ScalerSpec {
     /// spawn/terminate on its own local view of the load. `target` in
     /// (0, 1), `band` in (0, min(target, 1 − target)), `gamma` in (0, 1].
     Depas { target: f64, band: f64, gamma: f64 },
+    /// Little's-law target sizing; `rho` in (0, 1), `w_frac` in (0, 1].
+    Queueing { rho: f64, w_frac: f64 },
+    /// PID on the delay error; `kp` > 0, `ki`/`kd` ≥ 0.
+    Pid { kp: f64, ki: f64, kd: f64 },
+    /// Reactive threshold (`upper_pct` in (0, 100]) + predictive
+    /// forecaster (`horizon_secs` > 0), switched on forecast error.
+    Hybrid { upper_pct: f64, horizon_secs: f64 },
     /// `base` handles ordinary traffic, `peaks` pre-provisions bursts.
     Composite { base: Box<ScalerSpec>, peaks: Box<ScalerSpec> },
 }
@@ -106,6 +122,25 @@ impl ScalerSpec {
     /// the decision rule and parameter constraints).
     pub fn depas(target: f64, band: f64, gamma: f64) -> Self {
         Self::Depas { target, band, gamma }
+    }
+
+    /// Little's-law sizing toward utilization `rho` in (0, 1) with a
+    /// wait target of `w_frac` of the SLA (see [`QueueingScaler`]).
+    pub fn queueing(rho: f64, w_frac: f64) -> Self {
+        Self::Queueing { rho, w_frac }
+    }
+
+    /// PID on the delay error with gains `kp`/`ki`/`kd` (see
+    /// [`PidScaler`] for the loop and its anti-windup clamp).
+    pub fn pid(kp: f64, ki: f64, kd: f64) -> Self {
+        Self::Pid { kp, ki, kd }
+    }
+
+    /// Hybrid of `threshold-<upper_pct>%` and
+    /// `predictive-h<horizon_secs>s`, switched on observed forecast
+    /// error (see [`HybridScaler`]).
+    pub fn hybrid(upper_pct: f64, horizon_secs: f64) -> Self {
+        Self::Hybrid { upper_pct, horizon_secs }
     }
 
     /// Composite of two specs (`base` + `peaks`).
@@ -168,6 +203,28 @@ impl ScalerSpec {
             Self::Depas { target, band, gamma } => {
                 Box::new(DepasScaler::new(*target, *band, *gamma))
             }
+            Self::Queueing { rho, w_frac } => Box::new(QueueingScaler::new(
+                model.clone(),
+                REGISTRY_QUANTILE,
+                mix,
+                *rho,
+                *w_frac,
+            )),
+            Self::Pid { kp, ki, kd } => Box::new(PidScaler::new(
+                model.clone(),
+                REGISTRY_QUANTILE,
+                mix,
+                *kp,
+                *ki,
+                *kd,
+            )),
+            Self::Hybrid { upper_pct, horizon_secs } => Box::new(HybridScaler::new(
+                model.clone(),
+                REGISTRY_QUANTILE,
+                mix,
+                *upper_pct / 100.0,
+                *horizon_secs,
+            )),
             Self::Composite { base, peaks } => Box::new(CompositeScaler::new(
                 base.build(model, mix),
                 peaks.build(model, mix),
@@ -205,7 +262,8 @@ impl ScalerSpec {
         bail!(
             "unknown algorithm {s:?} (expected threshold-<pct>% | load-q<pct>% | \
              appdata+<n>[@w<secs>] | predictive-h<secs>s | vertical-ladder | \
-             depas-<target>-<band>-<gamma> | <base>+<peaks>)"
+             depas-<target>-<band>-<gamma> | queueing-<rho>-<wfrac> | \
+             pid-<kp>-<ki>-<kd> | hybrid-<pct>-<horizon> | <base>+<peaks>)"
         )
     }
 
@@ -276,6 +334,46 @@ impl ScalerSpec {
             }
             return None;
         }
+        if let Some(rest) = s.strip_prefix("queueing-") {
+            let (r, w) = match rest.split_once('-') {
+                Some((r, w)) if !w.contains('-') => (r, w),
+                _ => return None,
+            };
+            let rho: f64 = r.parse().ok()?;
+            let w_frac: f64 = w.parse().ok()?;
+            if rho > 0.0 && rho < 1.0 && w_frac > 0.0 && w_frac <= 1.0 {
+                return Some(Self::queueing(rho, w_frac));
+            }
+            return None;
+        }
+        if let Some(rest) = s.strip_prefix("pid-") {
+            let mut parts = rest.split('-');
+            let (p, i, d) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(p), Some(i), Some(d), None) => (p, i, d),
+                _ => return None,
+            };
+            let kp: f64 = p.parse().ok()?;
+            let ki: f64 = i.parse().ok()?;
+            let kd: f64 = d.parse().ok()?;
+            if kp > 0.0 && ki >= 0.0 && kd >= 0.0 && kp.is_finite() && ki.is_finite()
+                && kd.is_finite()
+            {
+                return Some(Self::pid(kp, ki, kd));
+            }
+            return None;
+        }
+        if let Some(rest) = s.strip_prefix("hybrid-") {
+            let (p, h) = match rest.split_once('-') {
+                Some((p, h)) if !h.contains('-') => (p, h),
+                _ => return None,
+            };
+            let pct: f64 = p.parse().ok()?;
+            let horizon: f64 = h.parse().ok()?;
+            if pct > 0.0 && pct <= 100.0 && horizon > 0.0 {
+                return Some(Self::hybrid(pct, horizon));
+            }
+            return None;
+        }
         None
     }
 }
@@ -307,6 +405,25 @@ impl fmt::Display for ScalerSpec {
                 super::fmt_param(*target),
                 super::fmt_param(*band),
                 super::fmt_param(*gamma)
+            ),
+            Self::Queueing { rho, w_frac } => write!(
+                f,
+                "queueing-{}-{}",
+                super::fmt_param(*rho),
+                super::fmt_param(*w_frac)
+            ),
+            Self::Pid { kp, ki, kd } => write!(
+                f,
+                "pid-{}-{}-{}",
+                super::fmt_param(*kp),
+                super::fmt_param(*ki),
+                super::fmt_param(*kd)
+            ),
+            Self::Hybrid { upper_pct, horizon_secs } => write!(
+                f,
+                "hybrid-{}-{}",
+                super::fmt_param(*upper_pct),
+                super::fmt_param(*horizon_secs)
             ),
             Self::Composite { base, peaks } => write!(f, "{base}+{peaks}"),
         }
@@ -352,6 +469,26 @@ mod tests {
         grid.push(ScalerSpec::composite(
             ScalerSpec::depas(0.7, 0.1, 0.5),
             ScalerSpec::appdata(2),
+        ));
+        grid.push(ScalerSpec::queueing(0.7, 0.5));
+        grid.push(ScalerSpec::queueing(0.5, 1.0));
+        grid.push(ScalerSpec::queueing(0.85, 0.25));
+        grid.push(ScalerSpec::pid(2.0, 0.5, 0.25));
+        grid.push(ScalerSpec::pid(1.5, 0.0, 0.0));
+        grid.push(ScalerSpec::pid(4.0, 0.05, 1.0));
+        grid.push(ScalerSpec::hybrid(80.0, 120.0));
+        grid.push(ScalerSpec::hybrid(62.5, 90.5));
+        grid.push(ScalerSpec::composite(
+            ScalerSpec::queueing(0.7, 0.5),
+            ScalerSpec::appdata(2),
+        ));
+        grid.push(ScalerSpec::composite(
+            ScalerSpec::pid(2.0, 0.5, 0.25),
+            ScalerSpec::appdata(3),
+        ));
+        grid.push(ScalerSpec::composite(
+            ScalerSpec::hybrid(80.0, 120.0),
+            ScalerSpec::appdata(1),
         ));
         grid
     }
@@ -416,6 +553,18 @@ mod tests {
             "depas-1.5-0.1-0.5",   // target out of (0,1)
             "depas-0.7-0.1-2",     // gamma out of (0,1]
             "depas-0.7-0.1-0.5-9", // trailing component
+            "queueing-0.7",        // missing wait fraction
+            "queueing-1.5-0.5",    // rho out of (0,1)
+            "queueing-0.7-0",      // w_frac out of (0,1]
+            "queueing-0.7-0.5-9",  // trailing component
+            "pid-2-0.5",           // missing kd
+            "pid-0-0.5-0.25",      // kp out of (0,inf)
+            "pid-2--1-0.25",       // negative ki
+            "pid-2-0.5-0.25-9",    // trailing component
+            "hybrid-80",           // missing horizon
+            "hybrid-150-120",      // threshold out of (0,100]
+            "hybrid-80-0",         // non-positive horizon
+            "hybrid-80-120-9",     // trailing component
         ] {
             let err = ScalerSpec::parse(bad).unwrap_err();
             assert!(

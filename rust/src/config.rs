@@ -2,6 +2,7 @@
 //! `key = value` file (see `util::FlatMeta`; offline-friendly, no TOML
 //! dependency — the grammar is the `key=value` subset of TOML).
 
+use crate::sim::cluster::FaultPlan;
 use crate::util::FlatMeta;
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -25,6 +26,15 @@ pub struct SimConfig {
     pub input_rate: Option<f64>,
     /// RNG seed for per-replication cycle sampling.
     pub seed: u64,
+    /// Mean time between node failures, seconds (None = fault-free).
+    pub failure_mtbf_secs: Option<f64>,
+    /// Mean of the exponential jitter added to every VM boot on top of
+    /// `provision_secs` (None = deterministic boots).
+    pub boot_jitter_secs: Option<f64>,
+    /// RNG seed for the failure/boot-time streams. Kept separate from
+    /// `seed` so replications share one failure schedule while their
+    /// cycle draws diverge.
+    pub failure_seed: u64,
 }
 
 impl Default for SimConfig {
@@ -38,6 +48,9 @@ impl Default for SimConfig {
             provision_secs: 60.0,
             input_rate: None,
             seed: 1,
+            failure_mtbf_secs: None,
+            boot_jitter_secs: None,
+            failure_seed: 7,
         }
     }
 }
@@ -45,7 +58,8 @@ impl Default for SimConfig {
 impl SimConfig {
     /// Load from a `key=value` file; unspecified keys keep Table III
     /// defaults. Keys: cpu_hz, starting_cpus, step_secs, sla_secs,
-    /// adapt_secs, provision_secs, input_rate, seed.
+    /// adapt_secs, provision_secs, input_rate, seed,
+    /// failure_mtbf_secs, boot_jitter_secs, failure_seed.
     pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Self> {
         let meta = FlatMeta::load(path.as_ref())
             .with_context(|| format!("loading sim config {}", path.as_ref().display()))?;
@@ -79,7 +93,21 @@ impl SimConfig {
         if meta.get("seed").is_ok() {
             d.seed = meta.get_parsed("seed")?;
         }
+        if meta.get("failure_mtbf_secs").is_ok() {
+            d.failure_mtbf_secs = Some(meta.get_parsed("failure_mtbf_secs")?);
+        }
+        if meta.get("boot_jitter_secs").is_ok() {
+            d.boot_jitter_secs = Some(meta.get_parsed("boot_jitter_secs")?);
+        }
+        if meta.get("failure_seed").is_ok() {
+            d.failure_seed = meta.get_parsed("failure_seed")?;
+        }
         anyhow::ensure!(d.cpu_hz > 0.0 && d.step_secs > 0.0 && d.sla_secs > 0.0, "non-positive config value");
+        anyhow::ensure!(
+            d.failure_mtbf_secs.map_or(true, |m| m > 0.0)
+                && d.boot_jitter_secs.map_or(true, |j| j > 0.0),
+            "non-positive fault-injection value"
+        );
         Ok(cfg)
     }
 
@@ -96,7 +124,28 @@ impl SimConfig {
             m.insert("input_rate", r);
         }
         m.insert("seed", self.seed);
+        if let Some(mtbf) = self.failure_mtbf_secs {
+            m.insert("failure_mtbf_secs", mtbf);
+        }
+        if let Some(j) = self.boot_jitter_secs {
+            m.insert("boot_jitter_secs", j);
+        }
+        m.insert("failure_seed", self.failure_seed);
         m.render()
+    }
+
+    /// The adversarial fault axes as a [`FaultPlan`] for
+    /// [`Cluster::with_faults`](crate::sim::Cluster::with_faults), or
+    /// `None` when both axes are off (the fault-free fast path).
+    pub fn fault_plan(&self) -> Option<FaultPlan> {
+        if self.failure_mtbf_secs.is_none() && self.boot_jitter_secs.is_none() {
+            return None;
+        }
+        Some(FaultPlan {
+            mtbf_secs: self.failure_mtbf_secs.unwrap_or(f64::INFINITY),
+            boot_jitter_secs: self.boot_jitter_secs.unwrap_or(0.0),
+            seed: self.failure_seed,
+        })
     }
 
     /// Derived: cycles available per step per CPU.
@@ -125,15 +174,52 @@ mod tests {
         assert_eq!(c.adapt_secs, 60.0);
         assert_eq!(c.provision_secs, 60.0);
         assert_eq!(c.input_rate, None);
+        assert_eq!(c.failure_mtbf_secs, None);
+        assert_eq!(c.boot_jitter_secs, None);
+        assert_eq!(c.failure_seed, 7);
+        assert!(c.fault_plan().is_none(), "defaults are fault-free");
     }
 
     #[test]
     fn file_roundtrip() {
-        let c = SimConfig { input_rate: Some(1000.0), seed: 42, ..Default::default() };
+        let c = SimConfig {
+            input_rate: Some(1000.0),
+            seed: 42,
+            failure_mtbf_secs: Some(3600.0),
+            boot_jitter_secs: Some(15.0),
+            failure_seed: 99,
+            ..Default::default()
+        };
         let d = TempDir::new().unwrap();
         let p = d.join("cfg.txt");
         std::fs::write(&p, c.render()).unwrap();
         assert_eq!(SimConfig::from_file(&p).unwrap(), c);
+    }
+
+    #[test]
+    fn fault_plan_reflects_the_axes() {
+        let base = SimConfig::default();
+        let mtbf = SimConfig { failure_mtbf_secs: Some(1800.0), ..base.clone() };
+        let plan = mtbf.fault_plan().expect("mtbf alone activates the plan");
+        assert_eq!(plan.mtbf_secs, 1800.0);
+        assert_eq!(plan.boot_jitter_secs, 0.0);
+        assert_eq!(plan.seed, 7);
+        assert!(plan.fails_nodes());
+
+        let jitter = SimConfig { boot_jitter_secs: Some(20.0), ..base };
+        let plan = jitter.fault_plan().expect("jitter alone activates the plan");
+        assert!(!plan.fails_nodes(), "jitter without mtbf never kills nodes");
+        assert_eq!(plan.boot_jitter_secs, 20.0);
+    }
+
+    #[test]
+    fn non_positive_fault_values_rejected() {
+        let d = TempDir::new().unwrap();
+        let p = d.join("cfg.txt");
+        std::fs::write(&p, "failure_mtbf_secs=0\n").unwrap();
+        assert!(SimConfig::from_file(&p).is_err());
+        std::fs::write(&p, "boot_jitter_secs=-5\n").unwrap();
+        assert!(SimConfig::from_file(&p).is_err());
     }
 
     #[test]

@@ -102,7 +102,9 @@ pub fn converge_journaled(
             None => done.get(&j.key).cloned().unwrap_or_else(|| ScenarioResult {
                 name: j.name.clone(),
                 violation_pct: f64::NAN,
+                p99_delay: f64::NAN,
                 cpu_hours: f64::NAN,
+                sla_score: f64::NAN,
                 reps: 0,
                 wall_secs: 0.0,
             }),

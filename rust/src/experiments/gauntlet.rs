@@ -1,0 +1,316 @@
+//! The adversarial gauntlet (beyond the paper): every scaler family the
+//! registry knows, ranked under conditions the paper never threw at
+//! them.
+//!
+//! The paper's evaluation is benign: nodes never die, VMs boot in a
+//! constant 300 s, and every burst is announced by the sentiment stream
+//! minutes in advance. The gauntlet removes those courtesies one axis at
+//! a time and crosses them:
+//!
+//! * **Failure axis** — seeded node failures (`SimConfig::
+//!   failure_mtbf_secs`): each VM draws an exponential lifetime from its
+//!   own per-request stream, and a scaler that runs close to `min_cpus`
+//!   pays for every loss with queue growth until the replacement boots.
+//! * **Boot-time axis** — seeded exponential boot jitter
+//!   (`boot_jitter_secs`): provisioning lead times the predictive
+//!   families assumed constant become heavy-tailed.
+//! * **Trace-shape axis** — the generator's adversarial shapes: an
+//!   unannounced mid-match `flash_crowd` (no sentiment early warning, so
+//!   appdata gets nothing to detect) and a `double_burst` echo that
+//!   punishes releasing capacity right after the first peak.
+//!
+//! Every cell reports the richer SLA metrics (`p99_delay`, `sla_score`),
+//! and the final table ranks the families by mean SLA-score across the
+//! whole grid — a single number trading attainment against cost, so
+//! "cheap but violating" and "compliant but profligate" both sink.
+//!
+//! All of it rides the deterministic scenario engine: the grid is plain
+//! data, failure schedules are pure functions of (failure seed, request
+//! id), and every row is bit-identical across the serial, batched,
+//! threaded, and work-stealing paths.
+
+use super::common::{converge, scale_config};
+use super::report::{result_rows, table, RESULT_HEADERS};
+use super::Experiment;
+use crate::autoscale::ScalerSpec;
+use crate::config::SimConfig;
+use crate::scenario::{default_threads, Overrides, ScenarioMatrix, ScenarioResult, TraceSource};
+use crate::workload::{by_opponent, GeneratorConfig};
+use anyhow::Result;
+
+/// The adversarial-gauntlet experiment (ID `gauntlet`).
+pub struct Gauntlet;
+
+/// The swept match: Mexico's abrupt peak is the hardest announced burst.
+pub const SWEEP_OPPONENT: &str = "Mexico";
+
+/// Mean time between node failures on the failure axis (seconds).
+pub const FAILURE_MTBF_SECS: f64 = 1800.0;
+
+/// Mean exponential boot-time jitter on the boot axis (seconds).
+pub const BOOT_JITTER_SECS: f64 = 45.0;
+
+/// Peak multiplier of the unannounced flash crowd on the shape axis.
+pub const FLASH_CROWD: f64 = 4.0;
+
+/// Echo gap of the double-burst shape on the shape axis (minutes).
+pub const ECHO_GAP_MIN: f64 = 10.0;
+
+/// All nine scaler families, one representative configuration each
+/// (appdata never scales in on its own, so it enters as the paper's
+/// best composite).
+pub fn scaler_set() -> Vec<ScalerSpec> {
+    vec![
+        ScalerSpec::threshold(80.0),
+        ScalerSpec::load(0.99999),
+        ScalerSpec::load_plus_appdata(0.99999, 4),
+        ScalerSpec::predictive(120.0),
+        ScalerSpec::Vertical,
+        ScalerSpec::depas(0.7, 0.1, 0.5),
+        ScalerSpec::queueing(0.7, 0.5),
+        ScalerSpec::pid(2.0, 0.5, 0.25),
+        ScalerSpec::hybrid(80.0, 120.0),
+    ]
+}
+
+/// The failure × boot-time axis. Fast keeps only the worst cell (both
+/// injections on); the full grid spans benign through both-on.
+pub fn fault_grid(fast: bool) -> Vec<Overrides> {
+    let fail =
+        Overrides { failure_mtbf_secs: Some(FAILURE_MTBF_SECS), ..Overrides::default() };
+    let boot = Overrides { boot_jitter_secs: Some(BOOT_JITTER_SECS), ..Overrides::default() };
+    let both = Overrides {
+        failure_mtbf_secs: Some(FAILURE_MTBF_SECS),
+        boot_jitter_secs: Some(BOOT_JITTER_SECS),
+        ..Overrides::default()
+    };
+    if fast {
+        vec![both]
+    } else {
+        vec![Overrides::default(), fail, boot, both]
+    }
+}
+
+/// The trace-shape axis. Fast keeps only the flash crowd; the full grid
+/// also runs the untouched trace and the double-burst echo.
+pub fn shape_grid(fast: bool) -> Vec<GeneratorConfig> {
+    let flash = GeneratorConfig { flash_crowd: FLASH_CROWD, ..GeneratorConfig::default() };
+    let echo =
+        GeneratorConfig { double_burst_gap_min: ECHO_GAP_MIN, ..GeneratorConfig::default() };
+    if fast {
+        vec![flash]
+    } else {
+        vec![GeneratorConfig::default(), flash, echo]
+    }
+}
+
+/// The full grid: shape × fault × scaler on the one Mexico trace,
+/// scaler-minor (the nesting `ranking` assumes).
+pub fn build_matrix(fast: bool, max_reps: usize) -> ScenarioMatrix {
+    let spec = by_opponent(SWEEP_OPPONENT).expect("catalogue match");
+    let cfg = scale_config(&SimConfig::default(), fast);
+    ScenarioMatrix::cross_gen(
+        &[TraceSource::spec(spec, fast)],
+        &shape_grid(fast),
+        &cfg,
+        &fault_grid(fast),
+        &scaler_set(),
+        max_reps,
+    )
+}
+
+/// Rank the families by mean SLA-score over every converged cell,
+/// best first (ties break on the spec string, so the order is total).
+/// `results` must be in `build_matrix` row order — the scaler is the
+/// innermost axis, so row `i` belongs to scaler `i % scalers.len()`.
+pub fn ranking(scalers: &[ScalerSpec], results: &[ScenarioResult]) -> Vec<Vec<String>> {
+    let n = scalers.len();
+    let mut sums = vec![(0.0f64, 0.0f64, 0.0f64, 0.0f64, 0usize); n];
+    for (i, r) in results.iter().enumerate() {
+        if r.reps == 0 {
+            continue; // pending row of a sharded run — another worker's cell
+        }
+        let s = &mut sums[i % n];
+        s.0 += r.sla_score;
+        s.1 += r.violation_pct;
+        s.2 += r.p99_delay;
+        s.3 += r.cpu_hours;
+        s.4 += 1;
+    }
+    let mean = |i: usize| {
+        let (score, _, _, _, cells) = sums[i];
+        if cells == 0 {
+            f64::NEG_INFINITY
+        } else {
+            score / cells as f64
+        }
+    };
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        mean(b)
+            .total_cmp(&mean(a))
+            .then_with(|| scalers[a].to_string().cmp(&scalers[b].to_string()))
+    });
+    order
+        .into_iter()
+        .enumerate()
+        .map(|(rank, i)| {
+            let (score, viol, p99, cpu, cells) = sums[i];
+            if cells == 0 {
+                return vec![
+                    (rank + 1).to_string(),
+                    scalers[i].to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "pending".into(),
+                ];
+            }
+            let c = cells as f64;
+            vec![
+                (rank + 1).to_string(),
+                scalers[i].to_string(),
+                format!("{:.2}", score / c),
+                format!("{:.2}%", viol / c),
+                format!("{:.2}", p99 / c),
+                format!("{:.2}", cpu / c),
+                cells.to_string(),
+            ]
+        })
+        .collect()
+}
+
+impl Experiment for Gauntlet {
+    fn id(&self) -> &'static str {
+        "gauntlet"
+    }
+
+    fn description(&self) -> &'static str {
+        "adversarial gauntlet: all nine scaler families ranked across \
+         node-failure x boot-jitter x trace-shape injections"
+    }
+
+    fn run(&self, fast: bool) -> Result<String> {
+        let max_reps = if fast { 3 } else { 10 };
+        let matrix = build_matrix(fast, max_reps);
+        let scalers = scaler_set();
+        let results = converge(&matrix, default_threads())?;
+        let mut out = table(
+            &format!(
+                "Gauntlet — BRA vs {SWEEP_OPPONENT}, {} families x {} fault x {} shape cells",
+                scalers.len(),
+                fault_grid(fast).len(),
+                shape_grid(fast).len()
+            ),
+            &RESULT_HEADERS,
+            &result_rows(&results),
+        );
+        out.push('\n');
+        out.push_str(&table(
+            "Gauntlet ranking — mean over the adversarial grid, best SLA-score first",
+            &["rank", "scaler", "SLA-score", "tweets>SLA", "p99-delay(s)", "CPU-hours", "cells"],
+            &ranking(&scalers, &results),
+        ));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_crosses_every_axis_scaler_minor() {
+        let fast = build_matrix(true, 3);
+        assert_eq!(fast.len(), scaler_set().len());
+        for row in &fast.scenarios {
+            assert!(row.name.contains("mtbf=1800s,boot=45s"), "{}", row.name);
+            assert_eq!(row.config.failure_mtbf_secs, Some(FAILURE_MTBF_SECS));
+            assert_eq!(row.config.boot_jitter_secs, Some(BOOT_JITTER_SECS));
+            assert_eq!(row.source.generator().unwrap().flash_crowd, FLASH_CROWD);
+        }
+        let full = build_matrix(false, 10);
+        assert_eq!(full.len(), 9 * 4 * 3);
+        // scaler is the innermost axis: row i runs scaler i % 9
+        let set = scaler_set();
+        for (i, row) in full.scenarios.iter().enumerate() {
+            assert_eq!(row.scaler, set[i % set.len()], "{}", row.name);
+        }
+        // ... and the benign cell really is benign
+        assert!(full.scenarios[0].config.fault_plan().is_none(), "{}", full.scenarios[0].name);
+    }
+
+    #[test]
+    fn nine_families_one_spec_each() {
+        let set = scaler_set();
+        assert_eq!(set.len(), 9);
+        let forms: Vec<String> = set.iter().map(|s| s.to_string()).collect();
+        for want in [
+            "threshold-80%",
+            "load-q99.999%",
+            "load-q99.999%+appdata+4",
+            "predictive-h120s",
+            "vertical-ladder",
+            "depas-0.7-0.1-0.5",
+            "queueing-0.7-0.5",
+            "pid-2-0.5-0.25",
+            "hybrid-80-120",
+        ] {
+            assert!(forms.iter().any(|f| f == want), "missing {want} in {forms:?}");
+        }
+        // every form round-trips through the registry grammar
+        for f in &forms {
+            assert_eq!(ScalerSpec::parse(f).unwrap().to_string(), *f);
+        }
+    }
+
+    #[test]
+    fn ranking_orders_by_mean_score_and_skips_pending() {
+        let scalers = vec![ScalerSpec::threshold(80.0), ScalerSpec::load(0.99999)];
+        let cell = |name: &str, violation: f64, cpu: f64, reps: usize| ScenarioResult {
+            name: name.into(),
+            violation_pct: violation,
+            p99_delay: 1.0,
+            cpu_hours: cpu,
+            sla_score: crate::scenario::sla_score(violation, cpu),
+            reps,
+            wall_secs: 0.0,
+        };
+        // two grid rows per scaler; load wins on score, threshold has one
+        // pending cell that must not poison its mean
+        let results = vec![
+            cell("thr/a", 10.0, 4.0, 3),
+            cell("load/a", 1.0, 2.0, 3),
+            cell("thr/b", f64::NAN, f64::NAN, 0),
+            cell("load/b", 2.0, 2.0, 3),
+        ];
+        let rows = ranking(&scalers, &results);
+        assert_eq!(rows[0][0], "1");
+        assert_eq!(rows[0][1], "load-q99.999%");
+        assert_eq!(rows[0][6], "2");
+        assert_eq!(rows[1][1], "threshold-80%");
+        assert_eq!(rows[1][6], "1");
+        // all-pending scalers sink to the bottom with placeholder cells
+        let rows = ranking(&scalers, &[cell("t", f64::NAN, f64::NAN, 0), cell("l", 1.0, 1.0, 2)]);
+        assert_eq!(rows[1][1], "threshold-80%");
+        assert_eq!(rows[1][6], "pending");
+    }
+
+    #[test]
+    fn report_ranks_all_nine_families() {
+        let out = Gauntlet.run(true).unwrap();
+        assert!(out.contains("Gauntlet — BRA vs Mexico"), "{out}");
+        assert!(out.contains("Gauntlet ranking"), "{out}");
+        for spec in scaler_set() {
+            assert!(out.contains(&spec.to_string()), "missing {spec} in:\n{out}");
+        }
+        // the ranking table numbers every family exactly once
+        let ranked = out
+            .lines()
+            .skip_while(|l| !l.starts_with("== Gauntlet ranking"))
+            .filter(|l| l.trim_start().chars().next().map_or(false, |c| c.is_ascii_digit()))
+            .count();
+        assert_eq!(ranked, 9, "{out}");
+    }
+}

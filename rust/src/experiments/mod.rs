@@ -1,8 +1,8 @@
 //! Experiment harness: one module per table/figure of the paper's
 //! evaluation, each regenerating the corresponding rows/series from our
 //! synthetic substrate. IDs map one-to-one onto the modules below
-//! (`table1..3`, `fig2..8`, the ablations, `workload`, `decentral`);
-//! `sla-autoscale exp <id|all>` runs them from the CLI.
+//! (`table1..3`, `fig2..8`, the ablations, `workload`, `decentral`,
+//! `gauntlet`); `sla-autoscale exp <id|all>` runs them from the CLI.
 
 pub mod ablations;
 pub mod common;
@@ -14,6 +14,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod gauntlet;
 pub mod report;
 pub mod table1;
 pub mod table2;
@@ -50,6 +51,7 @@ pub fn all() -> Vec<Box<dyn Experiment>> {
         Box::new(ablations::AblationStrategies),
         Box::new(workload_axis::WorkloadAxis),
         Box::new(decentral::Decentral),
+        Box::new(gauntlet::Gauntlet),
     ]
 }
 
@@ -67,7 +69,7 @@ mod tests {
         let ids: Vec<&str> = all().iter().map(|e| e.id()).collect();
         for want in [
             "table1", "table2", "table3", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
-            "workload", "decentral",
+            "workload", "decentral", "gauntlet",
         ] {
             assert!(ids.contains(&want), "missing experiment {want}");
         }

@@ -3,7 +3,8 @@
 use crate::scenario::ScenarioResult;
 
 /// Column headers matching [`result_rows`].
-pub const RESULT_HEADERS: [&str; 4] = ["scenario", "tweets>SLA", "CPU-hours", "reps"];
+pub const RESULT_HEADERS: [&str; 6] =
+    ["scenario", "tweets>SLA", "p99-delay(s)", "CPU-hours", "SLA-score", "reps"];
 
 /// Render scenario results as table rows (shared by every experiment
 /// that prints a scenario matrix, and by the CLI `matrix` subcommand).
@@ -15,12 +16,15 @@ pub fn result_rows(results: &[ScenarioResult]) -> Vec<Vec<String>> {
         .iter()
         .map(|r| {
             if r.reps == 0 {
-                return vec![r.name.clone(), "-".into(), "-".into(), "pending".into()];
+                let dash = || "-".to_string();
+                return vec![r.name.clone(), dash(), dash(), dash(), dash(), "pending".into()];
             }
             vec![
                 r.name.clone(),
                 format!("{:.2}%", r.violation_pct),
+                format!("{:.2}", r.p99_delay),
                 format!("{:.2}", r.cpu_hours),
+                format!("{:.2}", r.sla_score),
                 r.reps.to_string(),
             ]
         })
@@ -128,20 +132,24 @@ mod tests {
             ScenarioResult {
                 name: "done".into(),
                 violation_pct: 1.5,
+                p99_delay: 4.25,
                 cpu_hours: 2.0,
+                sla_score: crate::scenario::sla_score(1.5, 2.0),
                 reps: 3,
                 wall_secs: 0.5,
             },
             ScenarioResult {
                 name: "elsewhere".into(),
                 violation_pct: f64::NAN,
+                p99_delay: f64::NAN,
                 cpu_hours: f64::NAN,
+                sla_score: f64::NAN,
                 reps: 0,
                 wall_secs: 0.0,
             },
         ]);
-        assert_eq!(rows[0], vec!["done", "1.50%", "2.00", "3"]);
-        assert_eq!(rows[1], vec!["elsewhere", "-", "-", "pending"]);
+        assert_eq!(rows[0], vec!["done", "1.50%", "4.25", "2.00", "32.83", "3"]);
+        assert_eq!(rows[1], vec!["elsewhere", "-", "-", "-", "-", "pending"]);
     }
 
     #[test]

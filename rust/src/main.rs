@@ -27,6 +27,8 @@ USAGE:
       [--threads N] [--serial] [--max-reps N] [--config FILE]
       [--sla S] [--adapt S] [--provision S] [--seed N]
       [--lead-min M[,M...]] [--class-mix A,B,C[;A,B,C...]] [--noise X[,...]]
+      [--mtbf SECS] [--boot-jitter SECS] [--failure-seed N]
+      [--flash-crowd X] [--echo-gap MIN]
       [--cache-dir DIR] [--cache-max-mb MB] [--stream]
       [--journal DIR] [--shard I/N] [--steal] [--lease-expiry SECS]
       Run an arbitrary scenario grid (opponents x algorithms) with
@@ -34,7 +36,13 @@ USAGE:
       --lead-min / --class-mix / --noise sweep generator knobs (sentiment
       lead, class mix, per-tweet noise; the axes cross — the load-family
       scalers keep the default a-priori mix, so --class-mix also measures
-      stale-training-data mismatch); --cache-dir persists generated traces
+      stale-training-data mismatch); --mtbf injects seeded node failures
+      (mean time between failures, per node) and --boot-jitter adds a
+      seeded exponential tail to every VM boot, both deterministic per
+      --failure-seed; --flash-crowd X multiplies an unannounced mid-match
+      pulse into every trace and --echo-gap M echoes every scheduled
+      burst M minutes later (adversarial shapes the sentiment stream
+      does not announce); --cache-dir persists generated traces
       to an on-disk store shared across processes, pruned LRU-by-mtime to
       --cache-max-mb (default 1024) after the run; --stream prints a CSV
       line per scenario as it converges; --journal DIR appends each
@@ -55,7 +63,7 @@ USAGE:
   sla-autoscale exp <id|all> [--fast] [--journal DIR] [--shard I/N]
       [--fleet N] [--lease-expiry SECS]
       Regenerate a paper table/figure (table1..3, fig2..8, ablations,
-      workload, decentral). --journal/--shard make the experiment's
+      workload, decentral, gauntlet). --journal/--shard make the experiment's
       matrices resumable/sharded exactly like the matrix subcommand;
       --fleet N drives every experiment's plan across N cooperating
       local worker processes (work-stealing over the --journal dir,
@@ -81,7 +89,8 @@ USAGE:
 Algorithm SPECs (the scaler registry's string forms; composable with '+'):
   threshold-<pct>%   load-q<pct>%   appdata+<n>[@w<secs>]
   predictive-h<secs>s   vertical-ladder   depas-<target>-<band>-<gamma>
-  e.g. load-q99.999%+appdata+4   or   depas-0.7-0.1-0.5
+  queueing-<rho>-<wfrac>   pid-<kp>-<ki>-<kd>   hybrid-<pct>-<horizon>
+  e.g. load-q99.999%+appdata+4   or   pid-2-0.5-0.25+appdata+2
 ";
 
 /// Tiny argument cursor (offline stand-in for clap).
@@ -244,6 +253,15 @@ fn main() -> Result<()> {
             if let Some(v) = args.opt("--seed") {
                 overrides.seed = Some(v.parse()?);
             }
+            if let Some(v) = args.opt("--mtbf") {
+                overrides.failure_mtbf_secs = Some(v.parse()?);
+            }
+            if let Some(v) = args.opt("--boot-jitter") {
+                overrides.boot_jitter_secs = Some(v.parse()?);
+            }
+            if let Some(v) = args.opt("--failure-seed") {
+                overrides.failure_seed = Some(v.parse()?);
+            }
             let max_reps: usize =
                 args.opt("--max-reps").unwrap_or(if fast { "3" } else { "10" }).parse()?;
             let threads = if args.flag("--serial") {
@@ -314,6 +332,14 @@ fn main() -> Result<()> {
                 }
                 None => vec![default_gen.tweet_noise],
             };
+            let flash_crowd: f64 = match args.opt("--flash-crowd") {
+                Some(v) => v.parse().map_err(|_| anyhow!("--flash-crowd: not a number"))?,
+                None => default_gen.flash_crowd,
+            };
+            let double_burst_gap_min: f64 = match args.opt("--echo-gap") {
+                Some(v) => v.parse().map_err(|_| anyhow!("--echo-gap: not a number"))?,
+                None => default_gen.double_burst_gap_min,
+            };
             let mut gens = Vec::with_capacity(leads.len() * mixes.len() * noises.len());
             for &lead_min in &leads {
                 for &class_mix in &mixes {
@@ -322,6 +348,8 @@ fn main() -> Result<()> {
                             lead_min,
                             class_mix,
                             tweet_noise,
+                            flash_crowd,
+                            double_burst_gap_min,
                             ..GeneratorConfig::default()
                         });
                     }

@@ -68,6 +68,13 @@ pub struct Overrides {
     pub input_rate: Option<f64>,
     /// Base RNG seed for the replication sequence.
     pub seed: Option<u64>,
+    /// Mean time between node failures, seconds (the failure axis of
+    /// adversarial grids).
+    pub failure_mtbf_secs: Option<f64>,
+    /// Mean exponential boot-time jitter, seconds (the boot-time axis).
+    pub boot_jitter_secs: Option<f64>,
+    /// Seed of the failure/boot-time streams.
+    pub failure_seed: Option<u64>,
 }
 
 impl Overrides {
@@ -106,6 +113,15 @@ impl Overrides {
         if let Some(v) = self.seed {
             cfg.seed = v;
         }
+        if let Some(v) = self.failure_mtbf_secs {
+            cfg.failure_mtbf_secs = Some(v);
+        }
+        if let Some(v) = self.boot_jitter_secs {
+            cfg.boot_jitter_secs = Some(v);
+        }
+        if let Some(v) = self.failure_seed {
+            cfg.failure_seed = v;
+        }
         cfg
     }
 
@@ -140,6 +156,15 @@ impl Overrides {
         }
         if let Some(v) = self.seed {
             parts.push(format!("seed={v}"));
+        }
+        if let Some(v) = self.failure_mtbf_secs {
+            parts.push(format!("mtbf={v:.0}s"));
+        }
+        if let Some(v) = self.boot_jitter_secs {
+            parts.push(format!("boot={v:.0}s"));
+        }
+        if let Some(v) = self.failure_seed {
+            parts.push(format!("fseed={v}"));
         }
         parts.join(",")
     }
@@ -331,6 +356,28 @@ mod tests {
         assert_eq!(ov.label(), "adapt=30s,prov=300s");
         assert!(Overrides::default().is_empty());
         assert!(!ov.is_empty());
+    }
+
+    #[test]
+    fn fault_overrides_apply_and_label() {
+        let base = SimConfig::default();
+        let ov = Overrides {
+            failure_mtbf_secs: Some(1800.0),
+            boot_jitter_secs: Some(20.0),
+            failure_seed: Some(11),
+            ..Default::default()
+        };
+        let cfg = ov.apply(&base);
+        assert_eq!(cfg.failure_mtbf_secs, Some(1800.0));
+        assert_eq!(cfg.boot_jitter_secs, Some(20.0));
+        assert_eq!(cfg.failure_seed, 11);
+        assert_eq!(ov.label(), "mtbf=1800s,boot=20s,fseed=11");
+        assert!(!ov.is_empty());
+        // Unset fault axes leave the base untouched.
+        let cfg = Overrides::default().apply(&base);
+        assert_eq!(cfg.failure_mtbf_secs, None);
+        assert_eq!(cfg.boot_jitter_secs, None);
+        assert_eq!(cfg.failure_seed, base.failure_seed);
     }
 
     #[test]

@@ -48,7 +48,8 @@ pub mod steal;
 pub use matrix::{Overrides, Scenario, ScenarioMatrix};
 pub use plan::{parse_shard, CostModel, Job, JobPlan};
 pub use runner::{
-    default_threads, run_matrix, run_matrix_with, run_plan, run_replications, ScenarioResult,
+    default_threads, run_matrix, run_matrix_with, run_plan, run_replications, sla_score,
+    ScenarioResult,
 };
 pub use sink::{
     csv_field, merge_records, read_journal, read_journal_dir, CollectSink, CsvSink, Fanout,

@@ -55,6 +55,11 @@ fn job_key(s: &Scenario, model: &DelayModel, mix: [f64; 3]) -> u64 {
     h.write_u64(c.input_rate.is_some() as u64);
     h.write_u64(c.input_rate.map_or(0, f64::to_bits));
     h.write_u64(c.seed);
+    h.write_u64(c.failure_mtbf_secs.is_some() as u64);
+    h.write_u64(c.failure_mtbf_secs.map_or(0, f64::to_bits));
+    h.write_u64(c.boot_jitter_secs.is_some() as u64);
+    h.write_u64(c.boot_jitter_secs.map_or(0, f64::to_bits));
+    h.write_u64(c.failure_seed);
     h.write_str(&s.scaler.to_string());
     h.write_u64(s.max_reps as u64);
     h.write_str(&s.name);
@@ -341,6 +346,18 @@ mod tests {
         edited.mix = [0.2, 0.4, 0.4];
         assert_ne!(edited.plan().jobs[0].key, key0, "a-priori mix");
 
+        let mut edited = grid();
+        edited.scenarios[0].config.failure_mtbf_secs = Some(3600.0);
+        assert_ne!(edited.plan().jobs[0].key, key0, "failure mtbf");
+
+        let mut edited = grid();
+        edited.scenarios[0].config.boot_jitter_secs = Some(15.0);
+        assert_ne!(edited.plan().jobs[0].key, key0, "boot jitter");
+
+        let mut edited = grid();
+        edited.scenarios[0].config.failure_seed = 8;
+        assert_ne!(edited.plan().jobs[0].key, key0, "failure seed");
+
         // ... and an untouched row keeps its key through unrelated edits.
         let mut edited = grid();
         edited.scenarios[0].config.sla_secs += 1.0;
@@ -444,7 +461,9 @@ mod tests {
             result: ScenarioResult {
                 name: "h".into(),
                 violation_pct: 1.0,
+                p99_delay: 1.0,
                 cpu_hours: 1.0,
+                sla_score: crate::scenario::sla_score(1.0, 1.0),
                 reps,
                 wall_secs,
             },

@@ -93,6 +93,16 @@ fn lock_pool() -> std::sync::MutexGuard<'static, ScratchPool> {
     scratch_pool().lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
+/// Cost-weighted SLA score: attainment percentage discounted by spend,
+/// `(100 − violation_pct) / (1 + cpu_hours)`. Higher is better; a scaler
+/// that buys perfect attainment with a huge fleet scores below one that
+/// attains slightly less on a fraction of the cost. A pure function of
+/// two already bit-stable means, so the score is bit-stable across
+/// serial, batched, threaded and stolen runs by construction.
+pub fn sla_score(violation_pct: f64, cpu_hours: f64) -> f64 {
+    (100.0 - violation_pct) / (1.0 + cpu_hours)
+}
+
 /// Outcome of a CI-converged scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioResult {
@@ -100,8 +110,13 @@ pub struct ScenarioResult {
     pub name: String,
     /// Mean percentage of tweets processed later than the SLA.
     pub violation_pct: f64,
+    /// Mean 99th-percentile processing delay over the converged
+    /// replications, seconds ([`crate::sim::History::p99_delay`]).
+    pub p99_delay: f64,
     /// Mean cost over the converged replications, in CPU-hours.
     pub cpu_hours: f64,
+    /// Cost-weighted SLA score over the converged means ([`sla_score`]).
+    pub sla_score: f64,
     /// Replications the CI stopping rule consumed.
     pub reps: usize,
     /// Wall-clock seconds this row took to converge in the process that
@@ -145,19 +160,19 @@ pub fn run_replications(
     // A single-lane wave takes the serial `Simulator` path — it *is*
     // the reference the batch kernel is tested against; wider waves run
     // the lockstep batch kernel on this same thread.
-    let run_wave = |rep0: u64, take: usize| -> Vec<(f64, f64)> {
+    let run_wave = |rep0: u64, take: usize| -> Vec<(f64, f64, f64)> {
         let mut scratch = lock_pool().checkout();
         let out = if take == 1 {
             let cfg = base_cfg.with_seed(lane_seed(rep0));
             let sim = Simulator::new(&cfg, model);
             let res = sim.run_with_scratch(trace, scaler.build(model, mix), &mut scratch);
-            vec![(res.violation_pct(), res.cpu_hours)]
+            vec![(res.violation_pct(), res.cpu_hours, res.history.p99_delay())]
         } else {
             let seeds: Vec<u64> = (0..take).map(|i| lane_seed(rep0 + i as u64)).collect();
             let scalers = (0..take).map(|_| scaler.build(model, mix)).collect();
             run_batch(trace, base_cfg, model, scalers, &seeds, &mut scratch)
                 .into_iter()
-                .map(|lane| (lane.violation_pct, lane.cpu_hours))
+                .map(|lane| (lane.violation_pct, lane.cpu_hours, lane.p99_delay))
                 .collect()
         };
         lock_pool().checkin(scratch);
@@ -167,6 +182,7 @@ pub fn run_replications(
     let effective_max = max_reps.max(3);
     let mut viol = Replications::new(3, effective_max, 0.10);
     let mut cost = 0.0;
+    let mut p99_sum = 0.0;
     let mut folded = 0u64;
     let wave = wave.max(1);
     'converge: loop {
@@ -178,10 +194,11 @@ pub fn run_replications(
         // Fold in seed order; a wave overshooting the convergence point
         // discards the excess, reproducing the serial stopping rep.
         // Discarded lanes contribute to *neither* the violation CI nor
-        // the cost numerator/denominator below.
-        for (v, c) in batch {
+        // the cost/p99 numerators/denominator below.
+        for (v, c, p) in batch {
             viol.push(v);
             cost += c;
+            p99_sum += p;
             folded += 1;
             if viol.converged() {
                 break 'converge;
@@ -195,10 +212,14 @@ pub fn run_replications(
         viol.count(),
         "cost denominator out of sync with the CI stopping rule"
     );
+    let violation_pct = viol.mean();
+    let cpu_hours = cost / folded as f64;
     ScenarioResult {
         name,
-        violation_pct: viol.mean(),
-        cpu_hours: cost / folded as f64,
+        violation_pct,
+        p99_delay: p99_sum / folded as f64,
+        cpu_hours,
+        sla_score: sla_score(violation_pct, cpu_hours),
         reps: folded as usize,
         wall_secs: started.elapsed().as_secs_f64(),
     }
@@ -403,6 +424,22 @@ mod tests {
         );
         assert!(r.reps >= 3);
         assert!(r.cpu_hours > 0.0);
+        assert!(r.p99_delay >= 0.0 && r.p99_delay.is_finite());
+        assert_eq!(
+            r.sla_score.to_bits(),
+            sla_score(r.violation_pct, r.cpu_hours).to_bits(),
+            "the stored score is exactly the score of the stored means"
+        );
+    }
+
+    #[test]
+    fn sla_score_rewards_attainment_and_punishes_cost() {
+        // Same attainment, half the cost: better score.
+        assert!(sla_score(1.0, 10.0) > sla_score(1.0, 20.0));
+        // Same cost, fewer violations: better score.
+        assert!(sla_score(1.0, 10.0) > sla_score(5.0, 10.0));
+        // Perfect free service tops out at 100.
+        assert_eq!(sla_score(0.0, 0.0), 100.0);
     }
 
     #[test]
@@ -531,6 +568,8 @@ mod tests {
             assert_eq!(g.name, w.name);
             assert_eq!(g.violation_pct.to_bits(), w.violation_pct.to_bits(), "{}", g.name);
             assert_eq!(g.cpu_hours.to_bits(), w.cpu_hours.to_bits(), "{}", g.name);
+            assert_eq!(g.p99_delay.to_bits(), w.p99_delay.to_bits(), "{}", g.name);
+            assert_eq!(g.sla_score.to_bits(), w.sla_score.to_bits(), "{}", g.name);
             assert_eq!(g.reps, w.reps, "{}", g.name);
         }
         let collected = sink.into_results();
@@ -581,5 +620,7 @@ mod tests {
         assert_eq!(serial.reps, wide.reps);
         assert_eq!(serial.violation_pct.to_bits(), wide.violation_pct.to_bits());
         assert_eq!(serial.cpu_hours.to_bits(), wide.cpu_hours.to_bits());
+        assert_eq!(serial.p99_delay.to_bits(), wide.p99_delay.to_bits());
+        assert_eq!(serial.sla_score.to_bits(), wide.sla_score.to_bits());
     }
 }

@@ -22,6 +22,7 @@
 //!   payload      key u64 | row index u64 | reps u64 |
 //!                violation_pct f64 bits | cpu_hours f64 bits |
 //!                wall_secs f64 bits |
+//!                p99_delay f64 bits | sla_score f64 bits |
 //!                name_len u32 | name bytes          (all LE)
 //!   hash   8 B   u64 LE, FNV-1a over the payload
 //! ```
@@ -52,14 +53,15 @@ use std::sync::Mutex;
 pub const JOURNAL_MAGIC: [u8; 8] = *b"SLAJRNL\0";
 
 /// Bump on any layout change; readers reject other versions (v2 added
-/// the `wall_secs` calibration field).
-pub const JOURNAL_VERSION: u32 = 2;
+/// the `wall_secs` calibration field, v3 the `p99_delay`/`sla_score`
+/// gauntlet metrics).
+pub const JOURNAL_VERSION: u32 = 3;
 
 /// Bytes before the first record (magic + version).
 pub const JOURNAL_HEADER_LEN: usize = 8 + 4;
 
 /// Fixed payload bytes ahead of the variable-length name.
-const RECORD_FIXED_LEN: usize = 8 * 6 + 4;
+const RECORD_FIXED_LEN: usize = 8 * 8 + 4;
 
 /// Where the runner reports each converged scenario. Implementations
 /// must be `Sync`: the parallel runner records from worker threads, in
@@ -106,11 +108,12 @@ pub fn csv_field(s: &str) -> String {
     }
 }
 
-/// Streaming CSV sink: one `scenario,violation_pct,cpu_hours,reps` line
-/// per converged row, in completion order (descending predicted-cost
-/// order serially — the runner claims rows LPT-first). The
-/// nondeterministic `wall_secs` measurement is deliberately not a
-/// column: CSV streams stay comparable across runs and processes.
+/// Streaming CSV sink: one
+/// `scenario,violation_pct,p99_delay,cpu_hours,sla_score,reps` line per
+/// converged row, in completion order (descending predicted-cost order
+/// serially — the runner claims rows LPT-first). The nondeterministic
+/// `wall_secs` measurement is deliberately not a column: CSV streams
+/// stay comparable across runs and processes.
 pub struct CsvSink<W: Write + Send> {
     out: Mutex<W>,
 }
@@ -124,7 +127,7 @@ impl<W: Write + Send> CsvSink<W> {
     /// Write the CSV header line.
     pub fn header(&self) -> Result<()> {
         let mut out = self.out.lock().unwrap_or_else(|e| e.into_inner());
-        writeln!(out, "scenario,violation_pct,cpu_hours,reps")?;
+        writeln!(out, "scenario,violation_pct,p99_delay,cpu_hours,sla_score,reps")?;
         Ok(())
     }
 
@@ -146,10 +149,12 @@ impl<W: Write + Send> ResultSink for CsvSink<W> {
         let mut out = self.out.lock().unwrap_or_else(|e| e.into_inner());
         writeln!(
             out,
-            "{},{:.4},{:.4},{}",
+            "{},{:.4},{:.4},{:.4},{:.4},{}",
             csv_field(&r.name),
             r.violation_pct,
+            r.p99_delay,
             r.cpu_hours,
+            r.sla_score,
             r.reps
         )?;
         Ok(())
@@ -278,6 +283,8 @@ fn encode_record(key: u64, index: u64, r: &ScenarioResult) -> Vec<u8> {
     payload.extend_from_slice(&r.violation_pct.to_bits().to_le_bytes());
     payload.extend_from_slice(&r.cpu_hours.to_bits().to_le_bytes());
     payload.extend_from_slice(&r.wall_secs.to_bits().to_le_bytes());
+    payload.extend_from_slice(&r.p99_delay.to_bits().to_le_bytes());
+    payload.extend_from_slice(&r.sla_score.to_bits().to_le_bytes());
     payload.extend_from_slice(&(name.len() as u32).to_le_bytes());
     payload.extend_from_slice(name);
     let mut out = Vec::with_capacity(4 + payload.len() + 8);
@@ -292,7 +299,7 @@ fn decode_payload(p: &[u8]) -> Option<JournalRecord> {
         return None;
     }
     let u64_at = |i: usize| u64::from_le_bytes(p[i..i + 8].try_into().unwrap());
-    let name_len = u32::from_le_bytes(p[48..52].try_into().unwrap()) as usize;
+    let name_len = u32::from_le_bytes(p[64..68].try_into().unwrap()) as usize;
     if p.len() != RECORD_FIXED_LEN + name_len {
         return None;
     }
@@ -303,7 +310,9 @@ fn decode_payload(p: &[u8]) -> Option<JournalRecord> {
         result: ScenarioResult {
             name,
             violation_pct: f64::from_bits(u64_at(24)),
+            p99_delay: f64::from_bits(u64_at(48)),
             cpu_hours: f64::from_bits(u64_at(32)),
+            sla_score: f64::from_bits(u64_at(56)),
             reps: usize::try_from(u64_at(16)).ok()?,
             wall_secs: f64::from_bits(u64_at(40)),
         },
@@ -408,7 +417,9 @@ mod tests {
         ScenarioResult {
             name: name.into(),
             violation_pct: violation,
+            p99_delay: 2.0 * violation + 0.5,
             cpu_hours: cpu,
+            sla_score: crate::scenario::runner::sla_score(violation, cpu),
             reps,
             wall_secs: 0.125 + cpu,
         }
@@ -436,7 +447,9 @@ mod tests {
             assert_eq!(rec.index, j.index);
             assert_eq!(rec.result.name, r.name);
             assert_eq!(rec.result.violation_pct.to_bits(), r.violation_pct.to_bits());
+            assert_eq!(rec.result.p99_delay.to_bits(), r.p99_delay.to_bits());
             assert_eq!(rec.result.cpu_hours.to_bits(), r.cpu_hours.to_bits());
+            assert_eq!(rec.result.sla_score.to_bits(), r.sla_score.to_bits());
             assert_eq!(rec.result.reps, r.reps);
             assert_eq!(rec.result.wall_secs.to_bits(), r.wall_secs.to_bits());
         }
@@ -535,9 +548,9 @@ mod tests {
         sink.record(&job(1, 2, "a,b"), &result("a,b", 0.0, 1.0, 4)).unwrap();
         let text = String::from_utf8(sink.into_inner()).unwrap();
         let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines[0], "scenario,violation_pct,cpu_hours,reps");
-        assert_eq!(lines[1], "plain,1.5000,2.2500,3");
-        assert_eq!(lines[2], "\"a,b\",0.0000,1.0000,4");
+        assert_eq!(lines[0], "scenario,violation_pct,p99_delay,cpu_hours,sla_score,reps");
+        assert_eq!(lines[1], "plain,1.5000,3.5000,2.2500,30.3077,3");
+        assert_eq!(lines[2], "\"a,b\",0.0000,0.5000,1.0000,50.0000,4");
     }
 
     #[test]

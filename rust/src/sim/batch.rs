@@ -124,6 +124,9 @@ impl BatchArena {
 pub struct LaneResult {
     /// Percentage of tweets processed later than the SLA.
     pub violation_pct: f64,
+    /// 99th-percentile processing delay, seconds
+    /// ([`History::p99_delay`]).
+    pub p99_delay: f64,
     /// Accumulated cost, in CPU-hours.
     pub cpu_hours: f64,
     /// Tweets completed.
@@ -218,8 +221,9 @@ pub fn run_batch(
     }
     let unlimited = cfg.input_rate.is_none();
     let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
-    let mut clusters: Vec<Cluster> =
-        (0..r).map(|_| Cluster::new(cfg.starting_cpus, cfg.provision_secs)).collect();
+    let mut clusters: Vec<Cluster> = (0..r)
+        .map(|_| Cluster::with_faults(cfg.starting_cpus, cfg.provision_secs, cfg.fault_plan()))
+        .collect();
     let mut controllers: Vec<Controller> =
         scalers.into_iter().map(|s| Controller::new(s, cfg.adapt_secs)).collect();
     // Pre-size the sentiment buckets exactly like the serial path.
@@ -395,6 +399,7 @@ pub fn run_batch(
                     live -= 1;
                     out[l] = Some(LaneResult {
                         violation_pct: histories[l].violation_pct(),
+                        p99_delay: histories[l].p99_delay(),
                         cpu_hours: clusters[l].cpu_hours(),
                         completed: histories[l].completed(),
                         violations: histories[l].violations(),
@@ -415,7 +420,14 @@ pub fn run_batch(
         if unlimited && next_tweet < n_tweets {
             let mut all_idle = true;
             for l in 0..r {
-                if active[l] && (!schedules[l].is_empty() || clusters[l].pending() != 0) {
+                // Node death inside a fast-forwarded stretch would
+                // invalidate the precomputed budgets, exactly as in the
+                // serial gate — failing clusters take the full loop.
+                if active[l]
+                    && (!schedules[l].is_empty()
+                        || clusters[l].pending() != 0
+                        || clusters[l].fails_nodes())
+                {
                     all_idle = false;
                     break;
                 }
@@ -495,6 +507,7 @@ mod tests {
             .run(tr, Box::new(LoadScaler::new(model.clone(), 0.99, mix())));
         LaneResult {
             violation_pct: res.violation_pct(),
+            p99_delay: res.history.p99_delay(),
             cpu_hours: res.cpu_hours,
             completed: res.history.completed(),
             violations: res.history.violations(),
@@ -517,6 +530,7 @@ mod tests {
         for (lane, &seed) in lanes.iter().zip(&seeds) {
             let want = serial_lane(&tr, &cfg, &model, seed);
             assert_eq!(lane.violation_pct.to_bits(), want.violation_pct.to_bits(), "seed {seed}");
+            assert_eq!(lane.p99_delay.to_bits(), want.p99_delay.to_bits(), "seed {seed}");
             assert_eq!(lane.cpu_hours.to_bits(), want.cpu_hours.to_bits(), "seed {seed}");
             assert_eq!(lane.completed, want.completed);
             assert_eq!(lane.violations, want.violations);
@@ -540,6 +554,7 @@ mod tests {
             let scfg = cfg.with_seed(seed);
             let want = Simulator::new(&scfg, &model).run(&tr, Box::new(ThresholdScaler::new(0.7)));
             assert_eq!(lane.violation_pct.to_bits(), want.violation_pct().to_bits());
+            assert_eq!(lane.p99_delay.to_bits(), want.history.p99_delay().to_bits());
             assert_eq!(lane.cpu_hours.to_bits(), want.cpu_hours.to_bits());
             assert_eq!(lane.decisions, want.decisions);
         }

@@ -1,5 +1,6 @@
-//! CPU pool with provisioning delay, CPU-hour accounting and stable
-//! per-node identities.
+//! CPU pool with provisioning delay, CPU-hour accounting, stable
+//! per-node identities — and, for the adversarial gauntlet, seeded node
+//! failures and stochastic VM boot times.
 //!
 //! §IV-B: "After requesting or releasing resources, another amount of time
 //! will pass before they are available" (Table III: 60 s allocation time).
@@ -11,6 +12,55 @@
 //! scalers ignore the ids; decentralized ones (the *depas* family) key
 //! per-node local views on them, so a node keeps its identity — and its
 //! jitter stream — across unrelated scale events elsewhere in the fleet.
+//!
+//! # Fault injection (optional, off by default)
+//!
+//! A [`FaultPlan`] arms two adversarial axes:
+//!
+//! * **Node failures.** Every VM draws an exponential lifetime (mean
+//!   [`FaultPlan::mtbf_secs`]) from a stream keyed on
+//!   `(plan seed, request id)` — *not* on any shared mutable RNG — so
+//!   the failure schedule is a pure function of the configuration and
+//!   the request sequence, bit-identical across the serial engine, the
+//!   lockstep batch kernel, the threaded runner and the fleet. The
+//!   lifetime clock starts at request time: a VM whose lifetime runs out
+//!   *before its boot completes* failed to provision, and the allocation
+//!   is **re-requested** (fresh request id, fresh draws) the moment the
+//!   failure is discovered — never silently lost. A failed *active* node
+//!   is decommissioned at the next tick; if that would drop the fleet
+//!   below `min_cpus`, the managed pool instantly commissions a
+//!   replacement with a fresh id, so failures can never starve the
+//!   cluster below its floor.
+//! * **Boot-time distribution.** Each allocation's provisioning time is
+//!   `provision_secs` plus an exponential jitter with mean
+//!   [`FaultPlan::boot_jitter_secs`], drawn from the same per-request
+//!   stream — a heavy-tailed "slow boot" model.
+
+use crate::rng::Rng;
+
+/// Adversarial fault axes for a [`Cluster`] (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Mean VM lifetime in seconds (exponential); `f64::INFINITY`
+    /// disables failures.
+    pub mtbf_secs: f64,
+    /// Mean exponential jitter added to every boot, seconds; `0`
+    /// disables it.
+    pub boot_jitter_secs: f64,
+    /// Seed decorrelating the per-request lifetime/boot streams.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Whether this plan can remove active nodes (the condition under
+    /// which the engines must give up idle fast-forwarding).
+    pub fn fails_nodes(&self) -> bool {
+        self.mtbf_secs.is_finite()
+    }
+}
+
+/// Domain constant for the per-request fault streams.
+const FAULT_STREAM: u64 = 0xFA117;
 
 /// Homogeneous CPU cluster as the simulator sees it.
 #[derive(Debug, Clone)]
@@ -18,30 +68,60 @@ pub struct Cluster {
     /// Identities of the active nodes, one per active CPU, in
     /// commissioning order. Scale-in releases the newest nodes first.
     nodes: Vec<u64>,
+    /// Absolute death time of each active node (parallel to `nodes`;
+    /// `f64::INFINITY` without fault injection).
+    death_at: Vec<f64>,
     /// Next identity to hand out (monotone, never reused).
     next_node_id: u64,
-    /// Pending scale-outs: (available_at, count).
-    pending: Vec<(f64, u32)>,
+    /// Pending scale-outs, one entry per VM: (available_at, death_at).
+    pending: Vec<(f64, f64)>,
+    /// Next allocation-request id (monotone; keys the fault streams).
+    next_request_id: u64,
     provision_secs: f64,
     /// Accumulated cost in CPU-seconds.
     cpu_seconds: f64,
     /// Floor (the paper never drops below 1 CPU).
     min_cpus: u32,
+    /// Optional adversarial axes.
+    fault: Option<FaultPlan>,
+    /// Active-node failures observed so far.
+    failures: u64,
 }
 
 impl Cluster {
-    /// A cluster of `starting_cpus` machines (node ids `0..starting_cpus`)
-    /// whose later allocations take `provision_secs` to arrive.
+    /// A fault-free cluster of `starting_cpus` machines (node ids
+    /// `0..starting_cpus`) whose later allocations take `provision_secs`
+    /// to arrive.
     pub fn new(starting_cpus: u32, provision_secs: f64) -> Self {
+        Self::with_faults(starting_cpus, provision_secs, None)
+    }
+
+    /// A cluster with optional fault injection. The initial machines use
+    /// request ids `0..starting_cpus` with their lifetime clocks starting
+    /// at time 0.
+    pub fn with_faults(starting_cpus: u32, provision_secs: f64, fault: Option<FaultPlan>) -> Self {
         assert!(starting_cpus >= 1);
-        Self {
-            nodes: (0..u64::from(starting_cpus)).collect(),
-            next_node_id: u64::from(starting_cpus),
+        let mut c = Self {
+            nodes: Vec::new(),
+            death_at: Vec::new(),
+            next_node_id: 0,
             pending: Vec::new(),
+            next_request_id: 0,
             provision_secs,
             cpu_seconds: 0.0,
             min_cpus: 1,
+            fault,
+            failures: 0,
+        };
+        for _ in 0..starting_cpus {
+            let req = c.next_request_id;
+            c.next_request_id += 1;
+            let death = c.lifetime_secs(req); // clock starts at t = 0
+            c.nodes.push(c.next_node_id);
+            c.death_at.push(death);
+            c.next_node_id += 1;
         }
+        c
     }
 
     /// CPUs currently serving work.
@@ -59,13 +139,66 @@ impl Cluster {
 
     /// CPUs requested but not yet available.
     pub fn pending(&self) -> u32 {
-        self.pending.iter().map(|&(_, n)| n).sum()
+        self.pending.len() as u32
     }
 
-    /// Request `n` more CPUs, available after the provisioning delay.
+    /// Active-node failures injected so far.
+    pub fn failures(&self) -> u64 {
+        self.failures
+    }
+
+    /// Whether fault injection can remove active nodes — when true the
+    /// engines must step densely (no idle fast-forward), since the
+    /// active count can change at any tick.
+    pub fn fails_nodes(&self) -> bool {
+        self.fault.as_ref().is_some_and(FaultPlan::fails_nodes)
+    }
+
+    /// The fault stream for allocation-request `req`: a pure function of
+    /// the plan seed and the request id, independent of call history.
+    fn vm_stream(&self, req: u64) -> Rng {
+        let seed = self.fault.as_ref().map_or(0, |p| p.seed);
+        Rng::new(FAULT_STREAM).split(seed).split(req)
+    }
+
+    /// Boot duration for request `req` (`provision_secs` exactly when
+    /// boot jitter is off — the fault-free path draws nothing).
+    fn boot_secs(&self, req: u64) -> f64 {
+        match &self.fault {
+            Some(p) if p.boot_jitter_secs > 0.0 => {
+                let mut r = self.vm_stream(req).split(1);
+                self.provision_secs + r.exponential(1.0 / p.boot_jitter_secs)
+            }
+            _ => self.provision_secs,
+        }
+    }
+
+    /// Lifetime draw for request `req` (∞ when failures are off).
+    fn lifetime_secs(&self, req: u64) -> f64 {
+        match &self.fault {
+            Some(p) if p.fails_nodes() => {
+                let mut r = self.vm_stream(req).split(2);
+                r.exponential(1.0 / p.mtbf_secs)
+            }
+            _ => f64::INFINITY,
+        }
+    }
+
+    /// File one allocation request at `now`: boot and lifetime are drawn
+    /// from the request's own stream; the lifetime clock starts now.
+    fn request_vm(&mut self, now: f64) {
+        let req = self.next_request_id;
+        self.next_request_id += 1;
+        let boot = self.boot_secs(req);
+        let life = self.lifetime_secs(req);
+        self.pending.push((now + boot, now + life));
+    }
+
+    /// Request `n` more CPUs, available after the provisioning delay
+    /// (plus per-VM boot jitter when a fault plan arms it).
     pub fn scale_out(&mut self, now: f64, n: u32) {
-        if n > 0 {
-            self.pending.push((now + self.provision_secs, n));
+        for _ in 0..n {
+            self.request_vm(now);
         }
     }
 
@@ -74,39 +207,62 @@ impl Cluster {
     /// flight means we no longer want those machines. Active releases
     /// decommission the *newest* nodes (their ids retire with them).
     pub fn scale_in(&mut self, n: u32) {
-        let mut left = n;
-        while left > 0 {
-            if let Some(last) = self.pending.last_mut() {
-                let take = last.1.min(left);
-                last.1 -= take;
-                left -= take;
-                if last.1 == 0 {
-                    self.pending.pop();
-                }
-            } else {
-                break;
-            }
-        }
-        let keep = self.nodes.len().saturating_sub(left as usize).max(self.min_cpus as usize);
+        let cancel = (n as usize).min(self.pending.len());
+        self.pending.truncate(self.pending.len() - cancel);
+        let left = n as usize - cancel;
+        let keep = self.nodes.len().saturating_sub(left).max(self.min_cpus as usize);
         self.nodes.truncate(keep);
+        self.death_at.truncate(keep);
     }
 
     /// Advance time by `dt` seconds: accrue cost, commission arrivals
-    /// (each arrival is assigned the next fresh node id, in request order).
+    /// (each arrival is assigned the next fresh node id, in request
+    /// order), re-request allocations that failed during boot, then
+    /// decommission active nodes whose lifetime has run out (replacing
+    /// them when the floor demands it).
     pub fn tick(&mut self, now: f64, dt: f64) {
         self.cpu_seconds += self.nodes.len() as f64 * dt;
-        let mut arrived = 0u32;
-        self.pending.retain(|&(at, n)| {
-            if at <= now {
-                arrived += n;
-                false
-            } else {
-                true
+        let mut i = 0;
+        while i < self.pending.len() {
+            let (at, death) = self.pending[i];
+            if at > now {
+                i += 1;
+                continue;
             }
-        });
-        for _ in 0..arrived {
-            self.nodes.push(self.next_node_id);
-            self.next_node_id += 1;
+            self.pending.remove(i);
+            if death <= at {
+                // Died while booting: the allocation failed to
+                // provision. Re-request it — fresh request id, fresh
+                // draws — from the moment the failure is discovered.
+                self.request_vm(at);
+            } else {
+                self.nodes.push(self.next_node_id);
+                self.death_at.push(death);
+                self.next_node_id += 1;
+            }
+        }
+        if self.fails_nodes() {
+            let mut k = 0;
+            while k < self.nodes.len() {
+                if self.death_at[k] <= now {
+                    self.nodes.remove(k);
+                    self.death_at.remove(k);
+                    self.failures += 1;
+                } else {
+                    k += 1;
+                }
+            }
+            // Floor guarantee: failures never starve the fleet below
+            // `min_cpus` — the managed pool replaces instantly, with a
+            // fresh identity and a fresh lifetime.
+            while self.nodes.len() < self.min_cpus as usize {
+                let req = self.next_request_id;
+                self.next_request_id += 1;
+                let death = now + self.lifetime_secs(req);
+                self.nodes.push(self.next_node_id);
+                self.death_at.push(death);
+                self.next_node_id += 1;
+            }
         }
     }
 
@@ -119,6 +275,14 @@ impl Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn failing(starting: u32, mtbf: f64, seed: u64) -> Cluster {
+        Cluster::with_faults(
+            starting,
+            60.0,
+            Some(FaultPlan { mtbf_secs: mtbf, boot_jitter_secs: 0.0, seed }),
+        )
+    }
 
     #[test]
     fn provisioning_delay_respected() {
@@ -221,5 +385,99 @@ mod tests {
         c.scale_out(31.0, 1);
         c.tick(61.0, 1.0);
         assert_eq!(c.nodes().len(), c.active() as usize);
+    }
+
+    // ----- fault injection -----
+
+    #[test]
+    fn fault_free_cluster_never_fails() {
+        let mut c = Cluster::new(4, 0.0);
+        for i in 0..100_000 {
+            c.tick(i as f64, 1.0);
+        }
+        assert_eq!(c.failures(), 0);
+        assert_eq!(c.active(), 4);
+        assert!(!c.fails_nodes());
+    }
+
+    #[test]
+    fn failures_eventually_strike_and_respect_the_floor() {
+        let mut c = failing(4, 600.0, 11);
+        assert!(c.fails_nodes());
+        for i in 0..50_000 {
+            c.tick(i as f64, 1.0);
+            assert!(c.active() >= 1, "floor violated at t={i}");
+        }
+        assert!(c.failures() > 0, "mean lifetime 600 s must fail within 50 000 s");
+    }
+
+    #[test]
+    fn failure_schedule_is_a_pure_function_of_seed_and_requests() {
+        let drive = |seed: u64| {
+            let mut c = failing(3, 900.0, seed);
+            let mut log = Vec::new();
+            for i in 0..20_000 {
+                c.tick(i as f64, 1.0);
+                log.push((c.active(), c.failures()));
+            }
+            log
+        };
+        assert_eq!(drive(5), drive(5), "same seed ⇒ identical schedule");
+        assert_ne!(drive(5), drive(6), "different seeds must decorrelate");
+    }
+
+    #[test]
+    fn boot_failure_is_rerequested_not_lost() {
+        // Tiny MTBF vs a long boot: allocations keep dying during boot
+        // and must be re-filed each time — pending never silently drops
+        // while the fleet still wants the capacity.
+        let mut c = Cluster::with_faults(
+            1,
+            120.0,
+            Some(FaultPlan { mtbf_secs: 10.0, boot_jitter_secs: 0.0, seed: 3 }),
+        );
+        c.scale_out(0.0, 2);
+        for i in 0..1_000 {
+            c.tick(i as f64, 1.0);
+            assert!(
+                c.active() + c.pending() >= 1,
+                "requested capacity lost at t={i}"
+            );
+        }
+        // The re-request loop eventually lands a VM whose lifetime
+        // outlasts its boot (p ≈ e^{-12} per attempt of *not* landing).
+        assert!(c.failures() > 0 || c.active() >= 1);
+    }
+
+    #[test]
+    fn floor_replacement_uses_fresh_identities() {
+        let mut c = failing(1, 50.0, 9);
+        let first = c.nodes()[0];
+        for i in 0..5_000 {
+            c.tick(i as f64, 1.0);
+        }
+        assert!(c.failures() > 0);
+        assert_eq!(c.active(), 1, "floor holds a 1-CPU fleet at exactly 1");
+        assert_ne!(c.nodes()[0], first, "replacement must carry a fresh id");
+    }
+
+    #[test]
+    fn boot_jitter_delays_arrivals_deterministically() {
+        let plan = FaultPlan { mtbf_secs: f64::INFINITY, boot_jitter_secs: 30.0, seed: 4 };
+        let arrival = |seed: u64| {
+            let mut c = Cluster::with_faults(1, 60.0, Some(FaultPlan { seed, ..plan }));
+            c.scale_out(0.0, 1);
+            let mut t = 0.0;
+            while c.active() < 2 {
+                t += 1.0;
+                c.tick(t, 1.0);
+                assert!(t < 100_000.0, "VM never arrived");
+            }
+            t
+        };
+        let a = arrival(4);
+        assert!(a >= 60.0, "jitter only ever adds to the base delay");
+        assert_eq!(a, arrival(4), "same seed ⇒ same boot time");
+        assert!(!Cluster::with_faults(1, 60.0, Some(plan)).fails_nodes());
     }
 }

@@ -187,7 +187,8 @@ impl<'a> Simulator<'a> {
     ) -> SimResult {
         let cfg = self.cfg;
         let mut rng = Rng::new(cfg.seed);
-        let mut cluster = Cluster::new(cfg.starting_cpus, cfg.provision_secs);
+        let mut cluster =
+            Cluster::with_faults(cfg.starting_cpus, cfg.provision_secs, cfg.fault_plan());
         let mut controller = Controller::new(scaler, cfg.adapt_secs);
         let mut history = History::new(cfg.sla_secs);
         // Pre-size the sentiment buckets only for sane horizons; degenerate
@@ -341,10 +342,15 @@ impl<'a> Simulator<'a> {
             // bit-identical to dense stepping, just without queue, scaler
             // and bookkeeping overhead. Rate-limited runs keep dense
             // stepping: the queue's read credit updates every step.
+            // Failure injection also forces dense stepping: a node death
+            // inside the bare loop would invalidate its precomputed
+            // budget (boot jitter alone is fine — the pending() gate
+            // already covers arrivals).
             let idle = unlimited
                 && schedule.is_empty()
                 && next_tweet < n_tweets
-                && cluster.pending() == 0;
+                && cluster.pending() == 0
+                && !cluster.fails_nodes();
             if idle {
                 let next_post = trace.post_time(next_tweet);
                 let bare_budget = cluster.active() as f64 * cfg.cycles_per_cpu_step();

@@ -153,6 +153,13 @@ impl SentimentWindows {
     }
 }
 
+/// Fixed-width delay-histogram bins (the last one is overflow).
+const DELAY_BINS: usize = 2048;
+
+/// Bins per SLA length: bin width is `sla_secs / DELAY_BINS_PER_SLA`,
+/// so the histogram spans 16 SLAs before overflowing.
+const DELAY_BINS_PER_SLA: f64 = 128.0;
+
 /// Full history log with streaming SLA/delay statistics.
 #[derive(Debug, Clone)]
 pub struct History {
@@ -161,6 +168,12 @@ pub struct History {
     violations: u64,
     delay_stats: Running,
     queue_delay_stats: Running,
+    /// Fixed-bin delay histogram behind [`History::p99_delay`]: counts
+    /// are order-independent, so the quantile estimate is bit-identical
+    /// across serial, batched and threaded runs by construction (the
+    /// paper's streaming [`Running`] stats carry no quantiles).
+    delay_hist: Vec<u64>,
+    max_delay: f64,
     sentiment: SentimentWindows,
     /// Optional dense log (delays per completion) for distribution plots;
     /// disabled on the Fig 7/8 sweeps to keep memory flat.
@@ -176,6 +189,8 @@ impl History {
             violations: 0,
             delay_stats: Running::new(),
             queue_delay_stats: Running::new(),
+            delay_hist: vec![0; DELAY_BINS],
+            max_delay: 0.0,
             sentiment: SentimentWindows::new(),
             keep_delays: false,
             delays: Vec::new(),
@@ -205,6 +220,11 @@ impl History {
         }
         self.delay_stats.push(d);
         self.queue_delay_stats.push(queue_delay);
+        let w = self.sla_secs / DELAY_BINS_PER_SLA;
+        self.delay_hist[((d.max(0.0) / w) as usize).min(DELAY_BINS - 1)] += 1;
+        if d > self.max_delay {
+            self.max_delay = d;
+        }
         if self.keep_delays {
             self.delays.push(d);
         }
@@ -230,6 +250,37 @@ impl History {
 
     pub fn mean_delay(&self) -> f64 {
         self.delay_stats.mean()
+    }
+
+    /// 99th-percentile processing delay, estimated from the fixed-bin
+    /// histogram: the upper edge of the bin where the cumulative count
+    /// crosses 99%, clamped to the observed maximum (exact when the tail
+    /// overflows the last bin). Resolution is `sla_secs / 128` — ~2% of
+    /// an SLA, plenty for the violation-tail comparisons the gauntlet
+    /// tables make — and the estimate depends only on the multiset of
+    /// recorded delays, never on their order.
+    pub fn p99_delay(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        let target = (0.99 * self.completed as f64).ceil() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.delay_hist.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                if i + 1 == DELAY_BINS {
+                    return self.max_delay;
+                }
+                let w = self.sla_secs / DELAY_BINS_PER_SLA;
+                return ((i + 1) as f64 * w).min(self.max_delay);
+            }
+        }
+        self.max_delay
+    }
+
+    /// Largest delay recorded so far.
+    pub fn max_delay(&self) -> f64 {
+        self.max_delay
     }
 
     pub fn mean_queue_delay(&self) -> f64 {
@@ -368,6 +419,54 @@ mod tests {
     fn empty_history_zero_pct() {
         let h = History::new(10.0);
         assert_eq!(h.violation_pct(), 0.0);
+        assert_eq!(h.p99_delay(), 0.0);
+        assert_eq!(h.max_delay(), 0.0);
+    }
+
+    #[test]
+    fn p99_tracks_the_delay_tail() {
+        // 100 distinct delays 1..=100 s under a 100 s SLA: p99 must land
+        // between the true 99th value and the maximum.
+        let mut h = History::new(100.0);
+        for i in 1..=100 {
+            h.record(done(0.0, i as f64, 0.5), 0.0);
+        }
+        let p99 = h.p99_delay();
+        assert!((99.0..=100.0).contains(&p99), "p99={p99}");
+        assert_eq!(h.max_delay(), 100.0);
+        // A uniformly fast history keeps p99 at bin resolution, not 0.
+        let mut fast = History::new(100.0);
+        for _ in 0..1000 {
+            fast.record(done(0.0, 0.5, 0.5), 0.0);
+        }
+        let p99 = fast.p99_delay();
+        assert!(p99 >= 0.5 && p99 < 1.0, "p99={p99}");
+    }
+
+    #[test]
+    fn p99_overflow_bin_reports_the_observed_max() {
+        // Delays 1000× the SLA blow past the histogram span; the
+        // overflow bin falls back to the exact max.
+        let mut h = History::new(1.0);
+        for _ in 0..10 {
+            h.record(done(0.0, 1000.0, 0.5), 0.0);
+        }
+        assert_eq!(h.p99_delay(), 1000.0);
+    }
+
+    #[test]
+    fn p99_is_independent_of_record_order() {
+        let delays: Vec<f64> = (0..500).map(|i| (i as f64 * 0.731).rem_euclid(400.0)).collect();
+        let mut fwd = History::new(300.0);
+        for &d in &delays {
+            fwd.record(done(0.0, d.max(0.001), 0.5), 0.0);
+        }
+        let mut rev = History::new(300.0);
+        for &d in delays.iter().rev() {
+            rev.record(done(0.0, d.max(0.001), 0.5), 0.0);
+        }
+        assert_eq!(fwd.p99_delay().to_bits(), rev.p99_delay().to_bits());
+        assert_eq!(fwd.max_delay().to_bits(), rev.max_delay().to_bits());
     }
 
     #[test]

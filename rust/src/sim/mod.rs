@@ -11,7 +11,7 @@ pub mod history;
 pub mod input_queue;
 
 pub use batch::{run_batch, BatchArena, LaneResult};
-pub use cluster::Cluster;
+pub use cluster::{Cluster, FaultPlan};
 pub use cycles::PsSchedule;
 pub use engine::{SimResult, SimScratch, Simulator, StateSample};
 pub use history::{Completed, History, SentimentWindows};

@@ -15,7 +15,7 @@
 //! the early-warning signal the appdata algorithm exploits (Fig 3).
 
 use super::burst::{rate_multiplier, sentiment_excitation};
-use super::matches::MatchSpec;
+use super::matches::{BurstEvent, MatchSpec};
 use super::trace::{Trace, TweetClass};
 use crate::rng::Rng;
 
@@ -40,6 +40,15 @@ pub struct GeneratorConfig {
     pub interest_swing: f64,
     /// Sentiment loading on the slow shared interest process (additive).
     pub sentiment_interest: f64,
+    /// Adversarial shape: peak rate multiplier of an *unannounced* flash
+    /// crowd injected mid-window (≤ 1 = off). Unlike scheduled match
+    /// events it excites no leading sentiment — the appdata early-warning
+    /// signal is absent by construction.
+    pub flash_crowd: f64,
+    /// Adversarial shape: echo every scheduled burst with an aftershock
+    /// this many minutes later (0 = off) — punishes scalers that release
+    /// capacity the moment the first peak passes.
+    pub double_burst_gap_min: f64,
 }
 
 impl Default for GeneratorConfig {
@@ -54,6 +63,8 @@ impl Default for GeneratorConfig {
             minute_noise: 0.015,
             interest_swing: 1.2,
             sentiment_interest: 0.22,
+            flash_crowd: 0.0,
+            double_burst_gap_min: 0.0,
         }
     }
 }
@@ -81,6 +92,8 @@ impl GeneratorConfig {
             self.minute_noise.to_bits(),
             self.interest_swing.to_bits(),
             self.sentiment_interest.to_bits(),
+            self.flash_crowd.to_bits(),
+            self.double_burst_gap_min.to_bits(),
         ];
         let mut h = 0xCBF2_9CE4_8422_2325u64;
         for f in fields {
@@ -128,6 +141,12 @@ impl GeneratorConfig {
         if self.sentiment_interest != d.sentiment_interest {
             parts.push(format!("sint={:.2}", self.sentiment_interest));
         }
+        if self.flash_crowd != d.flash_crowd {
+            parts.push(format!("flash={:.1}", self.flash_crowd));
+        }
+        if self.double_burst_gap_min != d.double_burst_gap_min {
+            parts.push(format!("echo={:.1}m", self.double_burst_gap_min));
+        }
         parts.join(",")
     }
 }
@@ -159,11 +178,38 @@ pub fn interest_profile(spec: &MatchSpec, cfg: &GeneratorConfig) -> Vec<f64> {
         .collect()
 }
 
+/// The burst schedule driving the *volume* profile: the spec's scheduled
+/// events plus the config's adversarial shapes. A `flash_crowd > 1`
+/// injects an abrupt unscheduled pulse at the window midpoint;
+/// `double_burst_gap_min > 0` echoes every scheduled event with a
+/// slightly smaller aftershock that many minutes later. Neither shape
+/// appears in [`sentiment_profile`]'s excitation — they are unannounced
+/// by construction, so application-data scalers get no early warning.
+pub fn shaped_events(spec: &MatchSpec, cfg: &GeneratorConfig) -> Vec<BurstEvent> {
+    let mut events = spec.events.clone();
+    if cfg.flash_crowd > 1.0 {
+        let mid_min = spec.length_hours * 30.0; // 50% of the window
+        events.push(BurstEvent::new(mid_min, cfg.flash_crowd, 0.3, 8.0));
+    }
+    if cfg.double_burst_gap_min > 0.0 {
+        for e in &spec.events {
+            events.push(BurstEvent::new(
+                e.minute + cfg.double_burst_gap_min,
+                1.0 + 0.7 * (e.magnitude - 1.0),
+                e.rise_min * 0.5,
+                e.decay_min,
+            ));
+        }
+    }
+    events
+}
+
 /// Per-second arrival-rate profile (tweets/second), calibrated so the
 /// expected total equals `spec.total_tweets`.
 pub fn rate_profile(spec: &MatchSpec, cfg: &GeneratorConfig) -> Vec<f64> {
     let secs = spec.length_secs() as usize;
     let interest = interest_profile(spec, cfg);
+    let events = shaped_events(spec, cfg);
     let mut shape = Vec::with_capacity(secs);
     for s in 0..secs {
         let t_min = s as f64 / 60.0;
@@ -171,7 +217,7 @@ pub fn rate_profile(spec: &MatchSpec, cfg: &GeneratorConfig) -> Vec<f64> {
         // (Fig 4 shows later-match minutes generally busier than early).
         let base = 1.0 + 0.35 * (t_min / (spec.length_hours * 60.0));
         let slow = 1.0 + cfg.interest_swing * interest[s];
-        shape.push(base * slow * rate_multiplier(&spec.events, t_min));
+        shape.push(base * slow * rate_multiplier(&events, t_min));
     }
     let integral: f64 = shape.iter().sum();
     // Degenerate specs (no tweets, zero-length monitoring window) must not
@@ -420,6 +466,8 @@ mod tests {
             GeneratorConfig { minute_noise: 0.02, ..base.clone() },
             GeneratorConfig { interest_swing: 0.5, ..base.clone() },
             GeneratorConfig { sentiment_interest: 0.1, ..base.clone() },
+            GeneratorConfig { flash_crowd: 6.0, ..base.clone() },
+            GeneratorConfig { double_burst_gap_min: 10.0, ..base.clone() },
         ];
         for v in &variants {
             assert_ne!(v.fingerprint(), base.fingerprint(), "{v:?}");
@@ -438,6 +486,72 @@ mod tests {
             ..GeneratorConfig::default()
         };
         assert_eq!(cfg.label(), "lead=0.00m,swing=0.10");
+        let cfg = GeneratorConfig {
+            flash_crowd: 6.0,
+            double_burst_gap_min: 10.0,
+            ..GeneratorConfig::default()
+        };
+        assert_eq!(cfg.label(), "flash=6.0,echo=10.0m");
+    }
+
+    #[test]
+    fn flash_crowd_spikes_mid_window_without_sentiment_warning() {
+        // An event-free spec: the only possible peak is the injected one.
+        let spec = MatchSpec {
+            opponent: "Flash",
+            date: "—",
+            total_tweets: 120_000,
+            length_hours: 1.0,
+            events: vec![],
+        };
+        let cfg = GeneratorConfig { flash_crowd: 6.0, ..GeneratorConfig::default() };
+        let tr = generate(&spec, &cfg);
+        let vol = tr.volume_per_minute();
+        let peak = (28..36).map(|i| vol[i] as f64).fold(f64::MIN, f64::max);
+        let quiet = vol[10] as f64;
+        assert!(peak > 2.5 * quiet, "flash peak {peak} vs quiet {quiet}");
+        // ... and sentiment gives no early warning: no excitation pulse,
+        // so the level stays in the base + interest + wander band.
+        let sent = tr.sentiment_per_minute();
+        for m in 25..32 {
+            assert!(sent[m] < 0.70, "minute {m}: unannounced crowd leaked into sentiment");
+        }
+    }
+
+    #[test]
+    fn double_burst_echoes_every_scheduled_event() {
+        let spec = MatchSpec {
+            opponent: "Echo",
+            date: "—",
+            total_tweets: 120_000,
+            length_hours: 1.5,
+            events: vec![BurstEvent::new(20.0, 4.0, 0.8, 5.0)],
+        };
+        let cfg = GeneratorConfig { double_burst_gap_min: 15.0, ..GeneratorConfig::default() };
+        let events = shaped_events(&spec, &cfg);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[1].minute, 35.0);
+        assert!(events[1].magnitude > 1.0 && events[1].magnitude < events[0].magnitude);
+        // The echo lifts the burst multiplier around its own peak ...
+        use super::super::burst::rate_multiplier;
+        let with = rate_multiplier(&events, 37.0);
+        let without = rate_multiplier(&spec.events, 37.0);
+        assert!(with > 1.5 * without, "echo multiplier {with} vs {without}");
+        // ... and the shape axis reaches the generated profile (same seed,
+        // different volume placement).
+        let shaped = rate_profile(&spec, &cfg);
+        let plain = rate_profile(&spec, &GeneratorConfig::default());
+        assert!(shaped[37 * 60] / shaped[10 * 60] > plain[37 * 60] / plain[10 * 60]);
+    }
+
+    #[test]
+    fn shapes_off_by_default_and_preserve_legacy_traces() {
+        let spec = small_spec();
+        let d = GeneratorConfig::default();
+        assert!(shaped_events(&spec, &d) == spec.events, "defaults add no events");
+        // flash_crowd <= 1 is off, not a degenerate pulse
+        let off = GeneratorConfig { flash_crowd: 1.0, ..d };
+        assert_eq!(shaped_events(&spec, &off).len(), spec.events.len());
     }
 
     #[test]

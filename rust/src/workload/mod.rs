@@ -10,6 +10,6 @@ pub mod store;
 pub mod text;
 pub mod trace;
 
-pub use generator::{generate, GeneratorConfig};
+pub use generator::{generate, shaped_events, GeneratorConfig};
 pub use matches::{all_matches, by_opponent, BurstEvent, MatchSpec};
 pub use trace::{Trace, Tweet, TweetClass};

@@ -36,6 +36,7 @@ fn lane_seeds(base: u64, r: usize) -> Vec<u64> {
 fn assert_lane_matches(lane: &LaneResult, want: &SimResult, tag: &str) {
     assert_eq!(lane.violation_pct.to_bits(), want.violation_pct().to_bits(), "{tag}");
     assert_eq!(lane.cpu_hours.to_bits(), want.cpu_hours.to_bits(), "{tag}");
+    assert_eq!(lane.p99_delay.to_bits(), want.history.p99_delay().to_bits(), "{tag}");
     assert_eq!(lane.completed, want.history.completed(), "{tag}");
     assert_eq!(lane.violations, want.history.violations(), "{tag}");
     assert_eq!(lane.decisions, want.decisions, "{tag}");
@@ -60,6 +61,9 @@ fn batched_lanes_bit_identical_to_serial() {
         ScalerSpec::predictive(120.0),
         ScalerSpec::Vertical,
         ScalerSpec::depas(0.7, 0.1, 0.5),
+        ScalerSpec::queueing(0.7, 0.5),
+        ScalerSpec::pid(2.0, 0.5, 0.25),
+        ScalerSpec::hybrid(80.0, 120.0),
     ];
     let mut scratch = SimScratch::new();
     for cfg in &configs {
@@ -72,6 +76,46 @@ fn batched_lanes_bit_identical_to_serial() {
                 let scfg = cfg.with_seed(seed);
                 let want = Simulator::new(&scfg, &model).run(&trace, spec.build(&model, mix()));
                 let tag = format!("{spec} rate={:?} seed={seed}", cfg.input_rate);
+                assert_lane_matches(lane, &want, &tag);
+            }
+        }
+    }
+}
+
+/// The fault axes go through the batch kernel unchanged: with failure
+/// injection and boot-time jitter armed, every lane still reproduces the
+/// serial engine of the same seed bit for bit — the fault schedule
+/// depends on the VM request index, never on which kernel requests it.
+#[test]
+fn fault_injected_lanes_bit_identical_to_serial() {
+    let trace = source(20_000).load().unwrap();
+    let model = DelayModel::default();
+    let configs = [
+        SimConfig { failure_mtbf_secs: Some(600.0), ..Default::default() },
+        SimConfig { boot_jitter_secs: Some(45.0), ..Default::default() },
+        SimConfig {
+            failure_mtbf_secs: Some(900.0),
+            boot_jitter_secs: Some(30.0),
+            failure_seed: 11,
+            sla_secs: 60.0,
+            ..Default::default()
+        },
+    ];
+    let specs =
+        [ScalerSpec::threshold(70.0), ScalerSpec::queueing(0.7, 0.5), ScalerSpec::hybrid(80.0, 120.0)];
+    let mut scratch = SimScratch::new();
+    for cfg in &configs {
+        for spec in &specs {
+            let seeds = lane_seeds(cfg.seed, 4);
+            let scalers: Vec<_> = seeds.iter().map(|_| spec.build(&model, mix())).collect();
+            let lanes = run_batch(&trace, cfg, &model, scalers, &seeds, &mut scratch);
+            for (lane, &seed) in lanes.iter().zip(&seeds) {
+                let scfg = cfg.with_seed(seed);
+                let want = Simulator::new(&scfg, &model).run(&trace, spec.build(&model, mix()));
+                let tag = format!(
+                    "{spec} mtbf={:?} jitter={:?} seed={seed}",
+                    cfg.failure_mtbf_secs, cfg.boot_jitter_secs
+                );
                 assert_lane_matches(lane, &want, &tag);
             }
         }

@@ -116,6 +116,52 @@ fn cli_matrix_runs_a_grid() {
 }
 
 #[test]
+fn cli_matrix_adversarial_axes_label_rows_and_converge() {
+    let out = bin()
+        .args([
+            "matrix",
+            "France",
+            "--algos",
+            "queueing-0.7-0.5,pid-2-0.5-0.25,hybrid-80-120",
+            "--fast",
+            "--serial",
+            "--max-reps",
+            "2",
+            "--mtbf",
+            "1800",
+            "--boot-jitter",
+            "20",
+            "--failure-seed",
+            "11",
+            "--flash-crowd",
+            "4",
+            "--echo-gap",
+            "10",
+            "--lead-min",
+            "0,1.5",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for want in [
+        "scenario matrix — 6 scenarios",
+        "queueing-0.7-0.5",
+        "pid-2-0.5-0.25",
+        "hybrid-80-120",
+        "flash=4.0",
+        "echo=10.0m",
+        "mtbf=1800s",
+        "boot=20s",
+        "fseed=11",
+        "p99-delay(s)",
+        "SLA-score",
+    ] {
+        assert!(text.contains(want), "missing {want:?} in:\n{text}");
+    }
+}
+
+#[test]
 fn cli_matrix_streams_and_reuses_the_disk_cache() {
     let dir = TempDir::new().unwrap();
     let cache = dir.join("traces");
@@ -151,7 +197,10 @@ fn cli_matrix_streams_and_reuses_the_disk_cache() {
     let first = run();
     assert!(first.status.success(), "{}", String::from_utf8_lossy(&first.stderr));
     let text = String::from_utf8_lossy(&first.stdout).into_owned();
-    assert!(text.contains("scenario,violation_pct,cpu_hours,reps"), "{text}");
+    assert!(
+        text.contains("scenario,violation_pct,p99_delay,cpu_hours,sla_score,reps"),
+        "{text}"
+    );
     let rows = streamed_rows(&text);
     assert_eq!(rows.len(), 2, "one streamed CSV line per scenario:\n{text}");
     assert!(rows.iter().any(|r| r.contains("lead=0.00m")), "{text}");

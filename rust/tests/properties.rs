@@ -378,6 +378,266 @@ fn prop_depas_votes_respect_band_floor_and_expectation() {
 }
 
 #[test]
+fn prop_pid_actuation_and_integral_respect_the_clamp() {
+    use sla_autoscale::autoscale::{AutoScaler, Decision, Observation, PidScaler};
+    use sla_autoscale::delay::DelayModel;
+    use sla_autoscale::sim::history::SentimentWindows;
+    for_all(150, 0x91D0, |rng, case| {
+        // random gains across the whole legal range
+        let kp = 0.1 + rng.next_f64() * 8.0;
+        let ki = rng.next_f64() * 2.0;
+        let kd = rng.next_f64() * 4.0;
+        let mut s =
+            PidScaler::new(DelayModel::default(), 0.99999, [0.3, 0.3, 0.4], kp, ki, kd);
+        let w = SentimentWindows::new();
+        let mut cpus = 1u32;
+        let mut now = 0.0;
+        for _ in 0..rng.range(20, 120) {
+            now += rng.next_f64() * 120.0 + 1.0;
+            // adversarial load: dead air, modest queues, saturating floods
+            let in_system = match rng.below(4) {
+                0 => 0,
+                1 => rng.range(0, 1_000) as usize,
+                2 => 10_000_000,
+                _ => 1_000_000_000,
+            };
+            let obs = Observation {
+                now,
+                cpus,
+                pending_cpus: rng.range(0, 3) as u32,
+                in_system,
+                cpu_usage: rng.next_f64(),
+                sentiment: &w,
+                nodes: &[],
+                cpu_hz: 2.0e9,
+                sla_secs: 300.0,
+            };
+            match s.decide(&obs) {
+                Decision::Hold => {}
+                Decision::ScaleOut(n) => {
+                    assert!(
+                        f64::from(n) <= PidScaler::MAX_STEP,
+                        "case {case}: spawn {n} breaks the actuation clamp"
+                    );
+                    cpus += n;
+                }
+                Decision::ScaleIn(n) => {
+                    assert!(
+                        f64::from(n) <= PidScaler::MAX_STEP,
+                        "case {case}: kill {n} breaks the actuation clamp"
+                    );
+                    assert!(n <= cpus - 1, "case {case}: scale-in below one CPU");
+                    cpus -= n;
+                }
+            }
+            assert!(
+                s.integral_term().abs() <= PidScaler::MAX_STEP + 1e-12,
+                "case {case}: integrator wound up past the clamp"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_queueing_target_monotone_in_load_and_backlog() {
+    use sla_autoscale::autoscale::{Observation, QueueingScaler};
+    use sla_autoscale::delay::DelayModel;
+    use sla_autoscale::sim::history::SentimentWindows;
+    for_all(300, 0x0DE0, |rng, case| {
+        let rho = 0.05 + rng.next_f64() * 0.9;
+        let w_frac = 0.05 + rng.next_f64() * 0.95;
+        let s =
+            QueueingScaler::new(DelayModel::default(), 0.99999, [0.3, 0.3, 0.4], rho, w_frac);
+        let w = SentimentWindows::new();
+        let cpus = rng.range(1, 64) as u32;
+        let obs = |usage: f64, in_system: usize| Observation {
+            now: 60.0,
+            cpus,
+            pending_cpus: 0,
+            in_system,
+            cpu_usage: usage,
+            sentiment: &w,
+            nodes: &[],
+            cpu_hz: 2.0e9,
+            sla_secs: 300.0,
+        };
+        // monotone in the offered-load (arrival-rate) estimate at fixed backlog
+        let n = rng.range(0, 2_000_000) as usize;
+        let (u1, u2) = (rng.next_f64(), rng.next_f64());
+        let (lo, hi) = if u1 <= u2 { (u1, u2) } else { (u2, u1) };
+        assert!(
+            s.target_cpus(&obs(lo, n)) <= s.target_cpus(&obs(hi, n)),
+            "case {case}: target shrank as offered load grew (rho={rho} w={w_frac})"
+        );
+        // monotone in the in-system count at fixed offered load
+        let u = rng.next_f64();
+        let (a, b) = (rng.range(0, 2_000_000) as usize, rng.range(0, 2_000_000) as usize);
+        let (na, nb) = if a <= b { (a, b) } else { (b, a) };
+        assert!(
+            s.target_cpus(&obs(u, na)) <= s.target_cpus(&obs(u, nb)),
+            "case {case}: target shrank as the backlog grew (rho={rho} w={w_frac})"
+        );
+        assert!(s.target_cpus(&obs(0.0, 0)) >= 1, "case {case}: target below one CPU");
+    });
+}
+
+#[test]
+fn prop_hybrid_switches_at_most_once_on_a_constant_trace() {
+    use sla_autoscale::autoscale::{AutoScaler, HybridScaler, Observation};
+    use sla_autoscale::delay::DelayModel;
+    use sla_autoscale::sim::history::SentimentWindows;
+    for_all(100, 0x8B1D, |rng, case| {
+        let upper = 0.2 + rng.next_f64() * 0.8;
+        let horizon = 30.0 + rng.next_f64() * 270.0;
+        let mut s =
+            HybridScaler::new(DelayModel::default(), 0.99999, [0.3, 0.3, 0.4], upper, horizon);
+        let in_system = rng.range(0, 100_000) as usize;
+        let usage = rng.next_f64();
+        let w = SentimentWindows::new();
+        for t in 0..60 {
+            s.decide(&Observation {
+                now: t as f64 * 60.0,
+                cpus: 4,
+                pending_cpus: 0,
+                in_system,
+                cpu_usage: usage,
+                sentiment: &w,
+                nodes: &[],
+                cpu_hz: 2.0e9,
+                sla_secs: 300.0,
+            });
+        }
+        assert!(
+            s.switches() <= 1,
+            "case {case}: mode oscillated on a constant trace (upper={upper} h={horizon})"
+        );
+        // constant traces are perfectly forecastable, so trust is earned
+        assert!(s.proactive_active(), "case {case}: exact forecasts never earned trust");
+        assert!(s.prediction_error() < HybridScaler::TRUST, "case {case}");
+    });
+}
+
+/// The injected failure/boot schedule is a pure function of
+/// `(failure_seed, VM request index)`: the serial engine, the lockstep
+/// batch kernel and the folded replication waves all see the same fault
+/// history, bit for bit.
+#[test]
+fn prop_failure_injection_pure_across_serial_batch_and_waves() {
+    use sla_autoscale::autoscale::ScalerSpec;
+    use sla_autoscale::config::SimConfig;
+    use sla_autoscale::delay::DelayModel;
+    use sla_autoscale::scenario::run_replications;
+    use sla_autoscale::sim::{run_batch, SimScratch, Simulator};
+    for_all(6, 0xFA11, |rng, case| {
+        // random bursty trace, small enough to simulate many times
+        let mut tweets = Vec::new();
+        let mut id = 0u64;
+        let mut t = 0.0f64;
+        for _ in 0..rng.range(2, 4) {
+            t += rng.next_f64() * 900.0 + 60.0;
+            for _ in 0..rng.range(40, 160) {
+                t += rng.next_f64() * 0.2;
+                let class = TweetClass::ALL[rng.below(3) as usize];
+                tweets.push(Tweet {
+                    id,
+                    post_time: t,
+                    class,
+                    sentiment: if class == TweetClass::Analyzed { 0.5 } else { f32::NAN },
+                });
+                id += 1;
+            }
+        }
+        let trace = Trace::new(tweets);
+        let cfg = SimConfig {
+            seed: 2_000 + case,
+            failure_mtbf_secs: Some(300.0 + rng.next_f64() * 3_000.0),
+            boot_jitter_secs: Some(rng.next_f64() * 60.0 + 1.0),
+            failure_seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let model = DelayModel::default();
+        let spec = ScalerSpec::threshold(70.0);
+        let mix = [0.3, 0.3, 0.4];
+        // batch-kernel lanes against the serial engine, per seed
+        let seeds: Vec<u64> =
+            (0..4u64).map(|i| cfg.seed.wrapping_add(i.wrapping_mul(7919))).collect();
+        let scalers: Vec<_> = seeds.iter().map(|_| spec.build(&model, mix)).collect();
+        let mut scratch = SimScratch::new();
+        let lanes = run_batch(&trace, &cfg, &model, scalers, &seeds, &mut scratch);
+        for (lane, &seed) in lanes.iter().zip(&seeds) {
+            let want =
+                Simulator::new(&cfg.with_seed(seed), &model).run(&trace, spec.build(&model, mix));
+            let tag = format!("case {case} seed {seed}");
+            assert_eq!(lane.violation_pct.to_bits(), want.violation_pct().to_bits(), "{tag}");
+            assert_eq!(lane.cpu_hours.to_bits(), want.cpu_hours.to_bits(), "{tag}");
+            assert_eq!(lane.p99_delay.to_bits(), want.history.p99_delay().to_bits(), "{tag}");
+            assert_eq!(lane.decisions, want.decisions, "{tag}");
+        }
+        // wide waves fold to the one-lane wave bit for bit
+        let one = run_replications(&trace, &cfg, &model, &spec, mix, "p".into(), 4, 1);
+        let wide = run_replications(&trace, &cfg, &model, &spec, mix, "p".into(), 4, 4);
+        assert_eq!(one.reps, wide.reps, "case {case}");
+        assert_eq!(one.violation_pct.to_bits(), wide.violation_pct.to_bits(), "case {case}");
+        assert_eq!(one.p99_delay.to_bits(), wide.p99_delay.to_bits(), "case {case}");
+        assert_eq!(one.sla_score.to_bits(), wide.sla_score.to_bits(), "case {case}");
+        assert_eq!(one.cpu_hours.to_bits(), wide.cpu_hours.to_bits(), "case {case}");
+    });
+}
+
+#[test]
+fn prop_p99_histogram_order_independent_and_bounded() {
+    use sla_autoscale::sim::history::{Completed, History};
+    for_all(150, 0x99DE, |rng, case| {
+        let sla = rng.next_f64() * 400.0 + 10.0;
+        let n = rng.range(1, 400) as usize;
+        let delays: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.chance(0.1) {
+                    // overflow tail: past the histogram's 16-SLA span
+                    sla * (16.0 + rng.next_f64() * 50.0)
+                } else {
+                    rng.next_f64() * sla * 4.0
+                }
+            })
+            .collect();
+        let record_all = |ds: &[f64]| {
+            let mut h = History::new(sla);
+            for &d in ds {
+                h.record(
+                    Completed {
+                        post_time: 0.0,
+                        finished_at: d,
+                        class: TweetClass::Discarded,
+                        sentiment: f32::NAN,
+                    },
+                    0.0,
+                );
+            }
+            h
+        };
+        let fwd = record_all(&delays);
+        let mut rev = delays.clone();
+        rev.reverse();
+        let bwd = record_all(&rev);
+        assert_eq!(
+            fwd.p99_delay().to_bits(),
+            bwd.p99_delay().to_bits(),
+            "case {case}: p99 must not depend on completion order"
+        );
+        let p99 = fwd.p99_delay();
+        let mut sorted = delays.clone();
+        sorted.sort_by(f64::total_cmp);
+        let target = ((0.99 * n as f64).ceil() as usize).max(1);
+        let exact = sorted[target - 1];
+        assert!(p99 <= fwd.max_delay() + 1e-9, "case {case}: p99 {p99} above the maximum");
+        assert!(
+            p99 >= exact - 1e-9,
+            "case {case}: estimate {p99} below the exact sample quantile {exact}"
+        );
+    });
+}
+
+#[test]
 fn prop_batcher_covers_any_n() {
     use sla_autoscale::runtime::plan;
     for_all(300, 0xBA7C, |rng, case| {

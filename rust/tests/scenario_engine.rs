@@ -238,6 +238,11 @@ fn registry_specs_simulate_end_to_end() {
         "threshold-90%+appdata+2@w60",
         "depas-0.7-0.1-0.5",
         "depas-0.7-0.1-0.5+appdata+2",
+        "queueing-0.7-0.5",
+        "pid-2-0.5-0.25",
+        "hybrid-80-120",
+        "queueing-0.7-0.5+appdata+2",
+        "pid-2-0.5-0.25+appdata+3@w60",
     ] {
         let spec = ScalerSpec::parse(spec_str).unwrap();
         let r = run_replications(
@@ -247,6 +252,95 @@ fn registry_specs_simulate_end_to_end() {
         assert!(r.cpu_hours > 0.0, "{spec_str}");
         assert!(r.reps >= 3, "{spec_str}");
     }
+}
+
+/// The gauntlet's three new families (queueing / PID / hybrid) under the
+/// headline determinism guarantee, including the new SLA metrics: serial
+/// and wide waves agree bit for bit on `violation_pct`, `cpu_hours`,
+/// `p99_delay` and `sla_score`.
+#[test]
+fn gauntlet_families_bit_identical_to_serial() {
+    let trace = small_source(30_000).load().unwrap();
+    let cfg = SimConfig { sla_secs: 60.0, ..Default::default() };
+    let model = DelayModel::default();
+    let specs = [
+        ScalerSpec::queueing(0.7, 0.5),
+        ScalerSpec::pid(2.0, 0.5, 0.25),
+        ScalerSpec::hybrid(80.0, 120.0),
+    ];
+    for spec in &specs {
+        let serial = run_replications(
+            &trace, &cfg, &model, spec, mix(), spec.to_string(), 5, 1,
+        );
+        assert!(serial.p99_delay >= 0.0, "{spec}");
+        assert!(serial.sla_score.is_finite(), "{spec}");
+        for wave in [2, 5] {
+            let par = run_replications(
+                &trace, &cfg, &model, spec, mix(), spec.to_string(), 5, wave,
+            );
+            assert_eq!(serial.reps, par.reps, "{spec} wave={wave}");
+            assert_eq!(
+                serial.violation_pct.to_bits(),
+                par.violation_pct.to_bits(),
+                "{spec} wave={wave}"
+            );
+            assert_eq!(serial.cpu_hours.to_bits(), par.cpu_hours.to_bits(), "{spec} wave={wave}");
+            assert_eq!(serial.p99_delay.to_bits(), par.p99_delay.to_bits(), "{spec} wave={wave}");
+            assert_eq!(serial.sla_score.to_bits(), par.sla_score.to_bits(), "{spec} wave={wave}");
+        }
+    }
+}
+
+/// The adversarial fault axes as a matrix dimension: rows with failure
+/// injection and boot-time jitter carry their labels, stay bit-identical
+/// between the serial and threaded paths, and the injected chaos is real
+/// (the faulty row's trajectory measurably diverges from the benign one).
+#[test]
+fn fault_axes_matrix_threaded_bit_identical_to_serial() {
+    let cfg = SimConfig { sla_secs: 60.0, ..Default::default() };
+    let overrides = [
+        Overrides::default(),
+        Overrides {
+            failure_mtbf_secs: Some(900.0),
+            boot_jitter_secs: Some(30.0),
+            failure_seed: Some(11),
+            ..Default::default()
+        },
+        Overrides { boot_jitter_secs: Some(30.0), ..Default::default() },
+    ];
+    let scalers = [ScalerSpec::threshold(70.0), ScalerSpec::queueing(0.7, 0.5)];
+    let matrix = ScenarioMatrix::cross(
+        &[small_source(30_000)],
+        &cfg,
+        &overrides,
+        &scalers,
+        4,
+    );
+    let serial = matrix.run_serial().unwrap();
+    let threaded = matrix.run(8).unwrap();
+    assert_eq!(serial.len(), threaded.len());
+    for (s, p) in serial.iter().zip(&threaded) {
+        assert_eq!(s.name, p.name);
+        assert_eq!(s.reps, p.reps, "{}", s.name);
+        assert_eq!(s.violation_pct.to_bits(), p.violation_pct.to_bits(), "{}", s.name);
+        assert_eq!(s.cpu_hours.to_bits(), p.cpu_hours.to_bits(), "{}", s.name);
+        assert_eq!(s.p99_delay.to_bits(), p.p99_delay.to_bits(), "{}", s.name);
+        assert_eq!(s.sla_score.to_bits(), p.sla_score.to_bits(), "{}", s.name);
+    }
+    let benign = serial.iter().find(|r| r.name == "threshold-70%").unwrap();
+    let chaos = serial
+        .iter()
+        .find(|r| r.name == "threshold-70%/mtbf=900s,boot=30s,fseed=11")
+        .unwrap();
+    assert_ne!(
+        chaos.violation_pct.to_bits(),
+        benign.violation_pct.to_bits(),
+        "the fault axis must actually perturb the run"
+    );
+    assert!(
+        serial.iter().any(|r| r.name == "queueing-0.7-0.5/boot=30s"),
+        "boot-jitter-only rows must carry the boot label"
+    );
 }
 
 /// The first scaler family with *per-node* decision logic must honor the

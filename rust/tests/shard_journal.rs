@@ -43,6 +43,8 @@ fn assert_same(got: &ScenarioResult, want: &ScenarioResult) {
     assert_eq!(got.reps, want.reps, "{}", got.name);
     assert_eq!(got.violation_pct.to_bits(), want.violation_pct.to_bits(), "{}", got.name);
     assert_eq!(got.cpu_hours.to_bits(), want.cpu_hours.to_bits(), "{}", got.name);
+    assert_eq!(got.p99_delay.to_bits(), want.p99_delay.to_bits(), "{}", got.name);
+    assert_eq!(got.sla_score.to_bits(), want.sla_score.to_bits(), "{}", got.name);
 }
 
 /// The headline sharding guarantee: for n in {2, 3}, serial or threaded,
@@ -117,6 +119,73 @@ fn truncated_journal_resumes_without_resimulating() {
     for (rec, want) in merged.iter().zip(&clean) {
         assert_same(&rec.result, want);
     }
+}
+
+/// Journals written before the v3 layout (which added the
+/// `p99_delay`/`sla_score` fields) must be rejected outright — decoding
+/// a v2 record as v3 would silently misalign every float, so the version
+/// check is the only safe door.
+#[test]
+fn pre_v3_journals_are_rejected_not_misread() {
+    use sla_autoscale::scenario::sink::{JOURNAL_MAGIC, JOURNAL_VERSION};
+    assert_eq!(JOURNAL_VERSION, 3, "update this test alongside the format");
+    let dir = TempDir::new().unwrap();
+    let path = dir.join("old.journal");
+    let mut header = Vec::with_capacity(JOURNAL_HEADER_LEN);
+    header.extend_from_slice(&JOURNAL_MAGIC);
+    header.extend_from_slice(&2u32.to_le_bytes());
+    std::fs::write(&path, &header).unwrap();
+    let err = read_journal(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("format v2") && msg.contains("expected v3"), "{msg}");
+    assert!(JournalSink::open(&path).is_err(), "open must not append to an old-format journal");
+}
+
+/// The adversarial fault axes ride the journal like any other override:
+/// rows with failure injection and boot jitter journal under distinct
+/// job keys, and every v3 metric folds back bit-identical to the
+/// in-process run.
+#[test]
+fn fault_axis_rows_journal_and_merge_bit_identically() {
+    let source = TraceSource::spec(
+        MatchSpec {
+            opponent: "ShardFaultIT",
+            date: "—",
+            total_tweets: 12_000,
+            length_hours: 0.25,
+            events: vec![],
+        },
+        false,
+    );
+    let overrides = [
+        Overrides::default(),
+        Overrides {
+            failure_mtbf_secs: Some(900.0),
+            boot_jitter_secs: Some(30.0),
+            failure_seed: Some(11),
+            ..Default::default()
+        },
+    ];
+    let scalers = [ScalerSpec::threshold(70.0), ScalerSpec::queueing(0.7, 0.5)];
+    let matrix =
+        ScenarioMatrix::cross(&[source], &SimConfig::default(), &overrides, &scalers, 3);
+    let plan = matrix.plan();
+    let keys: HashSet<u64> = plan.jobs.iter().map(|j| j.key).collect();
+    assert_eq!(keys.len(), plan.len(), "fault axes must feed the job key");
+    let clean = matrix.run_serial().unwrap();
+    let dir = TempDir::new().unwrap();
+    let (journal, _) = JournalSink::open(&dir.join("faults.journal")).unwrap();
+    run_plan(&matrix, &plan.jobs, 2, &journal).unwrap();
+    drop(journal);
+    let merged = merge_records(read_journal_dir(dir.path()).unwrap()).unwrap();
+    assert_eq!(merged.len(), clean.len());
+    for (rec, want) in merged.iter().zip(&clean) {
+        assert_same(&rec.result, want);
+    }
+    assert!(
+        merged.iter().any(|r| r.result.name.contains("mtbf=900s,boot=30s,fseed=11")),
+        "fault rows must carry their labels through the journal"
+    );
 }
 
 /// Two shard processes, two journal files, one directory: `merge` folds
