@@ -20,7 +20,7 @@ use sla_autoscale::delay::DelayModel;
 use sla_autoscale::experiments::common::{default_mix, scale_config, scale_spec, trace_for};
 use sla_autoscale::rng::Rng;
 use sla_autoscale::sim::cycles::{Distributor, PsSchedule};
-use sla_autoscale::sim::{run_batch, SimScratch, Simulator};
+use sla_autoscale::sim::{profile, run_batch, simd, SimScratch, Simulator};
 use sla_autoscale::util::bench;
 use sla_autoscale::workload::{by_opponent, generate, GeneratorConfig, TweetClass};
 use std::time::Duration;
@@ -146,6 +146,66 @@ fn main() {
         &[("after_over_before", vt_tps / legacy_tps.max(1e-12))],
     );
     println!("    => kernel speedup {:.2}x", vt_tps / legacy_tps.max(1e-12));
+
+    // SIMD lane sweeps: the three vectorized BatchArena sweeps
+    // (budgets multiply, window accumulate, masked usage divide) on a
+    // wave-width f64 array, reference scalar vs the sim::simd
+    // dispatchers. In a `--no-default-features` (scalar fallback) build
+    // the dispatchers compile to the reference, so the ratio reads
+    // ~1.0x — that build gates against BENCH_simulator_scalar.json
+    // (BENCH_OUT below), never against the vector baseline.
+    const LANES: usize = 4096;
+    let mut rng = Rng::new(0x51D0);
+    let avail_src: Vec<f64> = (0..LANES)
+        .map(|i| if i % 5 == 0 { 0.0 } else { 1.0e9 + rng.below(1000) as f64 })
+        .collect();
+    let used_src: Vec<f64> = (0..LANES).map(|_| rng.below(1_000_000) as f64).collect();
+    // Bitwise sanity on this machine before anything is timed.
+    {
+        let (mut u_ref, mut u_vec) = (vec![0.5f64; LANES], vec![0.5f64; LANES]);
+        let (mut a_ref, mut a_vec) = (vec![0.0f64; LANES], vec![0.0f64; LANES]);
+        simd::scalar::mul_scalar(&mut a_ref, &avail_src, 1.25);
+        simd::mul_scalar(&mut a_vec, &avail_src, 1.25);
+        simd::scalar::add_assign(&mut a_ref, &used_src);
+        simd::add_assign(&mut a_vec, &used_src);
+        simd::scalar::usage_update(&mut u_ref, &used_src, &avail_src);
+        simd::usage_update(&mut u_vec, &used_src, &avail_src);
+        for i in 0..LANES {
+            assert_eq!(a_ref[i].to_bits(), a_vec[i].to_bits(), "lane {i}");
+            assert_eq!(u_ref[i].to_bits(), u_vec[i].to_bits(), "lane {i}");
+        }
+    }
+    let mut budgets_buf = vec![0.0f64; LANES];
+    let mut avail_buf = vec![0.0f64; LANES];
+    let mut usage_buf = vec![0.0f64; LANES];
+    let s_scalar = bench::run(&format!("simd/lane-sweep/scalar ({LANES} lanes)"), dur, || {
+        simd::scalar::mul_scalar(&mut budgets_buf, &avail_src, 2.0e9);
+        simd::scalar::add_assign(&mut avail_buf, &budgets_buf);
+        simd::scalar::usage_update(&mut usage_buf, &used_src, &avail_src);
+        std::hint::black_box(&mut usage_buf);
+        std::hint::black_box(&mut avail_buf);
+    });
+    let scalar_lps = (3 * LANES) as f64 * s_scalar.per_sec();
+    println!("    -> {:.2}M swept lanes/s", scalar_lps / 1e6);
+    report.push_sample("before", &s_scalar, &[("swept_lanes_per_sec", scalar_lps)]);
+    avail_buf.fill(0.0);
+    usage_buf.fill(0.0);
+    let s_vector = bench::run(&format!("simd/lane-sweep/vector ({LANES} lanes)"), dur, || {
+        simd::mul_scalar(&mut budgets_buf, &avail_src, 2.0e9);
+        simd::add_assign(&mut avail_buf, &budgets_buf);
+        simd::usage_update(&mut usage_buf, &used_src, &avail_src);
+        std::hint::black_box(&mut usage_buf);
+        std::hint::black_box(&mut avail_buf);
+    });
+    let vector_lps = (3 * LANES) as f64 * s_vector.per_sec();
+    println!("    -> {:.2}M swept lanes/s", vector_lps / 1e6);
+    report.push_sample("after", &s_vector, &[("swept_lanes_per_sec", vector_lps)]);
+    report.push_metrics(
+        "simd/lane-sweep/speedup",
+        "current",
+        &[("vector_over_scalar", vector_lps / scalar_lps.max(1e-12))],
+    );
+    println!("    => lane-sweep speedup {:.2}x", vector_lps / scalar_lps.max(1e-12));
 
     // Replication-batch kernel: R seed-replications of one scenario,
     // serial loop vs the lockstep batch kernel. A rate-limited config
@@ -273,6 +333,31 @@ fn main() {
     });
     report.push_sample("after", &s, &[]);
 
-    report.write("BENCH_simulator.json").expect("writing BENCH_simulator.json");
-    println!("wrote BENCH_simulator.json");
+    // Per-phase step profiler: one profiled acceptance run
+    // (sim/Spain/load-q99.999%), wall-share and absolute seconds per
+    // phase. `share_pct` is informational (shares shift as individual
+    // phases speed up); `phase_secs` is gated lower-is-better.
+    let _ = profile::take_process(); // drop anything earlier sections fed
+    let pcfg = SimConfig { profile: true, ..cfg.clone() };
+    let ptrace = trace_for(&by_opponent("Spain").unwrap(), true);
+    let sim = Simulator::new(&pcfg, &model);
+    std::hint::black_box(sim.run(&ptrace, Box::new(LoadScaler::new(model.clone(), 0.99999, mix))));
+    let sp = profile::take_process();
+    println!("  {}", sp.summary());
+    let total = sp.total_nanos().max(1) as f64;
+    for ph in profile::Phase::ALL {
+        let ns = sp.nanos[ph as usize] as f64;
+        report.push_metrics(
+            &format!("phase/{}", ph.name()),
+            "current",
+            &[("share_pct", ns / total * 100.0), ("phase_secs", ns / 1e9)],
+        );
+    }
+
+    // BENCH_OUT routes the scalar-fallback CI build to its own baseline
+    // file (its simd/* ratio is ~1.0x by construction and must not gate
+    // against the vectorized numbers).
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_simulator.json".into());
+    report.write(&out).unwrap_or_else(|e| panic!("writing {out}: {e}"));
+    println!("wrote {out}");
 }

@@ -35,6 +35,11 @@ pub struct SimConfig {
     /// `seed` so replications share one failure schedule while their
     /// cycle draws diverge.
     pub failure_seed: u64,
+    /// Collect the per-phase step profiler (`sim::profile`). Pure
+    /// observability: never affects results, and deliberately excluded
+    /// from `render`/`from_meta` and scenario job keys so profiled and
+    /// unprofiled runs share cache/journal entries.
+    pub profile: bool,
 }
 
 impl Default for SimConfig {
@@ -51,6 +56,7 @@ impl Default for SimConfig {
             failure_mtbf_secs: None,
             boot_jitter_secs: None,
             failure_seed: 7,
+            profile: false,
         }
     }
 }
@@ -177,7 +183,18 @@ mod tests {
         assert_eq!(c.failure_mtbf_secs, None);
         assert_eq!(c.boot_jitter_secs, None);
         assert_eq!(c.failure_seed, 7);
+        assert!(!c.profile, "profiling is opt-in");
         assert!(c.fault_plan().is_none(), "defaults are fault-free");
+    }
+
+    #[test]
+    fn profile_flag_is_not_serialized() {
+        // Profiled and unprofiled runs must share cache/journal keys,
+        // so the flag never reaches the flat-file representation.
+        let off = SimConfig::default();
+        let on = SimConfig { profile: true, ..off.clone() };
+        assert_eq!(on.render(), off.render());
+        assert!(!on.render().contains("profile"));
     }
 
     #[test]

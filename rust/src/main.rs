@@ -29,7 +29,7 @@ USAGE:
       [--lead-min M[,M...]] [--class-mix A,B,C[;A,B,C...]] [--noise X[,...]]
       [--mtbf SECS] [--boot-jitter SECS] [--failure-seed N]
       [--flash-crowd X] [--echo-gap MIN]
-      [--cache-dir DIR] [--cache-max-mb MB] [--stream]
+      [--cache-dir DIR] [--cache-max-mb MB] [--stream] [--profile]
       [--journal DIR] [--shard I/N] [--steal] [--lease-expiry SECS]
       Run an arbitrary scenario grid (opponents x algorithms) with
       CI-converged replications in parallel, and print the result table.
@@ -56,7 +56,10 @@ USAGE:
       leases idle for --lease-expiry SECS (default 30) from crashed
       workers. Start N identical `matrix ... --steal --journal DIR`
       processes and they cooperate; any interleaving merges
-      bit-identically to --serial.
+      bit-identically to --serial. --profile collects the per-phase
+      step profiler (sim::profile) across every replication and prints
+      one wall-time share line after the table; results stay
+      bit-identical with or without it.
   sla-autoscale matrix merge <DIR>
       Fold the result journals under DIR back into the canonical table,
       bit-identical to a single-process run of the full grid.
@@ -236,10 +239,13 @@ fn main() -> Result<()> {
                 .split(',')
                 .map(|a| parse_algo(a.trim()))
                 .collect::<Result<_>>()?;
-            let base = match args.opt("--config") {
+            let mut base = match args.opt("--config") {
                 Some(p) => SimConfig::from_file(p)?,
                 None => SimConfig::default(),
             };
+            // Observability only: excluded from job keys, so profiled
+            // runs share journal/cache entries with unprofiled ones.
+            base.profile = args.flag("--profile");
             let mut overrides = Overrides::default();
             if let Some(v) = args.opt("--sla") {
                 overrides.sla_secs = Some(v.parse()?);
@@ -439,6 +445,9 @@ fn main() -> Result<()> {
                         );
                     }
                 }
+                if base.profile {
+                    println!("{}", sla_autoscale::sim::profile::take_process().summary());
+                }
                 return Ok(());
             }
             let shard = args.opt("--shard").map(scenario::parse_shard).transpose()?;
@@ -516,6 +525,11 @@ fn main() -> Result<()> {
                          {cache_max_mb} MiB budget"
                     );
                 }
+            }
+            if base.profile {
+                // Drain the process-wide accumulator every run fed (all
+                // worker threads included) into one wall-share line.
+                println!("{}", sla_autoscale::sim::profile::take_process().summary());
             }
         }
         Some("exp") => {

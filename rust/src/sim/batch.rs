@@ -19,12 +19,16 @@
 //!   once, the bare accumulation loop advancing every lane together.
 //!
 //! Per-lane mutable state is laid out SoA in a [`BatchArena`]: the
-//! [`PsSchedule`] virtual-time lanes, payload slabs and free lists as
-//! parallel vectors, and the utilization accounting (`window_avail`,
-//! `window_used`, `cpu_usage`, `budgets`) as flat `f64` arrays whose
-//! inner sweeps are branch-light `for l in 0..r` loops the compiler can
-//! autovectorize. The arena lives inside [`SimScratch`], so a whole
-//! wave costs one scratch-pool checkout.
+//! [`PsSchedule`] virtual-time lanes, payload slabs, free lists and
+//! pooled [`History`] logs as parallel vectors, and the utilization
+//! accounting (`window_avail`/`window_used`/`cpu_usage`/`budgets`, plus
+//! the gathered per-lane active-CPU counts) as flat `f64` arrays whose
+//! inner sweeps run through the explicit SIMD kernels of
+//! [`sim::simd`](super::simd) (SSE2/AVX on x86_64, bit-identical scalar
+//! fallback elsewhere or under `--no-default-features`). Vectorizing
+//! *across the lane axis* is element-wise per lane, so no lane's own
+//! f64 accumulation order changes. The arena lives inside
+//! [`SimScratch`], so a whole wave costs one scratch-pool checkout.
 //!
 //! **Lockstep invariant** (tested in `rust/tests/batch_kernel.rs` and
 //! the `scenario_engine.rs` suites): lane `l` of
@@ -44,6 +48,8 @@ use super::cluster::Cluster;
 use super::cycles::PsSchedule;
 use super::engine::{InFlight, SimScratch};
 use super::history::{Completed, History};
+use super::profile::{Phase, Profiler};
+use super::simd;
 use crate::autoscale::{AutoScaler, Controller, Decision, Observation};
 use crate::config::SimConfig;
 use crate::delay::DelayModel;
@@ -61,6 +67,10 @@ pub struct BatchArena {
     slabs: Vec<Vec<InFlight>>,
     /// One slot free-list per lane.
     frees: Vec<Vec<u32>>,
+    /// One pooled history log per lane: the 16 KiB delay histogram and
+    /// the sentiment buckets are reset in place across waves instead of
+    /// reallocated per call.
+    histories: Vec<History>,
     /// Cycles available per lane over the current adaptation window.
     window_avail: Vec<f64>,
     /// Cycles consumed per lane over the current adaptation window.
@@ -69,21 +79,27 @@ pub struct BatchArena {
     cpu_usage: Vec<f64>,
     /// This step's cycle budget per lane (0 once a lane retires).
     budgets: Vec<f64>,
+    /// Gathered active-CPU count per lane (0 once a lane retires) — the
+    /// `src` operand of the vectorized budgets sweep.
+    actives: Vec<f64>,
 }
 
 impl BatchArena {
     /// Prepare `lanes` cleared lanes, growing the arena if needed while
-    /// keeping every existing buffer's capacity.
-    fn ensure_lanes(&mut self, lanes: usize) {
+    /// keeping every existing buffer's capacity. Pooled histories come
+    /// back as `History::new(sla_secs)` states (see [`History::reset`]).
+    fn ensure_lanes(&mut self, lanes: usize, sla_secs: f64) {
         while self.schedules.len() < lanes {
             self.schedules.push(PsSchedule::new());
             self.slabs.push(Vec::new());
             self.frees.push(Vec::new());
+            self.histories.push(History::new(sla_secs));
         }
         for l in 0..lanes {
             self.schedules[l].clear();
             self.slabs[l].clear();
             self.frees[l].clear();
+            self.histories[l].reset(sla_secs);
         }
         fn refill(buf: &mut Vec<f64>, lanes: usize) {
             buf.clear();
@@ -93,14 +109,18 @@ impl BatchArena {
         refill(&mut self.window_used, lanes);
         refill(&mut self.cpu_usage, lanes);
         refill(&mut self.budgets, lanes);
+        refill(&mut self.actives, lanes);
     }
 
     /// Approximate heap bytes retained across all lanes (scratch-pool
-    /// accounting).
+    /// accounting). Includes the pooled per-lane histories — each holds
+    /// a 16 KiB delay histogram plus its sentiment buckets, which at
+    /// gauntlet wave widths dominate the flat f64 arrays.
     pub fn approx_bytes(&self) -> usize {
         let mut total = self.schedules.capacity() * std::mem::size_of::<PsSchedule>()
             + self.slabs.capacity() * std::mem::size_of::<Vec<InFlight>>()
-            + self.frees.capacity() * std::mem::size_of::<Vec<u32>>();
+            + self.frees.capacity() * std::mem::size_of::<Vec<u32>>()
+            + self.histories.capacity() * std::mem::size_of::<History>();
         for s in &self.schedules {
             total += s.approx_bytes();
         }
@@ -110,7 +130,16 @@ impl BatchArena {
         for f in &self.frees {
             total += f.capacity() * std::mem::size_of::<u32>();
         }
-        for buf in [&self.window_avail, &self.window_used, &self.cpu_usage, &self.budgets] {
+        for h in &self.histories {
+            total += h.approx_bytes();
+        }
+        for buf in [
+            &self.window_avail,
+            &self.window_used,
+            &self.cpu_usage,
+            &self.budgets,
+            &self.actives,
+        ] {
             total += buf.capacity() * std::mem::size_of::<f64>();
         }
         total
@@ -226,28 +255,38 @@ pub fn run_batch(
         .collect();
     let mut controllers: Vec<Controller> =
         scalers.into_iter().map(|s| Controller::new(s, cfg.adapt_secs)).collect();
-    // Pre-size the sentiment buckets exactly like the serial path.
-    let horizon = trace.horizon();
-    let presize = horizon.is_finite()
-        && (horizon as usize) <= trace.len().saturating_mul(4).saturating_add(1024);
-    let mut histories: Vec<History> = (0..r)
-        .map(|_| {
-            let h = History::new(cfg.sla_secs);
-            if presize {
-                h.with_sentiment_horizon(horizon)
-            } else {
-                h
-            }
-        })
-        .collect();
 
     scratch.queue.reset(cfg.input_rate);
     scratch.admitted.clear();
-    scratch.batch.ensure_lanes(r);
+    scratch.batch.ensure_lanes(r, cfg.sla_secs);
     let queue = &mut scratch.queue;
     let admitted = &mut scratch.admitted;
-    let BatchArena { schedules, slabs, frees, window_avail, window_used, cpu_usage, budgets } =
-        &mut scratch.batch;
+    let BatchArena {
+        schedules,
+        slabs,
+        frees,
+        histories,
+        window_avail,
+        window_used,
+        cpu_usage,
+        budgets,
+        actives,
+    } = &mut scratch.batch;
+
+    // Pre-size the sentiment buckets exactly like the serial path (the
+    // pooled buckets keep their capacity, so this is a no-op from the
+    // second wave on).
+    let horizon = trace.horizon();
+    if horizon.is_finite()
+        && (horizon as usize) <= trace.len().saturating_mul(4).saturating_add(1024)
+    {
+        for h in histories.iter_mut().take(r) {
+            h.reserve_sentiment_secs(horizon);
+        }
+    }
+    // Phase profiler (observability only; `None` on the default path).
+    let mut prof = if cfg.profile { Some(Profiler::new()) } else { None };
+    let mut steps = 0u64;
 
     // Shared (lane-invariant) clock state, mirroring the serial loop.
     let n_tweets = trace.len();
@@ -263,6 +302,9 @@ pub fn run_batch(
 
     loop {
         let step_end = clock + cfg.step_secs;
+        if let Some(p) = prof.as_mut() {
+            p.mark();
+        }
 
         // 1. tweets posted during this window: one CSR probe for the
         // whole wave, then tweet-outer / lane-inner admission.
@@ -277,7 +319,7 @@ pub fn run_batch(
                     model,
                     &active,
                     &mut rngs,
-                    &mut histories,
+                    histories,
                     schedules,
                     slabs,
                     frees,
@@ -297,7 +339,7 @@ pub fn run_batch(
                     model,
                     &active,
                     &mut rngs,
-                    &mut histories,
+                    histories,
                     schedules,
                     slabs,
                     frees,
@@ -305,15 +347,22 @@ pub fn run_batch(
             }
         }
         next_tweet = arrived;
+        if let Some(p) = prof.as_mut() {
+            p.lap(Phase::Ingest);
+        }
 
         // 2.+3. distribute this step's cycles per lane, then finished
-        // tweets -> history (retired lanes keep budget 0, so the flat
-        // accumulation sweeps below stay branch-free).
+        // tweets -> history (retired lanes keep budget and gathered
+        // active count 0, so the vectorized sweeps below stay
+        // branch-free). The gather is guarded scalar; the multiply is a
+        // packed element-wise kernel — per-lane arithmetic is identical
+        // to the serial `active × cycles_per_step`.
         for l in 0..r {
             if active[l] {
-                budgets[l] = clusters[l].active() as f64 * cycles_per_step;
+                actives[l] = clusters[l].active() as f64;
             }
         }
+        simd::mul_scalar(budgets, actives, cycles_per_step);
         for l in 0..r {
             if !active[l] || schedules[l].is_empty() {
                 continue;
@@ -334,27 +383,31 @@ pub fn run_batch(
                 );
             }
         }
-        for l in 0..r {
-            window_avail[l] += budgets[l];
+        simd::add_assign(window_avail, budgets);
+        if let Some(p) = prof.as_mut() {
+            p.lap(Phase::Schedule);
         }
 
         // cluster time passes in every live lane
         clock = step_end;
+        steps += 1;
         for l in 0..r {
             if active[l] {
                 clusters[l].tick(clock, cfg.step_secs);
             }
         }
+        if let Some(p) = prof.as_mut() {
+            p.lap(Phase::Faults);
+        }
 
         // 4. adaptation point? The due-check is shared: every live
         // controller's `next_adapt` advances in lockstep, so testing one
         // of them covers the wave, and between adaptation points the
-        // serial path's `maybe_adapt` is an observable no-op.
-        for l in 0..r {
-            if window_avail[l] > 0.0 {
-                cpu_usage[l] = window_used[l] / window_avail[l];
-            }
-        }
+        // serial path's `maybe_adapt` is an observable no-op. The
+        // guarded usage update is the masked-divide kernel: lanes with
+        // `window_avail == 0` keep their previous value, exactly the
+        // serial branch.
+        simd::usage_update(cpu_usage, window_used, window_avail);
         let next_adapt = first_live_next_adapt(&controllers, &active);
         if clock + 1e-9 >= next_adapt {
             for l in 0..r {
@@ -378,13 +431,17 @@ pub fn run_batch(
                 Controller::apply(decision, clock, &mut clusters[l]);
             }
         }
+        if let Some(p) = prof.as_mut() {
+            p.lap(Phase::Scaler);
+        }
         // utilization windows reset at every adaptation boundary
         if clock >= next_window_reset {
-            for l in 0..r {
-                window_avail[l] = 0.0;
-                window_used[l] = 0.0;
-            }
+            simd::zero(window_avail);
+            simd::zero(window_used);
             next_window_reset += cfg.adapt_secs;
+        }
+        if let Some(p) = prof.as_mut() {
+            p.lap(Phase::Windows);
         }
 
         // stop: a lane retires once every tweet has been ingested and
@@ -396,6 +453,7 @@ pub fn run_batch(
                 if active[l] && schedules[l].is_empty() {
                     active[l] = false;
                     budgets[l] = 0.0;
+                    actives[l] = 0.0;
                     live -= 1;
                     out[l] = Some(LaneResult {
                         violation_pct: histories[l].violation_pct(),
@@ -413,23 +471,32 @@ pub fn run_batch(
         }
 
         // Idle fast-forward, batched: arrivals remain (so every lane is
-        // still live) and every lane is drained with no CPUs in
-        // provisioning. The break conditions are lane-invariant, the
-        // body is the serial bare loop fanned across lanes — each lane
-        // sees exactly the accumulations its serial run would.
+        // still live) and every lane's schedule is drained. The break
+        // conditions are lane-invariant, the body is the serial bare
+        // loop fanned across lanes — each lane sees exactly the
+        // accumulations its serial run would. As in the serial engine,
+        // cluster events (pending arrivals, armed node deaths) *bound*
+        // the loop instead of disabling it: the wave-wide hazard is the
+        // earliest `next_event_at` across live lanes, and the step that
+        // reaches it runs through the full body, where each lane's
+        // budget is computed before its tick — dense order.
         if unlimited && next_tweet < n_tweets {
+            if let Some(p) = prof.as_mut() {
+                p.mark();
+            }
             let mut all_idle = true;
+            let mut hazard = f64::INFINITY;
             for l in 0..r {
-                // Node death inside a fast-forwarded stretch would
-                // invalidate the precomputed budgets, exactly as in the
-                // serial gate — failing clusters take the full loop.
-                if active[l]
-                    && (!schedules[l].is_empty()
-                        || clusters[l].pending() != 0
-                        || clusters[l].fails_nodes())
-                {
+                if !active[l] {
+                    continue;
+                }
+                if !schedules[l].is_empty() {
                     all_idle = false;
                     break;
+                }
+                let ev = clusters[l].next_event_at();
+                if ev < hazard {
+                    hazard = ev;
                 }
             }
             if all_idle {
@@ -437,13 +504,17 @@ pub fn run_batch(
                 let next_adapt = first_live_next_adapt(&controllers, &active);
                 for l in 0..r {
                     if active[l] {
-                        budgets[l] = clusters[l].active() as f64 * cycles_per_step;
+                        actives[l] = clusters[l].active() as f64;
                     }
                 }
+                simd::mul_scalar(budgets, actives, cycles_per_step);
                 loop {
                     let end = clock + cfg.step_secs;
                     if next_post < end {
                         break; // the next step ingests an arrival
+                    }
+                    if end >= hazard {
+                        break; // cluster event due: full body ticks it
                     }
                     if end + 1e-9 >= next_adapt {
                         break; // adaptation due: run it through the full body
@@ -451,10 +522,9 @@ pub fn run_batch(
                     if end >= next_window_reset {
                         break; // window reset due
                     }
-                    for l in 0..r {
-                        window_avail[l] += budgets[l];
-                    }
+                    simd::add_assign(window_avail, budgets);
                     clock = end;
+                    steps += 1;
                     for l in 0..r {
                         if active[l] {
                             clusters[l].tick(clock, cfg.step_secs);
@@ -462,9 +532,17 @@ pub fn run_batch(
                     }
                 }
             }
+            if let Some(p) = prof.as_mut() {
+                p.lap(Phase::FastForward);
+            }
         }
     }
 
+    if let Some(p) = prof.as_mut() {
+        let mut sp = p.take();
+        sp.steps = steps;
+        super::profile::add_to_process(&sp);
+    }
     out.into_iter().map(|lane| lane.expect("every lane retired")).collect()
 }
 
@@ -576,6 +654,65 @@ mod tests {
     }
 
     #[test]
+    fn sparse_fault_lanes_match_serial_through_fast_forward() {
+        // A sparse trace (long idle stretches) with armed fault axes:
+        // the bounded fast-forward must stop at every pending boot and
+        // armed death exactly where dense stepping would process it.
+        let tr = trace(2_000, 2.0);
+        let model = DelayModel::default();
+        let faults = [(Some(2_000.0), None), (None, Some(20.0)), (Some(1_500.0), Some(10.0))];
+        for (mtbf, jitter) in faults {
+            let cfg = SimConfig {
+                failure_mtbf_secs: mtbf,
+                boot_jitter_secs: jitter,
+                ..Default::default()
+            };
+            let seeds = [3u64, 3 + 7919];
+            let scalers: Vec<Box<dyn AutoScaler>> = vec![
+                Box::new(ThresholdScaler::new(0.6)),
+                Box::new(ThresholdScaler::new(0.6)),
+            ];
+            let mut scratch = SimScratch::new();
+            let lanes = run_batch(&tr, &cfg, &model, scalers, &seeds, &mut scratch);
+            for (lane, &seed) in lanes.iter().zip(&seeds) {
+                let scfg = cfg.with_seed(seed);
+                let want =
+                    Simulator::new(&scfg, &model).run(&tr, Box::new(ThresholdScaler::new(0.6)));
+                assert_eq!(lane.completed, want.history.completed(), "faults {mtbf:?}/{jitter:?}");
+                assert_eq!(lane.violations, want.history.violations());
+                assert_eq!(lane.violation_pct.to_bits(), want.violation_pct().to_bits());
+                assert_eq!(lane.cpu_hours.to_bits(), want.cpu_hours.to_bits());
+                assert_eq!(lane.decisions, want.decisions);
+            }
+        }
+    }
+
+    #[test]
+    fn profiled_wave_is_bit_identical() {
+        let tr = trace(8_000, 0.2);
+        let model = DelayModel::default();
+        let seeds = [11u64, 12];
+        let run = |profile: bool| {
+            let cfg = SimConfig { profile, ..Default::default() };
+            let scalers: Vec<Box<dyn AutoScaler>> = vec![
+                Box::new(ThresholdScaler::new(0.7)),
+                Box::new(ThresholdScaler::new(0.7)),
+            ];
+            let mut scratch = SimScratch::new();
+            run_batch(&tr, &cfg, &model, scalers, &seeds, &mut scratch)
+        };
+        let plain = run(false);
+        let profiled = run(true);
+        for (a, b) in plain.iter().zip(&profiled) {
+            assert_eq!(a.violation_pct.to_bits(), b.violation_pct.to_bits());
+            assert_eq!(a.p99_delay.to_bits(), b.p99_delay.to_bits());
+            assert_eq!(a.cpu_hours.to_bits(), b.cpu_hours.to_bits());
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.decisions, b.decisions);
+        }
+    }
+
+    #[test]
     fn arena_reuse_is_invisible() {
         let tr = trace(10_000, 0.2);
         let cfg = SimConfig::default();
@@ -599,5 +736,12 @@ mod tests {
             }
         }
         assert!(scratch.approx_bytes() > std::mem::size_of::<SimScratch>());
+        // The pooled per-lane histories are accounted: each lane retains
+        // at least its 2048-bucket (16 KiB) delay histogram.
+        assert!(
+            scratch.batch.approx_bytes() >= 3 * 2048 * std::mem::size_of::<f64>(),
+            "arena bytes miss the pooled histograms: {}",
+            scratch.batch.approx_bytes()
+        );
     }
 }

@@ -270,6 +270,32 @@ impl Cluster {
     pub fn cpu_hours(&self) -> f64 {
         self.cpu_seconds / 3600.0
     }
+
+    /// Earliest future time at which a [`Cluster::tick`] could change
+    /// the active-node set: the next pending arrival, or (when failures
+    /// are armed) the next active-node death. `f64::INFINITY` when
+    /// nothing is scheduled — the cluster then stays exactly as it is
+    /// under any sequence of ticks, which is what lets the engines idle
+    /// fast-forward *up to* this bound even with fault axes armed
+    /// (PERF.md §Bounded fast-forward). Re-requests and floor
+    /// replacements only happen while processing one of these events,
+    /// so no event can appear earlier than the returned time.
+    pub fn next_event_at(&self) -> f64 {
+        let mut next = f64::INFINITY;
+        for &(at, _) in &self.pending {
+            if at < next {
+                next = at;
+            }
+        }
+        if self.fails_nodes() {
+            for &death in &self.death_at {
+                if death < next {
+                    next = death;
+                }
+            }
+        }
+        next
+    }
 }
 
 #[cfg(test)]
@@ -459,6 +485,36 @@ mod tests {
         assert!(c.failures() > 0);
         assert_eq!(c.active(), 1, "floor holds a 1-CPU fleet at exactly 1");
         assert_ne!(c.nodes()[0], first, "replacement must carry a fresh id");
+    }
+
+    #[test]
+    fn next_event_at_tracks_arrivals_and_deaths() {
+        // Fault-free: only pending arrivals count, idle otherwise.
+        let mut c = Cluster::new(2, 60.0);
+        assert_eq!(c.next_event_at(), f64::INFINITY);
+        c.scale_out(10.0, 2);
+        assert_eq!(c.next_event_at(), 70.0);
+        c.tick(70.0, 1.0);
+        assert_eq!(c.next_event_at(), f64::INFINITY);
+
+        // Failures armed: the earliest active death bounds the horizon,
+        // and ticking strictly before it changes nothing.
+        let mut f = failing(3, 900.0, 5);
+        let hazard = f.next_event_at();
+        assert!(hazard.is_finite(), "armed failures always schedule a death");
+        let before = (f.active(), f.failures(), f.nodes().to_vec());
+        f.tick(hazard - 1.0, 1.0);
+        assert_eq!((f.active(), f.failures(), f.nodes().to_vec()), before);
+        f.tick(hazard, 1.0);
+        assert!(f.failures() >= 1, "ticking at the hazard processes the death");
+
+        // Jitter-only plans never fail nodes: deaths are ignored.
+        let j = Cluster::with_faults(
+            1,
+            60.0,
+            Some(FaultPlan { mtbf_secs: f64::INFINITY, boot_jitter_secs: 5.0, seed: 2 }),
+        );
+        assert_eq!(j.next_event_at(), f64::INFINITY);
     }
 
     #[test]

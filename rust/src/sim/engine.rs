@@ -22,6 +22,7 @@ use super::cluster::Cluster;
 use super::cycles::PsSchedule;
 use super::history::{Completed, History};
 use super::input_queue::InputQueue;
+use super::profile::{Phase, Profiler, StepProfile};
 use crate::autoscale::{AutoScaler, Controller, Observation};
 use crate::config::SimConfig;
 use crate::delay::DelayModel;
@@ -102,6 +103,10 @@ pub struct SimResult {
     pub samples: Vec<StateSample>,
     /// Steps executed.
     pub steps: u64,
+    /// Per-phase wall-time profile (`Some` only when
+    /// [`SimConfig::profile`](crate::config::SimConfig) was set).
+    /// Observability only: no result digest or journal record reads it.
+    pub phase_profile: Option<StepProfile>,
 }
 
 impl SimResult {
@@ -204,6 +209,9 @@ impl<'a> Simulator<'a> {
         let unlimited = cfg.input_rate.is_none();
         let SimScratch { schedule, slab, free, queue, admitted, .. } = scratch;
         let mut samples = Vec::new();
+        // Phase profiler: `None` (the default) costs one predictable
+        // branch per phase boundary; timings are observability-only.
+        let mut prof = if cfg.profile { Some(Profiler::new()) } else { None };
 
         // The clock starts at the first tweet's post time (§IV-B).
         let n_tweets = trace.len();
@@ -219,6 +227,9 @@ impl<'a> Simulator<'a> {
 
         loop {
             let step_end = clock + cfg.step_secs;
+            if let Some(p) = prof.as_mut() {
+                p.mark();
+            }
 
             // 1. tweets posted during this window, as one CSR-indexed
             // column range ...
@@ -263,6 +274,9 @@ impl<'a> Simulator<'a> {
                 }
             }
             next_tweet = arrived;
+            if let Some(p) = prof.as_mut() {
+                p.lap(Phase::Ingest);
+            }
 
             // 2. distribute this step's cycles (Algorithm 1, virtual time)
             let budget = cluster.active() as f64 * cfg.cycles_per_cpu_step();
@@ -286,11 +300,17 @@ impl<'a> Simulator<'a> {
                 }
             }
             window_avail += budget;
+            if let Some(p) = prof.as_mut() {
+                p.lap(Phase::Schedule);
+            }
 
             // cluster time passes (provisioned CPUs arrive, cost accrues)
             clock = step_end;
             steps += 1;
             cluster.tick(clock, cfg.step_secs);
+            if let Some(p) = prof.as_mut() {
+                p.lap(Phase::Faults);
+            }
 
             // 4. adaptation point? The observation borrows the cluster's
             // per-node identities, so the decision is computed first and
@@ -311,11 +331,17 @@ impl<'a> Simulator<'a> {
                 controller.maybe_adapt(&obs)
             };
             Controller::apply(decision, clock, &mut cluster);
+            if let Some(p) = prof.as_mut() {
+                p.lap(Phase::Scaler);
+            }
             // utilization window resets at every adaptation boundary
             if clock >= next_window_reset {
                 window_avail = 0.0;
                 window_used = 0.0;
                 next_window_reset += cfg.adapt_secs;
+            }
+            if let Some(p) = prof.as_mut() {
+                p.lap(Phase::Windows);
             }
 
             if self.sample_every > 0 && steps % self.sample_every == 0 {
@@ -333,31 +359,39 @@ impl<'a> Simulator<'a> {
                 break;
             }
 
-            // Idle fast-forward: with nothing in flight, nothing queued
-            // and no CPUs in provisioning, the only observable events
-            // before the next arrival are adaptation points, window
-            // resets and samples. Burn the idle steps in a bare loop that
-            // performs exactly the per-step accumulations of the full
-            // body — the state (and thus every later decision) is
-            // bit-identical to dense stepping, just without queue, scaler
-            // and bookkeeping overhead. Rate-limited runs keep dense
-            // stepping: the queue's read credit updates every step.
-            // Failure injection also forces dense stepping: a node death
-            // inside the bare loop would invalidate its precomputed
-            // budget (boot jitter alone is fine — the pending() gate
-            // already covers arrivals).
-            let idle = unlimited
-                && schedule.is_empty()
-                && next_tweet < n_tweets
-                && cluster.pending() == 0
-                && !cluster.fails_nodes();
+            // Idle fast-forward: with nothing in flight and nothing
+            // queued, the only observable events before the next arrival
+            // are adaptation points, window resets, samples — and
+            // cluster events (pending arrivals, armed node deaths). Burn
+            // the idle steps in a bare loop that performs exactly the
+            // per-step accumulations of the full body — the state (and
+            // thus every later decision) is bit-identical to dense
+            // stepping, just without queue, scaler and bookkeeping
+            // overhead. Rate-limited runs keep dense stepping: the
+            // queue's read credit updates every step. Cluster events
+            // bound the loop rather than disabling it: the first tick
+            // that could change the active set runs through the full
+            // body (its budget is computed before the tick, exactly as
+            // dense stepping orders it), so the precomputed bare budget
+            // is valid for every tick the loop actually takes, and a
+            // tick can only *create* events while processing one — never
+            // inside the event-free bounded stretch (PERF.md §Bounded
+            // fast-forward).
+            let idle = unlimited && schedule.is_empty() && next_tweet < n_tweets;
             if idle {
+                if let Some(p) = prof.as_mut() {
+                    p.mark();
+                }
                 let next_post = trace.post_time(next_tweet);
+                let hazard = cluster.next_event_at();
                 let bare_budget = cluster.active() as f64 * cfg.cycles_per_cpu_step();
                 loop {
                     let end = clock + cfg.step_secs;
                     if next_post < end {
                         break; // the next step ingests an arrival
+                    }
+                    if end >= hazard {
+                        break; // cluster event due: full body ticks it
                     }
                     if end + 1e-9 >= controller.next_adapt() {
                         break; // adaptation due: run it through the full body
@@ -373,15 +407,25 @@ impl<'a> Simulator<'a> {
                     steps += 1;
                     cluster.tick(clock, cfg.step_secs);
                 }
+                if let Some(p) = prof.as_mut() {
+                    p.lap(Phase::FastForward);
+                }
             }
         }
 
+        let phase_profile = prof.as_mut().map(|p| {
+            let mut sp = p.take();
+            sp.steps = steps;
+            super::profile::add_to_process(&sp);
+            sp
+        });
         SimResult {
             history,
             cpu_hours: cluster.cpu_hours(),
             decisions: controller.decisions().to_vec(),
             samples,
             steps,
+            phase_profile,
         }
     }
 }
@@ -559,6 +603,61 @@ mod tests {
             assert_eq!(ff.cpu_hours.to_bits(), dense.cpu_hours.to_bits());
             assert_eq!(ff.decisions, dense.decisions, "threshold-{scaler}");
         }
+    }
+
+    /// Bounded fast-forward: armed fault axes no longer disable the
+    /// idle loop — it runs up to `Cluster::next_event_at()` and hands
+    /// the event step to the full body. Every statistic must still
+    /// match dense stepping bit for bit.
+    #[test]
+    fn fast_forward_matches_dense_stepping_under_faults() {
+        let tr = sparse_trace();
+        let model = DelayModel::default();
+        for (mtbf, jitter) in
+            [(Some(2_000.0), None), (None, Some(20.0)), (Some(1_500.0), Some(10.0))]
+        {
+            let ff_cfg = SimConfig {
+                failure_mtbf_secs: mtbf,
+                boot_jitter_secs: jitter,
+                ..Default::default()
+            };
+            let dense_cfg = SimConfig { input_rate: Some(1e15), ..ff_cfg.clone() };
+            for scaler in [0.6f64, 0.9] {
+                let tag = format!("mtbf={mtbf:?} jitter={jitter:?} threshold-{scaler}");
+                let ff = Simulator::new(&ff_cfg, &model)
+                    .run(&tr, Box::new(ThresholdScaler::new(scaler)));
+                let dense = Simulator::new(&dense_cfg, &model)
+                    .run(&tr, Box::new(ThresholdScaler::new(scaler)));
+                assert_eq!(ff.steps, dense.steps, "{tag}");
+                assert_eq!(ff.history.completed(), dense.history.completed(), "{tag}");
+                assert_eq!(ff.history.violations(), dense.history.violations(), "{tag}");
+                assert_eq!(ff.cpu_hours.to_bits(), dense.cpu_hours.to_bits(), "{tag}");
+                assert_eq!(ff.decisions, dense.decisions, "{tag}");
+            }
+        }
+    }
+
+    #[test]
+    fn profile_flag_collects_phases_without_changing_results() {
+        let tr = sparse_trace();
+        let base = SimConfig::default();
+        let prof_cfg = SimConfig { profile: true, ..base.clone() };
+        let model = DelayModel::default();
+        let plain = Simulator::new(&base, &model).run(&tr, Box::new(ThresholdScaler::new(0.6)));
+        let profiled =
+            Simulator::new(&prof_cfg, &model).run(&tr, Box::new(ThresholdScaler::new(0.6)));
+        assert!(plain.phase_profile.is_none(), "profiling is opt-in");
+        let sp = profiled.phase_profile.expect("profile requested");
+        assert_eq!(sp.steps, profiled.steps);
+        use super::super::profile::Phase;
+        assert!(sp.events[Phase::Ingest as usize] > 0);
+        assert!(sp.events[Phase::Schedule as usize] > 0);
+        assert!(sp.events[Phase::FastForward as usize] > 0, "sparse trace fast-forwards");
+        // Profiling must be observably free.
+        assert_eq!(plain.history.violations(), profiled.history.violations());
+        assert_eq!(plain.cpu_hours.to_bits(), profiled.cpu_hours.to_bits());
+        assert_eq!(plain.steps, profiled.steps);
+        assert_eq!(plain.decisions, profiled.decisions);
     }
 
     #[test]

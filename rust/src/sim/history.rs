@@ -151,6 +151,34 @@ impl SentimentWindows {
         }
         self.range_sums(lo, hi).1
     }
+
+    /// Forget all observations, keeping the allocated buckets (pooled
+    /// reuse). Behaviorally identical to a fresh instance: `ensure`
+    /// grows from `len`, which resets to 0 here, so the growth schedule
+    /// replays exactly (capacity only makes reallocation a no-op, which
+    /// [`horizon_presizing_matches_default_growth`] pins as invisible).
+    pub fn clear(&mut self) {
+        self.sum.clear();
+        self.count.clear();
+        self.chunk_sum.clear();
+        self.chunk_count.clear();
+    }
+
+    /// Pre-size the buckets for a horizon of `secs` (pooled variant of
+    /// [`SentimentWindows::with_capacity_secs`]).
+    pub fn reserve_secs(&mut self, secs: f64) {
+        if secs > 0.0 && secs.is_finite() {
+            self.ensure(secs as usize);
+        }
+    }
+
+    /// Heap bytes retained by the bucket arrays (scratch-pool byte cap).
+    pub fn approx_bytes(&self) -> usize {
+        self.sum.capacity() * std::mem::size_of::<f64>()
+            + self.count.capacity() * std::mem::size_of::<u32>()
+            + self.chunk_sum.capacity() * std::mem::size_of::<f64>()
+            + self.chunk_count.capacity() * std::mem::size_of::<u64>()
+    }
 }
 
 /// Fixed-width delay-histogram bins (the last one is overflow).
@@ -208,6 +236,42 @@ impl History {
     pub fn with_sentiment_horizon(mut self, secs: f64) -> Self {
         self.sentiment = SentimentWindows::with_capacity_secs(secs);
         self
+    }
+
+    /// Reset to the state of `History::new(sla_secs)` without releasing
+    /// the 16 KiB histogram or the sentiment buckets — the batch kernel
+    /// pools one `History` per lane across waves instead of
+    /// reallocating them (PERF.md §Batch kernel). Capacity is
+    /// observably invisible (pinned by `arena_reuse_is_invisible` and
+    /// the presizing test below).
+    pub fn reset(&mut self, sla_secs: f64) {
+        self.sla_secs = sla_secs;
+        self.completed = 0;
+        self.violations = 0;
+        self.delay_stats = Running::new();
+        self.queue_delay_stats = Running::new();
+        for b in &mut self.delay_hist {
+            *b = 0;
+        }
+        self.max_delay = 0.0;
+        self.sentiment.clear();
+        self.keep_delays = false;
+        self.delays.clear();
+    }
+
+    /// Pooled variant of [`History::with_sentiment_horizon`].
+    pub fn reserve_sentiment_secs(&mut self, secs: f64) {
+        self.sentiment.reserve_secs(secs);
+    }
+
+    /// Heap bytes retained by this history's buffers: the fixed-bin
+    /// delay histogram (16 KiB), the optional dense delay log, and the
+    /// sentiment buckets. Counted against the scenario runner's
+    /// scratch-pool byte cap now that histories are pooled per lane.
+    pub fn approx_bytes(&self) -> usize {
+        self.delay_hist.capacity() * std::mem::size_of::<u64>()
+            + self.delays.capacity() * std::mem::size_of::<f64>()
+            + self.sentiment.approx_bytes()
     }
 
     /// Record a completion; `queue_delay` is time spent in the input queue.
@@ -467,6 +531,60 @@ mod tests {
         }
         assert_eq!(fwd.p99_delay().to_bits(), rev.p99_delay().to_bits());
         assert_eq!(fwd.max_delay().to_bits(), rev.max_delay().to_bits());
+    }
+
+    #[test]
+    fn reset_matches_fresh_history() {
+        let mut pooled = History::new(10.0).with_delay_log();
+        pooled.record(done(0.0, 15.0, 0.8), 2.0);
+        pooled.record(done(3.0, 5.0, 0.2), 0.5);
+        pooled.reset(20.0);
+
+        let fresh = History::new(20.0);
+        assert_eq!(pooled.completed(), fresh.completed());
+        assert_eq!(pooled.violations(), fresh.violations());
+        assert_eq!(pooled.sla_secs(), fresh.sla_secs());
+        assert_eq!(pooled.max_delay().to_bits(), fresh.max_delay().to_bits());
+        assert!(pooled.delays().is_empty(), "delay log opt-in is dropped by reset");
+        assert_eq!(pooled.sentiment().window_count(0.0, 1e6), 0);
+
+        // Replaying the same records must produce bit-identical stats.
+        let mut replay = History::new(20.0);
+        for h in [&mut pooled, &mut replay] {
+            h.record(done(1.0, 4.0, 0.5), 0.25);
+            h.record(done(2.0, 40.0, 0.7), 1.0);
+        }
+        assert_eq!(pooled.completed(), replay.completed());
+        assert_eq!(pooled.violations(), replay.violations());
+        assert_eq!(pooled.mean_delay().to_bits(), replay.mean_delay().to_bits());
+        assert_eq!(pooled.p99_delay().to_bits(), replay.p99_delay().to_bits());
+        assert_eq!(pooled.mean_queue_delay().to_bits(), replay.mean_queue_delay().to_bits());
+        assert_eq!(
+            pooled.sentiment().window_mean(0.0, 10.0),
+            replay.sentiment().window_mean(0.0, 10.0)
+        );
+    }
+
+    #[test]
+    fn approx_bytes_counts_every_buffer() {
+        // Fresh history: exactly the 2048-bin histogram, nothing else.
+        let h = History::new(10.0);
+        assert_eq!(h.approx_bytes(), 2048 * 8);
+
+        // Sentiment growth: ensure() sizes sum/count/chunk arrays as
+        // computed here by hand for a first push into bucket 100 —
+        // want = 128 (next pow2 of 101, min CHUNK=64 doesn't bind).
+        let mut h = History::new(10.0);
+        h.record(done(100.0, 101.0, 0.5), 0.0);
+        let sentiment = 128 * 8 + 128 * 4 + (128 / 64) * 8 + (128 / 64) * 8;
+        assert_eq!(h.approx_bytes(), 2048 * 8 + sentiment);
+        assert_eq!(h.sentiment().approx_bytes(), sentiment);
+
+        // The opt-in delay log is counted via its capacity (≥ 1 entry
+        // after a push; Vec's exact growth policy is not ours to pin).
+        let mut h = History::new(10.0).with_delay_log();
+        h.record(done(0.0, 1.0, f32::NAN), 0.0);
+        assert!(h.approx_bytes() >= 2048 * 8 + 8, "delay log capacity counted");
     }
 
     #[test]

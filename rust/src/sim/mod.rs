@@ -1,7 +1,8 @@
 //! Discrete-time cluster simulator (§IV): Algorithm 1 cycle distribution,
 //! rate-limited input queue, CPU pool with provisioning delay, history log
-//! with SLA accounting, the main loop, and the lockstep replication-batch
-//! kernel.
+//! with SLA accounting, the main loop, the lockstep replication-batch
+//! kernel, the explicit SIMD lane-sweep kernels, and the per-phase step
+//! profiler.
 
 pub mod batch;
 pub mod cluster;
@@ -9,6 +10,8 @@ pub mod cycles;
 pub mod engine;
 pub mod history;
 pub mod input_queue;
+pub mod profile;
+pub mod simd;
 
 pub use batch::{run_batch, BatchArena, LaneResult};
 pub use cluster::{Cluster, FaultPlan};
@@ -16,3 +19,4 @@ pub use cycles::PsSchedule;
 pub use engine::{SimResult, SimScratch, Simulator, StateSample};
 pub use history::{Completed, History, SentimentWindows};
 pub use input_queue::InputQueue;
+pub use profile::{Phase, Profiler, StepProfile};

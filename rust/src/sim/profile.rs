@@ -1,0 +1,270 @@
+//! Per-phase step profiler — zero-cost when disabled.
+//!
+//! The simulator's step loop decomposes into six phases (ingest,
+//! schedule, scaler, faults, windows, fast-forward). When
+//! [`SimConfig::profile`](crate::config::SimConfig) is set, the engine
+//! threads a [`Profiler`] through the loop and accumulates wall-nanos
+//! and event counts per phase into a [`StepProfile`]; when it is unset
+//! (the default), the engine's profiler `Option` is `None` and the hot
+//! loop pays a single predictable branch per phase boundary.
+//!
+//! Wall-clock durations are *observability only*: they ride on
+//! [`SimResult`](crate::sim::SimResult) in a field no result digest,
+//! journal record, or job key ever reads, mirroring the journal's
+//! calibration-only `wall_secs` (docs/LINTS.md, DET-001). A
+//! process-wide accumulator lets the batch kernel and the scenario
+//! runner fold every lane's profile into one summary that
+//! `matrix --profile` and the `phase/*` bench entries report.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// The phases of one simulation step, in loop order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Trace scan + admission (direct or via the input queue).
+    Ingest,
+    /// `PsSchedule::step` + completion recording.
+    Schedule,
+    /// Controller evaluate/apply at adaptation points.
+    Scaler,
+    /// `Cluster::tick` — commissioning, deaths, floor replacement.
+    Faults,
+    /// Utilization-window accumulation, usage update, window resets.
+    Windows,
+    /// The batched idle fast-forward loop.
+    FastForward,
+}
+
+/// Number of [`Phase`] variants (array-indexed accumulators).
+pub const PHASES: usize = 6;
+
+impl Phase {
+    /// All phases in loop order.
+    pub const ALL: [Phase; PHASES] = [
+        Phase::Ingest,
+        Phase::Schedule,
+        Phase::Scaler,
+        Phase::Faults,
+        Phase::Windows,
+        Phase::FastForward,
+    ];
+
+    /// Stable lowercase name used in bench JSON ids and CLI summaries.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Ingest => "ingest",
+            Phase::Schedule => "schedule",
+            Phase::Scaler => "scaler",
+            Phase::Faults => "faults",
+            Phase::Windows => "windows",
+            Phase::FastForward => "fast-forward",
+        }
+    }
+}
+
+/// Accumulated per-phase counters for a run (or a merge of runs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StepProfile {
+    /// Wall nanoseconds attributed to each phase, indexed by
+    /// [`Phase::ALL`] order.
+    pub nanos: [u64; PHASES],
+    /// Times each phase boundary was crossed (laps), same indexing.
+    pub events: [u64; PHASES],
+    /// Simulation steps covered (bare fast-forward ticks included).
+    pub steps: u64,
+}
+
+impl StepProfile {
+    /// The all-zero profile (const, for static initializers).
+    pub const ZERO: StepProfile = StepProfile { nanos: [0; PHASES], events: [0; PHASES], steps: 0 };
+
+    /// Fold another profile into this one.
+    pub fn merge(&mut self, other: &StepProfile) {
+        for i in 0..PHASES {
+            self.nanos[i] += other.nanos[i];
+            self.events[i] += other.events[i];
+        }
+        self.steps += other.steps;
+    }
+
+    /// Total nanoseconds across all phases.
+    pub fn total_nanos(&self) -> u64 {
+        self.nanos.iter().sum()
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.steps == 0 && self.total_nanos() == 0
+    }
+
+    /// One-line human summary: per-phase share of the profiled time.
+    ///
+    /// ```
+    /// use sla_autoscale::sim::profile::StepProfile;
+    /// let mut p = StepProfile::ZERO;
+    /// p.nanos[0] = 750;
+    /// p.nanos[1] = 250;
+    /// p.steps = 3;
+    /// assert!(p.summary().contains("ingest 75.0%"));
+    /// assert!(p.summary().contains("3 steps"));
+    /// ```
+    pub fn summary(&self) -> String {
+        let total = self.total_nanos();
+        if total == 0 {
+            return String::from("phase profile: empty (run with profiling enabled)");
+        }
+        let mut out = String::from("phase profile:");
+        for (i, ph) in Phase::ALL.iter().enumerate() {
+            let pct = self.nanos[i] as f64 / total as f64 * 100.0;
+            out.push_str(&format!(" {} {:.1}%", ph.name(), pct));
+        }
+        out.push_str(&format!(" | {:.3}s over {} steps", total as f64 / 1e9, self.steps));
+        out
+    }
+}
+
+/// Per-run phase timer. `mark()` pins the phase start; `lap(phase)`
+/// charges the elapsed interval to `phase` and re-pins.
+#[derive(Debug)]
+pub struct Profiler {
+    acc: StepProfile,
+    mark: Instant,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        // det:allow(DET-001, reason = "profiler timestamps are observability-only wall durations; no simulated result reads them (mirrors the journal's calibration-only wall_secs)")
+        Self { acc: StepProfile::ZERO, mark: Instant::now() }
+    }
+
+    /// Pin the start of the next interval (call at a phase boundary when
+    /// the preceding interval should be discarded, e.g. loop entry).
+    #[inline]
+    pub fn mark(&mut self) {
+        // det:allow(DET-001, reason = "profiler timestamps are observability-only wall durations; no simulated result reads them")
+        self.mark = Instant::now();
+    }
+
+    /// Charge the interval since the last mark/lap to `phase`.
+    #[inline]
+    pub fn lap(&mut self, phase: Phase) {
+        // det:allow(DET-001, reason = "profiler timestamps are observability-only wall durations; no simulated result reads them")
+        let now = Instant::now();
+        let i = phase as usize;
+        self.acc.nanos[i] += now.duration_since(self.mark).as_nanos() as u64;
+        self.acc.events[i] += 1;
+        self.mark = now;
+    }
+
+    /// Count one simulation step.
+    #[inline]
+    pub fn step(&mut self) {
+        self.acc.steps += 1;
+    }
+
+    /// Take the accumulated profile, resetting the accumulator.
+    pub fn take(&mut self) -> StepProfile {
+        std::mem::replace(&mut self.acc, StepProfile::ZERO)
+    }
+}
+
+impl Default for Profiler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Process-wide accumulator: batch lanes and runner threads fold their
+/// profiles here so `matrix --profile` can print one merged summary.
+static PROCESS: Mutex<StepProfile> = Mutex::new(StepProfile::ZERO);
+
+/// Fold `profile` into the process-wide accumulator.
+pub fn add_to_process(profile: &StepProfile) {
+    if let Ok(mut acc) = PROCESS.lock() {
+        acc.merge(profile);
+    }
+}
+
+/// Take (and reset) the process-wide accumulated profile.
+pub fn take_process() -> StepProfile {
+    match PROCESS.lock() {
+        Ok(mut acc) => std::mem::replace(&mut *acc, StepProfile::ZERO),
+        Err(_) => StepProfile::ZERO,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates_all_counters() {
+        let mut a = StepProfile::ZERO;
+        a.nanos[0] = 10;
+        a.events[0] = 1;
+        a.steps = 5;
+        let mut b = StepProfile::ZERO;
+        b.nanos[0] = 7;
+        b.nanos[3] = 3;
+        b.events[3] = 2;
+        b.steps = 4;
+        a.merge(&b);
+        assert_eq!(a.nanos[0], 17);
+        assert_eq!(a.nanos[3], 3);
+        assert_eq!(a.events[3], 2);
+        assert_eq!(a.steps, 9);
+        assert_eq!(a.total_nanos(), 20);
+        assert!(!a.is_empty());
+        assert!(StepProfile::ZERO.is_empty());
+    }
+
+    #[test]
+    fn profiler_laps_charge_the_named_phase() {
+        let mut p = Profiler::new();
+        p.mark();
+        p.lap(Phase::Schedule);
+        p.lap(Phase::Faults);
+        p.step();
+        let prof = p.take();
+        assert_eq!(prof.events[Phase::Schedule as usize], 1);
+        assert_eq!(prof.events[Phase::Faults as usize], 1);
+        assert_eq!(prof.events[Phase::Ingest as usize], 0);
+        assert_eq!(prof.steps, 1);
+        // take() resets
+        assert!(p.take().is_empty());
+    }
+
+    #[test]
+    fn summary_reports_each_phase_and_steps() {
+        let mut p = StepProfile::ZERO;
+        p.nanos = [100, 200, 300, 150, 150, 100];
+        p.steps = 42;
+        let s = p.summary();
+        for ph in Phase::ALL {
+            assert!(s.contains(ph.name()), "{s}");
+        }
+        assert!(s.contains("42 steps"), "{s}");
+        assert!(s.contains("schedule 20.0%"), "{s}");
+    }
+
+    #[test]
+    fn process_accumulator_round_trips() {
+        // Other lib tests may add to the process accumulator in
+        // parallel (none of them take), so assert lower bounds only.
+        let mut p = StepProfile::ZERO;
+        p.nanos[1] = 11;
+        p.steps = 2;
+        add_to_process(&p);
+        add_to_process(&p);
+        let got = take_process();
+        assert!(got.nanos[1] >= 22, "{got:?}");
+        assert!(got.steps >= 4, "{got:?}");
+    }
+
+    #[test]
+    fn phase_names_are_stable() {
+        let names: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(names, ["ingest", "schedule", "scaler", "faults", "windows", "fast-forward"]);
+    }
+}

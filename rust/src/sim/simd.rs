@@ -1,0 +1,360 @@
+//! Explicit SIMD kernels for the batch kernel's flat per-lane sweeps.
+//!
+//! [`run_batch`](super::run_batch) keeps its per-lane utilization
+//! accounting (`window_avail`, `window_used`, `cpu_usage`, `budgets`) as
+//! flat `f64` arrays indexed by lane. The sweeps over those arrays are
+//! *element-wise across the lane axis*: lane `l`'s value is a function of
+//! lane `l`'s inputs only, and each lane's own summation order is exactly
+//! the serial engine's. Vectorizing across lanes therefore cannot reorder
+//! any lane's float accumulation — the `f64::to_bits` lockstep invariant
+//! holds by construction, because packed IEEE-754 add/mul/div round each
+//! element identically to the scalar instruction (see
+//! docs/ARCHITECTURE.md, invariant checklist).
+//!
+//! Layout:
+//! * [`scalar`] — the reference kernels, always compiled; the dispatchers
+//!   fall back to them off x86_64 or when the `simd` feature is disabled,
+//!   and the unit tests pin the vector paths against them bit for bit.
+//! * `x86` (behind `feature = "simd"` on x86_64) — width-2 SSE2 kernels
+//!   (baseline, always available on x86_64) and width-4 AVX kernels
+//!   selected at runtime via `is_x86_feature_detected!` (the detection
+//!   result is cached by std, so the check is a load + branch).
+//!
+//! The admission fan-out deliberately stays scalar: each lane's cycle
+//! draw advances that lane's own RNG through
+//! [`DelayModel::sample_cycles`](crate::delay::DelayModel::sample_cycles),
+//! a serial dependency per lane that a gather/scatter rewrite would have
+//! to replay draw-for-draw anyway (PERF.md §SIMD lane sweeps).
+
+/// Scalar reference kernels. Every dispatcher in this module must be
+/// bit-identical to these for all inputs (unit-tested below, and pinned
+/// end-to-end by the batch-vs-serial suites in both feature
+/// configurations).
+pub mod scalar {
+    /// `dst[i] += src[i]` for every lane.
+    #[inline]
+    pub fn add_assign(dst: &mut [f64], src: &[f64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        for i in 0..dst.len().min(src.len()) {
+            dst[i] += src[i];
+        }
+    }
+
+    /// `dst[i] = src[i] * k` for every lane.
+    #[inline]
+    pub fn mul_scalar(dst: &mut [f64], src: &[f64], k: f64) {
+        debug_assert_eq!(dst.len(), src.len());
+        for i in 0..dst.len().min(src.len()) {
+            dst[i] = src[i] * k;
+        }
+    }
+
+    /// `usage[i] = used[i] / avail[i]` wherever `avail[i] > 0.0`; other
+    /// lanes keep their previous value (the engine's guarded update).
+    #[inline]
+    pub fn usage_update(usage: &mut [f64], used: &[f64], avail: &[f64]) {
+        debug_assert_eq!(usage.len(), used.len());
+        debug_assert_eq!(usage.len(), avail.len());
+        let n = usage.len().min(used.len()).min(avail.len());
+        for i in 0..n {
+            if avail[i] > 0.0 {
+                usage[i] = used[i] / avail[i];
+            }
+        }
+    }
+
+    /// `buf[i] = 0.0` for every lane (window resets).
+    #[inline]
+    pub fn zero(buf: &mut [f64]) {
+        for v in buf.iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    //! SSE2 (width 2, baseline) and AVX (width 4, runtime-detected)
+    //! variants of the [`super::scalar`] kernels. Tails shorter than the
+    //! vector width run the scalar reference.
+    //!
+    //! Safety: every pointer below is derived from a live slice and the
+    //! loops stay strictly inside `len - width + 1`; loads/stores are
+    //! unaligned (`loadu`/`storeu`), so no alignment contract exists.
+    //! The masked-division kernels may divide by zero in lanes the blend
+    //! discards — IEEE-754 division never faults, the inf/NaN result is
+    //! thrown away unseen, and the (thread-local) FP status flags are
+    //! never observed by this crate.
+
+    use std::arch::x86_64::*;
+
+    #[inline]
+    pub unsafe fn add_assign_sse2(dst: &mut [f64], src: &[f64]) {
+        let n = dst.len().min(src.len());
+        let mut i = 0;
+        while i + 2 <= n {
+            let d = _mm_loadu_pd(dst.as_ptr().add(i));
+            let s = _mm_loadu_pd(src.as_ptr().add(i));
+            _mm_storeu_pd(dst.as_mut_ptr().add(i), _mm_add_pd(d, s));
+            i += 2;
+        }
+        super::scalar::add_assign(&mut dst[i..n], &src[i..n]);
+    }
+
+    #[target_feature(enable = "avx")]
+    #[inline]
+    pub unsafe fn add_assign_avx(dst: &mut [f64], src: &[f64]) {
+        let n = dst.len().min(src.len());
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = _mm256_loadu_pd(dst.as_ptr().add(i));
+            let s = _mm256_loadu_pd(src.as_ptr().add(i));
+            _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_add_pd(d, s));
+            i += 4;
+        }
+        super::scalar::add_assign(&mut dst[i..n], &src[i..n]);
+    }
+
+    #[inline]
+    pub unsafe fn mul_scalar_sse2(dst: &mut [f64], src: &[f64], k: f64) {
+        let n = dst.len().min(src.len());
+        let kk = _mm_set1_pd(k);
+        let mut i = 0;
+        while i + 2 <= n {
+            let s = _mm_loadu_pd(src.as_ptr().add(i));
+            _mm_storeu_pd(dst.as_mut_ptr().add(i), _mm_mul_pd(s, kk));
+            i += 2;
+        }
+        super::scalar::mul_scalar(&mut dst[i..n], &src[i..n], k);
+    }
+
+    #[target_feature(enable = "avx")]
+    #[inline]
+    pub unsafe fn mul_scalar_avx(dst: &mut [f64], src: &[f64], k: f64) {
+        let n = dst.len().min(src.len());
+        let kk = _mm256_set1_pd(k);
+        let mut i = 0;
+        while i + 4 <= n {
+            let s = _mm256_loadu_pd(src.as_ptr().add(i));
+            _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_mul_pd(s, kk));
+            i += 4;
+        }
+        super::scalar::mul_scalar(&mut dst[i..n], &src[i..n], k);
+    }
+
+    #[inline]
+    pub unsafe fn usage_update_sse2(usage: &mut [f64], used: &[f64], avail: &[f64]) {
+        let n = usage.len().min(used.len()).min(avail.len());
+        let zero = _mm_setzero_pd();
+        let mut i = 0;
+        while i + 2 <= n {
+            let a = _mm_loadu_pd(avail.as_ptr().add(i));
+            let u = _mm_loadu_pd(used.as_ptr().add(i));
+            let cur = _mm_loadu_pd(usage.as_ptr().add(i));
+            // mask = avail > 0.0 (all-ones per qualifying lane)
+            let mask = _mm_cmpgt_pd(a, zero);
+            let q = _mm_div_pd(u, a);
+            // blend: mask ? q : cur (SSE2 has no blendv — and/andnot/or)
+            let res = _mm_or_pd(_mm_and_pd(mask, q), _mm_andnot_pd(mask, cur));
+            _mm_storeu_pd(usage.as_mut_ptr().add(i), res);
+            i += 2;
+        }
+        super::scalar::usage_update(&mut usage[i..n], &used[i..n], &avail[i..n]);
+    }
+
+    #[target_feature(enable = "avx")]
+    #[inline]
+    pub unsafe fn usage_update_avx(usage: &mut [f64], used: &[f64], avail: &[f64]) {
+        let n = usage.len().min(used.len()).min(avail.len());
+        let zero = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= n {
+            let a = _mm256_loadu_pd(avail.as_ptr().add(i));
+            let u = _mm256_loadu_pd(used.as_ptr().add(i));
+            let cur = _mm256_loadu_pd(usage.as_ptr().add(i));
+            let mask = _mm256_cmp_pd::<_CMP_GT_OQ>(a, zero);
+            let q = _mm256_div_pd(u, a);
+            let res = _mm256_blendv_pd(cur, q, mask);
+            _mm256_storeu_pd(usage.as_mut_ptr().add(i), res);
+            i += 4;
+        }
+        super::scalar::usage_update(&mut usage[i..n], &used[i..n], &avail[i..n]);
+    }
+
+    #[inline]
+    pub unsafe fn zero_sse2(buf: &mut [f64]) {
+        let n = buf.len();
+        let z = _mm_setzero_pd();
+        let mut i = 0;
+        while i + 2 <= n {
+            _mm_storeu_pd(buf.as_mut_ptr().add(i), z);
+            i += 2;
+        }
+        super::scalar::zero(&mut buf[i..n]);
+    }
+
+    #[inline]
+    pub fn has_avx() -> bool {
+        std::arch::is_x86_feature_detected!("avx")
+    }
+}
+
+/// `dst[i] += src[i]` across all lanes (the `window_avail += budgets`
+/// sweep of the main loop and the idle fast-forward).
+#[inline]
+pub fn add_assign(dst: &mut [f64], src: &[f64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if x86::has_avx() {
+            unsafe { x86::add_assign_avx(dst, src) }
+        } else {
+            unsafe { x86::add_assign_sse2(dst, src) }
+        }
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    scalar::add_assign(dst, src);
+}
+
+/// `dst[i] = src[i] * k` across all lanes (the per-step
+/// `budgets = active CPUs × cycles_per_step` sweep).
+#[inline]
+pub fn mul_scalar(dst: &mut [f64], src: &[f64], k: f64) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if x86::has_avx() {
+            unsafe { x86::mul_scalar_avx(dst, src, k) }
+        } else {
+            unsafe { x86::mul_scalar_sse2(dst, src, k) }
+        }
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    scalar::mul_scalar(dst, src, k);
+}
+
+/// Guarded utilization update: `usage[i] = used[i] / avail[i]` wherever
+/// `avail[i] > 0.0`, other lanes untouched.
+#[inline]
+pub fn usage_update(usage: &mut [f64], used: &[f64], avail: &[f64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if x86::has_avx() {
+            unsafe { x86::usage_update_avx(usage, used, avail) }
+        } else {
+            unsafe { x86::usage_update_sse2(usage, used, avail) }
+        }
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    scalar::usage_update(usage, used, avail);
+}
+
+/// Zero every lane (utilization-window resets at adaptation boundaries).
+#[inline]
+pub fn zero(buf: &mut [f64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        // No AVX variant: a pure store sweep gains nothing from wider
+        // registers, and the memory system is the bottleneck either way.
+        unsafe { x86::zero_sse2(buf) }
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    scalar::zero(buf);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Random lane arrays covering every tail length around the vector
+    /// widths, plus zero/negative/denormal-ish values.
+    fn cases(seed: u64) -> Vec<(Vec<f64>, Vec<f64>)> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 63, 64, 100] {
+            let a: Vec<f64> = (0..n).map(|_| (rng.next_f64() - 0.3) * 1e9).collect();
+            let b: Vec<f64> = (0..n)
+                .map(|_| {
+                    // every ~4th lane zero: exercises the usage guard
+                    if rng.below(4) == 0 {
+                        0.0
+                    } else {
+                        rng.next_f64() * 1e12
+                    }
+                })
+                .collect();
+            out.push((a, b));
+        }
+        out
+    }
+
+    #[test]
+    fn add_assign_matches_scalar_bitwise() {
+        for (a, b) in cases(0x51D0) {
+            let mut want = a.clone();
+            scalar::add_assign(&mut want, &b);
+            let mut got = a.clone();
+            add_assign(&mut got, &b);
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(w.to_bits(), g.to_bits(), "n={}", a.len());
+            }
+        }
+    }
+
+    #[test]
+    fn mul_scalar_matches_scalar_bitwise() {
+        for (a, b) in cases(0x51D1) {
+            for k in [0.0, 1.0, 2.0e9, 0.125, -3.75] {
+                let mut want = a.clone();
+                scalar::mul_scalar(&mut want, &b, k);
+                let mut got = a.clone();
+                mul_scalar(&mut got, &b, k);
+                for (w, g) in want.iter().zip(&got) {
+                    assert_eq!(w.to_bits(), g.to_bits(), "n={} k={k}", a.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn usage_update_matches_scalar_bitwise_including_zero_avail() {
+        for (used, avail) in cases(0x51D2) {
+            let mut rng = Rng::new(used.len() as u64 + 99);
+            let usage0: Vec<f64> = (0..used.len()).map(|_| rng.next_f64()).collect();
+            let mut want = usage0.clone();
+            scalar::usage_update(&mut want, &used, &avail);
+            let mut got = usage0;
+            usage_update(&mut got, &used, &avail);
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    w.to_bits(),
+                    g.to_bits(),
+                    "lane {i} of {} (avail {})",
+                    used.len(),
+                    avail[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn usage_update_leaves_zero_avail_lanes_untouched() {
+        let mut usage = vec![0.25, 0.5, 0.75, 1.0, 0.1];
+        let used = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let avail = vec![2.0, 0.0, 6.0, 0.0, 10.0];
+        usage_update(&mut usage, &used, &avail);
+        assert_eq!(usage[0].to_bits(), 0.5f64.to_bits());
+        assert_eq!(usage[1].to_bits(), 0.5f64.to_bits(), "zero-avail lane kept");
+        assert_eq!(usage[2].to_bits(), 0.5f64.to_bits());
+        assert_eq!(usage[3].to_bits(), 1.0f64.to_bits(), "zero-avail lane kept");
+        assert_eq!(usage[4].to_bits(), 0.5f64.to_bits());
+    }
+
+    #[test]
+    fn zero_clears_every_tail_length() {
+        for n in 0..40usize {
+            let mut buf: Vec<f64> = (0..n).map(|i| i as f64 + 0.5).collect();
+            zero(&mut buf);
+            assert!(buf.iter().all(|v| v.to_bits() == 0.0f64.to_bits()), "n={n}");
+        }
+    }
+}

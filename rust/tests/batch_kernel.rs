@@ -122,6 +122,77 @@ fn fault_injected_lanes_bit_identical_to_serial() {
     }
 }
 
+/// Bounded idle fast-forward under armed fault axes: a sparse trace
+/// (2 000 tweets over 2 h leaves long idle stretches) with node deaths
+/// and jittered boots pending. The fast-forward must stop at
+/// `min(next arrival, next cluster event)` so every death and delayed
+/// boot is processed at the same step as under dense stepping — on both
+/// the serial engine (dense reference forced via a huge `input_rate`,
+/// which disables the fast-forward gate) and the batch kernel. This is
+/// also the path where the SIMD lane sweeps meet retired/heterogeneous
+/// lanes; a `--no-default-features` run of this same test pins the
+/// scalar fallback to the identical bits.
+#[test]
+fn sparse_fault_fast_forward_bit_identical() {
+    let trace = TraceSource::spec(
+        MatchSpec {
+            opponent: "SparseIT",
+            date: "—",
+            total_tweets: 2_000,
+            length_hours: 2.0,
+            events: vec![],
+        },
+        false,
+    )
+    .load()
+    .unwrap();
+    let model = DelayModel::default();
+    let configs = [
+        SimConfig { failure_mtbf_secs: Some(1_800.0), ..Default::default() },
+        SimConfig { boot_jitter_secs: Some(25.0), ..Default::default() },
+        SimConfig {
+            failure_mtbf_secs: Some(1_200.0),
+            boot_jitter_secs: Some(15.0),
+            failure_seed: 5,
+            ..Default::default()
+        },
+    ];
+    let specs = [ScalerSpec::threshold(60.0), ScalerSpec::load(0.99)];
+    let mut scratch = SimScratch::new();
+    for cfg in &configs {
+        // Dense reference: an input rate far above the offered load
+        // admits every tweet immediately but disables the idle
+        // fast-forward on both paths.
+        let dense_cfg = SimConfig { input_rate: Some(1e15), ..cfg.clone() };
+        for spec in &specs {
+            let seeds = lane_seeds(cfg.seed, 3);
+            let scalers: Vec<_> = seeds.iter().map(|_| spec.build(&model, mix())).collect();
+            let lanes = run_batch(&trace, cfg, &model, scalers, &seeds, &mut scratch);
+            for (lane, &seed) in lanes.iter().zip(&seeds) {
+                let tag = format!(
+                    "{spec} mtbf={:?} jitter={:?} seed={seed}",
+                    cfg.failure_mtbf_secs, cfg.boot_jitter_secs
+                );
+                // fast-forwarding serial engine
+                let scfg = cfg.with_seed(seed);
+                let want = Simulator::new(&scfg, &model).run(&trace, spec.build(&model, mix()));
+                assert_lane_matches(lane, &want, &tag);
+                // dense-stepping serial engine
+                let dcfg = dense_cfg.with_seed(seed);
+                let dense = Simulator::new(&dcfg, &model).run(&trace, spec.build(&model, mix()));
+                assert_eq!(
+                    want.violation_pct().to_bits(),
+                    dense.violation_pct().to_bits(),
+                    "dense {tag}"
+                );
+                assert_eq!(want.cpu_hours.to_bits(), dense.cpu_hours.to_bits(), "dense {tag}");
+                assert_eq!(want.history.completed(), dense.history.completed(), "dense {tag}");
+                assert_eq!(want.decisions, dense.decisions, "dense {tag}");
+            }
+        }
+    }
+}
+
 /// Degenerate wave: R = 1 goes through the batch kernel unchanged.
 #[test]
 fn single_lane_wave_matches_serial() {
